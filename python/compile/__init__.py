@@ -1,0 +1,12 @@
+"""Build-time compile path (L2 JAX model + L1 Pallas kernels + AOT).
+
+Nothing in this package runs at serving time: `aot.py` lowers the graphs to
+HLO text once (`make artifacts`), and the Rust runtime executes the
+artifacts via PJRT.
+"""
+
+import jax
+
+# The durable-slot planes are 64-bit words on the Rust side; everything in
+# the compile path runs with x64 enabled so key hashing matches bit-for-bit.
+jax.config.update("jax_enable_x64", True)

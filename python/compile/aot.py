@@ -1,0 +1,82 @@
+"""AOT lowering: L2 graphs -> artifacts/*.hlo.txt (HLO TEXT).
+
+HLO *text* is the interchange format, NOT `lowered.compile()` /
+serialized protos: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts` (no-op when artifacts are newer than sources).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(n: int, block: int):
+    """Lower every artifact graph for batch size `n`. Returns name->text."""
+    i32 = jax.ShapeDtypeStruct((n,), jnp.int32)
+    i64 = jax.ShapeDtypeStruct((n,), jnp.int64)
+    s64 = jax.ShapeDtypeStruct((1,), jnp.int64)
+    p64 = jax.ShapeDtypeStruct((4,), jnp.int64)
+
+    arts = {}
+    arts["recovery_soft"] = to_hlo_text(
+        jax.jit(
+            lambda vs, ve, dl, keys, mask: model.recovery_plan_soft(
+                vs, ve, dl, keys, mask, block=block
+            )
+        ).lower(i32, i32, i32, i64, s64)
+    )
+    arts["recovery_linkfree"] = to_hlo_text(
+        jax.jit(
+            lambda v, m, keys, mask: model.recovery_plan_linkfree(
+                v, m, keys, mask, block=block
+            )
+        ).lower(i32, i32, i64, s64)
+    )
+    arts["workload"] = to_hlo_text(
+        jax.jit(lambda p: model.workload_batch(p, n=n, block=block)).lower(p64)
+    )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=model.AOT_BATCH)
+    ap.add_argument("--block", type=int, default=model.AOT_BLOCK)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    arts = lower_all(args.batch, args.block)
+    manifest = {"batch": args.batch, "block": args.block, "artifacts": {}}
+    for name, text in arts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {"file": f"{name}.hlo.txt", "chars": len(text)}
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

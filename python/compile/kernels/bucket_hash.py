@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: splitmix64 bucket hashing.
+
+Maps recovered member keys to hash buckets with exactly the same
+`mix64(key) & mask` the Rust hash sets use, so the XLA-produced recovery
+plan and the Rust structures agree on placement bit-for-bit.
+
+Integer-only VPU work on uint64 lanes; tiled 1-D like the membership
+kernels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain ints: materialised as scalars *inside* the kernel body — pallas
+# rejects kernels that close over traced array constants.
+_C1 = 0x9E3779B97F4A7C15
+_C2 = 0xBF58476D1CE4E5B9
+_C3 = 0x94D049BB133111EB
+
+
+def mix64_u(z):
+    """splitmix64 finalizer on a uint64 vector (in-kernel version)."""
+    z = (z + jnp.uint64(_C1)).astype(jnp.uint64)
+    z = ((z ^ (z >> jnp.uint64(30))) * jnp.uint64(_C2)).astype(jnp.uint64)
+    z = ((z ^ (z >> jnp.uint64(27))) * jnp.uint64(_C3)).astype(jnp.uint64)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def _bucket_kernel(keys_ref, mask_ref, out_ref):
+    # Keys arrive as int64 (the Rust FFI type); hash their bit pattern.
+    k = jax.lax.bitcast_convert_type(keys_ref[...], jnp.uint64)
+    m = jax.lax.bitcast_convert_type(mask_ref[...], jnp.uint64)[0]
+    out_ref[...] = (mix64_u(k) & m).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def bucket_of(keys, bucket_mask, block=4096):
+    """Bucket plane: mix64(key) & mask, as int32.
+
+    `bucket_mask` is an int64[1] array (nbuckets-1, nbuckets a power of 2).
+    """
+    n = keys.shape[0]
+    if block is None or block >= n:
+        return pl.pallas_call(
+            _bucket_kernel,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+            interpret=True,
+        )(keys, bucket_mask)
+    assert n % block == 0
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    # The mask is broadcast to every tile.
+    mask_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _bucket_kernel,
+        grid=(n // block,),
+        in_specs=[spec, mask_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(keys, bucket_mask)

@@ -1,0 +1,66 @@
+"""L1 Pallas kernels: durable-slot membership classification.
+
+Recovery's bulk hot spot (DESIGN.md §Why L1/L2): given structure-of-arrays
+flag planes extracted from the durable areas, decide for every slot whether
+it is a live set member.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the planes are int32
+vectors (densest supported element type for this data on the VPU); tiles of
+`block` elements map HBM→VMEM via BlockSpec; the body is pure element-wise
+VPU work (no MXU). `interpret=True` everywhere — the CPU PJRT plugin cannot
+run Mosaic custom-calls; lowered HLO is plain elementwise ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _soft_kernel(vs_ref, ve_ref, dl_ref, out_ref):
+    vs = vs_ref[...]
+    ve = ve_ref[...]
+    dl = dl_ref[...]
+    out_ref[...] = ((vs == ve) & (dl != vs)).astype(jnp.int32)
+
+
+def _linkfree_kernel(validity_ref, marked_ref, out_ref):
+    v = validity_ref[...]
+    v1 = v & 1
+    v2 = (v >> 1) & 1
+    out_ref[...] = ((v1 == v2) & (marked_ref[...] == 0)).astype(jnp.int32)
+
+
+def _tiled(kernel, n_in, n, block):
+    """Build a 1-D tiled pallas_call for `n` elements in `block` chunks."""
+    if block is None or block >= n:
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+            interpret=True,
+        )
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[spec] * n_in,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def classify_soft(valid_start, valid_end, deleted, block=4096):
+    """SOFT membership plane: 1 where validStart == validEnd != deleted."""
+    n = valid_start.shape[0]
+    return _tiled(_soft_kernel, 3, n, block)(valid_start, valid_end, deleted)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def classify_linkfree(validity, marked, block=4096):
+    """Link-free membership plane: 1 where valid (v1==v2) and unmarked."""
+    n = validity.shape[0]
+    return _tiled(_linkfree_kernel, 2, n, block)(validity, marked)

@@ -1,0 +1,91 @@
+"""Pure-jnp/numpy oracles for every L1 kernel.
+
+These are the correctness ground truth: `pytest python/tests` sweeps the
+Pallas kernels against them (hypothesis-driven shapes and values), and the
+Rust integration test cross-checks the AOT artifacts against the Rust
+recovery scan, which mirrors this logic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# splitmix64 finalizer — must match rust/src/util/mod.rs::mix64 bit-for-bit.
+_C1 = 0x9E3779B97F4A7C15
+_C2 = 0xBF58476D1CE4E5B9
+_C3 = 0x94D049BB133111EB
+
+
+def mix64(z):
+    """Vectorised splitmix64 finalizer over uint64."""
+    z = jnp.asarray(z).astype(jnp.uint64)
+    z = (z + jnp.uint64(_C1)).astype(jnp.uint64)
+    z = ((z ^ (z >> jnp.uint64(30))) * jnp.uint64(_C2)).astype(jnp.uint64)
+    z = ((z ^ (z >> jnp.uint64(27))) * jnp.uint64(_C3)).astype(jnp.uint64)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def classify_soft(valid_start, valid_end, deleted):
+    """SOFT PNode membership: validStart == validEnd != deleted (paper §4.6).
+
+    Flag planes are int32 0/1 vectors (one per PNode slot).
+    """
+    vs = jnp.asarray(valid_start)
+    ve = jnp.asarray(valid_end)
+    dl = jnp.asarray(deleted)
+    return ((vs == ve) & (dl != vs)).astype(jnp.int32)
+
+
+def classify_linkfree(validity, marked):
+    """Link-free membership: v1 == v2 and next unmarked (paper §3.5).
+
+    `validity` holds the raw 2-bit validity byte, `marked` the next-pointer
+    mark bit, both as int32 planes.
+    """
+    v = jnp.asarray(validity)
+    v1 = v & 1
+    v2 = (v >> 1) & 1
+    return ((v1 == v2) & (jnp.asarray(marked) == 0)).astype(jnp.int32)
+
+
+def to_u64(keys):
+    """Bit-preserving view of an int64/uint64 vector as uint64."""
+    keys = jnp.asarray(keys)
+    if keys.dtype == jnp.int64:
+        return jax.lax.bitcast_convert_type(keys, jnp.uint64)
+    return keys.astype(jnp.uint64)
+
+
+def bucket_of(keys, bucket_mask):
+    """Bucket index = mix64(key) & mask (matches LfHash/SoftHash)."""
+    m = jnp.asarray(bucket_mask).astype(jnp.uint64).reshape(-1)[0]
+    return (mix64(to_u64(keys)) & m).astype(jnp.int32)
+
+
+def workload(seed, base, n, key_range, read_micros):
+    """Counter-based op stream: key[i], op[i] for i in [base, base+n).
+
+    op = 0 (read) with probability read_micros/1e6, else 1 (insert) or
+    2 (remove) with equal probability. Deterministic in (seed, base).
+    """
+    idx = jnp.arange(n, dtype=jnp.uint64) + jnp.uint64(base)
+    h1 = mix64(idx ^ mix64(jnp.uint64(seed)))
+    h2 = mix64(h1)
+    keys = h1 % jnp.uint64(key_range)
+    draw = (h2 % jnp.uint64(1_000_000)).astype(jnp.int64)
+    is_read = draw < jnp.int64(read_micros)
+    upd_kind = ((h2 >> jnp.uint64(32)) & jnp.uint64(1)).astype(jnp.int64)  # 0/1
+    ops = jnp.where(is_read, 0, 1 + upd_kind).astype(jnp.int32)
+    return keys.astype(jnp.int64), ops
+
+
+def np_mix64(z: int) -> int:
+    """Scalar reference (independent of jax) for sanity tests."""
+    z = (int(z) + _C1) % (1 << 64)
+    z = ((z ^ (z >> 30)) * _C2) % (1 << 64)
+    z = ((z ^ (z >> 27)) * _C3) % (1 << 64)
+    return z ^ (z >> 31)
+
+
+# np is re-exported for tests importing this module's helpers.
+assert np is not None

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: counter-based workload generation.
+
+Generates the benchmark op stream (key + op kind) from a stateless counter,
+so Rust benchmark threads can pull deterministic batches with no shared RNG
+state: batch i of thread t is a pure function of (seed, t, i).
+
+op encoding: 0 = contains, 1 = insert, 2 = remove. The read fraction is
+`read_micros` per million (e.g. 900_000 = the paper's 90%-reads workload).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bucket_hash import mix64_u
+
+
+def _workload_kernel(params_ref, keys_ref, ops_ref, *, block):
+    # params: [seed, base, key_range, read_micros] as int64.
+    seed = jax.lax.bitcast_convert_type(params_ref[0], jnp.uint64)
+    base = jax.lax.bitcast_convert_type(params_ref[1], jnp.uint64)
+    key_range = jax.lax.bitcast_convert_type(params_ref[2], jnp.uint64)
+    read_micros = params_ref[3]
+    i = pl.program_id(0).astype(jnp.uint64)
+    idx = jnp.arange(block, dtype=jnp.uint64) + base + i * jnp.uint64(block)
+    h1 = mix64_u(idx ^ mix64_u(seed))
+    h2 = mix64_u(h1)
+    keys = h1 % key_range
+    draw = (h2 % jnp.uint64(1_000_000)).astype(jnp.int64)
+    is_read = draw < read_micros
+    upd_kind = ((h2 >> jnp.uint64(32)) & jnp.uint64(1)).astype(jnp.int64)
+    keys_ref[...] = keys.astype(jnp.int64)
+    ops_ref[...] = jnp.where(is_read, 0, 1 + upd_kind).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def workload(params, n, block=4096):
+    """Generate `n` (key, op) pairs from int64 params
+    [seed, base, key_range, read_micros]."""
+    block = min(block, n)
+    assert n % block == 0
+    import functools as ft
+
+    kernel = ft.partial(_workload_kernel, block=block)
+    params_spec = pl.BlockSpec((4,), lambda i: (0,))
+    out_spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[params_spec],
+        out_specs=(out_spec, out_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ),
+        interpret=True,
+    )(params)

@@ -1,0 +1,55 @@
+"""L2 JAX model: the recovery-analytics graphs and the workload graph.
+
+These compose the L1 Pallas kernels into the computations the Rust runtime
+executes from the artifacts:
+
+* `recovery_plan_soft` / `recovery_plan_linkfree` — one batch of durable
+  slots in, (member plane, bucket plane) out. The Rust recovery path feeds
+  slot planes in fixed-size batches and relinks members into their buckets.
+* `bucket_histogram` — per-bucket member counts (used by python tests and
+  the analysis tooling; Rust computes its histogram during relink).
+* `workload_batch` — one batch of deterministic (key, op) pairs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bucket_hash, membership, workload as wl
+
+#: Batch size baked into the AOT artifacts. Rust pads the tail batch.
+AOT_BATCH = 65536
+#: Pallas tile size (elements per VMEM block).
+AOT_BLOCK = 4096
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def recovery_plan_soft(valid_start, valid_end, deleted, keys, bucket_mask, block=AOT_BLOCK):
+    """(member int32[N], bucket int32[N]) for one batch of SOFT PNodes.
+
+    Non-members still get a bucket id; consumers must gate on `member`.
+    """
+    member = membership.classify_soft(valid_start, valid_end, deleted, block=block)
+    bucket = bucket_hash.bucket_of(keys, bucket_mask, block=block)
+    return member, bucket
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def recovery_plan_linkfree(validity, marked, keys, bucket_mask, block=AOT_BLOCK):
+    """(member int32[N], bucket int32[N]) for one batch of link-free nodes."""
+    member = membership.classify_linkfree(validity, marked, block=block)
+    bucket = bucket_hash.bucket_of(keys, bucket_mask, block=block)
+    return member, bucket
+
+
+@functools.partial(jax.jit, static_argnames=("nbuckets",))
+def bucket_histogram(member, bucket, nbuckets):
+    """Members per bucket (scatter-add); `nbuckets` static."""
+    return jnp.zeros(nbuckets, dtype=jnp.int32).at[bucket].add(member)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def workload_batch(params, n=AOT_BATCH, block=AOT_BLOCK):
+    """(keys int64[n], ops int32[n]) from params [seed, base, range, read_micros]."""
+    return wl.workload(params, n, block=block)

@@ -1,0 +1,122 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; every mismatch here would be a wrong
+recovery decision or a wrong benchmark op stream on the Rust side.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bucket_hash, membership, ref
+from compile.kernels import workload as wl
+
+# Shapes: powers of two so tiling divides evenly, plus the no-grid path.
+SIZES = st.sampled_from([8, 64, 256, 1024, 4096])
+BLOCKS = st.sampled_from([None, 64, 256])
+
+flags = st.integers(min_value=0, max_value=1)
+
+
+def _plane(draw, n, strat):
+    return jnp.asarray(draw(st.lists(strat, min_size=n, max_size=n)), dtype=jnp.int32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data(), n=SIZES, block=BLOCKS)
+def test_classify_soft_matches_ref(data, n, block):
+    if block is not None and n % block != 0:
+        block = None
+    vs = _plane(data.draw, n, flags)
+    ve = _plane(data.draw, n, flags)
+    dl = _plane(data.draw, n, flags)
+    got = membership.classify_soft(vs, ve, dl, block=block)
+    want = ref.classify_soft(vs, ve, dl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data(), n=SIZES, block=BLOCKS)
+def test_classify_linkfree_matches_ref(data, n, block):
+    if block is not None and n % block != 0:
+        block = None
+    validity = _plane(data.draw, n, st.integers(min_value=0, max_value=3))
+    marked = _plane(data.draw, n, flags)
+    got = membership.classify_linkfree(validity, marked, block=block)
+    want = ref.classify_linkfree(validity, marked)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data(), n=SIZES, block=BLOCKS, nbits=st.integers(min_value=0, max_value=22))
+def test_bucket_of_matches_ref(data, n, block, nbits):
+    if block is not None and n % block != 0:
+        block = None
+    keys = jnp.asarray(
+        data.draw(
+            st.lists(
+                st.integers(min_value=-(2**63), max_value=2**63 - 1),
+                min_size=n,
+                max_size=n,
+            )
+        ),
+        dtype=jnp.int64,
+    )
+    mask = jnp.asarray([(1 << nbits) - 1], dtype=jnp.int64)
+    got = bucket_hash.bucket_of(keys, mask, block=block)
+    want = ref.bucket_of(keys, mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mix64_matches_rust_vector():
+    # rust/src/util/mod.rs asserts mix64(0) == 0xE220A8397B1DCDAF.
+    assert ref.np_mix64(0) == 0xE220A8397B1DCDAF
+    got = ref.mix64(jnp.asarray([0], dtype=jnp.uint64))
+    assert int(got[0]) == 0xE220A8397B1DCDAF
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**32),
+    base=st.integers(min_value=0, max_value=2**20),
+    key_range=st.integers(min_value=1, max_value=2**20),
+    read_micros=st.integers(min_value=0, max_value=1_000_000),
+)
+def test_workload_kernel_matches_ref(seed, base, key_range, read_micros):
+    n = 256
+    params = jnp.asarray([seed, base, key_range, read_micros], dtype=jnp.int64)
+    got_keys, got_ops = wl.workload(params, n, block=64)
+    want_keys, want_ops = ref.workload(seed, base, n, key_range, read_micros)
+    np.testing.assert_array_equal(np.asarray(got_keys), np.asarray(want_keys))
+    np.testing.assert_array_equal(np.asarray(got_ops), np.asarray(want_ops))
+
+
+def test_workload_read_fraction_statistics():
+    n = 65536
+    params = jnp.asarray([7, 0, 1024, 900_000], dtype=jnp.int64)
+    keys, ops = wl.workload(params, n, block=4096)
+    reads = int((np.asarray(ops) == 0).sum())
+    frac = reads / n
+    assert 0.88 < frac < 0.92, f"90% read mix off: {frac}"
+    assert int(np.asarray(keys).max()) < 1024
+    assert int(np.asarray(keys).min()) >= 0
+    # Inserts vs removes roughly balanced among updates.
+    ins = int((np.asarray(ops) == 1).sum())
+    rem = int((np.asarray(ops) == 2).sum())
+    assert abs(ins - rem) < 0.1 * (ins + rem)
+
+
+def test_workload_batches_are_disjoint_continuations():
+    # Batch (seed, base) then (seed, base+n) == one big batch split in two.
+    params_a = jnp.asarray([3, 0, 4096, 500_000], dtype=jnp.int64)
+    params_b = jnp.asarray([3, 256, 4096, 500_000], dtype=jnp.int64)
+    ka, oa = wl.workload(params_a, 256, block=64)
+    kb, ob = wl.workload(params_b, 256, block=64)
+    kw, ow = ref.workload(3, 0, 512, 4096, 500_000)
+    np.testing.assert_array_equal(np.concatenate([ka, kb]), np.asarray(kw))
+    np.testing.assert_array_equal(np.concatenate([oa, ob]), np.asarray(ow))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

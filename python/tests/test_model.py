@@ -1,0 +1,65 @@
+"""L2 model tests: recovery plans and histogram shapes/semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+flags = st.integers(min_value=0, max_value=1)
+
+
+def _plane(draw, n, strat=flags):
+    return jnp.asarray(draw(st.lists(strat, min_size=n, max_size=n)), dtype=jnp.int32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_recovery_plan_soft(data):
+    n = 256
+    vs = _plane(data.draw, n)
+    ve = _plane(data.draw, n)
+    dl = _plane(data.draw, n)
+    keys = jnp.asarray(
+        data.draw(st.lists(st.integers(0, 2**62), min_size=n, max_size=n)),
+        dtype=jnp.int64,
+    )
+    mask = jnp.asarray([63], dtype=jnp.int64)
+    member, bucket = model.recovery_plan_soft(vs, ve, dl, keys, mask, block=64)
+    np.testing.assert_array_equal(np.asarray(member), np.asarray(ref.classify_soft(vs, ve, dl)))
+    np.testing.assert_array_equal(np.asarray(bucket), np.asarray(ref.bucket_of(keys, mask)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_recovery_plan_linkfree(data):
+    n = 256
+    validity = _plane(data.draw, n, st.integers(0, 3))
+    marked = _plane(data.draw, n)
+    keys = jnp.asarray(
+        data.draw(st.lists(st.integers(0, 2**62), min_size=n, max_size=n)),
+        dtype=jnp.int64,
+    )
+    mask = jnp.asarray([127], dtype=jnp.int64)
+    member, bucket = model.recovery_plan_linkfree(validity, marked, keys, mask, block=64)
+    np.testing.assert_array_equal(
+        np.asarray(member), np.asarray(ref.classify_linkfree(validity, marked))
+    )
+    np.testing.assert_array_equal(np.asarray(bucket), np.asarray(ref.bucket_of(keys, mask)))
+
+
+def test_histogram_counts_members_only():
+    member = jnp.asarray([1, 0, 1, 1, 0, 1], dtype=jnp.int32)
+    bucket = jnp.asarray([0, 0, 1, 1, 2, 3], dtype=jnp.int32)
+    h = model.bucket_histogram(member, bucket, nbuckets=4)
+    np.testing.assert_array_equal(np.asarray(h), [1, 2, 0, 1])
+    assert int(np.asarray(h).sum()) == int(np.asarray(member).sum())
+
+
+def test_histogram_random_mass_conservation():
+    rng = np.random.default_rng(0)
+    member = jnp.asarray(rng.integers(0, 2, 4096), dtype=jnp.int32)
+    bucket = jnp.asarray(rng.integers(0, 32, 4096), dtype=jnp.int32)
+    h = model.bucket_histogram(member, bucket, nbuckets=32)
+    assert int(np.asarray(h).sum()) == int(np.asarray(member).sum())

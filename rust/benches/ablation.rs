@@ -1,0 +1,88 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! 1. **psync-latency regime sweep** — the paper's performance argument is
+//!    that durable-set cost is flush-bound; sweeping the modelled clflush
+//!    latency moves the workload from compute-bound (all families equal)
+//!    to psync-bound (ranking follows psyncs/op: SOFT < link-free <
+//!    log-free). This is the knob that reproduces the paper's *shape* on
+//!    hardware without persistence instructions.
+//! 2. **key distribution** — uniform (the paper) vs zipfian 0.99 (YCSB
+//!    default): skew concentrates flush-flag hits and helping.
+//! 3. **durability tax** — durable families vs the volatile Harris
+//!    baseline at equal workloads.
+mod common;
+
+use durasets::bench::{build_set, run_phase, Row, FAMILIES};
+use durasets::config::Structure;
+use durasets::sets::Family;
+use durasets::workload::{KeyDist, WorkloadSpec};
+use std::time::Duration;
+
+fn main() {
+    let cfg = common::setup();
+    let dur = cfg.duration;
+
+    // 1. psync latency sweep (hash, 50% reads = YCSB A, 2 threads).
+    let lats: Vec<u64> = vec![0, 100, 250, 500, 1000];
+    let rows: Vec<Row> = lats
+        .iter()
+        .map(|&ns| {
+            durasets::pmem::set_psync_ns(ns);
+            let samples = FAMILIES
+                .iter()
+                .map(|&f| {
+                    let set = build_set(f, Structure::Hash, 1 << 14);
+                    let spec = WorkloadSpec::uniform(1 << 14, 50, 0xAB1);
+                    (f, run_phase(set.as_ref(), spec, 2, dur))
+                })
+                .collect();
+            Row { x: format!("{ns}ns"), samples }
+        })
+        .collect();
+    common::emit(
+        "Ablation 1: psync latency regime (hash 16K keys, 50% reads)",
+        "psync_ns",
+        &rows,
+    );
+    durasets::pmem::set_psync_ns(100);
+
+    // 2. uniform vs zipfian.
+    let rows: Vec<Row> = [("uniform", KeyDist::Uniform), ("zipf-0.99", KeyDist::Zipfian(0.99))]
+        .iter()
+        .map(|(name, dist)| {
+            let samples = FAMILIES
+                .iter()
+                .map(|&f| {
+                    let set = build_set(f, Structure::Hash, 1 << 14);
+                    let spec = WorkloadSpec {
+                        key_range: 1 << 14,
+                        read_micros: 900_000,
+                        dist: *dist,
+                        seed: 0xAB2,
+                    };
+                    (f, run_phase(set.as_ref(), spec, 2, dur))
+                })
+                .collect();
+            Row { x: name.to_string(), samples }
+        })
+        .collect();
+    common::emit("Ablation 2: key distribution (hash 16K keys, 90% reads)", "dist", &rows);
+
+    // 3. durability tax vs volatile Harris.
+    let all = [Family::Volatile, Family::Soft, Family::LinkFree, Family::LogFree];
+    let rows: Vec<Row> = [100u32, 50]
+        .iter()
+        .map(|&pct| {
+            let samples = all
+                .iter()
+                .map(|&f| {
+                    let set = build_set(f, Structure::Hash, 1 << 14);
+                    let spec = WorkloadSpec::uniform(1 << 14, pct, 0xAB3);
+                    (f, run_phase(set.as_ref(), spec, 2, Duration::from_millis(dur.as_millis() as u64)))
+                })
+                .collect();
+            Row { x: format!("{pct}% reads"), samples }
+        })
+        .collect();
+    common::emit("Ablation 3: durability tax vs volatile baseline", "mix", &rows);
+}

@@ -1,0 +1,28 @@
+//! Shared glue for the figure benches (custom harness, no criterion in
+//! the offline crate set): set the psync model, print paper-style tables.
+
+use durasets::bench::{report, Row, SweepCfg};
+
+pub fn setup() -> SweepCfg {
+    // The paper's clflush-class psync cost; override via env.
+    let psync_ns = std::env::var("DURASETS_PSYNC_NS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100);
+    durasets::pmem::set_psync_ns(psync_ns);
+    let cfg = SweepCfg::from_env();
+    println!(
+        "# testbed: {} hw threads; full={} point={}ms psync_ns={psync_ns}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        cfg.full,
+        cfg.duration.as_millis()
+    );
+    cfg
+}
+
+pub fn emit(title: &str, x_label: &str, rows: &[Row]) {
+    print!("{}", report::render(title, x_label, rows));
+    if let Some((f, x, imp)) = report::peak_improvement(rows) {
+        println!("peak improvement vs log-free: {f} at {x_label}={x}: {imp:.2}x\n");
+    }
+}

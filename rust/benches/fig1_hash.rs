@@ -1,0 +1,9 @@
+//! Paper Fig 1c: hash-set throughput + improvement vs #threads
+//! (load factor 1, 90% reads; paper range 1M, scaled by default).
+mod common;
+
+fn main() {
+    let cfg = common::setup();
+    let rows = durasets::bench::fig1_hash(&cfg, 0xF161C);
+    common::emit("Fig 1c: hash vs #threads (90% reads)", "threads", &rows);
+}

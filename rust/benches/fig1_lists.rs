@@ -1,0 +1,11 @@
+//! Paper Fig 1a/1b: list throughput + improvement vs #threads
+//! (key ranges 256 and 1024, 90% reads, half-range pre-fill).
+mod common;
+
+fn main() {
+    let cfg = common::setup();
+    let rows = durasets::bench::fig1_lists(&cfg, 256, 0xF161A);
+    common::emit("Fig 1a: list vs #threads (range 256, 90% reads)", "threads", &rows);
+    let rows = durasets::bench::fig1_lists(&cfg, 1024, 0xF161B);
+    common::emit("Fig 1b: list vs #threads (range 1024, 90% reads)", "threads", &rows);
+}

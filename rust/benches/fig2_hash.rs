@@ -1,0 +1,14 @@
+//! Paper Fig 2b: hash throughput vs key range (paper 1K..4M x16,
+//! 32 threads; scaled by default — DURASETS_FULL=1 for paper scale).
+mod common;
+
+fn main() {
+    let cfg = common::setup();
+    let threads = (*cfg.threads.last().unwrap() / 2).max(1);
+    let rows = durasets::bench::fig2_hash(&cfg, threads, 0xF162B);
+    common::emit(
+        &format!("Fig 2b: hash vs key range ({threads} threads, 90% reads)"),
+        "key_range",
+        &rows,
+    );
+}

@@ -1,0 +1,14 @@
+//! Paper Fig 2a: list throughput vs key range (16..16K x4, 90% reads,
+//! max threads — paper used 64). Shows the SOFT/link-free crossover.
+mod common;
+
+fn main() {
+    let cfg = common::setup();
+    let threads = *cfg.threads.last().unwrap();
+    let rows = durasets::bench::fig2_lists(&cfg, threads, 0xF162A);
+    common::emit(
+        &format!("Fig 2a: list vs key range ({threads} threads, 90% reads)"),
+        "key_range",
+        &rows,
+    );
+}

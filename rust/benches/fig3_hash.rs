@@ -1,0 +1,14 @@
+//! Paper Fig 3c: hash throughput vs read fraction (50..100%; covers
+//! YCSB A/B/C at 50/95/100).
+mod common;
+
+fn main() {
+    let cfg = common::setup();
+    let threads = (*cfg.threads.last().unwrap() / 2).max(1);
+    let rows = durasets::bench::fig3_hash(&cfg, threads, 0xF163C);
+    common::emit(
+        &format!("Fig 3c: hash vs read% ({threads} threads)"),
+        "read_pct",
+        &rows,
+    );
+}

@@ -1,0 +1,20 @@
+//! Paper Fig 3a/3b: list throughput vs read fraction (50..100%,
+//! ranges 256 and 1024; covers YCSB A/B/C).
+mod common;
+
+fn main() {
+    let cfg = common::setup();
+    let threads = *cfg.threads.last().unwrap();
+    let rows = durasets::bench::fig3_lists(&cfg, threads, 256, 0xF163A);
+    common::emit(
+        &format!("Fig 3a: list vs read% (range 256, {threads} threads)"),
+        "read_pct",
+        &rows,
+    );
+    let rows = durasets::bench::fig3_lists(&cfg, threads, 1024, 0xF163B);
+    common::emit(
+        &format!("Fig 3b: list vs read% (range 1024, {threads} threads)"),
+        "read_pct",
+        &rows,
+    );
+}

@@ -1,0 +1,69 @@
+//! Micro table: per-op psync counts + single-threaded latency for every
+//! family and op kind — the cost model behind the paper's §6 analysis
+//! (SOFT: 1 psync/update 0/read at the theoretical bound; link-free ~1;
+//! log-free ~2 plus reader-side flushes of dirty links).
+mod common;
+
+use durasets::config::Structure;
+use durasets::pmem::stats;
+use durasets::sets::{ConcurrentSet, Family};
+use std::time::Instant;
+
+fn measure(family: Family) {
+    let set = durasets::bench::build_set(family, Structure::Hash, 1 << 14);
+    let n = 10_000u64;
+    let base = 1 << 20; // keys outside the prefill range
+
+    let mut line = format!("{:>10}", family.to_string());
+    // insert (fresh keys)
+    let s0 = stats::snapshot();
+    let t0 = Instant::now();
+    for k in 0..n {
+        set.insert(base + k, k);
+    }
+    let dt = t0.elapsed();
+    let d = stats::snapshot().since(&s0);
+    line += &format!(
+        " | insert {:>7.0}ns {:>5.2}psync",
+        dt.as_nanos() as f64 / n as f64,
+        d.fences as f64 / n as f64
+    );
+    // contains (hit)
+    let s0 = stats::snapshot();
+    let t0 = Instant::now();
+    for k in 0..n {
+        set.contains(base + k);
+    }
+    let dt = t0.elapsed();
+    let d = stats::snapshot().since(&s0);
+    line += &format!(
+        " | read {:>7.0}ns {:>5.2}psync",
+        dt.as_nanos() as f64 / n as f64,
+        d.fences as f64 / n as f64
+    );
+    // remove (hit)
+    let s0 = stats::snapshot();
+    let t0 = Instant::now();
+    for k in 0..n {
+        set.remove(base + k);
+    }
+    let dt = t0.elapsed();
+    let d = stats::snapshot().since(&s0);
+    line += &format!(
+        " | remove {:>7.0}ns {:>5.2}psync",
+        dt.as_nanos() as f64 / n as f64,
+        d.fences as f64 / n as f64
+    );
+    println!("{line}");
+}
+
+fn main() {
+    let _ = common::setup();
+    println!("== micro: per-op latency + exact psyncs/op (successful ops, no contention) ==");
+    for f in [Family::Soft, Family::LinkFree, Family::LogFree, Family::Volatile] {
+        measure(f);
+    }
+    println!(
+        "\nexpected psyncs/op: soft 1/0/1, link-free 1/0/1 (flag-elided), log-free 2/0/2, volatile 0/0/0"
+    );
+}

@@ -1,0 +1,31 @@
+//! Profiling driver (not a figure): sustained update-heavy phase on one
+//! family, for `perf record` / flamegraphs during the perf pass.
+//! Usage: cargo bench --bench profile_target -- is ignored; env:
+//!   DURASETS_PROFILE_FAMILY=soft|link-free|log-free|volatile
+//!   DURASETS_PROFILE_MS=3000  DURASETS_PSYNC_NS=100  DURASETS_PROFILE_READPCT=0
+mod common;
+
+use durasets::config::Structure;
+use durasets::sets::Family;
+use durasets::workload::WorkloadSpec;
+use std::time::Duration;
+
+fn main() {
+    let _ = common::setup();
+    let family = Family::parse(
+        &std::env::var("DURASETS_PROFILE_FAMILY").unwrap_or_else(|_| "soft".into()),
+    )
+    .unwrap();
+    let ms: u64 = std::env::var("DURASETS_PROFILE_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(3000);
+    let pct: u32 = std::env::var("DURASETS_PROFILE_READPCT").ok().and_then(|v| v.parse().ok()).unwrap_or(0);
+    let range = 1 << 14;
+    let set = durasets::bench::build_set(family, Structure::Hash, range);
+    let spec = WorkloadSpec::uniform(range, pct, 1);
+    let s = durasets::bench::run_phase(set.as_ref(), spec, 2, Duration::from_millis(ms));
+    println!(
+        "{family}: {:.3} Mops/s, {:.3} psync/op over {:?}",
+        s.mops(),
+        s.psync_per_op(),
+        s.elapsed
+    );
+}

@@ -1,0 +1,64 @@
+//! Recovery bench: rebuild cost vs durable-set size, pure-Rust scan vs
+//! XLA-accelerated classification (the L1/L2 pipeline), for SOFT and
+//! link-free hash sets. Validates the §2.1 recovery design and gives the
+//! slots/s numbers recorded in EXPERIMENTS.md.
+mod common;
+
+use durasets::coordinator::DuraKv;
+use durasets::config::Config;
+use durasets::pmem::{self, CrashPolicy};
+use durasets::sets::Family;
+use std::time::Instant;
+
+fn bench_family(family: Family, keys: u64) {
+    let mut cfg = Config::default();
+    cfg.family = family;
+    cfg.shards = 1;
+    cfg.key_range = keys * 2;
+    cfg.sim = true;
+    cfg.psync_ns = 0;
+    let kv = DuraKv::create(cfg);
+    for k in 0..keys {
+        kv.put(k * 2, k);
+    }
+    let ticket = kv.crash(CrashPolicy::PESSIMISTIC);
+    let t0 = Instant::now();
+    let (kv2, rep) = ticket.recover().unwrap();
+    let rust_wall = t0.elapsed();
+
+    let ticket = kv2.crash(CrashPolicy::PESSIMISTIC);
+    let t0 = Instant::now();
+    let (kv3, rep2) = ticket.recover_accel().unwrap();
+    let accel_wall = t0.elapsed();
+    assert_eq!(rep.members, rep2.members);
+    let slots = (rep.members + rep.reclaimed) as f64;
+    println!(
+        "{:>10} {:>9} keys | rust {:>10.3?} ({:>6.1} Mslots/s) | accel {:>10.3?} ({:>6.1} Mslots/s)",
+        family.to_string(),
+        rep.members,
+        rust_wall,
+        slots / rust_wall.as_secs_f64() / 1e6,
+        accel_wall,
+        slots / accel_wall.as_secs_f64() / 1e6,
+    );
+    drop(kv3);
+    pmem::set_mode(pmem::Mode::Perf);
+}
+
+fn main() {
+    let cfg = common::setup();
+    // Warm the thread-local planner cache so PJRT compilation (~150ms,
+    // once per process) is not charged to the first data point.
+    durasets::runtime::RecoveryPlanner::with_cached(|_| Ok(())).unwrap();
+    let sizes: &[u64] = if cfg.full {
+        &[10_000, 100_000, 1_000_000, 4_000_000]
+    } else {
+        &[10_000, 100_000, 500_000]
+    };
+    println!("== recovery: rebuild cost vs durable-set size (hash, 1 shard) ==");
+    for &n in sizes {
+        for family in [Family::Soft, Family::LinkFree] {
+            bench_family(family, n);
+        }
+    }
+}

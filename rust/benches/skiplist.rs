@@ -1,0 +1,42 @@
+//! Extension bench: skip lists vs flat lists across key ranges (90%
+//! reads). The paper claims both schemes extend to skip lists — this
+//! shows the volatile index turning the O(n) list walk into O(log n)
+//! while durability costs (psyncs/op) stay identical, since only
+//! bottom-level nodes are durable.
+mod common;
+
+use durasets::bench::{run_phase, Row};
+use durasets::sets::{linkfree, soft};
+use durasets::workload::{prefill, WorkloadSpec};
+
+fn main() {
+    let cfg = common::setup();
+    let ranges = [256u64, 1024, 4096, 16384, 65536];
+    let rows: Vec<Row> = ranges
+        .iter()
+        .map(|&range| {
+            let spec = WorkloadSpec::uniform(range, 90, 0x5C1A);
+            let list = linkfree::LfList::new();
+            prefill(&list, range);
+            let flat = run_phase(&list, spec, 2, cfg.duration);
+            let skip = linkfree::LfSkipList::new();
+            prefill(&skip, range);
+            let lf_skip = run_phase(&skip, spec, 2, cfg.duration);
+            let sskip = soft::SoftSkipList::new();
+            prefill(&sskip, range);
+            let soft_skip = run_phase(&sskip, spec, 2, cfg.duration);
+            Row {
+                x: range.to_string(),
+                samples: vec![
+                    (durasets::sets::Family::LinkFree, flat),
+                    // Label reuse: volatile column = LF SKIP LIST,
+                    // soft column = SOFT SKIP LIST.
+                    (durasets::sets::Family::Volatile, lf_skip),
+                    (durasets::sets::Family::Soft, soft_skip),
+                ],
+            }
+        })
+        .collect();
+    println!("(label reuse: link-free = flat LF list, volatile = LF SKIP LIST, soft = SOFT SKIP LIST)");
+    common::emit("Extension: skip lists vs flat list (90% reads)", "key_range", &rows);
+}

@@ -1,0 +1,301 @@
+//! Epoch-based reclamation (EBR), after Fraser / the ssmem variant the
+//! paper uses (§5).
+//!
+//! A global epoch counter plus one published slot per thread: a thread is
+//! either *idle* or *in* an epoch for the duration of one set operation.
+//! Retired nodes are stamped with the retire-time epoch; once the global
+//! epoch has advanced two past the stamp (and therefore no thread can
+//! still be in the stamp's epoch), the node is handed to its free
+//! function. ABA and use-after-free on the lock-free lists are prevented
+//! exactly as in the paper.
+//!
+//! Not lock-free (a stalled pinned thread blocks advancement) — the same
+//! trade-off the paper makes for performance.
+
+use crate::util::{tid::tid, MAX_THREADS};
+use crossbeam_utils::CachePadded;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Retire-list length that triggers a reclamation attempt (amortises the
+/// slot scan; raising it trades memory for time).
+const COLLECT_THRESHOLD: usize = 256;
+
+/// A deferred free: `f(ptr, ctx)` runs after the grace period.
+struct Retired {
+    ptr: *mut u8,
+    ctx: usize,
+    f: unsafe fn(*mut u8, usize),
+    epoch: u64,
+}
+
+struct Local {
+    /// Re-entrancy depth (a hash op pins, its inner list op pins again).
+    depth: u32,
+    /// Deferred frees in retire order. Epoch stamps are non-decreasing
+    /// (the global epoch only grows), so reclamation is a front-drain:
+    /// O(freed), never O(backlog) — a pinned-but-descheduled thread can
+    /// stall advancement for milliseconds on an oversubscribed core, and
+    /// an O(backlog) scan per collect goes quadratic in that window.
+    limbo: std::collections::VecDeque<Retired>,
+}
+
+impl Local {
+    const fn new() -> Self {
+        Local { depth: 0, limbo: std::collections::VecDeque::new() }
+    }
+}
+
+/// One EBR domain (one per structure instance).
+pub struct Ebr {
+    epoch: CachePadded<AtomicU64>,
+    /// 0 = idle, otherwise (epoch << 1) | 1.
+    slots: Box<[CachePadded<AtomicU64>]>,
+    locals: Box<[CachePadded<UnsafeCell<Local>>]>,
+    /// One past the highest tid that ever pinned this domain: advancement
+    /// scans only `0..hwm` instead of all MAX_THREADS cache lines (the
+    /// full scan dominated update-heavy profiles — see EXPERIMENTS.md
+    /// §Perf).
+    hwm: CachePadded<std::sync::atomic::AtomicUsize>,
+}
+
+unsafe impl Send for Ebr {}
+unsafe impl Sync for Ebr {}
+
+impl Default for Ebr {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Ebr {
+    pub fn new() -> Self {
+        Ebr {
+            epoch: CachePadded::new(AtomicU64::new(2)),
+            slots: (0..MAX_THREADS)
+                .map(|_| CachePadded::new(AtomicU64::new(0)))
+                .collect(),
+            locals: (0..MAX_THREADS)
+                .map(|_| CachePadded::new(UnsafeCell::new(Local::new())))
+                .collect(),
+            hwm: CachePadded::new(std::sync::atomic::AtomicUsize::new(0)),
+        }
+    }
+
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    fn local(&self) -> &mut Local {
+        // Safety: indexed by the caller's unique tid, single-thread access.
+        unsafe { &mut *self.locals[tid()].get() }
+    }
+
+    /// Enter the current epoch for the duration of the returned guard
+    /// (re-entrant: nested pins share the outermost epoch).
+    #[inline]
+    pub fn pin(&self) -> Guard<'_> {
+        let t = tid();
+        let local = unsafe { &mut *self.locals[t].get() };
+        if local.depth == 0 {
+            if t >= self.hwm.load(Ordering::Relaxed) {
+                self.hwm.fetch_max(t + 1, Ordering::SeqCst);
+            }
+            let slot = &self.slots[t];
+            loop {
+                let e = self.epoch.load(Ordering::SeqCst);
+                slot.store((e << 1) | 1, Ordering::SeqCst);
+                // Re-validate: if the epoch moved between load and store we
+                // might have published a stale epoch; retry (rare).
+                if self.epoch.load(Ordering::SeqCst) == e {
+                    break;
+                }
+            }
+        }
+        local.depth += 1;
+        Guard { ebr: self, t }
+    }
+
+    /// Defer `f(ptr, ctx)` until no thread can hold a reference from the
+    /// current epoch. `ctx` is an opaque word (typically a pool pointer
+    /// that outlives the Ebr domain).
+    pub fn retire(&self, ptr: *mut u8, ctx: usize, f: unsafe fn(*mut u8, usize)) {
+        let e = self.epoch.load(Ordering::SeqCst);
+        let local = self.local();
+        local.limbo.push_back(Retired { ptr, ctx, f, epoch: e });
+        if local.limbo.len() % COLLECT_THRESHOLD == 0 {
+            self.collect(local);
+        }
+    }
+
+    /// Pending (not yet freed) retirements of the calling thread.
+    pub fn pending(&self) -> usize {
+        self.local().limbo.len()
+    }
+
+    fn try_advance(&self) {
+        let e = self.epoch.load(Ordering::SeqCst);
+        let n = self.hwm.load(Ordering::SeqCst);
+        for s in self.slots.iter().take(n) {
+            let v = s.load(Ordering::SeqCst);
+            if v != 0 && (v >> 1) != e {
+                return; // someone is still in an older epoch
+            }
+        }
+        let _ = self
+            .epoch
+            .compare_exchange(e, e + 1, Ordering::SeqCst, Ordering::SeqCst);
+    }
+
+    fn collect(&self, local: &mut Local) {
+        self.try_advance();
+        let g = self.epoch.load(Ordering::SeqCst);
+        // Items retired at epoch <= g-2 are unreachable: every active
+        // thread is in epoch g or g-1. Epochs are non-decreasing in the
+        // deque, so this is a pure front-drain.
+        while let Some(r) = local.limbo.front() {
+            if r.epoch + 2 > g {
+                break;
+            }
+            let r = local.limbo.pop_front().unwrap();
+            unsafe { (r.f)(r.ptr, r.ctx) };
+        }
+    }
+
+    /// Free everything in every thread's limbo list immediately.
+    ///
+    /// # Safety
+    /// Callable only when no thread is inside an operation on the owning
+    /// structure (e.g. from the structure's `Drop`, or between test
+    /// phases).
+    pub unsafe fn drain_all(&self) {
+        for l in self.locals.iter() {
+            let local = &mut *l.get();
+            for r in local.limbo.drain(..) {
+                (r.f)(r.ptr, r.ctx);
+            }
+        }
+    }
+
+    /// Drop all deferred frees without running them (crash simulation: the
+    /// volatile heap is gone; durable slots are reclaimed by recovery).
+    pub unsafe fn abandon_all(&self) {
+        for l in self.locals.iter() {
+            (*l.get()).limbo.clear();
+        }
+    }
+}
+
+/// RAII epoch pin.
+pub struct Guard<'a> {
+    ebr: &'a Ebr,
+    t: usize,
+}
+
+impl Drop for Guard<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        let local = unsafe { &mut *self.ebr.locals[self.t].get() };
+        local.depth -= 1;
+        if local.depth == 0 {
+            self.ebr.slots[self.t].store(0, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    static FREED: AtomicUsize = AtomicUsize::new(0);
+
+    unsafe fn count_free(_p: *mut u8, _ctx: usize) {
+        FREED.fetch_add(1, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn nested_pin_is_reentrant() {
+        let ebr = Ebr::new();
+        let g1 = ebr.pin();
+        let g2 = ebr.pin();
+        drop(g1);
+        // still pinned
+        assert_ne!(ebr.slots[tid()].load(Ordering::SeqCst), 0);
+        drop(g2);
+        assert_eq!(ebr.slots[tid()].load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn retired_items_eventually_freed_when_unpinned() {
+        FREED.store(0, Ordering::SeqCst);
+        let ebr = Ebr::new();
+        for _ in 0..(COLLECT_THRESHOLD * 3) {
+            ebr.retire(std::ptr::null_mut(), 0, count_free);
+        }
+        // Collection happens on threshold; with no pinned threads the
+        // epoch advances freely, so most items must be freed by now.
+        assert!(FREED.load(Ordering::SeqCst) >= COLLECT_THRESHOLD);
+    }
+
+    #[test]
+    fn pinned_reader_blocks_reclamation() {
+        let ebr = Arc::new(Ebr::new());
+        let freed = Arc::new(AtomicUsize::new(0));
+
+        // Reader thread pins and holds.
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+        let ebr2 = ebr.clone();
+        let reader = std::thread::spawn(move || {
+            let _g = ebr2.pin();
+            ready_tx.send(()).unwrap();
+            rx.recv().unwrap();
+        });
+        ready_rx.recv().unwrap();
+
+        // Writer thread retires many items while the reader is pinned; the
+        // epoch cannot advance 2 steps, so nothing retired *after* the pin
+        // may be freed.
+        let ebr3 = ebr.clone();
+        let freed2 = freed.clone();
+        std::thread::spawn(move || {
+            unsafe fn noop(_p: *mut u8, ctx: usize) {
+                (*(ctx as *const AtomicUsize)).fetch_add(1, Ordering::SeqCst);
+            }
+            for _ in 0..(COLLECT_THRESHOLD * 2) {
+                ebr3.retire(std::ptr::null_mut(), &*freed2 as *const _ as usize, noop);
+            }
+        })
+        .join()
+        .unwrap();
+
+        // Epoch at pin time = E. Items retired at E can be freed only once
+        // global >= E+2, which requires the reader to leave E. At most one
+        // advancement (to E+1) can happen while the reader stays pinned.
+        assert_eq!(freed.load(Ordering::SeqCst), 0, "freed under an active pin");
+
+        tx.send(()).unwrap();
+        reader.join().unwrap();
+
+        // After unpin, retiring more items triggers collection and frees
+        // the backlog.
+        unsafe fn noop2(_p: *mut u8, ctx: usize) {
+            (*(ctx as *const AtomicUsize)).fetch_add(1, Ordering::SeqCst);
+        }
+        for _ in 0..(COLLECT_THRESHOLD * 2) {
+            ebr.retire(std::ptr::null_mut(), &*freed as *const _ as usize, noop2);
+        }
+        assert!(freed.load(Ordering::SeqCst) > 0);
+    }
+
+    #[test]
+    fn drain_all_flushes_everything() {
+        FREED.store(0, Ordering::SeqCst);
+        let ebr = Ebr::new();
+        for _ in 0..5 {
+            ebr.retire(std::ptr::null_mut(), 0, count_free);
+        }
+        unsafe { ebr.drain_all() };
+        assert_eq!(ebr.pending(), 0);
+    }
+}

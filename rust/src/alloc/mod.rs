@@ -1,0 +1,20 @@
+//! ssmem-style durable memory management (paper §5).
+//!
+//! * [`area`] — per-thread **durable areas** of fixed 64-byte slots, the
+//!   only place persistent nodes live, so recovery can find every
+//!   potential set member by scanning areas (no durable linking needed,
+//!   and no persistent-leak logging: a lost allocation is found by the
+//!   scan and reclaimed via the validity scheme).
+//! * [`ebr`] — **epoch-based reclamation** guarding against ABA and
+//!   use-after-free, mirroring the paper's choice of the ssmem EBR
+//!   ("not lock-free but provides progress when threads are not stuck").
+//! * [`volatile`] — slab pool for SOFT's volatile nodes (lost on crash by
+//!   design, rebuilt by recovery).
+
+pub mod area;
+pub mod ebr;
+pub mod volatile;
+
+pub use area::DurablePool;
+pub use ebr::{Ebr, Guard};
+pub use volatile::VolatilePool;

@@ -1,0 +1,295 @@
+//! Benchmark harness: the measurement loop + one driver per paper figure.
+//!
+//! Methodology mirrors §6.1: each data point pre-fills the structure with
+//! half the key range, runs N threads of the deterministic op stream for a
+//! fixed wall time, and reports Mops/s; we additionally report psyncs/op
+//! (flush+fence deltas), the metric the paper's whole design argument is
+//! about. Every figure prints the improvement factor over log-free, which
+//! is what the paper's right-hand panels show.
+//!
+//! Scale: points run `duration_ms` each (default 300; `DURASETS_FULL=1`
+//! switches to paper-scale sweeps and longer phases — see DESIGN.md's
+//! single-core note).
+
+pub mod report;
+
+use crate::config::Structure;
+use crate::pmem::stats;
+use crate::sets::{self, ConcurrentSet, Family};
+use crate::workload::{prefill, Op, WorkloadSpec};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+/// One measured data point.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub ops: u64,
+    pub elapsed: Duration,
+    pub flushes: u64,
+    pub fences: u64,
+}
+
+impl Sample {
+    pub fn mops(&self) -> f64 {
+        self.ops as f64 / self.elapsed.as_secs_f64() / 1e6
+    }
+
+    /// psyncs per operation (fences ≈ psyncs; flushes can exceed fences
+    /// when one psync covers several lines — not the case for 64B nodes).
+    pub fn psync_per_op(&self) -> f64 {
+        if self.ops == 0 {
+            0.0
+        } else {
+            self.fences as f64 / self.ops as f64
+        }
+    }
+}
+
+/// Run `threads` workload threads against `set` for `duration`.
+pub fn run_phase(
+    set: &dyn ConcurrentSet,
+    spec: WorkloadSpec,
+    threads: usize,
+    duration: Duration,
+) -> Sample {
+    let stop = AtomicBool::new(false);
+    let barrier = Barrier::new(threads + 1);
+    let before = stats::snapshot();
+    let mut total_ops = 0u64;
+    let mut elapsed = Duration::ZERO;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let stop = &stop;
+            let barrier = &barrier;
+            handles.push(scope.spawn(move || {
+                let mut stream = spec.stream(t as u64);
+                barrier.wait();
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // Batch 64 ops per stop-flag check.
+                    for _ in 0..64 {
+                        match stream.next_op() {
+                            Op::Contains(k) => {
+                                let _ = set.contains(k);
+                            }
+                            Op::Insert(k) => {
+                                let _ = set.insert(k, k);
+                            }
+                            Op::Remove(k) => {
+                                let _ = set.remove(k);
+                            }
+                        }
+                    }
+                    ops += 64;
+                }
+                ops
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        std::thread::sleep(duration);
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            total_ops += h.join().unwrap();
+        }
+        elapsed = t0.elapsed();
+    });
+    let delta = stats::snapshot().since(&before);
+    Sample { ops: total_ops, elapsed, flushes: delta.flushes, fences: delta.fences }
+}
+
+/// Build + pre-fill one structure for a data point.
+pub fn build_set(family: Family, structure: Structure, key_range: u64) -> Box<dyn ConcurrentSet> {
+    let set = match structure {
+        Structure::Hash => sets::new_hash(family, key_range as usize), // load factor 1
+        Structure::List => sets::new_list(family),
+    };
+    prefill(set.as_ref(), key_range);
+    set
+}
+
+/// Sweep parameters for the paper's figures, honoring `DURASETS_FULL`.
+pub struct SweepCfg {
+    pub threads: Vec<usize>,
+    pub duration: Duration,
+    pub hash_range_default: u64,
+    pub list_ranges_fig2: Vec<u64>,
+    pub hash_ranges_fig2: Vec<u64>,
+    pub read_pcts: Vec<u32>,
+    pub full: bool,
+}
+
+impl SweepCfg {
+    pub fn from_env() -> SweepCfg {
+        let full = std::env::var("DURASETS_FULL").map(|v| v == "1").unwrap_or(false);
+        let duration = Duration::from_millis(
+            std::env::var("DURASETS_POINT_MS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(if full { 5000 } else { 300 }),
+        );
+        if full {
+            SweepCfg {
+                threads: vec![1, 2, 4, 8, 16, 32, 64],
+                duration,
+                hash_range_default: 1 << 20,
+                list_ranges_fig2: vec![16, 64, 256, 1024, 4096, 16384],
+                hash_ranges_fig2: vec![1 << 10, 1 << 14, 1 << 18, 1 << 20, 1 << 22],
+                read_pcts: vec![50, 60, 70, 80, 90, 95, 100],
+                full,
+            }
+        } else {
+            SweepCfg {
+                threads: vec![1, 2, 4, 8],
+                duration,
+                hash_range_default: 1 << 17, // 128K keys (1-core scale)
+                list_ranges_fig2: vec![16, 64, 256, 1024, 4096, 16384],
+                hash_ranges_fig2: vec![1 << 10, 1 << 14, 1 << 17, 1 << 19],
+                read_pcts: vec![50, 70, 90, 95, 100],
+                full,
+            }
+        }
+    }
+}
+
+/// The three durable families compared in the paper, in display order.
+pub const FAMILIES: [Family; 3] = [Family::Soft, Family::LinkFree, Family::LogFree];
+
+/// One measured row: x value + one sample per family.
+pub struct Row {
+    pub x: String,
+    pub samples: Vec<(Family, Sample)>,
+}
+
+/// Generic sweep: for each x, build a fresh pre-filled structure per
+/// family and measure one phase.
+pub fn sweep<X: Clone + std::fmt::Display>(
+    xs: &[X],
+    families: &[Family],
+    mut point: impl FnMut(&X, Family) -> Sample,
+) -> Vec<Row> {
+    xs.iter()
+        .map(|x| Row {
+            x: x.to_string(),
+            samples: families.iter().map(|&f| (f, point(x, f))).collect(),
+        })
+        .collect()
+}
+
+// ---------------- figure drivers ----------------
+
+/// Fig 1a/1b: list throughput vs #threads (range 256 / 1024), 90% reads.
+pub fn fig1_lists(cfg: &SweepCfg, key_range: u64, seed: u64) -> Vec<Row> {
+    sweep(&cfg.threads, &FAMILIES, |&threads, family| {
+        let set = build_set(family, Structure::List, key_range);
+        let spec = WorkloadSpec::uniform(key_range, 90, seed);
+        run_phase(set.as_ref(), spec, threads, cfg.duration)
+    })
+}
+
+/// Fig 1c: hash throughput vs #threads (1M keys paper / scaled default).
+pub fn fig1_hash(cfg: &SweepCfg, seed: u64) -> Vec<Row> {
+    let range = cfg.hash_range_default;
+    sweep(&cfg.threads, &FAMILIES, |&threads, family| {
+        let set = build_set(family, Structure::Hash, range);
+        let spec = WorkloadSpec::uniform(range, 90, seed);
+        run_phase(set.as_ref(), spec, threads, cfg.duration)
+    })
+}
+
+/// Fig 2a: list throughput vs key range, fixed threads, 90% reads.
+pub fn fig2_lists(cfg: &SweepCfg, threads: usize, seed: u64) -> Vec<Row> {
+    sweep(&cfg.list_ranges_fig2.clone(), &FAMILIES, |&range, family| {
+        let set = build_set(family, Structure::List, range);
+        let spec = WorkloadSpec::uniform(range, 90, seed);
+        run_phase(set.as_ref(), spec, threads, cfg.duration)
+    })
+}
+
+/// Fig 2b: hash throughput vs key range, fixed threads, 90% reads.
+pub fn fig2_hash(cfg: &SweepCfg, threads: usize, seed: u64) -> Vec<Row> {
+    sweep(&cfg.hash_ranges_fig2.clone(), &FAMILIES, |&range, family| {
+        let set = build_set(family, Structure::Hash, range);
+        let spec = WorkloadSpec::uniform(range, 90, seed);
+        run_phase(set.as_ref(), spec, threads, cfg.duration)
+    })
+}
+
+/// Fig 3a/3b: list throughput vs read%, fixed threads + range.
+pub fn fig3_lists(cfg: &SweepCfg, threads: usize, key_range: u64, seed: u64) -> Vec<Row> {
+    sweep(&cfg.read_pcts.clone(), &FAMILIES, |&pct, family| {
+        let set = build_set(family, Structure::List, key_range);
+        let spec = WorkloadSpec::uniform(key_range, pct, seed);
+        run_phase(set.as_ref(), spec, threads, cfg.duration)
+    })
+}
+
+/// Fig 3c: hash throughput vs read%, fixed threads.
+pub fn fig3_hash(cfg: &SweepCfg, threads: usize, seed: u64) -> Vec<Row> {
+    let range = cfg.hash_range_default;
+    sweep(&cfg.read_pcts.clone(), &FAMILIES, |&pct, family| {
+        let set = build_set(family, Structure::Hash, range);
+        let spec = WorkloadSpec::uniform(range, pct, seed);
+        run_phase(set.as_ref(), spec, threads, cfg.duration)
+    })
+}
+
+/// §6 psync-count check: psyncs/op per family and op mix (the table the
+/// paper argues from: SOFT == 1/update 0/read; link-free ~1; log-free ~2).
+pub fn psync_table(duration: Duration, seed: u64) -> Vec<Row> {
+    let mixes: Vec<u32> = vec![100, 90, 50, 0];
+    sweep(&mixes, &FAMILIES, |&pct, family| {
+        let range = 1 << 14;
+        let set = build_set(family, Structure::Hash, range);
+        let spec = WorkloadSpec::uniform(range, pct, seed);
+        run_phase(set.as_ref(), spec, 2, duration)
+    })
+    .into_iter()
+    .map(|mut r| {
+        r.x = format!("{}% reads", r.x);
+        r
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_phase_counts_ops_and_psyncs() {
+        let set = build_set(Family::Soft, Structure::Hash, 1024);
+        let spec = WorkloadSpec::uniform(1024, 50, 1);
+        let s = run_phase(set.as_ref(), spec, 2, Duration::from_millis(50));
+        assert!(s.ops > 1000, "too few ops: {}", s.ops);
+        assert!(s.mops() > 0.0);
+        // 50% updates, ~50% of them succeed => psync/op around 0.25-0.6.
+        let p = s.psync_per_op();
+        assert!(p > 0.05 && p < 1.5, "soft psync/op {p}");
+    }
+
+    #[test]
+    fn volatile_phase_has_zero_psyncs() {
+        let set = build_set(Family::Volatile, Structure::Hash, 1024);
+        let spec = WorkloadSpec::uniform(1024, 50, 2);
+        let s = run_phase(set.as_ref(), spec, 2, Duration::from_millis(30));
+        assert_eq!(s.fences, 0);
+    }
+
+    #[test]
+    fn sweep_produces_rows() {
+        let rows = sweep(&[1usize, 2], &[Family::Volatile], |&t, family| {
+            let set = build_set(family, Structure::List, 64);
+            run_phase(
+                set.as_ref(),
+                WorkloadSpec::uniform(64, 90, 3),
+                t,
+                Duration::from_millis(20),
+            )
+        });
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].samples.len(), 1);
+    }
+}

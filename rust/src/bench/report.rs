@@ -1,0 +1,134 @@
+//! Paper-style result tables: Mops/s per family, psyncs/op, and the
+//! improvement factor over log-free (the paper's right-hand panels).
+
+use super::Row;
+use crate::sets::Family;
+
+/// Render a figure's rows as an aligned text table + CSV block.
+pub fn render(title: &str, x_label: &str, rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fams: Vec<Family> = rows
+        .first()
+        .map(|r| r.samples.iter().map(|(f, _)| *f).collect())
+        .unwrap_or_default();
+
+    // Header.
+    out.push_str(&format!("{x_label:>12}"));
+    for f in &fams {
+        out.push_str(&format!(" | {:>10} {:>9}", format!("{f}"), "psync/op"));
+    }
+    if fams.contains(&Family::LogFree) {
+        for f in &fams {
+            if *f != Family::LogFree {
+                out.push_str(&format!(" | {:>12}", format!("{f}/logfree")));
+            }
+        }
+    }
+    out.push('\n');
+
+    for row in rows {
+        out.push_str(&format!("{:>12}", row.x));
+        let logfree = row
+            .samples
+            .iter()
+            .find(|(f, _)| *f == Family::LogFree)
+            .map(|(_, s)| s.mops());
+        for (_, s) in &row.samples {
+            out.push_str(&format!(" | {:>10.3} {:>9.3}", s.mops(), s.psync_per_op()));
+        }
+        if let Some(base) = logfree {
+            for (f, s) in &row.samples {
+                if *f != Family::LogFree {
+                    let imp = if base > 0.0 { s.mops() / base } else { f64::NAN };
+                    out.push_str(&format!(" | {:>11.2}x", imp));
+                }
+            }
+        }
+        out.push('\n');
+    }
+
+    // Machine-readable block.
+    out.push_str("-- csv --\n");
+    out.push_str(&format!("{x_label}"));
+    for f in &fams {
+        out.push_str(&format!(",{f}_mops,{f}_psync_per_op"));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.x.replace(',', ";"));
+        for (_, s) in &row.samples {
+            out.push_str(&format!(",{:.4},{:.4}", s.mops(), s.psync_per_op()));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Peak improvement over log-free across all rows (the paper's headline
+/// "up to 3.3x" style number).
+pub fn peak_improvement(rows: &[Row]) -> Option<(Family, String, f64)> {
+    let mut best: Option<(Family, String, f64)> = None;
+    for row in rows {
+        let base = row
+            .samples
+            .iter()
+            .find(|(f, _)| *f == Family::LogFree)
+            .map(|(_, s)| s.mops())?;
+        if base <= 0.0 {
+            continue;
+        }
+        for (f, s) in &row.samples {
+            if *f != Family::LogFree {
+                let imp = s.mops() / base;
+                if best.as_ref().map(|b| imp > b.2).unwrap_or(true) {
+                    best = Some((*f, row.x.clone(), imp));
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::Sample;
+    use std::time::Duration;
+
+    fn sample(mops: f64) -> Sample {
+        Sample {
+            ops: (mops * 1e6) as u64,
+            elapsed: Duration::from_secs(1),
+            flushes: 10,
+            fences: 10,
+        }
+    }
+
+    fn rows() -> Vec<Row> {
+        vec![Row {
+            x: "8".into(),
+            samples: vec![
+                (Family::Soft, sample(3.3)),
+                (Family::LinkFree, sample(3.0)),
+                (Family::LogFree, sample(1.0)),
+            ],
+        }]
+    }
+
+    #[test]
+    fn render_contains_improvement_factors() {
+        let txt = render("t", "threads", &rows());
+        assert!(txt.contains("3.30x"), "{txt}");
+        assert!(txt.contains("-- csv --"));
+        assert!(txt.contains("soft_mops"));
+    }
+
+    #[test]
+    fn peak_improvement_finds_soft() {
+        let (f, x, imp) = peak_improvement(&rows()).unwrap();
+        assert_eq!(f, Family::Soft);
+        assert_eq!(x, "8");
+        assert!((imp - 3.3).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal CLI argument handling (no clap in the offline crate set).
+//!
+//! Grammar: `durasets <command> [--config FILE] [--flag value]... [key=value]...`
+//! `--flag value` pairs and bare `key=value` tokens both become config
+//! overrides; command-specific flags are read via [`Args::flag`].
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    /// `key=value` config overrides, in order.
+    pub overrides: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = argv.into_iter();
+        let mut args = Args { command: it.next().unwrap_or_default(), ..Default::default() };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let Some(value) = it.next() else {
+                    bail!("flag --{name} expects a value");
+                };
+                args.flags.insert(name.to_string(), value);
+            } else if tok.contains('=') {
+                args.overrides.push(tok);
+            } else {
+                bail!("unexpected argument '{tok}' (expected --flag value or key=value)");
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    /// Load the config honoring `--config` plus all `key=value` overrides.
+    pub fn config(&self) -> Result<crate::config::Config> {
+        crate::config::Config::load(self.flag("config"), &self.overrides)
+    }
+}
+
+pub const USAGE: &str = "\
+durasets — efficient lock-free durable sets (OOPSLA'19 reproduction)
+
+USAGE:
+  durasets <command> [--config FILE] [--flag value]... [key=value]...
+
+COMMANDS:
+  serve         run the sharded durable KV service (TCP line protocol)
+  bench         regenerate a paper figure: --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|recovery|all
+  crash-test    run ops, crash (sim), recover, verify — end to end
+  recover-demo  build a store, crash it, time rust vs XLA-accelerated recovery
+  workload      print a sample of the deterministic op stream
+  help          this text
+
+CONFIG KEYS (file or key=value):
+  family=soft|link-free|log-free|volatile   structure=hash|list
+  shards=N  key_range=N[K|M]  read_pct=0..100  threads=N
+  psync_ns=N  sim=true|false  seed=N  port=N  duration_ms=N  zipf_theta=F
+
+EXAMPLES:
+  durasets serve family=soft shards=4 key_range=1M port=7878
+  durasets bench --fig 1c
+  durasets crash-test family=link-free key_range=64K
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_flags_and_overrides() {
+        let a = parse("bench --fig 1c family=soft threads=8").unwrap();
+        assert_eq!(a.command, "bench");
+        assert_eq!(a.flag("fig"), Some("1c"));
+        assert_eq!(a.overrides, vec!["family=soft", "threads=8"]);
+    }
+
+    #[test]
+    fn rejects_dangling_flag_and_garbage() {
+        assert!(parse("bench --fig").is_err());
+        assert!(parse("bench loosetoken").is_err());
+    }
+
+    #[test]
+    fn config_integration() {
+        let a = parse("serve family=link-free shards=2").unwrap();
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.family, crate::sets::Family::LinkFree);
+        assert_eq!(cfg.shards, 2);
+    }
+}

@@ -1,0 +1,248 @@
+//! Configuration system: a typed schema over `key = value` files plus
+//! CLI-style `key=value` overrides (no TOML/serde in the offline crate
+//! set; the format is the subset every deployment tool can write).
+//!
+//! ```text
+//! # durasets.conf
+//! family      = soft        # link-free | soft | log-free | volatile
+//! structure   = hash        # hash | list
+//! shards      = 4
+//! key_range   = 1048576
+//! read_pct    = 90
+//! psync_ns    = 100
+//! port        = 7878
+//! ```
+
+use crate::sets::Family;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Which container shape the service uses.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Structure {
+    Hash,
+    List,
+}
+
+impl Structure {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" | "hashmap" | "hashset" => Some(Structure::Hash),
+            "list" | "linkedlist" => Some(Structure::List),
+            _ => None,
+        }
+    }
+}
+
+/// Full service/benchmark configuration with defaults mirroring the
+/// paper's hash-set evaluation (§6).
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub family: Family,
+    pub structure: Structure,
+    /// Number of coordinator shards (each owns one set instance).
+    pub shards: usize,
+    /// Key range; hash sets get `key_range / shards` buckets per shard
+    /// (the paper's load factor 1).
+    pub key_range: u64,
+    pub read_pct: u32,
+    pub threads: usize,
+    /// Injected psync latency (ns); models clflush cost. 0 disables.
+    pub psync_ns: u64,
+    /// pmem mode: "perf" or "sim" (sim enables crash()).
+    pub sim: bool,
+    pub seed: u64,
+    /// TCP port for `durasets serve`.
+    pub port: u16,
+    /// Benchmark phase length (milliseconds).
+    pub duration_ms: u64,
+    /// Zipfian skew; 0 = uniform.
+    pub zipf_theta: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            family: Family::Soft,
+            structure: Structure::Hash,
+            shards: 1,
+            key_range: 1 << 20,
+            read_pct: 90,
+            threads: 4,
+            psync_ns: 100,
+            sim: false,
+            seed: 0xD0_5E7,
+            port: 7878,
+            duration_ms: 1000,
+            zipf_theta: 0.0,
+        }
+    }
+}
+
+impl Config {
+    /// Parse a config file (ignored if `path` is None) and then apply
+    /// `key=value` overrides in order.
+    pub fn load(path: Option<&str>, overrides: &[String]) -> Result<Config> {
+        let mut map = BTreeMap::new();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p).map_err(|e| anyhow!("reading {p}: {e}"))?;
+            for (lineno, line) in text.lines().enumerate() {
+                let line = line.split('#').next().unwrap_or("").trim();
+                if line.is_empty() {
+                    continue;
+                }
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("{p}:{}: expected key = value", lineno + 1))?;
+                map.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .ok_or_else(|| anyhow!("override '{ov}': expected key=value"))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let mut cfg = Config::default();
+        for (k, v) in &map {
+            cfg.set(k, v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply one key.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "family" => {
+                self.family =
+                    Family::parse(value).ok_or_else(|| anyhow!("unknown family '{value}'"))?
+            }
+            "structure" => {
+                self.structure =
+                    Structure::parse(value).ok_or_else(|| anyhow!("unknown structure '{value}'"))?
+            }
+            "shards" => self.shards = value.parse()?,
+            "key_range" => self.key_range = parse_u64_with_suffix(value)?,
+            "read_pct" => self.read_pct = value.parse()?,
+            "threads" => self.threads = value.parse()?,
+            "psync_ns" => self.psync_ns = value.parse()?,
+            "sim" => self.sim = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "port" => self.port = value.parse()?,
+            "duration_ms" => self.duration_ms = value.parse()?,
+            "zipf_theta" => self.zipf_theta = value.parse()?,
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("shards must be >= 1");
+        }
+        if self.key_range == 0 {
+            bail!("key_range must be >= 1");
+        }
+        if self.read_pct > 100 {
+            bail!("read_pct must be <= 100");
+        }
+        if self.threads == 0 || self.threads > crate::util::MAX_THREADS - 8 {
+            bail!("threads must be in 1..={}", crate::util::MAX_THREADS - 8);
+        }
+        if !(0.0..1.0).contains(&self.zipf_theta) {
+            bail!("zipf_theta must be in [0, 1)");
+        }
+        Ok(())
+    }
+
+    /// Buckets per shard at the paper's load factor 1.
+    pub fn buckets_per_shard(&self) -> usize {
+        ((self.key_range as usize / self.shards).max(1)).next_power_of_two()
+    }
+
+    /// Workload spec for this config.
+    pub fn workload(&self) -> crate::workload::WorkloadSpec {
+        let mut spec =
+            crate::workload::WorkloadSpec::uniform(self.key_range, self.read_pct, self.seed);
+        if self.zipf_theta > 0.0 {
+            spec.dist = crate::workload::KeyDist::Zipfian(self.zipf_theta);
+        }
+        spec
+    }
+
+    /// Apply the pmem-level settings (mode + psync latency) globally.
+    pub fn apply_pmem(&self) {
+        crate::pmem::set_psync_ns(self.psync_ns);
+        crate::pmem::set_mode(if self.sim {
+            crate::pmem::Mode::Sim
+        } else {
+            crate::pmem::Mode::Perf
+        });
+    }
+}
+
+/// `1048576`, `1M`, `64K`, `4m` etc.
+fn parse_u64_with_suffix(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('k') | Some('K') => (&s[..s.len() - 1], 1024u64),
+        Some('m') | Some('M') => (&s[..s.len() - 1], 1024 * 1024),
+        Some('g') | Some('G') => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    Ok(num.trim().parse::<u64>()? * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_file_and_overrides() {
+        let dir = std::env::temp_dir().join(format!("durasets-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.conf");
+        std::fs::write(
+            &path,
+            "# comment\nfamily = link-free\nkey_range = 64K # inline comment\nshards=2\n",
+        )
+        .unwrap();
+        let cfg = Config::load(Some(path.to_str().unwrap()), &["read_pct=95".into()]).unwrap();
+        assert_eq!(cfg.family, Family::LinkFree);
+        assert_eq!(cfg.key_range, 64 * 1024);
+        assert_eq!(cfg.shards, 2);
+        assert_eq!(cfg.read_pct, 95);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(Config::load(None, &["family=quantum".into()]).is_err());
+        assert!(Config::load(None, &["shards=0".into()]).is_err());
+        assert!(Config::load(None, &["read_pct=101".into()]).is_err());
+        assert!(Config::load(None, &["no_such_key=1".into()]).is_err());
+        assert!(Config::load(None, &["zipf_theta=1.5".into()]).is_err());
+    }
+
+    #[test]
+    fn suffix_parsing() {
+        assert_eq!(parse_u64_with_suffix("10").unwrap(), 10);
+        assert_eq!(parse_u64_with_suffix("4K").unwrap(), 4096);
+        assert_eq!(parse_u64_with_suffix("1M").unwrap(), 1 << 20);
+        assert!(parse_u64_with_suffix("x").is_err());
+    }
+
+    #[test]
+    fn buckets_per_shard_load_factor_one() {
+        let mut cfg = Config::default();
+        cfg.key_range = 1 << 20;
+        cfg.shards = 4;
+        assert_eq!(cfg.buckets_per_shard(), 1 << 18);
+    }
+}

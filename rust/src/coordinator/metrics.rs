@@ -1,0 +1,119 @@
+//! Service metrics: op counters + log2 latency histogram, lock-free on the
+//! record path (per-thread slots would be overkill here — shard workers
+//! are few; plain relaxed atomics are uncontended in practice).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 40; // 2^0 .. 2^39 ns (~0.5s)
+
+pub struct Metrics {
+    pub gets: AtomicU64,
+    pub get_hits: AtomicU64,
+    pub puts: AtomicU64,
+    pub put_new: AtomicU64,
+    pub dels: AtomicU64,
+    pub del_hit: AtomicU64,
+    latency: [AtomicU64; BUCKETS],
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Metrics {
+            gets: Z,
+            get_hits: Z,
+            puts: Z,
+            put_new: Z,
+            dels: Z,
+            del_hit: Z,
+            latency: [Z; BUCKETS],
+        }
+    }
+
+    #[inline]
+    pub fn record_latency(&self, d: Duration) {
+        let ns = d.as_nanos().max(1) as u64;
+        let b = (63 - ns.leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn ops_total(&self) -> u64 {
+        self.gets.load(Ordering::Relaxed)
+            + self.puts.load(Ordering::Relaxed)
+            + self.dels.load(Ordering::Relaxed)
+    }
+
+    /// Latency quantile estimate from the histogram (upper bucket bound).
+    pub fn latency_quantile(&self, q: f64) -> Duration {
+        let total: u64 = self.latency.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.latency.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(1 << (i + 1));
+            }
+        }
+        Duration::from_nanos(1 << BUCKETS)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "ops={} gets={} (hits {}) puts={} (new {}) dels={} (hit {}) p50<={:?} p99<={:?}",
+            self.ops_total(),
+            self.gets.load(Ordering::Relaxed),
+            self.get_hits.load(Ordering::Relaxed),
+            self.puts.load(Ordering::Relaxed),
+            self.put_new.load(Ordering::Relaxed),
+            self.dels.load(Ordering::Relaxed),
+            self.del_hit.load(Ordering::Relaxed),
+            self.latency_quantile(0.5),
+            self.latency_quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let m = Metrics::new();
+        for i in 0..1000u64 {
+            m.record_latency(Duration::from_nanos(100 + i * 10));
+        }
+        let p50 = m.latency_quantile(0.5);
+        let p99 = m.latency_quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= Duration::from_nanos(100));
+        assert!(p99 <= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn counters_report() {
+        let m = Metrics::new();
+        m.gets.fetch_add(3, Ordering::Relaxed);
+        m.puts.fetch_add(2, Ordering::Relaxed);
+        m.dels.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.ops_total(), 6);
+        assert!(m.report().contains("ops=6"));
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile(0.99), Duration::ZERO);
+    }
+}

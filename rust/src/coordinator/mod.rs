@@ -1,0 +1,180 @@
+//! DuraKv — the sharded durable key-value service built on the paper's
+//! sets.
+//!
+//! Architecture (DESIGN.md):
+//!
+//! ```text
+//!   clients ──► server (TCP, line protocol) ──► router ──► shard queues
+//!                                        │                    │
+//!   DuraKv::get/put/del (in-process) ────┴── direct lock-free calls
+//!                                                             │
+//!   crash ─► pmem::crash ─► recovery (per-shard, rust or XLA-accelerated)
+//! ```
+//!
+//! The sets are lock-free and `Sync`, so the in-process data path routes
+//! and calls directly; the queued path (bounded per-shard queues + worker
+//! threads) serves the network front with backpressure and metrics.
+
+pub mod metrics;
+pub mod recovery;
+pub mod router;
+pub mod server;
+pub mod shard;
+
+use crate::config::Config;
+use crate::pmem::CrashPolicy;
+use std::sync::Arc;
+
+pub use metrics::Metrics;
+pub use router::Router;
+pub use shard::{Shard, ShardMeta};
+
+/// The sharded durable KV store.
+pub struct DuraKv {
+    cfg: Config,
+    router: Router,
+    shards: Vec<Shard>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl DuraKv {
+    /// Create a fresh store per the config (also applies the pmem-level
+    /// settings from the config).
+    pub fn create(cfg: Config) -> DuraKv {
+        cfg.apply_pmem();
+        let shards = (0..cfg.shards).map(|i| Shard::create(&cfg, i)).collect();
+        DuraKv {
+            router: Router::new(cfg.shards),
+            shards,
+            cfg,
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn router(&self) -> Router {
+        self.router
+    }
+
+    pub fn shard_metas(&self) -> Vec<ShardMeta> {
+        self.shards.iter().map(|s| s.meta).collect()
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &Shard {
+        &self.shards[self.router.shard_of(key)]
+    }
+
+    // ----- direct (in-process) data path -----
+
+    pub fn put(&self, key: u64, value: u64) -> bool {
+        self.shard(key).set.insert(key, value)
+    }
+
+    pub fn get(&self, key: u64) -> Option<u64> {
+        self.shard(key).set.get(key)
+    }
+
+    pub fn del(&self, key: u64) -> bool {
+        self.shard(key).set.remove(key)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.shard(key).set.contains(key)
+    }
+
+    pub fn len_approx(&self) -> usize {
+        self.shards.iter().map(|s| s.set.len_approx()).sum()
+    }
+
+    /// Borrow a shard's set (benchmark drivers pin threads to shards).
+    pub fn shard_set(&self, i: usize) -> &dyn crate::sets::ConcurrentSet {
+        self.shards[i].set.as_ref()
+    }
+
+    // ----- crash / recovery orchestration -----
+
+    /// Simulate a whole-process crash: durable areas survive, every
+    /// volatile handle dies. Returns the recovery ticket. Requires the
+    /// config to have been created with `sim = true`.
+    pub fn crash(self, policy: CrashPolicy) -> recovery::CrashTicket {
+        recovery::crash(self, policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sets::Family;
+
+    #[test]
+    fn basic_kv_roundtrip() {
+        let mut cfg = Config::default();
+        cfg.shards = 4;
+        cfg.key_range = 1 << 12;
+        cfg.family = Family::Soft;
+        let kv = DuraKv::create(cfg);
+        assert!(kv.put(1, 100));
+        assert!(!kv.put(1, 101), "duplicate put reports existing");
+        assert_eq!(kv.get(1), Some(100));
+        assert!(kv.del(1));
+        assert_eq!(kv.get(1), None);
+        assert_eq!(kv.len_approx(), 0);
+    }
+
+    #[test]
+    fn keys_spread_over_shards() {
+        let mut cfg = Config::default();
+        cfg.shards = 4;
+        cfg.key_range = 1 << 12;
+        let kv = DuraKv::create(cfg);
+        for k in 0..1000 {
+            kv.put(k, k);
+        }
+        for i in 0..4 {
+            let n = kv.shard_set(i).len_approx();
+            assert!(n > 150, "shard {i} only has {n} keys");
+        }
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let mut cfg = Config::default();
+        cfg.shards = 2;
+        cfg.key_range = 4096;
+        let kv = Arc::new(DuraKv::create(cfg));
+        let handles: Vec<_> = (0..6u64)
+            .map(|t| {
+                let kv = kv.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::new(t + 70);
+                    let mut net = 0i64;
+                    for _ in 0..3000 {
+                        let k = rng.below(512);
+                        match rng.below(3) {
+                            0 => {
+                                if kv.put(k, t) {
+                                    net += 1;
+                                }
+                            }
+                            1 => {
+                                if kv.del(k) {
+                                    net -= 1;
+                                }
+                            }
+                            _ => {
+                                let _ = kv.get(k);
+                            }
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(kv.len_approx() as i64, net);
+    }
+}

@@ -1,0 +1,210 @@
+//! Crash / recovery orchestration across shards.
+//!
+//! Per the paper (§2.1): recovery must complete before new operations are
+//! admitted — the API encodes that by consuming the store on crash and
+//! only returning a usable store from `recover()`.
+
+use super::shard::{Shard, ShardMeta};
+use super::{DuraKv, Metrics, Router};
+use crate::config::{Config, Structure};
+use crate::pmem::{self, CrashPolicy};
+use crate::sets::Family;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Proof that a crash happened; the only way back is [`recover`] /
+/// [`CrashTicket::recover`].
+pub struct CrashTicket {
+    cfg: Config,
+    metas: Vec<ShardMeta>,
+    /// Lines that survived only via random eviction (diagnostics).
+    pub evicted_lines: usize,
+}
+
+/// Crash the store: preserve durable pools, drop volatile handles, revert
+/// pmem to the persisted image.
+pub(super) fn crash(kv: DuraKv, policy: CrashPolicy) -> CrashTicket {
+    let cfg = kv.cfg.clone();
+    let metas = kv.shard_metas();
+    for s in &kv.shards {
+        s.set.prepare_crash();
+    }
+    drop(kv); // volatile handles die here (limbo lists are abandoned)
+    let evicted_lines = pmem::crash(policy);
+    CrashTicket { cfg, metas, evicted_lines }
+}
+
+/// What recovery did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryReport {
+    pub shards: usize,
+    pub members: usize,
+    pub reclaimed: usize,
+    pub wall: std::time::Duration,
+    pub accelerated: bool,
+}
+
+impl CrashTicket {
+    pub fn metas(&self) -> &[ShardMeta] {
+        &self.metas
+    }
+
+    /// Rebuild every shard (pure-Rust recovery path).
+    pub fn recover(self) -> Result<(DuraKv, RecoveryReport)> {
+        let t0 = Instant::now();
+        let mut shards = Vec::with_capacity(self.metas.len());
+        let mut report = RecoveryReport {
+            shards: self.metas.len(),
+            accelerated: false,
+            ..Default::default()
+        };
+        for meta in self.metas {
+            let before = shard_slot_count(&meta);
+            let shard = Shard::recover(meta)?;
+            report.members += shard.set.len_approx();
+            report.reclaimed += before.saturating_sub(shard.set.len_approx());
+            shards.push(shard);
+        }
+        report.wall = t0.elapsed();
+        Ok((
+            DuraKv {
+                router: Router::new(self.cfg.shards),
+                shards,
+                cfg: self.cfg,
+                metrics: Arc::new(Metrics::new()),
+            },
+            report,
+        ))
+    }
+
+    /// Rebuild hash shards through the XLA recovery artifacts (falls back
+    /// to the Rust path for list shards / volatile families).
+    pub fn recover_accel(self) -> Result<(DuraKv, RecoveryReport)> {
+        let t0 = Instant::now();
+        crate::runtime::RecoveryPlanner::with_cached(move |planner| {
+            self.recover_accel_with(planner, t0)
+        })
+    }
+
+    fn recover_accel_with(
+        self,
+        planner: &crate::runtime::RecoveryPlanner,
+        t0: Instant,
+    ) -> Result<(DuraKv, RecoveryReport)> {
+        let mut shards = Vec::with_capacity(self.metas.len());
+        let mut report = RecoveryReport {
+            shards: self.metas.len(),
+            accelerated: true,
+            ..Default::default()
+        };
+        for meta in self.metas {
+            let shard = match (meta.family, meta.structure, meta.pool) {
+                (Family::Soft, Structure::Hash, Some(pool)) => {
+                    let (set, stats) = crate::runtime::recovery_accel::recover_soft_hash_accel(
+                        &planner,
+                        pool,
+                        meta.nbuckets,
+                    )?;
+                    report.members += stats.members;
+                    report.reclaimed += stats.reclaimed;
+                    Shard { set: Box::new(set), meta }
+                }
+                (Family::LinkFree, Structure::Hash, Some(pool)) => {
+                    let (set, stats) =
+                        crate::runtime::recovery_accel::recover_linkfree_hash_accel(
+                            &planner,
+                            pool,
+                            meta.nbuckets,
+                        )?;
+                    report.members += stats.members;
+                    report.reclaimed += stats.reclaimed;
+                    Shard { set: Box::new(set), meta }
+                }
+                _ => {
+                    let shard = Shard::recover(meta)?;
+                    report.members += shard.set.len_approx();
+                    shard
+                }
+            };
+            shards.push(shard);
+        }
+        report.wall = t0.elapsed();
+        Ok((
+            DuraKv {
+                router: Router::new(self.cfg.shards),
+                shards,
+                cfg: self.cfg,
+                metrics: Arc::new(Metrics::new()),
+            },
+            report,
+        ))
+    }
+}
+
+fn shard_slot_count(meta: &ShardMeta) -> usize {
+    meta.pool
+        .map(|p| {
+            crate::pmem::region::regions_of(p)
+                .iter()
+                .filter(|r| r.tag == crate::pmem::region::RegionTag::Slots)
+                .map(|r| r.len / 64)
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::DuraKv;
+
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn crash_cfg(family: Family) -> Config {
+        let mut cfg = Config::default();
+        cfg.family = family;
+        cfg.shards = 3;
+        cfg.key_range = 4096;
+        cfg.sim = true;
+        cfg.psync_ns = 0;
+        cfg
+    }
+
+    #[test]
+    fn kv_crash_recover_all_families() {
+        let _g = LOCK.lock().unwrap();
+        for family in [Family::Soft, Family::LinkFree, Family::LogFree] {
+            let kv = DuraKv::create(crash_cfg(family));
+            for k in 0..500u64 {
+                assert!(kv.put(k, k * 2));
+            }
+            for k in 0..100u64 {
+                assert!(kv.del(k));
+            }
+            let ticket = kv.crash(CrashPolicy::PESSIMISTIC);
+            let (kv2, report) = ticket.recover().unwrap();
+            assert_eq!(report.shards, 3);
+            assert_eq!(report.members, 400, "{family}");
+            for k in 0..500u64 {
+                assert_eq!(kv2.get(k), if k < 100 { None } else { Some(k * 2) }, "{family} key {k}");
+            }
+            // Store is writable again.
+            assert!(kv2.put(9999, 1));
+            crate::pmem::set_mode(crate::pmem::Mode::Perf);
+        }
+    }
+
+    #[test]
+    fn volatile_family_recovers_empty() {
+        let _g = LOCK.lock().unwrap();
+        let kv = DuraKv::create(crash_cfg(Family::Volatile));
+        for k in 0..100u64 {
+            kv.put(k, k);
+        }
+        let (kv2, report) = kv.crash(CrashPolicy::PESSIMISTIC).recover().unwrap();
+        assert_eq!(report.members, 0);
+        assert_eq!(kv2.len_approx(), 0);
+        crate::pmem::set_mode(crate::pmem::Mode::Perf);
+    }
+}

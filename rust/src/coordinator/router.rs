@@ -1,0 +1,79 @@
+//! Key → shard routing.
+//!
+//! The router hashes with a salt *different* from the in-shard bucket hash
+//! (which uses `mix64(key)` low bits): taking the shard index from the
+//! same bits would leave each shard's hash table with systematically
+//! empty buckets.
+
+use crate::util::mix64;
+
+/// Deterministic router over a fixed shard count.
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    shards: usize,
+}
+
+impl Router {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards >= 1);
+        Router { shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard owning `key`.
+    #[inline]
+    pub fn shard_of(&self, key: u64) -> usize {
+        // Upper 32 bits of a salted mix: independent of the bucket hash.
+        ((mix64(key ^ 0x5EED_0F12_0373_0AD5) >> 32) as usize) % self.shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let r = Router::new(7);
+        for k in 0..10_000u64 {
+            let s = r.shard_of(k);
+            assert!(s < 7);
+            assert_eq!(s, r.shard_of(k));
+        }
+    }
+
+    #[test]
+    fn routing_is_balanced() {
+        let r = Router::new(8);
+        let mut counts = [0usize; 8];
+        let n = 80_000u64;
+        for k in 0..n {
+            counts[r.shard_of(k)] += 1;
+        }
+        for &c in &counts {
+            let expect = n as usize / 8;
+            assert!(
+                (c as i64 - expect as i64).unsigned_abs() < (expect / 10) as u64,
+                "imbalanced: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn router_hash_is_independent_of_bucket_hash() {
+        // If shard index and bucket index were correlated, all keys of a
+        // shard would land in a fraction of its buckets. Check that keys
+        // routed to shard 0 still cover most of a 64-bucket space.
+        let r = Router::new(4);
+        let mut buckets = std::collections::HashSet::new();
+        for k in 0..100_000u64 {
+            if r.shard_of(k) == 0 {
+                buckets.insert(mix64(k) & 63);
+            }
+        }
+        assert!(buckets.len() >= 60, "only {} buckets covered", buckets.len());
+    }
+}

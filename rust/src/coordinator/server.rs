@@ -1,0 +1,247 @@
+//! TCP front: line protocol over the queued shard workers.
+//!
+//! ```text
+//! PUT <key> <value>   ->  OK NEW | OK EXISTS
+//! GET <key>           ->  FOUND <value> | MISSING
+//! DEL <key>           ->  OK DELETED | OK ABSENT
+//! LEN                 ->  LEN <n>
+//! STATS               ->  STATS <metrics line>
+//! QUIT                ->  BYE (closes connection)
+//! ```
+//!
+//! Thread-per-connection (std::net; the offline crate set has no async
+//! runtime), routing each request onto the owning shard's bounded queue —
+//! the queue bound is the service's backpressure.
+
+use super::shard::{Request, Response, ShardWorker};
+use super::{DuraKv, Router};
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+
+/// Adapter giving a shard's set a `'static` handle via the Arc'd store.
+struct ShardRef {
+    kv: Arc<DuraKv>,
+    index: usize,
+}
+
+impl crate::sets::ConcurrentSet for ShardRef {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.kv.shard_set(self.index).insert(key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.kv.shard_set(self.index).remove(key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.kv.shard_set(self.index).contains(key)
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.kv.shard_set(self.index).get(key)
+    }
+    fn len_approx(&self) -> usize {
+        self.kv.shard_set(self.index).len_approx()
+    }
+}
+
+/// A running server; dropping it stops the accept loop and the workers.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+    _workers: Vec<ShardWorker>,
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start serving `kv` on `127.0.0.1:port` (port 0 = ephemeral, for tests).
+pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let workers: Vec<ShardWorker> = (0..kv.config().shards)
+        .map(|i| {
+            let set: Arc<dyn crate::sets::ConcurrentSet> =
+                Arc::new(ShardRef { kv: kv.clone(), index: i });
+            ShardWorker::spawn(set, kv.metrics.clone())
+        })
+        .collect();
+    let senders: Arc<Vec<SyncSender<Request>>> =
+        Arc::new(workers.iter().map(|w| w.tx.clone()).collect());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let kv2 = kv.clone();
+    let accept_join = std::thread::spawn(move || {
+        let router = kv2.router();
+        while !stop2.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let senders = senders.clone();
+                    let kv = kv2.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(stream, router, &senders, &kv);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+
+    Ok(Server { addr, stop, accept_join: Some(accept_join), _workers: workers })
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: Router,
+    senders: &[SyncSender<Request>],
+    kv: &DuraKv,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let (rtx, rrx) = sync_channel::<Response>(1);
+    for line in reader.lines() {
+        let line = line?;
+        let mut parts = line.split_ascii_whitespace();
+        let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+        let reply = match cmd.as_str() {
+            "PUT" => match (parse_u64(parts.next()), parse_u64(parts.next())) {
+                (Some(k), Some(v)) => {
+                    senders[router.shard_of(k)].send(Request::Put(k, v, rtx.clone()))?;
+                    match rrx.recv()? {
+                        Response::Ok(true) => "OK NEW".to_string(),
+                        _ => "OK EXISTS".to_string(),
+                    }
+                }
+                _ => "ERR usage: PUT <key> <value>".to_string(),
+            },
+            "GET" => match parse_u64(parts.next()) {
+                Some(k) => {
+                    senders[router.shard_of(k)].send(Request::Get(k, rtx.clone()))?;
+                    match rrx.recv()? {
+                        Response::Found(v) => format!("FOUND {v}"),
+                        _ => "MISSING".to_string(),
+                    }
+                }
+                None => "ERR usage: GET <key>".to_string(),
+            },
+            "DEL" => match parse_u64(parts.next()) {
+                Some(k) => {
+                    senders[router.shard_of(k)].send(Request::Del(k, rtx.clone()))?;
+                    match rrx.recv()? {
+                        Response::Ok(true) => "OK DELETED".to_string(),
+                        _ => "OK ABSENT".to_string(),
+                    }
+                }
+                None => "ERR usage: DEL <key>".to_string(),
+            },
+            "LEN" => format!("LEN {}", kv.len_approx()),
+            "STATS" => format!("STATS {}", kv.metrics.report()),
+            "QUIT" => {
+                writeln!(writer, "BYE")?;
+                break;
+            }
+            "" => continue,
+            other => format!("ERR unknown command '{other}'"),
+        };
+        writeln!(writer, "{reply}")?;
+    }
+    Ok(())
+}
+
+fn parse_u64(s: Option<&str>) -> Option<u64> {
+    s.and_then(|x| x.parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use std::io::{BufRead, BufReader, Write};
+
+    /// One connection: keep a single BufReader (read-ahead safe).
+    struct Client {
+        writer: TcpStream,
+        reader: BufReader<TcpStream>,
+    }
+
+    impl Client {
+        fn connect(addr: std::net::SocketAddr) -> Client {
+            let stream = TcpStream::connect(addr).unwrap();
+            let reader = BufReader::new(stream.try_clone().unwrap());
+            Client { writer: stream, reader }
+        }
+
+        fn send(&mut self, line: &str) -> String {
+            writeln!(self.writer, "{line}").unwrap();
+            let mut out = String::new();
+            self.reader.read_line(&mut out).unwrap();
+            out.trim_end().to_string()
+        }
+    }
+
+    #[test]
+    fn tcp_protocol_round_trip() {
+        let mut cfg = Config::default();
+        cfg.shards = 2;
+        cfg.key_range = 1024;
+        cfg.psync_ns = 0;
+        let kv = Arc::new(DuraKv::create(cfg));
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+
+        assert_eq!(c.send("PUT 5 50"), "OK NEW");
+        assert_eq!(c.send("PUT 5 51"), "OK EXISTS");
+        assert_eq!(c.send("GET 5"), "FOUND 50");
+        assert_eq!(c.send("DEL 5"), "OK DELETED");
+        assert_eq!(c.send("DEL 5"), "OK ABSENT");
+        assert_eq!(c.send("GET 5"), "MISSING");
+        assert_eq!(c.send("PUT 7 70"), "OK NEW");
+        assert_eq!(c.send("LEN"), "LEN 1");
+        assert!(c.send("STATS").starts_with("STATS ops="));
+        assert!(c.send("NOPE").starts_with("ERR"));
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    #[test]
+    fn concurrent_tcp_clients() {
+        let mut cfg = Config::default();
+        cfg.shards = 2;
+        cfg.key_range = 4096;
+        cfg.psync_ns = 0;
+        let kv = Arc::new(DuraKv::create(cfg));
+        let server = serve(kv.clone(), 0).unwrap();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr);
+                    for i in 0..100u64 {
+                        let k = t * 1000 + i;
+                        assert_eq!(c.send(&format!("PUT {k} {i}")), "OK NEW");
+                        assert_eq!(c.send(&format!("GET {k}")), format!("FOUND {i}"));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(kv.len_approx(), 400);
+        drop(server);
+    }
+}

@@ -1,0 +1,208 @@
+//! Shard: one durable set instance plus the metadata needed to rebuild it
+//! after a crash, and an optional worker-queue front for the TCP server.
+//!
+//! The sets themselves are lock-free and `Sync`, so the *data path* never
+//! needs a worker hop — `DuraKv` calls straight into the set from any
+//! thread. The queued front exists for the network server: it batches
+//! requests per shard (bounded queue = backpressure) and keeps per-shard
+//! metrics, the vLLM-router-style shape without pretending the structures
+//! need serialisation.
+
+use crate::config::{Config, Structure};
+use crate::pmem::PoolId;
+use crate::sets::{self, ConcurrentSet, Family};
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::metrics::Metrics;
+
+/// Everything needed to re-create a shard's volatile handle from its
+/// durable areas.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardMeta {
+    pub index: usize,
+    pub family: Family,
+    pub structure: Structure,
+    pub nbuckets: usize,
+    pub pool: Option<PoolId>,
+}
+
+/// A shard of the KV service.
+pub struct Shard {
+    pub set: Box<dyn ConcurrentSet>,
+    pub meta: ShardMeta,
+}
+
+impl Shard {
+    /// Build a fresh shard per the config.
+    pub fn create(cfg: &Config, index: usize) -> Shard {
+        let nbuckets = cfg.buckets_per_shard();
+        let set: Box<dyn ConcurrentSet> = match cfg.structure {
+            Structure::Hash => sets::new_hash(cfg.family, nbuckets),
+            Structure::List => sets::new_list(cfg.family),
+        };
+        let meta = ShardMeta {
+            index,
+            family: cfg.family,
+            structure: cfg.structure,
+            nbuckets,
+            pool: set.durable_pool(),
+        };
+        Shard { set, meta }
+    }
+
+    /// Rebuild this shard from its durable areas (post-crash). Volatile
+    /// shards come back empty.
+    pub fn recover(meta: ShardMeta) -> Result<Shard> {
+        let set: Box<dyn ConcurrentSet> = match (meta.family, meta.structure, meta.pool) {
+            (Family::Volatile, Structure::Hash, _) => {
+                sets::new_hash(Family::Volatile, meta.nbuckets)
+            }
+            (Family::Volatile, Structure::List, _) => sets::new_list(Family::Volatile),
+            (family, structure, Some(pool)) => match (family, structure) {
+                (Family::LinkFree, Structure::Hash) => {
+                    Box::new(sets::linkfree::recover_hash(pool, meta.nbuckets).0)
+                }
+                (Family::LinkFree, Structure::List) => {
+                    Box::new(sets::linkfree::recover_list(pool).0)
+                }
+                (Family::Soft, Structure::Hash) => {
+                    Box::new(sets::soft::recover_hash(pool, meta.nbuckets).0)
+                }
+                (Family::Soft, Structure::List) => Box::new(sets::soft::recover_list(pool).0),
+                (Family::LogFree, Structure::Hash) => {
+                    Box::new(sets::logfree::recover_hash(pool).0)
+                }
+                (Family::LogFree, Structure::List) => {
+                    Box::new(sets::logfree::recover_list(pool).0)
+                }
+                (Family::Volatile, _) => unreachable!(),
+            },
+            (f, s, None) => anyhow::bail!("shard {:?}/{:?} has no durable pool", f, s),
+        };
+        // The recovered set has a fresh pool handle adopting the same id.
+        let meta = ShardMeta { pool: set.durable_pool().or(meta.pool), ..meta };
+        Ok(Shard { set, meta })
+    }
+}
+
+/// A queued request (server path).
+pub enum Request {
+    Get(u64, SyncSender<Response>),
+    Put(u64, u64, SyncSender<Response>),
+    Del(u64, SyncSender<Response>),
+    Shutdown,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Response {
+    Found(u64),
+    Missing,
+    Ok(bool),
+}
+
+/// Worker-queue front over a shard set: bounded channel + one worker
+/// thread per shard.
+pub struct ShardWorker {
+    pub tx: SyncSender<Request>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardWorker {
+    /// Queue capacity per shard (backpressure bound for the TCP server).
+    pub const QUEUE_CAP: usize = 1024;
+
+    pub fn spawn(set: Arc<dyn ConcurrentSet>, metrics: Arc<Metrics>) -> ShardWorker {
+        let (tx, rx): (SyncSender<Request>, Receiver<Request>) = sync_channel(Self::QUEUE_CAP);
+        let join = std::thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                let t0 = Instant::now();
+                match req {
+                    Request::Get(k, reply) => {
+                        metrics.gets.fetch_add(1, Ordering::Relaxed);
+                        let resp = match set.get(k) {
+                            Some(v) => {
+                                metrics.get_hits.fetch_add(1, Ordering::Relaxed);
+                                Response::Found(v)
+                            }
+                            None => Response::Missing,
+                        };
+                        let _ = reply.send(resp);
+                    }
+                    Request::Put(k, v, reply) => {
+                        metrics.puts.fetch_add(1, Ordering::Relaxed);
+                        let fresh = set.insert(k, v);
+                        if fresh {
+                            metrics.put_new.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let _ = reply.send(Response::Ok(fresh));
+                    }
+                    Request::Del(k, reply) => {
+                        metrics.dels.fetch_add(1, Ordering::Relaxed);
+                        let hit = set.remove(k);
+                        if hit {
+                            metrics.del_hit.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let _ = reply.send(Response::Ok(hit));
+                    }
+                    Request::Shutdown => break,
+                }
+                metrics.record_latency(t0.elapsed());
+            }
+        });
+        ShardWorker { tx, join: Some(join) }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_round_trip() {
+        let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(Family::Volatile, 16));
+        let metrics = Arc::new(Metrics::new());
+        let w = ShardWorker::spawn(set, metrics.clone());
+        let (rtx, rrx) = sync_channel(1);
+        w.tx.send(Request::Put(1, 10, rtx.clone())).unwrap();
+        assert_eq!(rrx.recv().unwrap(), Response::Ok(true));
+        w.tx.send(Request::Get(1, rtx.clone())).unwrap();
+        assert_eq!(rrx.recv().unwrap(), Response::Found(10));
+        w.tx.send(Request::Del(1, rtx.clone())).unwrap();
+        assert_eq!(rrx.recv().unwrap(), Response::Ok(true));
+        w.tx.send(Request::Get(1, rtx)).unwrap();
+        assert_eq!(rrx.recv().unwrap(), Response::Missing);
+        assert_eq!(metrics.ops_total(), 4);
+        w.shutdown();
+    }
+
+    #[test]
+    fn shard_create_has_pool_for_durable_families() {
+        let cfg = Config::default();
+        let s = Shard::create(&cfg, 0);
+        assert!(s.meta.pool.is_some());
+        let mut vcfg = Config::default();
+        vcfg.family = Family::Volatile;
+        let v = Shard::create(&vcfg, 0);
+        assert!(v.meta.pool.is_none());
+    }
+}

@@ -1,0 +1,37 @@
+//! # durasets
+//!
+//! Production-shaped reproduction of **“Efficient Lock-Free Durable
+//! Sets”** (Zuriel, Friedman, Sheffi, Cohen, Petrank — OOPSLA 2019):
+//! lock-free, durably-linearizable sets for non-volatile memory.
+//!
+//! The crate provides:
+//!
+//! * [`pmem`] — a simulated persistent-memory substrate (durable regions,
+//!   metered `psync`, adversarial crash/recovery semantics);
+//! * [`alloc`] — the ssmem-style durable-area allocator + epoch-based
+//!   reclamation of paper §5;
+//! * [`sets`] — the paper's **link-free** and **SOFT** lists and hash
+//!   sets, the **log-free** baseline (David et al., ATC'18) and a
+//!   volatile Harris baseline, all behind one [`sets::ConcurrentSet`]
+//!   trait, plus the recovery procedures;
+//! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
+//!   recovery-analytics and workload kernels (`artifacts/*.hlo.txt`);
+//! * [`coordinator`] — a sharded durable key-value service built on the
+//!   sets (router, shard workers, TCP server, crash/recovery
+//!   orchestration, metrics);
+//! * [`workload`] / [`bench`] — the workload engine and the harness that
+//!   regenerates every figure of the paper's evaluation (§6).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for measured
+//! results.
+
+pub mod alloc;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod pmem;
+pub mod runtime;
+pub mod sets;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,250 @@
+//! `durasets` CLI — leader entrypoint for the service, the benchmark
+//! harness (one driver per paper figure), and the crash/recovery demos.
+
+use anyhow::{bail, Result};
+use durasets::bench::{self, report, SweepCfg};
+use durasets::cli::{Args, USAGE};
+use durasets::coordinator::{server, DuraKv};
+use durasets::pmem::{self, CrashPolicy};
+use durasets::workload::Op;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        print!("{USAGE}");
+        return;
+    }
+    let code = match Args::parse(argv).and_then(run) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "crash-test" => cmd_crash_test(&args),
+        "recover-demo" => cmd_recover_demo(&args),
+        "workload" => cmd_workload(&args),
+        other => bail!("unknown command '{other}' (try `durasets help`)"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let port = cfg.port;
+    println!(
+        "durasets serve: family={} shards={} key_range={} psync_ns={} port={}",
+        cfg.family, cfg.shards, cfg.key_range, cfg.psync_ns, port
+    );
+    let kv = Arc::new(DuraKv::create(cfg));
+    let srv = server::serve(kv.clone(), port)?;
+    println!("listening on {}", srv.addr);
+    println!("protocol: PUT <k> <v> | GET <k> | DEL <k> | LEN | STATS | QUIT");
+    // Run until killed; report stats periodically.
+    loop {
+        std::thread::sleep(Duration::from_secs(10));
+        println!("[stats] {}", kv.metrics.report());
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let fig = args.flag_or("fig", "all");
+    let seed = args.flag_u64("seed", 0xD05E7)?;
+    let cfg = SweepCfg::from_env();
+    // The paper's psync model: ~100ns clflush unless overridden.
+    let psync_ns = args.flag_u64("psync-ns", 100)?;
+    pmem::set_psync_ns(psync_ns);
+    println!(
+        "# durasets bench: fig={fig} full={} point={}ms psync_ns={psync_ns} (1-core testbed; see EXPERIMENTS.md)",
+        cfg.full,
+        cfg.duration.as_millis()
+    );
+
+    let run_one = |id: &str| -> Result<()> {
+        let (title, x_label, rows) = match id {
+            "1a" => (
+                "Fig 1a: list throughput vs #threads (range 256, 90% reads)",
+                "threads",
+                bench::fig1_lists(&cfg, 256, seed),
+            ),
+            "1b" => (
+                "Fig 1b: list throughput vs #threads (range 1024, 90% reads)",
+                "threads",
+                bench::fig1_lists(&cfg, 1024, seed),
+            ),
+            "1c" => (
+                "Fig 1c: hash throughput vs #threads (load factor 1, 90% reads)",
+                "threads",
+                bench::fig1_hash(&cfg, seed),
+            ),
+            "2a" => (
+                "Fig 2a: list throughput vs key range (90% reads)",
+                "key_range",
+                bench::fig2_lists(&cfg, scaled_list_threads(&cfg), seed),
+            ),
+            "2b" => (
+                "Fig 2b: hash throughput vs key range (90% reads)",
+                "key_range",
+                bench::fig2_hash(&cfg, scaled_hash_threads(&cfg), seed),
+            ),
+            "3a" => (
+                "Fig 3a: list throughput vs read% (range 256)",
+                "read_pct",
+                bench::fig3_lists(&cfg, scaled_list_threads(&cfg), 256, seed),
+            ),
+            "3b" => (
+                "Fig 3b: list throughput vs read% (range 1024)",
+                "read_pct",
+                bench::fig3_lists(&cfg, scaled_list_threads(&cfg), 1024, seed),
+            ),
+            "3c" => (
+                "Fig 3c: hash throughput vs read%",
+                "read_pct",
+                bench::fig3_hash(&cfg, scaled_hash_threads(&cfg), seed),
+            ),
+            "psync" => (
+                "Tab: psyncs per operation by mix (paper's cost model)",
+                "mix",
+                bench::psync_table(cfg.duration, seed),
+            ),
+            other => bail!("unknown figure '{other}'"),
+        };
+        print!("{}", report::render(title, x_label, &rows));
+        if let Some((f, x, imp)) = report::peak_improvement(&rows) {
+            println!("peak improvement vs log-free: {f} at {x_label}={x}: {imp:.2}x\n");
+        }
+        Ok(())
+    };
+
+    if fig == "all" {
+        for id in ["1a", "1b", "1c", "2a", "2b", "3a", "3b", "3c", "psync"] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else if fig == "recovery" {
+        cmd_recover_demo(args)
+    } else {
+        run_one(&fig)
+    }
+}
+
+/// Paper: lists evaluated at 64 threads, hash at 32 — scaled to the sweep
+/// maximum on this testbed.
+fn scaled_list_threads(cfg: &SweepCfg) -> usize {
+    *cfg.threads.last().unwrap()
+}
+
+fn scaled_hash_threads(cfg: &SweepCfg) -> usize {
+    let n = *cfg.threads.last().unwrap();
+    (n / 2).max(1)
+}
+
+fn cmd_crash_test(args: &Args) -> Result<()> {
+    let mut cfg = args.config()?;
+    cfg.sim = true;
+    let evict: f64 = args.flag_or("evict", "0.3").parse()?;
+    let rounds = args.flag_u64("rounds", 3)?;
+    println!(
+        "crash-test: family={} shards={} key_range={} evict={evict} rounds={rounds}",
+        cfg.family, cfg.shards, cfg.key_range
+    );
+    let spec = cfg.workload();
+    let mut kv = DuraKv::create(cfg.clone());
+    let mut model = std::collections::BTreeMap::new();
+    let mut stream = spec.stream(0);
+    for round in 0..rounds {
+        // Single-threaded op burst so the model is exact, then crash.
+        for _ in 0..20_000 {
+            match stream.next_op() {
+                Op::Contains(k) => {
+                    assert_eq!(kv.contains(k), model.contains_key(&k), "divergence at key {k}");
+                }
+                Op::Insert(k) => {
+                    let fresh = kv.put(k, k);
+                    assert_eq!(fresh, model.insert(k, k).is_none());
+                }
+                Op::Remove(k) => {
+                    assert_eq!(kv.del(k), model.remove(&k).is_some());
+                }
+            }
+        }
+        let ticket = kv.crash(CrashPolicy::random(evict, round));
+        let (recovered, rep) = ticket.recover()?;
+        kv = recovered;
+        println!(
+            "round {round}: crash ok (evicted {} extra lines), recovered {} members ({} reclaimed) in {:?}",
+            0, rep.members, rep.reclaimed, rep.wall
+        );
+        anyhow::ensure!(
+            kv.len_approx() == model.len(),
+            "post-recovery size {} != model {}",
+            kv.len_approx(),
+            model.len()
+        );
+        for (&k, &v) in &model {
+            anyhow::ensure!(kv.get(k) == Some(v), "lost key {k} after recovery");
+        }
+    }
+    println!("crash-test PASSED: {} keys verified after {rounds} crash/recovery cycles", model.len());
+    Ok(())
+}
+
+fn cmd_recover_demo(args: &Args) -> Result<()> {
+    let mut cfg = args.config()?;
+    cfg.sim = true;
+    let n = args.flag_u64("keys", 200_000)?;
+    cfg.key_range = n * 2;
+    println!(
+        "recover-demo: family={} shards={} populating {n} keys...",
+        cfg.family, cfg.shards
+    );
+    let kv = DuraKv::create(cfg.clone());
+    for k in 0..n {
+        kv.put(k * 2, k);
+    }
+    let ticket = kv.crash(CrashPolicy::PESSIMISTIC);
+    let metas = ticket.metas().to_vec();
+    let (kv2, rep) = ticket.recover()?;
+    println!(
+        "rust recovery:  {} members, {} reclaimed slots, {:?} ({:.1} Mslots/s)",
+        rep.members,
+        rep.reclaimed,
+        rep.wall,
+        (rep.members + rep.reclaimed) as f64 / rep.wall.as_secs_f64() / 1e6
+    );
+    // Crash again and recover through the XLA artifacts.
+    let _ = metas;
+    let ticket = kv2.crash(CrashPolicy::PESSIMISTIC);
+    let (kv3, rep2) = ticket.recover_accel()?;
+    println!(
+        "accel recovery: {} members, {} reclaimed slots, {:?} ({:.1} Mslots/s) [XLA artifacts]",
+        rep2.members,
+        rep2.reclaimed,
+        rep2.wall,
+        (rep2.members + rep2.reclaimed) as f64 / rep2.wall.as_secs_f64() / 1e6
+    );
+    anyhow::ensure!(rep.members == rep2.members, "paths disagree");
+    anyhow::ensure!(kv3.len_approx() == rep2.members);
+    println!("recover-demo PASSED: both paths agree on {} members", rep2.members);
+    Ok(())
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let n = args.flag_u64("sample", 20)?;
+    let spec = cfg.workload();
+    let mut stream = spec.stream(0);
+    println!("# workload sample: range={} read_pct={}", cfg.key_range, cfg.read_pct);
+    for i in 0..n {
+        println!("{i:>4}: {:?}", stream.op_at(i));
+    }
+    Ok(())
+}

@@ -1,0 +1,244 @@
+//! Simulated persistent memory (the paper's NVRAM substrate).
+//!
+//! The paper evaluates on DRAM, assumes stores become durable once they
+//! reach the memory controller, and uses `clflush` (+ implied ordering) as
+//! its `psync`. Real NVRAM and `clflush`-visible persistence do not exist
+//! in this environment, so this module builds the closest synthetic
+//! equivalent that exercises the same code paths (see DESIGN.md
+//! §Substitutions):
+//!
+//! * **Durable areas are registered regions.** Every byte the algorithms
+//!   are allowed to treat as persistent lives in a region allocated through
+//!   [`region`], grouped by [`PoolId`] (one pool per structure instance).
+//! * **`psync` is metered.** Each call bumps per-thread flush/fence
+//!   counters ([`stats`]) and optionally busy-waits a calibrated
+//!   `psync_ns` to model write-back latency, so psync-bound regimes are
+//!   visible even without persistence hardware.
+//! * **Crash semantics are adversarial.** In [`Mode::Sim`], `psync` copies
+//!   the affected cache lines into a shadow image; [`crash`] throws away
+//!   all working memory and keeps only the shadow — i.e. only explicitly
+//!   flushed lines are guaranteed to survive, exactly the model the
+//!   paper's proofs assume. A *random eviction* knob additionally persists
+//!   arbitrary unflushed lines (caches write back whenever they like),
+//!   which is the model that catches algorithms relying on, or broken by,
+//!   implicit persistence (e.g. the §3.3 two-insert validity race).
+//!
+//! Granularity note: eviction persists the *current* content of a whole
+//! cache line. Under TSO, writes to a single line reach memory in program
+//! order, so any real write-back is a prefix of the line's write history;
+//! persisting the latest content is one legal such outcome. The algorithms
+//! under test only ever rely on same-line ordering (Cohen et al. 2017), so
+//! this is sufficient to exercise their correctness arguments.
+
+pub mod region;
+pub mod root;
+pub mod shadow;
+pub mod stats;
+
+use crate::util::{spin::spin_ns, CACHE_LINE};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicU8, Ordering};
+
+/// Identifies the set of durable regions belonging to one structure
+/// instance. Survives a simulated crash (it stands in for the paper's
+/// persistent per-thread area lists, whose heads live in "persistent
+/// thread-local space").
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct PoolId(pub u64);
+
+static NEXT_POOL: AtomicU64 = AtomicU64::new(1);
+
+impl PoolId {
+    /// Allocate a fresh process-unique pool id.
+    pub fn fresh() -> Self {
+        PoolId(NEXT_POOL.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+/// Persistence-simulation mode.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Mode {
+    /// Benchmark mode: `psync` = counters + optional latency injection.
+    /// No shadow copies; [`crash`] is not meaningful.
+    Perf = 0,
+    /// Correctness mode: `psync` additionally snapshots the flushed lines
+    /// into the shadow image so [`crash`]/recovery can be tested.
+    Sim = 1,
+}
+
+static MODE: AtomicU8 = AtomicU8::new(Mode::Perf as u8);
+static PSYNC_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Set the global persistence mode. Call before creating structures.
+pub fn set_mode(mode: Mode) {
+    MODE.store(mode as u8, Ordering::SeqCst);
+}
+
+/// Current persistence mode.
+#[inline(always)]
+pub fn mode() -> Mode {
+    if MODE.load(Ordering::Relaxed) == Mode::Sim as u8 {
+        Mode::Sim
+    } else {
+        Mode::Perf
+    }
+}
+
+/// Set the injected latency per `psync` (models `clflush` + fence cost;
+/// the paper's clflush on their Opteron is in the ~100ns class). 0 = off.
+pub fn set_psync_ns(ns: u64) {
+    PSYNC_NS.store(ns, Ordering::Relaxed);
+}
+
+/// Injected psync latency in nanoseconds.
+#[inline(always)]
+pub fn psync_ns() -> u64 {
+    PSYNC_NS.load(Ordering::Relaxed)
+}
+
+/// Fault injection: a countdown of flushes until a simulated power loss
+/// (panic on the flushing thread). i64::MAX = disarmed.
+static FLUSH_FAULT: AtomicI64 = AtomicI64::new(i64::MAX);
+
+/// Arm a simulated power loss after `n` more flushes (any thread). The
+/// unlucky thread panics with [`POWER_LOSS`] *before* the flush takes
+/// effect — i.e. the line it was persisting did NOT reach the NVRAM.
+/// Torture tests catch the unwind, treat the in-flight op as unacked, and
+/// then [`crash`]. Call [`disarm_flush_fault`] to reset.
+pub fn arm_flush_fault(n: u64) {
+    FLUSH_FAULT.store(n as i64, Ordering::SeqCst);
+}
+
+/// Disarm fault injection.
+pub fn disarm_flush_fault() {
+    FLUSH_FAULT.store(i64::MAX, Ordering::SeqCst);
+}
+
+/// Panic payload used for simulated power loss.
+pub const POWER_LOSS: &str = "durasets simulated power loss";
+
+/// Write back one cache line (no fence). Counted, latency-injected, and in
+/// sim mode copied to the shadow image.
+#[inline]
+pub fn flush_line(ptr: *const u8) {
+    if FLUSH_FAULT.load(Ordering::Relaxed) != i64::MAX
+        // One-shot: exactly the thread that decrements 1 -> 0 dies.
+        && FLUSH_FAULT.fetch_sub(1, Ordering::SeqCst) == 1
+    {
+        std::panic::panic_any(POWER_LOSS);
+    }
+    stats::count_flush();
+    if mode() == Mode::Sim {
+        shadow::shadow_copy_line(ptr);
+    }
+    spin_ns(psync_ns());
+}
+
+/// Ordering fence paired with flushes (the paper's clflush is ordered wrt
+/// stores, so psync == flush; we still count the logical fence the
+/// algorithms express). Compiles to an SeqCst fence.
+#[inline]
+pub fn fence() {
+    stats::count_fence();
+    std::sync::atomic::fence(Ordering::SeqCst);
+}
+
+/// `psync(addr, len)`: flush every cache line covering `[addr, addr+len)`,
+/// then fence. This is the paper's `psync` primitive. (Fused accounting:
+/// one counter access + one latency injection per call — the per-line
+/// `flush_line` + `fence` pair costs two TLS lookups and two RMWs, which
+/// profiles showed on the update hot path.)
+#[inline]
+pub fn psync(ptr: *const u8, len: usize) {
+    let start = crate::util::line_down(ptr as usize);
+    let end = ptr as usize + len.max(1);
+    let nlines = (crate::util::line_up(end) - start) / CACHE_LINE;
+    if FLUSH_FAULT.load(Ordering::Relaxed) != i64::MAX {
+        for i in 0..nlines {
+            let _ = i;
+            if FLUSH_FAULT.fetch_sub(1, Ordering::SeqCst) == 1 {
+                std::panic::panic_any(POWER_LOSS);
+            }
+        }
+    }
+    if mode() == Mode::Sim {
+        let mut line = start;
+        while line < end {
+            shadow::shadow_copy_line(line as *const u8);
+            line += CACHE_LINE;
+        }
+    }
+    stats::count_psync(nlines as u64);
+    spin_ns(psync_ns() * nlines as u64);
+    std::sync::atomic::fence(Ordering::SeqCst);
+}
+
+/// Convenience: psync a whole typed record (used for the one-cache-line
+/// durable nodes).
+#[inline]
+pub fn psync_obj<T>(obj: *const T) {
+    psync(obj as *const u8, std::mem::size_of::<T>());
+}
+
+/// Crash policy for [`crash`].
+#[derive(Clone, Copy, Debug)]
+pub struct CrashPolicy {
+    /// Probability that an *unflushed* cache line is persisted anyway
+    /// (arbitrary cache eviction). 0.0 = pessimistic (only explicit
+    /// flushes survive), 1.0 = everything survives.
+    pub evict_prob: f64,
+    /// RNG seed for the eviction choice (deterministic tests).
+    pub seed: u64,
+}
+
+impl CrashPolicy {
+    /// Only explicitly flushed lines survive.
+    pub const PESSIMISTIC: CrashPolicy = CrashPolicy { evict_prob: 0.0, seed: 0 };
+
+    /// Random-eviction crash with the given probability and seed.
+    pub fn random(evict_prob: f64, seed: u64) -> Self {
+        CrashPolicy { evict_prob, seed }
+    }
+}
+
+/// Simulate a full-system crash: volatile state is the caller's to throw
+/// away (drop your structures); this function reverts every registered
+/// durable region to its persisted (shadow) image, after applying the
+/// eviction policy. Requires [`Mode::Sim`] to have been active for the
+/// whole run, otherwise the shadow is not a meaningful persisted image.
+///
+/// Returns the number of lines that survived via random eviction (0 under
+/// the pessimistic policy).
+pub fn crash(policy: CrashPolicy) -> usize {
+    assert_eq!(mode(), Mode::Sim, "crash() requires pmem Mode::Sim");
+    shadow::crash_all(policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn psync_counts_lines_and_fence() {
+        let before = stats::thread_snapshot();
+        let buf = vec![0u8; 256];
+        // 130 bytes starting at an aligned base covers 3 lines.
+        let base = crate::util::line_up(buf.as_ptr() as usize) as *const u8;
+        psync(base, 130);
+        let after = stats::thread_snapshot();
+        assert_eq!(after.flushes - before.flushes, 3);
+        assert_eq!(after.fences - before.fences, 1);
+    }
+
+    #[test]
+    fn psync_unaligned_start_covers_spanned_lines() {
+        let before = stats::thread_snapshot();
+        let buf = vec![0u8; 256];
+        let base = crate::util::line_up(buf.as_ptr() as usize) as *const u8;
+        // 8 bytes starting 60 bytes into a line span two lines.
+        unsafe {
+            psync(base.add(60), 8);
+        }
+        let after = stats::thread_snapshot();
+        assert_eq!(after.flushes - before.flushes, 2);
+    }
+}

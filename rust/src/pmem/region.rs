@@ -1,0 +1,210 @@
+//! Durable region registry.
+//!
+//! Every byte the algorithms treat as persistent is allocated here: the
+//! 64-byte-slot durable areas of the ssmem-style allocator, the log-free
+//! baseline's persistent bucket arrays, and the named root cells. Regions
+//! are grouped by [`PoolId`] (one pool per structure instance) and survive
+//! a simulated crash — the registry stands in for the paper's persistent
+//! per-thread area lists, which are reachable after a real power failure
+//! via persistent thread-local roots.
+//!
+//! Regions are cache-line aligned, never move, and are only returned to
+//! the OS by [`release_pool`] (the paper likewise only frees areas "at the
+//! end of the execution" or during recovery when fully empty).
+
+use super::PoolId;
+use crate::util::CACHE_LINE;
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// What a region is used for; recovery and debug tooling dispatch on this.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RegionTag {
+    /// Fixed-size durable slots (link-free nodes / SOFT PNodes / log-free
+    /// nodes). `slot_size` recorded separately.
+    Slots,
+    /// A persistent array of link words (log-free bucket arrays).
+    Links,
+    /// Named root cells.
+    Root,
+}
+
+pub(crate) struct Region {
+    pub base: usize,
+    pub len: usize,
+    pub pool: PoolId,
+    pub tag: RegionTag,
+    /// Size of each slot for `Slots` regions (0 otherwise).
+    pub slot_size: usize,
+    /// Persisted image, same length as the region. Allocated eagerly and
+    /// zero-initialised (lazily paged by the OS, so the perf-mode cost is
+    /// nil). Only touched in sim mode / at crash time.
+    pub shadow: *mut u8,
+}
+
+unsafe impl Send for Region {}
+unsafe impl Sync for Region {}
+
+/// Registry sorted by base address for O(log n) line lookup at flush time.
+pub(crate) static REGISTRY: RwLock<Vec<Region>> = RwLock::new(Vec::new());
+
+/// A handle to one registered durable region.
+#[derive(Clone, Copy, Debug)]
+pub struct RegionRef {
+    pub base: *mut u8,
+    pub len: usize,
+    pub tag: RegionTag,
+    pub slot_size: usize,
+}
+
+unsafe impl Send for RegionRef {}
+unsafe impl Sync for RegionRef {}
+
+impl RegionRef {
+    /// Iterate the slot base pointers of a `Slots` region.
+    pub fn slots(&self) -> impl Iterator<Item = *mut u8> + '_ {
+        assert!(self.tag == RegionTag::Slots && self.slot_size > 0);
+        let n = self.len / self.slot_size;
+        let base = self.base as usize;
+        let sz = self.slot_size;
+        (0..n).map(move |i| (base + i * sz) as *mut u8)
+    }
+}
+
+fn layout(len: usize) -> Layout {
+    Layout::from_size_align(len, CACHE_LINE).expect("region layout")
+}
+
+/// Allocate and register a durable region of `len` bytes (rounded up to a
+/// cache line), zero-initialised. Returns the working-memory base pointer.
+pub fn alloc_region(pool: PoolId, len: usize, tag: RegionTag, slot_size: usize) -> *mut u8 {
+    let len = crate::util::line_up(len.max(CACHE_LINE));
+    let base = unsafe { alloc_zeroed(layout(len)) };
+    assert!(!base.is_null(), "durable region allocation failed");
+    let shadow = unsafe { alloc_zeroed(layout(len)) };
+    assert!(!shadow.is_null(), "shadow allocation failed");
+    let region = Region { base: base as usize, len, pool, tag, slot_size, shadow };
+    let mut reg = REGISTRY.write().unwrap();
+    let pos = reg.partition_point(|r| r.base < region.base);
+    reg.insert(pos, region);
+    base
+}
+
+/// All regions belonging to `pool` (recovery iterates these).
+pub fn regions_of(pool: PoolId) -> Vec<RegionRef> {
+    REGISTRY
+        .read()
+        .unwrap()
+        .iter()
+        .filter(|r| r.pool == pool)
+        .map(|r| RegionRef {
+            base: r.base as *mut u8,
+            len: r.len,
+            tag: r.tag,
+            slot_size: r.slot_size,
+        })
+        .collect()
+}
+
+/// Unregister and free all regions of a pool (normal shutdown only — a
+/// crashed pool must stay allocated for recovery).
+pub fn release_pool(pool: PoolId) {
+    let mut reg = REGISTRY.write().unwrap();
+    let mut i = 0;
+    while i < reg.len() {
+        if reg[i].pool == pool {
+            let r = reg.remove(i);
+            unsafe {
+                dealloc(r.base as *mut u8, layout(r.len));
+                dealloc(r.shadow, layout(r.len));
+            }
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Copy the whole working region into its shadow without going through the
+/// metered per-line path. Used when a freshly created area's canonical
+/// slot pattern is persisted in bulk (amortised, one psync in the paper's
+/// accounting — the caller meters it).
+pub(crate) fn persist_region_bulk(base: *mut u8) {
+    let reg = REGISTRY.read().unwrap();
+    if let Some(r) = find_region(&reg, base as usize) {
+        unsafe { copy_atomic_u64s(r.base as *const u8, r.shadow, r.len) };
+    }
+}
+
+/// Binary-search the registry for the region containing `addr`.
+pub(crate) fn find_region<'a>(reg: &'a [Region], addr: usize) -> Option<&'a Region> {
+    let i = reg.partition_point(|r| r.base <= addr);
+    if i == 0 {
+        return None;
+    }
+    let r = &reg[i - 1];
+    if addr < r.base + r.len {
+        Some(r)
+    } else {
+        None
+    }
+}
+
+/// Copy `len` bytes (multiple of 8, both sides 8-aligned) using relaxed
+/// atomic word accesses — source words may be concurrently written by the
+/// lock-free structures, and torn 64-byte snapshots are exactly what real
+/// cache-line write-back produces (word-level atomicity preserved).
+pub(crate) unsafe fn copy_atomic_u64s(src: *const u8, dst: *mut u8, len: usize) {
+    debug_assert_eq!(len % 8, 0);
+    let words = len / 8;
+    let s = src as *const AtomicU64;
+    let d = dst as *const AtomicU64;
+    for i in 0..words {
+        let v = (*s.add(i)).load(Ordering::Relaxed);
+        (*d.add(i)).store(v, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_register_lookup_release() {
+        let pool = PoolId::fresh();
+        let base = alloc_region(pool, 1000, RegionTag::Slots, 64);
+        assert_eq!(base as usize % CACHE_LINE, 0);
+        let rs = regions_of(pool);
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].len, crate::util::line_up(1000));
+        assert_eq!(rs[0].slots().count(), crate::util::line_up(1000) / 64);
+        {
+            let reg = REGISTRY.read().unwrap();
+            let r = find_region(&reg, base as usize + 10).unwrap();
+            assert_eq!(r.base, base as usize);
+            assert!(find_region(&reg, base as usize + r.len).map(|f| f.base) != Some(r.base));
+        }
+        release_pool(pool);
+        assert!(regions_of(pool).is_empty());
+    }
+
+    #[test]
+    fn regions_are_zeroed() {
+        let pool = PoolId::fresh();
+        let base = alloc_region(pool, 256, RegionTag::Links, 0);
+        for i in 0..256 {
+            assert_eq!(unsafe { *base.add(i) }, 0);
+        }
+        release_pool(pool);
+    }
+
+    #[test]
+    fn multiple_regions_same_pool() {
+        let pool = PoolId::fresh();
+        for _ in 0..5 {
+            alloc_region(pool, 256, RegionTag::Slots, 64);
+        }
+        assert_eq!(regions_of(pool).len(), 5);
+        release_pool(pool);
+    }
+}

@@ -1,0 +1,107 @@
+//! Named persistent root cells.
+//!
+//! The log-free baseline persists its structure (list heads, bucket
+//! arrays), so it needs durable anchor words a recovery can find — the
+//! equivalent of the paper's "persistent thread-local space" holding area
+//! list heads. A root cell is one durable 8-byte word addressed by name;
+//! the name → address map itself is process metadata (it stands in for a
+//! fixed, well-known NVRAM layout).
+
+use super::region::{alloc_region, RegionTag};
+use super::PoolId;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
+use std::sync::Mutex;
+
+const CELLS_PER_REGION: usize = 512;
+
+struct RootSpace {
+    pool: PoolId,
+    map: HashMap<String, usize>, // name -> cell address
+    current: *mut u8,
+    used: usize,
+}
+
+unsafe impl Send for RootSpace {}
+
+static ROOTS: Lazy<Mutex<RootSpace>> = Lazy::new(|| {
+    Mutex::new(RootSpace {
+        pool: PoolId::fresh(),
+        map: HashMap::new(),
+        current: std::ptr::null_mut(),
+        used: CELLS_PER_REGION, // force first allocation
+    })
+});
+
+/// Handle to a persistent 8-byte root word. `Copy`, shareable, and stable
+/// across simulated crashes.
+#[derive(Clone, Copy, Debug)]
+pub struct RootCell(*const AtomicU64);
+
+unsafe impl Send for RootCell {}
+unsafe impl Sync for RootCell {}
+
+impl RootCell {
+    /// The underlying atomic word (durable memory).
+    #[inline]
+    pub fn word(&self) -> &AtomicU64 {
+        unsafe { &*self.0 }
+    }
+
+    /// psync the cell.
+    pub fn persist(&self) {
+        super::psync(self.0 as *const u8, 8);
+    }
+}
+
+/// Get (or create zero-initialised) the root cell with the given name.
+pub fn root_cell(name: &str) -> RootCell {
+    let mut space = ROOTS.lock().unwrap();
+    if let Some(&addr) = space.map.get(name) {
+        return RootCell(addr as *const AtomicU64);
+    }
+    if space.used == CELLS_PER_REGION {
+        space.current = alloc_region(space.pool, CELLS_PER_REGION * 8, RegionTag::Root, 0);
+        space.used = 0;
+    }
+    let addr = unsafe { space.current.add(space.used * 8) } as usize;
+    space.used += 1;
+    space.map.insert(name.to_string(), addr);
+    RootCell(addr as *const AtomicU64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn same_name_same_cell() {
+        let a = root_cell("test.cell.a");
+        let b = root_cell("test.cell.a");
+        assert_eq!(a.0 as usize, b.0 as usize);
+        let c = root_cell("test.cell.b");
+        assert_ne!(a.0 as usize, c.0 as usize);
+    }
+
+    #[test]
+    fn cell_is_durable_memory() {
+        let a = root_cell("test.cell.durable");
+        a.word().store(77, Ordering::SeqCst);
+        a.persist();
+        assert_eq!(a.word().load(Ordering::SeqCst), 77);
+    }
+
+    #[test]
+    fn many_cells_span_regions() {
+        for i in 0..(super::CELLS_PER_REGION + 4) {
+            let c = root_cell(&format!("test.cell.many.{i}"));
+            c.word().store(i as u64, Ordering::Relaxed);
+        }
+        for i in 0..(super::CELLS_PER_REGION + 4) {
+            let c = root_cell(&format!("test.cell.many.{i}"));
+            assert_eq!(c.word().load(Ordering::Relaxed), i as u64);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Shadow images and crash simulation.
+//!
+//! In [`Mode::Sim`](super::Mode::Sim), every explicit flush copies the
+//! affected cache line from working memory into the region's shadow image.
+//! [`crash_all`] then reverts working memory to the shadow, optionally
+//! first "evicting" random unflushed lines (persisting their current
+//! content), which models caches writing back whenever they please.
+
+use super::region::{copy_atomic_u64s, find_region, REGISTRY};
+use super::CrashPolicy;
+use crate::util::{line_down, rng::Xoshiro256, CACHE_LINE};
+
+/// Copy one cache line (containing `ptr`) working → shadow, if the line
+/// belongs to a registered durable region. Flushes of non-durable memory
+/// (e.g. stack temporaries in tests) are silently ignored — a real
+/// `clflush` of DRAM-backed volatile memory is likewise a no-op for
+/// persistence purposes.
+pub(crate) fn shadow_copy_line(ptr: *const u8) {
+    let line = line_down(ptr as usize);
+    let reg = REGISTRY.read().unwrap();
+    if let Some(r) = find_region(&reg, line) {
+        let off = line - r.base;
+        // The last line of a region is always complete: regions are
+        // line-aligned and line-rounded.
+        unsafe {
+            copy_atomic_u64s((r.base + off) as *const u8, r.shadow.add(off), CACHE_LINE);
+        }
+    }
+}
+
+/// Revert every registered region to its persisted image, applying the
+/// eviction policy first. Returns how many unflushed lines survived via
+/// random eviction.
+pub(crate) fn crash_all(policy: CrashPolicy) -> usize {
+    let reg = REGISTRY.write().unwrap();
+    let mut rng = Xoshiro256::new(policy.seed ^ 0xC5A5_17E0_D00D_F00D);
+    let mut evicted = 0usize;
+    for r in reg.iter() {
+        let lines = r.len / CACHE_LINE;
+        if policy.evict_prob > 0.0 {
+            for l in 0..lines {
+                if rng.f64() < policy.evict_prob {
+                    let off = l * CACHE_LINE;
+                    unsafe {
+                        copy_atomic_u64s(
+                            (r.base + off) as *const u8,
+                            r.shadow.add(off),
+                            CACHE_LINE,
+                        );
+                    }
+                    evicted += 1;
+                }
+            }
+        }
+        // Working memory <- shadow (the persisted view is all that's left).
+        unsafe {
+            copy_atomic_u64s(r.shadow as *const u8, r.base as *mut u8, r.len);
+        }
+    }
+    evicted
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::pmem::{self, region, CrashPolicy, Mode, PoolId};
+
+    /// Global-pmem tests mutate the global mode; serialize them.
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn unflushed_data_dies_flushed_survives() {
+        let _g = LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let pool = PoolId::fresh();
+        let base = region::alloc_region(pool, 256, region::RegionTag::Links, 0);
+        unsafe {
+            // Line 0: written and flushed. Line 1: written, not flushed.
+            *(base as *mut u64) = 0xAAAA;
+            *(base.add(64) as *mut u64) = 0xBBBB;
+            pmem::psync(base, 8);
+            pmem::crash(CrashPolicy::PESSIMISTIC);
+            assert_eq!(*(base as *const u64), 0xAAAA, "flushed line must survive");
+            assert_eq!(*(base.add(64) as *const u64), 0, "unflushed line must die");
+        }
+        region::release_pool(pool);
+        pmem::set_mode(Mode::Perf);
+    }
+
+    #[test]
+    fn eviction_probability_one_persists_everything() {
+        let _g = LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let pool = PoolId::fresh();
+        let base = region::alloc_region(pool, 256, region::RegionTag::Links, 0);
+        unsafe {
+            *(base.add(128) as *mut u64) = 0xCCCC;
+            let evicted = pmem::crash(CrashPolicy::random(1.0, 1));
+            assert!(evicted > 0);
+            assert_eq!(*(base.add(128) as *const u64), 0xCCCC);
+        }
+        region::release_pool(pool);
+        pmem::set_mode(Mode::Perf);
+    }
+
+    #[test]
+    fn crash_reverts_to_last_flushed_version() {
+        let _g = LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let pool = PoolId::fresh();
+        let base = region::alloc_region(pool, 64, region::RegionTag::Links, 0);
+        unsafe {
+            *(base as *mut u64) = 1;
+            pmem::psync(base, 8);
+            *(base as *mut u64) = 2; // newer, unflushed
+            pmem::crash(CrashPolicy::PESSIMISTIC);
+            assert_eq!(*(base as *const u64), 1);
+        }
+        region::release_pool(pool);
+        pmem::set_mode(Mode::Perf);
+    }
+}

@@ -1,0 +1,127 @@
+//! Per-thread flush/fence counters.
+//!
+//! The paper's key efficiency metric is the number of `psync` operations
+//! (flush + fence) per data-structure operation: SOFT is designed to hit
+//! the theoretical lower bound of one fence per update and zero per read.
+//! Every benchmark in this repo reports psyncs/op next to throughput, so
+//! the counters must be exact and must not introduce contention —
+//! cache-padded per-thread slots, summed only at snapshot time.
+
+use crate::util::{tid::tid, MAX_THREADS};
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct Slot {
+    flushes: AtomicU64,
+    fences: AtomicU64,
+}
+
+static SLOTS: once_cell::sync::Lazy<Box<[CachePadded<Slot>]>> = once_cell::sync::Lazy::new(|| {
+    (0..MAX_THREADS)
+        .map(|_| {
+            CachePadded::new(Slot {
+                flushes: AtomicU64::new(0),
+                fences: AtomicU64::new(0),
+            })
+        })
+        .collect()
+});
+
+#[inline(always)]
+pub(crate) fn count_flush() {
+    SLOTS[tid()].flushes.fetch_add(1, Ordering::Relaxed);
+}
+
+#[inline(always)]
+pub(crate) fn count_fence() {
+    SLOTS[tid()].fences.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One psync = `lines` flushes + one fence, with a single tid lookup (the
+/// hot-path accounting; two separate lookups showed up in profiles).
+#[inline(always)]
+pub(crate) fn count_psync(lines: u64) {
+    let s = &SLOTS[tid()];
+    s.flushes.fetch_add(lines, Ordering::Relaxed);
+    s.fences.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Aggregated counter snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PmemStats {
+    pub flushes: u64,
+    pub fences: u64,
+}
+
+impl PmemStats {
+    /// Difference since an earlier snapshot.
+    pub fn since(&self, earlier: &PmemStats) -> PmemStats {
+        PmemStats {
+            flushes: self.flushes - earlier.flushes,
+            fences: self.fences - earlier.fences,
+        }
+    }
+}
+
+impl std::ops::Sub for PmemStats {
+    type Output = PmemStats;
+    fn sub(self, rhs: PmemStats) -> PmemStats {
+        self.since(&rhs)
+    }
+}
+
+/// Counters of the calling thread only. Tests asserting exact psync
+/// counts use this so concurrently running tests cannot pollute the delta.
+pub fn thread_snapshot() -> PmemStats {
+    let s = &SLOTS[tid()];
+    PmemStats {
+        flushes: s.flushes.load(Ordering::Relaxed),
+        fences: s.fences.load(Ordering::Relaxed),
+    }
+}
+
+/// Sum all threads' counters.
+pub fn snapshot() -> PmemStats {
+    let mut out = PmemStats::default();
+    for s in SLOTS.iter() {
+        out.flushes += s.flushes.load(Ordering::Relaxed);
+        out.fences += s.fences.load(Ordering::Relaxed);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let a = snapshot();
+        count_flush();
+        count_flush();
+        count_fence();
+        let b = snapshot();
+        let d = b.since(&a);
+        assert_eq!(d.flushes, 2);
+        assert_eq!(d.fences, 1);
+    }
+
+    #[test]
+    fn counters_sum_across_threads() {
+        let a = snapshot();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    for _ in 0..100 {
+                        count_flush();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let d = snapshot().since(&a);
+        assert_eq!(d.flushes, 400);
+    }
+}

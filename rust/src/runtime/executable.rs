@@ -1,0 +1,103 @@
+//! One compiled XLA executable, loaded from HLO text.
+//!
+//! HLO *text* (not serialized proto) is the interchange format — the
+//! xla_extension 0.5.1 backing the `xla` crate rejects jax≥0.5's
+//! 64-bit-id protos, while the text parser reassigns ids cleanly.
+
+use anyhow::{Context, Result};
+
+/// A loaded, compiled artifact ready for repeated execution.
+///
+/// Not `Send`: PJRT handles are thread-affine in the `xla` crate; load and
+/// run on the same thread.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl std::fmt::Debug for HloExecutable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HloExecutable").field("name", &self.name).finish()
+    }
+}
+
+impl HloExecutable {
+    /// Load `<artifacts>/<name>.hlo.txt`, parse, and compile on the CPU
+    /// PJRT client.
+    pub fn load(name: &str) -> Result<Self> {
+        let path = super::artifacts_dir().join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e} (run `make artifacts`)", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = super::with_client(|c| c.compile(&comp))
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        Ok(HloExecutable { exe, name: name.to_string() })
+    }
+
+    /// Execute with the given inputs; the artifact was lowered with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// decompose into one literal per logical output.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {} result: {e}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing {} tuple: {e}", self.name))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Build an i64 vector literal.
+pub fn lit_i64(v: &[i64]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Build an i32 vector literal.
+pub fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        crate::runtime::artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_and_run_workload_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let exe = HloExecutable::load("workload").unwrap();
+        let batch = crate::runtime::manifest_u64("batch").unwrap() as usize;
+        let params = lit_i64(&[7, 0, 1024, 900_000]);
+        let outs = exe.run(&[params]).unwrap();
+        assert_eq!(outs.len(), 2);
+        let keys = outs[0].to_vec::<i64>().unwrap();
+        let ops = outs[1].to_vec::<i32>().unwrap();
+        assert_eq!(keys.len(), batch);
+        assert_eq!(ops.len(), batch);
+        assert!(keys.iter().all(|&k| (0..1024).contains(&k)));
+        let reads = ops.iter().filter(|&&o| o == 0).count() as f64 / batch as f64;
+        assert!((0.88..0.92).contains(&reads), "read fraction {reads}");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let err = HloExecutable::load("no_such_artifact").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("no_such_artifact"), "{msg}");
+    }
+}

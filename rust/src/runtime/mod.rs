@@ -1,0 +1,64 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only consumer of its output. One CPU PJRT client per process, one
+//! compiled executable per artifact, reused across calls — nothing here
+//! ever shells out to Python.
+
+pub mod executable;
+pub mod recovery_accel;
+pub mod workload_accel;
+
+use std::path::PathBuf;
+
+pub use executable::HloExecutable;
+pub use recovery_accel::RecoveryPlanner;
+pub use workload_accel::WorkloadGen;
+
+thread_local! {
+    // The `xla` crate's PJRT handles are Rc-based (neither Send nor Sync),
+    // so each thread that touches the runtime gets its own client, and
+    // loaded executables must stay on their creating thread. Recovery and
+    // benchmark-driver use are single-threaded by construction.
+    static CLIENT: xla::PjRtClient = xla::PjRtClient::cpu().expect("PJRT CPU client");
+}
+
+/// Run `f` with the calling thread's PJRT CPU client.
+pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> R) -> R {
+    CLIENT.with(f)
+}
+
+/// Artifact directory: `$DURASETS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("DURASETS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Parse `"key": <integer>` out of the manifest (the offline crate set has
+/// no JSON parser; the manifest is machine-written with this exact shape).
+pub(crate) fn manifest_u64(key: &str) -> anyhow::Result<u64> {
+    let path = artifacts_dir().join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+    let pat = format!("\"{key}\":");
+    let at = text
+        .find(&pat)
+        .ok_or_else(|| anyhow::anyhow!("manifest missing key {key}"))?;
+    let rest = text[at + pat.len()..].trim_start();
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    Ok(digits.parse()?)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn manifest_batch_readable() {
+        if !super::artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let b = super::manifest_u64("batch").unwrap();
+        assert!(b.is_power_of_two());
+    }
+}

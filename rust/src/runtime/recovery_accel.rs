@@ -1,0 +1,276 @@
+//! XLA-accelerated recovery: bulk classify + bucket the durable areas.
+//!
+//! The pure-Rust recovery walks slots one by one; this path extracts
+//! structure-of-arrays planes (flags, keys) from the areas, pushes them
+//! through the AOT `recovery_*` artifacts in fixed-size batches, and
+//! relinks members per the returned (member, bucket) planes. Tests
+//! cross-check the two paths bit-for-bit (`rust/tests/runtime_accel.rs`).
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::executable::{lit_i32, lit_i64, HloExecutable};
+use crate::alloc::{DurablePool, Ebr, VolatilePool};
+use crate::pmem::PoolId;
+use crate::sets::linkfree::{LfHash, LfNode, RecoveredStats};
+use crate::sets::soft::{PNode, SNode, SoftHash};
+use crate::sets::tagged::{is_marked, State};
+
+/// Loaded recovery artifacts + batch geometry.
+pub struct RecoveryPlanner {
+    soft: HloExecutable,
+    linkfree: HloExecutable,
+    batch: usize,
+}
+
+/// Classification planes for one batch (already truncated to real length).
+pub struct Plan {
+    pub member: Vec<i32>,
+    pub bucket: Vec<i32>,
+}
+
+impl RecoveryPlanner {
+    pub fn load() -> Result<Self> {
+        Ok(RecoveryPlanner {
+            soft: HloExecutable::load("recovery_soft")?,
+            linkfree: HloExecutable::load("recovery_linkfree")?,
+            batch: super::manifest_u64("batch")? as usize,
+        })
+    }
+
+    /// Run `f` with this thread's cached planner (PJRT compilation costs
+    /// ~100ms; caching amortises it across recoveries — §Perf).
+    pub fn with_cached<R>(f: impl FnOnce(&RecoveryPlanner) -> Result<R>) -> Result<R> {
+        thread_local! {
+            static PLANNER: once_cell::unsync::OnceCell<RecoveryPlanner> =
+                const { once_cell::unsync::OnceCell::new() };
+        }
+        PLANNER.with(|cell| {
+            if cell.get().is_none() {
+                let planner = RecoveryPlanner::load()?;
+                let _ = cell.set(planner);
+            }
+            f(cell.get().unwrap())
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Classify + bucket one run of SOFT PNode planes (any length; batched
+    /// and padded internally — padding rows are invalid, hence non-member).
+    pub fn plan_soft(
+        &self,
+        vs: &[i32],
+        ve: &[i32],
+        dl: &[i32],
+        keys: &[i64],
+        bucket_mask: u64,
+    ) -> Result<Plan> {
+        let n = vs.len();
+        assert!(ve.len() == n && dl.len() == n && keys.len() == n);
+        let mut plan = Plan { member: Vec::with_capacity(n), bucket: Vec::with_capacity(n) };
+        let mask_lit = lit_i64(&[bucket_mask as i64]);
+        for start in (0..n).step_by(self.batch) {
+            let end = (start + self.batch).min(n);
+            let take = end - start;
+            // Padding: vs=0, ve=1 => invalid => non-member.
+            let mut bvs = vec![0i32; self.batch];
+            let mut bve = vec![1i32; self.batch];
+            let mut bdl = vec![0i32; self.batch];
+            let mut bkeys = vec![0i64; self.batch];
+            bvs[..take].copy_from_slice(&vs[start..end]);
+            bve[..take].copy_from_slice(&ve[start..end]);
+            bdl[..take].copy_from_slice(&dl[start..end]);
+            bkeys[..take].copy_from_slice(&keys[start..end]);
+            let outs = self.soft.run(&[
+                lit_i32(&bvs),
+                lit_i32(&bve),
+                lit_i32(&bdl),
+                lit_i64(&bkeys),
+                mask_lit.clone(),
+            ])?;
+            plan.member.extend(&outs[0].to_vec::<i32>()?[..take]);
+            plan.bucket.extend(&outs[1].to_vec::<i32>()?[..take]);
+        }
+        Ok(plan)
+    }
+
+    /// Classify + bucket one run of link-free node planes.
+    pub fn plan_linkfree(
+        &self,
+        validity: &[i32],
+        marked: &[i32],
+        keys: &[i64],
+        bucket_mask: u64,
+    ) -> Result<Plan> {
+        let n = validity.len();
+        assert!(marked.len() == n && keys.len() == n);
+        let mut plan = Plan { member: Vec::with_capacity(n), bucket: Vec::with_capacity(n) };
+        let mask_lit = lit_i64(&[bucket_mask as i64]);
+        for start in (0..n).step_by(self.batch) {
+            let end = (start + self.batch).min(n);
+            let take = end - start;
+            // Padding: validity=0b01 (invalid), marked=1 => non-member.
+            let mut bv = vec![1i32; self.batch];
+            let mut bm = vec![1i32; self.batch];
+            let mut bkeys = vec![0i64; self.batch];
+            bv[..take].copy_from_slice(&validity[start..end]);
+            bm[..take].copy_from_slice(&marked[start..end]);
+            bkeys[..take].copy_from_slice(&keys[start..end]);
+            let outs = self.linkfree.run(&[
+                lit_i32(&bv),
+                lit_i32(&bm),
+                lit_i64(&bkeys),
+                mask_lit.clone(),
+            ])?;
+            plan.member.extend(&outs[0].to_vec::<i32>()?[..take]);
+            plan.bucket.extend(&outs[1].to_vec::<i32>()?[..take]);
+        }
+        Ok(plan)
+    }
+}
+
+/// XLA-accelerated SOFT hash recovery (mirror of
+/// [`crate::sets::soft::recover_hash`], classification on the artifact).
+pub fn recover_soft_hash_accel(
+    planner: &RecoveryPlanner,
+    id: PoolId,
+    nbuckets: usize,
+) -> Result<(SoftHash, RecoveredStats)> {
+    let dpool = Arc::new(DurablePool::adopt(id, 64, PNode::init_free_pattern));
+    // Extract planes.
+    let slots: Vec<*mut u8> = dpool.iter_slots().collect();
+    let mut vs = Vec::with_capacity(slots.len());
+    let mut ve = Vec::with_capacity(slots.len());
+    let mut dl = Vec::with_capacity(slots.len());
+    let mut keys = Vec::with_capacity(slots.len());
+    for &s in &slots {
+        let pn = s as *const PNode;
+        let (a, b, c) = unsafe { (*pn).raw_flags() };
+        vs.push(a as i32);
+        ve.push(b as i32);
+        dl.push(c as i32);
+        keys.push(unsafe { (*pn).key.load(Ordering::Relaxed) } as i64);
+    }
+    let n = nbuckets.next_power_of_two().max(1);
+    let plan = planner.plan_soft(&vs, &ve, &dl, &keys, (n - 1) as u64)?;
+
+    let core = crate::sets::soft::SoftCore::from_parts(
+        dpool,
+        Arc::new(VolatilePool::new(std::mem::size_of::<SNode>())),
+        Arc::new(Ebr::new()),
+    );
+    let hash = SoftHash::from_parts(n, core);
+    let mut stats = RecoveredStats::default();
+    // Group member slots by bucket, then chain each bucket sorted by key.
+    let mut grouped: Vec<(i32, u64, *mut u8)> = Vec::new();
+    for (i, &s) in slots.iter().enumerate() {
+        if plan.member[i] != 0 {
+            grouped.push((plan.bucket[i], keys[i] as u64, s));
+            stats.members += 1;
+        } else {
+            unsafe {
+                hash.core.dpool.normalize_slot(s);
+                hash.core.dpool.free(s);
+            }
+            stats.reclaimed += 1;
+        }
+    }
+    grouped.sort_unstable_by_key(|&(b, k, _)| (b, k));
+    let mut i = 0;
+    while i < grouped.len() {
+        let b = grouped[i].0;
+        let mut j = i;
+        let mut chain: u64 = State::Inserted as u64;
+        while j < grouped.len() && grouped[j].0 == b {
+            j += 1;
+        }
+        for &(_, key, slot) in grouped[i..j].iter().rev() {
+            let pn = slot as *mut PNode;
+            let vn = hash.core.vpool.alloc() as *mut SNode;
+            unsafe {
+                std::ptr::write(
+                    vn,
+                    SNode {
+                        key,
+                        value: (*pn).value.load(Ordering::Relaxed),
+                        pptr: pn,
+                        p_validity: (*pn).current_validity(),
+                        next: AtomicU64::new(chain),
+                    },
+                );
+            }
+            chain = vn as u64 | State::Inserted as u64;
+        }
+        hash.buckets[b as usize].store(chain, Ordering::Relaxed);
+        i = j;
+    }
+    hash.core.dpool.persist_all_regions();
+    Ok((hash, stats))
+}
+
+/// XLA-accelerated link-free hash recovery.
+pub fn recover_linkfree_hash_accel(
+    planner: &RecoveryPlanner,
+    id: PoolId,
+    nbuckets: usize,
+) -> Result<(LfHash, RecoveredStats)> {
+    let pool = Arc::new(DurablePool::adopt(id, 64, LfNode::init_free_pattern));
+    let slots: Vec<*mut u8> = pool.iter_slots().collect();
+    let mut validity = Vec::with_capacity(slots.len());
+    let mut marked = Vec::with_capacity(slots.len());
+    let mut keys = Vec::with_capacity(slots.len());
+    for &s in &slots {
+        let node = s as *const LfNode;
+        unsafe {
+            validity.push((*node).raw_validity() as i32);
+            marked.push(is_marked((*node).next.load(Ordering::Relaxed)) as i32);
+            keys.push((*node).key.load(Ordering::Relaxed) as i64);
+        }
+    }
+    let n = nbuckets.next_power_of_two().max(1);
+    let plan = planner.plan_linkfree(&validity, &marked, &keys, (n - 1) as u64)?;
+
+    let core = crate::sets::linkfree::LfCore::from_parts(pool, Arc::new(Ebr::new()));
+    let hash = LfHash::from_parts(n, core);
+    let mut stats = RecoveredStats::default();
+    let mut grouped: Vec<(i32, u64, *mut u8)> = Vec::new();
+    for (i, &s) in slots.iter().enumerate() {
+        if plan.member[i] != 0 {
+            grouped.push((plan.bucket[i], keys[i] as u64, s));
+            stats.members += 1;
+        } else {
+            unsafe {
+                hash.core.pool.normalize_slot(s);
+                hash.core.pool.free(s);
+            }
+            stats.reclaimed += 1;
+        }
+    }
+    grouped.sort_unstable_by_key(|&(b, k, _)| (b, k));
+    let mut i = 0;
+    while i < grouped.len() {
+        let b = grouped[i].0;
+        let mut j = i;
+        while j < grouped.len() && grouped[j].0 == b {
+            j += 1;
+        }
+        let mut chain: u64 = 0;
+        for &(_, _, slot) in grouped[i..j].iter().rev() {
+            let node = slot as *mut LfNode;
+            unsafe {
+                (*node).next.store(chain, Ordering::Relaxed);
+                (*node).reset_flush_flags();
+                (*node).set_insert_flushed();
+            }
+            chain = node as u64;
+        }
+        hash.buckets[b as usize].store(chain, Ordering::Relaxed);
+        i = j;
+    }
+    hash.core.pool.persist_all_regions();
+    Ok((hash, stats))
+}

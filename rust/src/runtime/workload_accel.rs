@@ -1,0 +1,52 @@
+//! Workload generation through the AOT `workload` artifact.
+//!
+//! Benchmark threads pull deterministic (key, op) batches: batch `b` of
+//! thread `t` is a pure function of `(seed ^ t, b)`, so runs are exactly
+//! reproducible and threads never share RNG state. The same stream can be
+//! produced in pure Rust ([`crate::workload`]); benches use the artifact
+//! path to keep the three-layer stack on the driver path and tests check
+//! the two agree.
+
+use anyhow::Result;
+
+use super::executable::{lit_i64, HloExecutable};
+
+/// Op kinds in the generated stream (must match kernels/workload.py).
+pub const OP_CONTAINS: i32 = 0;
+pub const OP_INSERT: i32 = 1;
+pub const OP_REMOVE: i32 = 2;
+
+pub struct WorkloadGen {
+    exe: HloExecutable,
+    batch: usize,
+}
+
+impl WorkloadGen {
+    pub fn load() -> Result<Self> {
+        Ok(WorkloadGen {
+            exe: HloExecutable::load("workload")?,
+            batch: super::manifest_u64("batch")? as usize,
+        })
+    }
+
+    /// Batch size baked into the artifact.
+    pub fn batch_len(&self) -> usize {
+        self.batch
+    }
+
+    /// Generate one batch: `base` is the stream offset (monotonic per
+    /// consumer), `read_micros` the read fraction per million.
+    pub fn batch(
+        &self,
+        seed: u64,
+        base: u64,
+        key_range: u64,
+        read_micros: u64,
+    ) -> Result<(Vec<u64>, Vec<i32>)> {
+        let params = lit_i64(&[seed as i64, base as i64, key_range as i64, read_micros as i64]);
+        let outs = self.exe.run(&[params])?;
+        let keys: Vec<u64> = outs[0].to_vec::<i64>()?.into_iter().map(|k| k as u64).collect();
+        let ops = outs[1].to_vec::<i32>()?;
+        Ok((keys, ops))
+    }
+}

@@ -1,0 +1,511 @@
+//! Link-free sorted list (paper Listings 2–5).
+//!
+//! The list core operates on *link cells* (`AtomicU64` holding a tagged
+//! node pointer): the list head, a hash bucket, or a node's `next`. There
+//! is no tail sentinel; a null link means "key +∞".
+
+use crate::alloc::{DurablePool, Ebr};
+use crate::sets::tagged::{is_marked, ptr_of, MARK};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::node::LfNode;
+
+/// Shared engine for all link-free containers (a list is one head cell; a
+/// hash set is an array of them).
+pub(crate) struct LfCore {
+    pub pool: Arc<DurablePool>,
+    pub ebr: Arc<Ebr>,
+}
+
+unsafe fn free_into_pool(ptr: *mut u8, ctx: usize) {
+    let pool = &*(ctx as *const DurablePool);
+    pool.free(ptr);
+}
+
+impl LfCore {
+    pub fn new() -> Self {
+        LfCore {
+            pool: Arc::new(DurablePool::new(64, LfNode::init_free_pattern)),
+            ebr: Arc::new(Ebr::new()),
+        }
+    }
+
+    pub fn from_parts(pool: Arc<DurablePool>, ebr: Arc<Ebr>) -> Self {
+        LfCore { pool, ebr }
+    }
+
+    /// Retire a logically-deleted, physically-unlinked node; its slot
+    /// returns to a free-list after the grace period (still carrying the
+    /// valid+marked pattern, i.e. recoverable-as-free).
+    #[inline]
+    unsafe fn retire_node(&self, node: *mut LfNode) {
+        self.ebr
+            .retire(node as *mut u8, Arc::as_ptr(&self.pool) as usize, free_into_pool);
+    }
+
+    /// Unlink `curr` from the position `pred_link`, persisting the delete
+    /// mark first (paper Listing 2 `trim`: a marked node must be durable
+    /// as deleted *before* it becomes unreachable, else recovery would
+    /// resurrect it).
+    #[inline]
+    unsafe fn trim(&self, pred_link: *const AtomicU64, curr: *mut LfNode) -> bool {
+        (*curr).flush_delete();
+        let succ = ptr_of::<LfNode>((*curr).next.load(Ordering::Acquire));
+        (*pred_link)
+            .compare_exchange(curr as u64, succ as u64, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Locate the first node with key >= `key` (paper Listing 2 `find`),
+    /// trimming marked nodes on the way. Returns the link cell preceding
+    /// `curr` and `curr` itself (null = end of list). Caller must hold an
+    /// EBR guard.
+    unsafe fn find(&self, head: *const AtomicU64, key: u64) -> (*const AtomicU64, *mut LfNode) {
+        self.find_from(head, head, key)
+    }
+
+    /// `find` starting from a *hint* link cell (skip-list fast path). The
+    /// hint must have been validated reachable under the current EBR
+    /// guard; if the window goes stale, retries fall back to `head`.
+    pub(crate) unsafe fn find_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> (*const AtomicU64, *mut LfNode) {
+        let mut from = start;
+        'retry: loop {
+            let mut pred_link = std::mem::replace(&mut from, head);
+            let first = (*pred_link).load(Ordering::Acquire);
+            // Hint staleness (TOCTOU): a hint marked after validation has
+            // a frozen `next` that bypasses nodes inserted at its unlink
+            // point — a remove could then wrongly report "absent" without
+            // any CAS to catch it. Restart from the head.
+            if !std::ptr::eq(pred_link, head) && is_marked(first) {
+                continue 'retry;
+            }
+            let mut curr = ptr_of::<LfNode>(first);
+            loop {
+                if curr.is_null() {
+                    return (pred_link, curr);
+                }
+                let succ_t = (*curr).next.load(Ordering::Acquire);
+                if is_marked(succ_t) {
+                    // Physically remove the logically-deleted node. On CAS
+                    // failure the window is stale; restart (lock-free: the
+                    // failure implies another thread made progress).
+                    (*curr).flush_delete();
+                    let succ = ptr_of::<LfNode>(succ_t);
+                    if (*pred_link)
+                        .compare_exchange(
+                            curr as u64,
+                            succ as u64,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_err()
+                    {
+                        continue 'retry;
+                    }
+                    curr = succ;
+                } else {
+                    if (*curr).key.load(Ordering::Relaxed) >= key {
+                        return (pred_link, curr);
+                    }
+                    pred_link = &(*curr).next as *const AtomicU64;
+                    curr = ptr_of::<LfNode>(succ_t);
+                }
+            }
+        }
+    }
+
+    /// Paper Listing 4.
+    pub fn insert(&self, head: *const AtomicU64, key: u64, value: u64) -> bool {
+        self.insert_from(head, head, key, value)
+    }
+
+    /// Insert whose first window search starts at a validated hint link.
+    pub(crate) fn insert_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+        value: u64,
+    ) -> bool {
+        let _g = self.ebr.pin();
+        let mut new_node: *mut LfNode = std::ptr::null_mut();
+        let mut from = start;
+        loop {
+            unsafe {
+                let (pred_link, curr) = self.find_from(std::mem::replace(&mut from, head), head, key);
+                if !curr.is_null() && (*curr).key.load(Ordering::Relaxed) == key {
+                    // Help the (possibly still invalid) earlier insert of
+                    // this key become durable before reporting failure —
+                    // otherwise a crash could reflect this failed insert
+                    // but not the insert that caused it (§3.3).
+                    (*curr).make_valid();
+                    (*curr).flush_insert();
+                    if !new_node.is_null() {
+                        LfNode::init_free_pattern(new_node as *mut u8);
+                        self.pool.free(new_node as *mut u8);
+                    }
+                    return false;
+                }
+                if new_node.is_null() {
+                    new_node = self.pool.alloc() as *mut LfNode;
+                    // Invalid-before-init: a crash during initialisation
+                    // must not let recovery see a half-written node.
+                    (*new_node).make_invalid();
+                    std::sync::atomic::fence(Ordering::Release);
+                    (*new_node).reset_flush_flags();
+                    (*new_node).key.store(key, Ordering::Relaxed);
+                    (*new_node).value.store(value, Ordering::Relaxed);
+                }
+                // Link (still invalid!), then validate, then persist.
+                (*new_node).next.store(curr as u64, Ordering::Relaxed);
+                if (*pred_link)
+                    .compare_exchange(
+                        curr as u64,
+                        new_node as u64,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    (*new_node).make_valid();
+                    (*new_node).flush_insert();
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Paper Listing 5.
+    pub fn remove(&self, head: *const AtomicU64, key: u64) -> bool {
+        self.remove_from(head, head, key)
+    }
+
+    /// Remove whose first window search starts at a validated hint link.
+    pub(crate) fn remove_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> bool {
+        let _g = self.ebr.pin();
+        let mut from = start;
+        loop {
+            unsafe {
+                let (pred_link, curr) = self.find_from(std::mem::replace(&mut from, head), head, key);
+                if curr.is_null() || (*curr).key.load(Ordering::Relaxed) != key {
+                    return false;
+                }
+                let succ_t = (*curr).next.load(Ordering::Acquire);
+                if is_marked(succ_t) {
+                    // Lost the race to another remover; converge via find
+                    // (which trims + persists the deletion) and fail there.
+                    continue;
+                }
+                // Invariant: a marked node is valid. makeValid and the
+                // marking CAS hit the same cache line, so no psync is
+                // needed between them (Cohen et al. 2017; paper §3.4).
+                (*curr).make_valid();
+                if (*curr)
+                    .next
+                    .compare_exchange(succ_t, succ_t | MARK, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    if !self.trim(pred_link, curr) {
+                        // Someone else unlinked it (or our window went
+                        // stale); find() guarantees no marked node with
+                        // this key stays reachable.
+                        let _ = self.find(head, key);
+                    }
+                    self.retire_node(curr);
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Paper Listing 3 (wait-free, Heller et al.-style traversal).
+    pub fn get(&self, head: *const AtomicU64, key: u64) -> Option<u64> {
+        self.get_from(head, head, key)
+    }
+
+    /// Wait-free read starting from a validated hint link (or the head).
+    pub(crate) fn get_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> Option<u64> {
+        let _g = self.ebr.pin();
+        unsafe {
+            let mut from = start;
+            // Same TOCTOU as find_from (reads have no CAS safety net).
+            if !std::ptr::eq(start, head) && is_marked((*start).load(Ordering::Acquire)) {
+                from = head;
+            }
+            let mut curr = ptr_of::<LfNode>((*from).load(Ordering::Acquire));
+            while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) < key {
+                curr = ptr_of::<LfNode>((*curr).next.load(Ordering::Acquire));
+            }
+            if curr.is_null() || (*curr).key.load(Ordering::Relaxed) != key {
+                return None;
+            }
+            if is_marked((*curr).next.load(Ordering::Acquire)) {
+                // The answer "absent" is only durable once the delete is.
+                (*curr).flush_delete();
+                return None;
+            }
+            // The answer "present" is only durable once the insert is.
+            (*curr).make_valid();
+            (*curr).flush_insert();
+            Some((*curr).value.load(Ordering::Relaxed))
+        }
+    }
+
+    /// Unmarked-node count from one head (test/metrics only).
+    pub fn count(&self, head: *const AtomicU64) -> usize {
+        let _g = self.ebr.pin();
+        let mut n = 0;
+        unsafe {
+            let mut curr = ptr_of::<LfNode>((*head).load(Ordering::Acquire));
+            while !curr.is_null() {
+                let succ_t = (*curr).next.load(Ordering::Acquire);
+                if !is_marked(succ_t) {
+                    n += 1;
+                }
+                curr = ptr_of::<LfNode>(succ_t);
+            }
+        }
+        n
+    }
+
+    /// Snapshot of unmarked (key, value) pairs from one head, in order
+    /// (test/debug only; not linearizable under concurrency).
+    pub fn snapshot(&self, head: *const AtomicU64) -> Vec<(u64, u64)> {
+        let _g = self.ebr.pin();
+        let mut out = Vec::new();
+        unsafe {
+            let mut curr = ptr_of::<LfNode>((*head).load(Ordering::Acquire));
+            while !curr.is_null() {
+                let succ_t = (*curr).next.load(Ordering::Acquire);
+                if !is_marked(succ_t) {
+                    out.push((
+                        (*curr).key.load(Ordering::Relaxed),
+                        (*curr).value.load(Ordering::Relaxed),
+                    ));
+                }
+                curr = ptr_of::<LfNode>(succ_t);
+            }
+        }
+        out
+    }
+}
+
+/// The link-free sorted-list set.
+pub struct LfList {
+    pub(crate) head: AtomicU64,
+    pub(crate) core: LfCore,
+}
+
+unsafe impl Send for LfList {}
+unsafe impl Sync for LfList {}
+
+impl LfList {
+    pub fn new() -> Self {
+        LfList { head: AtomicU64::new(0), core: LfCore::new() }
+    }
+
+    pub(crate) fn from_parts(head_value: u64, core: LfCore) -> Self {
+        LfList { head: AtomicU64::new(head_value), core }
+    }
+
+    /// The durable pool id (names the areas; needed to recover after a
+    /// crash — see [`super::recover_list`]).
+    pub fn pool_id(&self) -> crate::pmem::PoolId {
+        self.core.pool.id()
+    }
+
+    /// Prepare for a simulated crash: keep the durable regions alive when
+    /// this (volatile) handle is dropped.
+    pub fn crash_preserve(&self) {
+        self.core.pool.preserve();
+    }
+
+    /// Ordered snapshot (test/debug).
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        self.core.snapshot(&self.head)
+    }
+}
+
+impl Default for LfList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for LfList {
+    fn drop(&mut self) {
+        // Flush deferred frees while the pool is still alive; after a
+        // simulated crash the limbo lists are abandoned (recovery reclaims
+        // the durable slots from the areas instead).
+        unsafe { self.core.ebr.drain_all() };
+    }
+}
+
+impl crate::sets::ConcurrentSet for LfList {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.core.insert(&self.head, key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.core.remove(&self.head, key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.core.get(&self.head, key).is_some()
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.core.get(&self.head, key)
+    }
+    fn len_approx(&self) -> usize {
+        self.core.count(&self.head)
+    }
+    fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
+        Some(self.pool_id())
+    }
+    fn prepare_crash(&self) {
+        self.crash_preserve();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sets::ConcurrentSet;
+
+    #[test]
+    fn sequential_semantics() {
+        let l = LfList::new();
+        assert!(!l.contains(5));
+        assert!(l.insert(5, 50));
+        assert!(!l.insert(5, 51), "duplicate insert must fail");
+        assert!(l.contains(5));
+        assert_eq!(l.get(5), Some(50));
+        assert!(l.insert(3, 30));
+        assert!(l.insert(7, 70));
+        assert_eq!(l.snapshot(), vec![(3, 30), (5, 50), (7, 70)]);
+        assert!(l.remove(5));
+        assert!(!l.remove(5), "double remove must fail");
+        assert!(!l.contains(5));
+        assert_eq!(l.snapshot(), vec![(3, 30), (7, 70)]);
+        assert_eq!(l.len_approx(), 2);
+    }
+
+    #[test]
+    fn reinsert_after_remove() {
+        let l = LfList::new();
+        for round in 0..5 {
+            assert!(l.insert(1, round));
+            assert_eq!(l.get(1), Some(round));
+            assert!(l.remove(1));
+        }
+        assert!(!l.contains(1));
+    }
+
+    #[test]
+    fn boundary_keys() {
+        let l = LfList::new();
+        assert!(l.insert(0, 1));
+        assert!(l.insert(u64::MAX, 2));
+        assert!(l.contains(0));
+        assert!(l.contains(u64::MAX));
+        assert!(l.remove(0));
+        assert!(l.remove(u64::MAX));
+        assert_eq!(l.len_approx(), 0);
+    }
+
+    #[test]
+    fn matches_btreeset_model_random_ops() {
+        use crate::util::rng::Xoshiro256;
+        let l = LfList::new();
+        let mut model = std::collections::BTreeSet::new();
+        let mut rng = Xoshiro256::new(0xFEED);
+        for _ in 0..20_000 {
+            let k = rng.below(64);
+            match rng.below(3) {
+                0 => assert_eq!(l.insert(k, k), model.insert(k)),
+                1 => assert_eq!(l.remove(k), model.remove(&k)),
+                _ => assert_eq!(l.contains(k), model.contains(&k)),
+            }
+        }
+        let snap: Vec<u64> = l.snapshot().iter().map(|kv| kv.0).collect();
+        let want: Vec<u64> = model.iter().copied().collect();
+        assert_eq!(snap, want);
+    }
+
+    #[test]
+    fn concurrent_stripes_no_interference() {
+        use std::sync::Arc;
+        let l = Arc::new(LfList::new());
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    // Each thread owns keys = t (mod 4).
+                    for i in 0..500u64 {
+                        let k = i * 4 + t;
+                        assert!(l.insert(k, k));
+                        assert!(l.contains(k));
+                        if i % 2 == 0 {
+                            assert!(l.remove(k));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 4 threads x 250 surviving odd-i keys.
+        assert_eq!(l.len_approx(), 4 * 250);
+        let snap = l.snapshot();
+        for w in snap.windows(2) {
+            assert!(w[0].0 < w[1].0, "list must stay strictly sorted");
+        }
+    }
+
+    #[test]
+    fn contention_on_same_keys() {
+        use std::sync::Arc;
+        let l = Arc::new(LfList::new());
+        let handles: Vec<_> = (0..8u64)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::new(t);
+                    let mut net = 0i64;
+                    for _ in 0..3000 {
+                        let k = rng.below(16);
+                        if rng.below(2) == 0 {
+                            if l.insert(k, t) {
+                                net += 1;
+                            }
+                        } else if l.remove(k) {
+                            net -= 1;
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(l.len_approx() as i64, net, "successful inserts - removes must equal size");
+        let snap = l.snapshot();
+        for w in snap.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+}

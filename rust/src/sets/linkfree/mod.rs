@@ -1,0 +1,22 @@
+//! The **link-free** durable sets (paper §3).
+//!
+//! The core idea of the paper: never persist links. Only node *content*
+//! (key, value, validity) is written back to NVRAM; the linked structure
+//! exists purely in volatile memory and is rebuilt by recovery from the
+//! durable areas. A two-bit validity scheme distinguishes half-initialised
+//! nodes from members, and two flush flags elide redundant psyncs
+//! (the paper's extension of link-and-persist).
+
+mod hash;
+mod skiplist;
+pub(crate) mod list;
+mod node;
+mod recovery;
+
+pub(crate) use list::LfCore;
+
+pub use hash::LfHash;
+pub use list::LfList;
+pub use node::LfNode;
+pub use recovery::{recover_hash, recover_list, RecoveredStats};
+pub use skiplist::{recover_skiplist, LfSkipList};

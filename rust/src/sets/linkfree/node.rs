@@ -1,0 +1,194 @@
+//! Link-free node (paper Listing 1) — exactly one cache line.
+
+use crate::pmem;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// Validity bit 0 (`v1`) and bit 1 (`v2`): the node is *valid* iff the two
+/// bits are equal (Definition B.3 uses "both equal initial value" /
+/// "both flipped"; equality is the invariant the recovery tests).
+const V1: u8 = 0b01;
+const V2: u8 = 0b10;
+
+/// Flush flags (paper §3: `insertFlushFlag`, `deleteFlushFlag`).
+const INSERT_FLUSHED: u8 = 0b01;
+const DELETE_FLUSHED: u8 = 0b10;
+
+/// A durable link-free node: key, value, validity bits, flush flags and a
+/// markable volatile `next` link, all within one 64-byte line so a single
+/// psync persists the logical record (the `next` value itself is *never
+/// relied upon* after a crash — only its mark bit is).
+#[repr(C, align(64))]
+pub struct LfNode {
+    validity: AtomicU8,
+    flush_flags: AtomicU8,
+    _pad: [u8; 6],
+    pub key: AtomicU64,
+    pub value: AtomicU64,
+    /// Tagged link: bit 0 = Harris deletion mark.
+    pub next: AtomicU64,
+}
+
+const _: () = assert!(std::mem::size_of::<LfNode>() == 64);
+
+impl LfNode {
+    /// Canonical *free* pattern: valid (bits equal) **and marked** — i.e.
+    /// recoverable-as-deleted. Fresh areas are initialised to this and
+    /// bulk-persisted, so recovery never misreads an unallocated slot as a
+    /// member (a plain zeroed slot would read valid + unmarked + key 0).
+    ///
+    /// # Safety
+    /// `slot` must point to a writable 64-byte slot.
+    pub unsafe fn init_free_pattern(slot: *mut u8) {
+        let n = &*(slot as *const LfNode);
+        n.validity.store(0, Ordering::Relaxed);
+        n.flush_flags.store(0, Ordering::Relaxed);
+        n.key.store(0, Ordering::Relaxed);
+        n.value.store(0, Ordering::Relaxed);
+        n.next.store(super::super::tagged::MARK, Ordering::Relaxed);
+    }
+
+    /// Make the node invalid (`flipV1`, generalised: set v1 ≠ v2). Called
+    /// only by the allocating thread before publication, so a plain store
+    /// suffices. Idempotent on an already-invalid node.
+    #[inline]
+    pub fn make_invalid(&self) {
+        let v = self.validity.load(Ordering::Relaxed);
+        let v2 = (v & V2) != 0;
+        let want = (if v2 { V2 } else { 0 }) | (if v2 { 0 } else { V1 });
+        self.validity.store(want, Ordering::Relaxed);
+    }
+
+    /// `makeValid`: equate v2 to v1. Racy calls all store the same value.
+    #[inline]
+    pub fn make_valid(&self) {
+        let v = self.validity.load(Ordering::Relaxed);
+        let v1 = (v & V1) != 0;
+        let want = (if v1 { V1 | V2 } else { 0 }) as u8;
+        if v != want {
+            self.validity.store(want, Ordering::Release);
+        }
+    }
+
+    /// Valid ⇔ the two validity bits are equal.
+    #[inline]
+    pub fn is_valid(&self) -> bool {
+        let v = self.validity.load(Ordering::Acquire);
+        ((v & V1) != 0) == ((v & V2) != 0)
+    }
+
+    /// Reset both flush flags (reused slot about to be re-initialised).
+    #[inline]
+    pub fn reset_flush_flags(&self) {
+        self.flush_flags.store(0, Ordering::Relaxed);
+    }
+
+    /// `FLUSH_INSERT` (paper §3.1): psync the node unless an
+    /// insert-persist already happened — the flag elides redundant psyncs.
+    #[inline]
+    pub fn flush_insert(&self) {
+        if self.flush_flags.load(Ordering::Acquire) & INSERT_FLUSHED == 0 {
+            pmem::psync_obj(self);
+            self.flush_flags.fetch_or(INSERT_FLUSHED, Ordering::Release);
+        }
+    }
+
+    /// `FLUSH_DELETE`: psync the node unless its deletion was already
+    /// persisted.
+    #[inline]
+    pub fn flush_delete(&self) {
+        if self.flush_flags.load(Ordering::Acquire) & DELETE_FLUSHED == 0 {
+            pmem::psync_obj(self);
+            self.flush_flags.fetch_or(DELETE_FLUSHED, Ordering::Release);
+        }
+    }
+
+    /// Raw 2-bit validity byte for bulk plane extraction (XLA-accelerated
+    /// recovery; member ⇔ bit0 == bit1 and next unmarked).
+    #[inline]
+    pub fn raw_validity(&self) -> u8 {
+        self.validity.load(Ordering::Relaxed) & 0b11
+    }
+
+    /// Arm the insert-flushed flag without a psync — recovery uses this
+    /// for relinked members whose content is already durable.
+    #[inline]
+    pub fn set_insert_flushed(&self) {
+        self.flush_flags.fetch_or(INSERT_FLUSHED, Ordering::Relaxed);
+    }
+
+    /// Recovery-side classification of a raw slot: is it a set member
+    /// (valid and unmarked)?
+    #[inline]
+    pub fn is_member(&self) -> bool {
+        self.is_valid() && !super::super::tagged::is_marked(self.next.load(Ordering::Acquire))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh() -> Box<LfNode> {
+        let mut b: Box<std::mem::MaybeUninit<LfNode>> = Box::new(std::mem::MaybeUninit::uninit());
+        unsafe {
+            LfNode::init_free_pattern(b.as_mut_ptr() as *mut u8);
+            std::mem::transmute(b)
+        }
+    }
+
+    #[test]
+    fn free_pattern_is_valid_and_marked() {
+        let n = fresh();
+        assert!(n.is_valid());
+        assert!(!n.is_member(), "free slot must not classify as member");
+    }
+
+    #[test]
+    fn validity_lifecycle() {
+        let n = fresh();
+        assert!(n.is_valid());
+        n.make_invalid();
+        assert!(!n.is_valid());
+        n.make_invalid(); // idempotent
+        assert!(!n.is_valid());
+        n.make_valid();
+        assert!(n.is_valid());
+        n.make_valid(); // idempotent
+        assert!(n.is_valid());
+        // next cycle (slot reuse) keeps working
+        n.make_invalid();
+        assert!(!n.is_valid());
+        n.make_valid();
+        assert!(n.is_valid());
+    }
+
+    #[test]
+    fn flush_flags_elide_second_psync() {
+        let n = fresh();
+        n.reset_flush_flags();
+        let a = crate::pmem::stats::thread_snapshot();
+        n.flush_insert();
+        n.flush_insert();
+        n.flush_insert();
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "only the first FLUSH_INSERT may psync");
+        let a = crate::pmem::stats::thread_snapshot();
+        n.flush_delete();
+        n.flush_delete();
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "only the first FLUSH_DELETE may psync");
+    }
+
+    #[test]
+    fn member_iff_valid_and_unmarked() {
+        let n = fresh();
+        n.next.store(0, Ordering::Relaxed); // unmarked null
+        assert!(n.is_member()); // valid + unmarked
+        n.make_invalid();
+        assert!(!n.is_member());
+        n.make_valid();
+        assert!(n.is_member());
+        n.next.store(crate::sets::tagged::MARK, Ordering::Relaxed);
+        assert!(!n.is_member());
+    }
+}

@@ -1,0 +1,243 @@
+//! Link-free recovery (paper §3.5).
+//!
+//! After a crash the durable areas hold every slot the structure ever
+//! allocated. Classification is the validity scheme: **valid & unmarked ⇒
+//! member**; everything else (invalid = interrupted insert, valid+marked =
+//! deleted or never-used) is reclaimed. Members are relinked — reusing the
+//! very same durable slots — into a fresh volatile structure with **zero
+//! psyncs** (all member content is already durable). Reclaimed slots are
+//! normalised back to the canonical free pattern and the areas are
+//! persisted once in bulk, so a second crash cannot resurrect ghosts.
+
+use crate::alloc::{DurablePool, Ebr};
+use crate::pmem::PoolId;
+use crate::sets::tagged::MARK;
+use crate::util::mix64;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::list::{LfCore, LfList};
+use super::node::LfNode;
+use super::LfHash;
+
+/// What recovery found in the durable areas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveredStats {
+    /// Slots relinked as set members.
+    pub members: usize,
+    /// Slots reclaimed to free-lists (never-used, deleted, or interrupted
+    /// inserts — the paper's "memory leaks fixed by the validity scheme").
+    pub reclaimed: usize,
+}
+
+/// Scan the pool and classify every slot. Returns member pointers (with
+/// key) and frees/normalises the rest. Shared by list and hash recovery.
+fn scan(pool: &DurablePool) -> (Vec<(u64, *mut LfNode)>, RecoveredStats) {
+    let mut members: Vec<(u64, *mut LfNode)> = Vec::new();
+    let mut stats = RecoveredStats::default();
+    for slot in pool.iter_slots() {
+        let node = slot as *mut LfNode;
+        unsafe {
+            if (*node).is_member() {
+                members.push(((*node).key.load(Ordering::Relaxed), node));
+                stats.members += 1;
+            } else {
+                // Invalid or deleted: normalise to the free pattern so a
+                // later crash still classifies it as free, then reuse.
+                pool.normalize_slot(slot);
+                pool.free(slot);
+                stats.reclaimed += 1;
+            }
+        }
+    }
+    // The persistent list must be a set (Claim B.12); a duplicate would
+    // mean a validity-scheme violation.
+    let mut keys: Vec<u64> = members.iter().map(|m| m.0).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    assert_eq!(keys.len(), members.len(), "duplicate keys in durable image");
+    (members, stats)
+}
+
+/// Relink a sorted run of member nodes into a chain below `head_out`;
+/// returns the head link value. No psyncs: membership is already durable,
+/// and links are volatile by design.
+unsafe fn relink_chain(members: &[(u64, *mut LfNode)]) -> u64 {
+    let mut next_val = 0u64; // null, unmarked
+    for &(_, node) in members.iter().rev() {
+        (*node).next.store(next_val, Ordering::Relaxed);
+        // Content is durable: arm the insert-flush flag so post-recovery
+        // reads don't re-psync, and clear the delete flag.
+        (*node).reset_flush_flags();
+        (*node).set_insert_flushed();
+        next_val = node as u64;
+        debug_assert_eq!(next_val & MARK, 0);
+    }
+    next_val
+}
+
+/// Rebuild a link-free list from the durable areas of `id`.
+pub fn recover_list(id: PoolId) -> (LfList, RecoveredStats) {
+    let pool = Arc::new(DurablePool::adopt(id, 64, LfNode::init_free_pattern));
+    let (mut members, stats) = scan(&pool);
+    members.sort_unstable_by_key(|m| m.0);
+    let head = unsafe { relink_chain(&members) };
+    pool.persist_all_regions();
+    let core = LfCore::from_parts(pool, Arc::new(Ebr::new()));
+    (LfList::from_parts(head, core), stats)
+}
+
+/// Rebuild a link-free hash set from the durable areas of `id`.
+pub fn recover_hash(id: PoolId, nbuckets: usize) -> (LfHash, RecoveredStats) {
+    let pool = Arc::new(DurablePool::adopt(id, 64, LfNode::init_free_pattern));
+    let (mut members, stats) = scan(&pool);
+    let core = LfCore::from_parts(pool, Arc::new(Ebr::new()));
+    let hash = LfHash::from_parts(nbuckets, core);
+    let mask = (hash.nbuckets() - 1) as u64;
+    // Sort by (bucket, key) then relink one chain per bucket.
+    members.sort_unstable_by_key(|m| ((mix64(m.0) & mask), m.0));
+    let mut i = 0;
+    while i < members.len() {
+        let b = (mix64(members[i].0) & mask) as usize;
+        let mut j = i;
+        while j < members.len() && (mix64(members[j].0) & mask) as usize == b {
+            j += 1;
+        }
+        let head_val = unsafe { relink_chain(&members[i..j]) };
+        hash.buckets[b].store(head_val, Ordering::Relaxed);
+        i = j;
+    }
+    hash.core.pool.persist_all_regions();
+    (hash, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{self, CrashPolicy, Mode};
+    use crate::sets::ConcurrentSet;
+
+    /// Crash tests flip the global pmem mode — serialize them.
+    pub(crate) static CRASH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn recover_list_after_pessimistic_crash() {
+        let _g = CRASH_LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let l = LfList::new();
+        let id = l.pool_id();
+        for k in 0..50u64 {
+            assert!(l.insert(k, k + 1000));
+        }
+        for k in (0..50u64).step_by(3) {
+            assert!(l.remove(k));
+        }
+        l.crash_preserve();
+        drop(l);
+        pmem::crash(CrashPolicy::PESSIMISTIC);
+
+        let (l2, stats) = recover_list(id);
+        // Every completed insert/remove was psync'd, so the recovered set
+        // must match exactly.
+        for k in 0..50u64 {
+            if k % 3 == 0 {
+                assert!(!l2.contains(k), "removed key {k} resurrected");
+            } else {
+                assert_eq!(l2.get(k), Some(k + 1000), "key {k} lost");
+            }
+        }
+        assert_eq!(stats.members as usize, (0..50).filter(|k| k % 3 != 0).count());
+        // Post-recovery the structure is fully operational.
+        assert!(l2.insert(999, 1));
+        assert!(l2.remove(1));
+        pmem::set_mode(Mode::Perf);
+    }
+
+    #[test]
+    fn recover_hash_after_random_eviction_crash() {
+        let _g = CRASH_LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let h = LfHash::new(32);
+        let id = h.pool_id();
+        for k in 0..200u64 {
+            assert!(h.insert(k, k));
+        }
+        for k in 100..150u64 {
+            assert!(h.remove(k));
+        }
+        h.crash_preserve();
+        drop(h);
+        // Random eviction may persist *extra* lines, never fewer: acked
+        // ops must still be exact.
+        pmem::crash(CrashPolicy::random(0.5, 42));
+
+        let (h2, stats) = recover_hash(id, 32);
+        for k in 0..200u64 {
+            let expect = !(100..150).contains(&k);
+            assert_eq!(h2.contains(k), expect, "key {k}");
+        }
+        assert_eq!(stats.members, 150);
+        assert!(stats.reclaimed > 0);
+        // Reclaimed slots are reusable.
+        for k in 1000..1100u64 {
+            assert!(h2.insert(k, k));
+        }
+        pmem::set_mode(Mode::Perf);
+    }
+
+    #[test]
+    fn unflushed_insert_does_not_survive_pessimistic_crash() {
+        let _g = CRASH_LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        // Build a list, then hand-craft an in-flight insert: linked and
+        // valid in volatile memory but never psync'd.
+        let l = LfList::new();
+        let id = l.pool_id();
+        assert!(l.insert(1, 1)); // psync'd
+        unsafe {
+            let node = l.core.pool.alloc() as *mut super::LfNode;
+            (*node).make_invalid();
+            (*node).reset_flush_flags();
+            (*node).key.store(2, std::sync::atomic::Ordering::Relaxed);
+            (*node).value.store(2, std::sync::atomic::Ordering::Relaxed);
+            (*node).next.store(0, std::sync::atomic::Ordering::Relaxed);
+            (*node).make_valid(); // valid in cache, never flushed
+        }
+        l.crash_preserve();
+        drop(l);
+        pmem::crash(CrashPolicy::PESSIMISTIC);
+        let (l2, _) = recover_list(id);
+        assert!(l2.contains(1));
+        assert!(!l2.contains(2), "unflushed insert must not survive");
+        pmem::set_mode(Mode::Perf);
+    }
+
+    #[test]
+    fn double_crash_no_ghosts() {
+        let _g = CRASH_LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let l = LfList::new();
+        let id = l.pool_id();
+        for k in 0..20u64 {
+            l.insert(k, k);
+        }
+        for k in 0..10u64 {
+            l.remove(k);
+        }
+        l.crash_preserve();
+        drop(l);
+        pmem::crash(CrashPolicy::PESSIMISTIC);
+        let (l2, _) = recover_list(id);
+        // Crash again immediately: normalisation of reclaimed slots was
+        // persisted by recovery, so the second recovery sees the same set.
+        l2.crash_preserve();
+        drop(l2);
+        pmem::crash(CrashPolicy::PESSIMISTIC);
+        let (l3, stats) = recover_list(id);
+        for k in 0..20u64 {
+            assert_eq!(l3.contains(k), k >= 10, "key {k} after double crash");
+        }
+        assert_eq!(stats.members, 10);
+        pmem::set_mode(Mode::Perf);
+    }
+}

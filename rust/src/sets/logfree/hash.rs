@@ -1,0 +1,122 @@
+//! Log-free hash set: the bucket array is itself persistent memory (the
+//! structure is durable), and bucket updates follow link-and-persist.
+
+use crate::pmem::region::{alloc_region, RegionTag};
+use crate::sets::ConcurrentSet;
+use crate::util::mix64;
+use std::sync::atomic::AtomicU64;
+
+use super::list::LogFreeCore;
+
+pub struct LogFreeHash {
+    /// Durable bucket array (a `Links` region of the pool).
+    pub(crate) buckets: *const AtomicU64,
+    pub(crate) nbuckets: usize,
+    pub(crate) core: LogFreeCore,
+}
+
+unsafe impl Send for LogFreeHash {}
+unsafe impl Sync for LogFreeHash {}
+
+impl LogFreeHash {
+    pub fn new(nbuckets: usize) -> Self {
+        let core = LogFreeCore::new();
+        let n = nbuckets.next_power_of_two().max(1);
+        // Zero-initialised durable region: empty buckets, already persisted
+        // (fresh regions' shadows are zeroed too).
+        let base = alloc_region(core.pool.id(), n * 8, RegionTag::Links, 0);
+        LogFreeHash { buckets: base as *const AtomicU64, nbuckets: n, core }
+    }
+
+    pub(crate) fn from_parts(
+        buckets: *const AtomicU64,
+        nbuckets: usize,
+        core: LogFreeCore,
+    ) -> Self {
+        LogFreeHash { buckets, nbuckets, core }
+    }
+
+    #[inline(always)]
+    fn bucket_of(&self, key: u64) -> &AtomicU64 {
+        unsafe { &*self.buckets.add((mix64(key) as usize) & (self.nbuckets - 1)) }
+    }
+
+    pub fn nbuckets(&self) -> usize {
+        self.nbuckets
+    }
+
+    pub fn pool_id(&self) -> crate::pmem::PoolId {
+        self.core.pool.id()
+    }
+
+    pub fn crash_preserve(&self) {
+        self.core.pool.preserve();
+    }
+
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for i in 0..self.nbuckets {
+            out.extend(self.core.snapshot_from(unsafe { &*self.buckets.add(i) }));
+        }
+        out
+    }
+}
+
+impl Drop for LogFreeHash {
+    fn drop(&mut self) {
+        unsafe { self.core.ebr.drain_all() };
+    }
+}
+
+impl ConcurrentSet for LogFreeHash {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.core.insert(self.bucket_of(key), key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.core.remove(self.bucket_of(key), key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.core.get(self.bucket_of(key), key).is_some()
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.core.get(self.bucket_of(key), key)
+    }
+    fn len_approx(&self) -> usize {
+        (0..self.nbuckets)
+            .map(|i| self.core.count(unsafe { &*self.buckets.add(i) }))
+            .sum()
+    }
+    fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
+        Some(self.pool_id())
+    }
+    fn prepare_crash(&self) {
+        self.crash_preserve();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_logfree_hash() {
+        let h = LogFreeHash::new(8);
+        for k in 0..64u64 {
+            assert!(h.insert(k, k + 1));
+        }
+        for k in 0..64u64 {
+            assert_eq!(h.get(k), Some(k + 1));
+        }
+        for k in 0..32u64 {
+            assert!(h.remove(k));
+        }
+        assert_eq!(h.len_approx(), 32);
+    }
+
+    #[test]
+    fn bucket_array_is_registered_durable() {
+        let h = LogFreeHash::new(16);
+        let regions = h.core.pool.regions();
+        assert!(regions.iter().any(|r| r.tag == RegionTag::Links && r.len >= 16 * 8));
+    }
+}

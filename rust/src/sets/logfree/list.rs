@@ -1,0 +1,341 @@
+//! Log-free sorted list: Harris list with persisted links
+//! (link-and-persist) over durable link cells.
+
+use crate::alloc::{DurablePool, Ebr};
+use crate::pmem::{
+    self,
+    root::{root_cell, RootCell},
+};
+use crate::sets::tagged::{is_marked, ptr_of, DIRTY, MARK, PTR_MASK};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::node::{load_link_persisted, store_link_persisted, LogFreeNode};
+
+pub(crate) struct LogFreeCore {
+    pub pool: Arc<DurablePool>,
+    pub ebr: Arc<Ebr>,
+}
+
+unsafe fn free_into_pool(ptr: *mut u8, ctx: usize) {
+    // Reset to the free pattern so a stale persisted image of the slot can
+    // never read as an unmarked member on a later recovery walk.
+    LogFreeNode::init_free_pattern(ptr);
+    (*(ctx as *const DurablePool)).free(ptr);
+}
+
+impl LogFreeCore {
+    pub fn new() -> Self {
+        LogFreeCore {
+            pool: Arc::new(DurablePool::new(64, LogFreeNode::init_free_pattern)),
+            ebr: Arc::new(Ebr::new()),
+        }
+    }
+
+    pub fn from_parts(pool: Arc<DurablePool>, ebr: Arc<Ebr>) -> Self {
+        LogFreeCore { pool, ebr }
+    }
+
+    unsafe fn retire_node(&self, node: *mut LogFreeNode) {
+        self.ebr
+            .retire(node as *mut u8, Arc::as_ptr(&self.pool) as usize, free_into_pool);
+    }
+
+    /// Unlink a marked node. Its mark was already persisted by the marking
+    /// remover; the unlink itself is a persisted link update.
+    unsafe fn trim(&self, pred_link: *const AtomicU64, curr: *mut LogFreeNode) -> bool {
+        // The mark must be durable before the node becomes unreachable.
+        let succ_v = load_link_persisted(&(*curr).next);
+        debug_assert!(is_marked(succ_v));
+        let succ = succ_v & PTR_MASK;
+        store_link_persisted(&*pred_link, curr as u64, succ)
+    }
+
+    /// Find window; persists dirty links it traverses (link-and-persist:
+    /// the structure an operation relies on must be durable).
+    unsafe fn find(
+        &self,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> (*const AtomicU64, *mut LogFreeNode) {
+        'retry: loop {
+            let mut pred_link = head;
+            let mut curr = ptr_of::<LogFreeNode>(load_link_persisted(&*pred_link));
+            loop {
+                if curr.is_null() {
+                    return (pred_link, curr);
+                }
+                let succ_v = load_link_persisted(&(*curr).next);
+                if is_marked(succ_v) {
+                    if !self.trim(pred_link, curr) {
+                        continue 'retry;
+                    }
+                    curr = ptr_of::<LogFreeNode>(succ_v);
+                } else {
+                    if (*curr).key.load(Ordering::Relaxed) >= key {
+                        return (pred_link, curr);
+                    }
+                    pred_link = &(*curr).next as *const AtomicU64;
+                    curr = ptr_of::<LogFreeNode>(succ_v);
+                }
+            }
+        }
+    }
+
+    pub fn insert(&self, head: *const AtomicU64, key: u64, value: u64) -> bool {
+        let _g = self.ebr.pin();
+        let mut new_node: *mut LogFreeNode = std::ptr::null_mut();
+        loop {
+            unsafe {
+                let (pred_link, curr) = self.find(head, key);
+                if !curr.is_null() && (*curr).key.load(Ordering::Relaxed) == key {
+                    if !new_node.is_null() {
+                        LogFreeNode::init_free_pattern(new_node as *mut u8);
+                        self.pool.free(new_node as *mut u8);
+                    }
+                    // find() already persisted the links leading here, so
+                    // the failure is durably justified.
+                    return false;
+                }
+                if new_node.is_null() {
+                    new_node = self.pool.alloc() as *mut LogFreeNode;
+                    (*new_node).key.store(key, Ordering::Relaxed);
+                    (*new_node).value.store(value, Ordering::Relaxed);
+                }
+                (*new_node).next.store(curr as u64, Ordering::Relaxed);
+                // Persist node content BEFORE it becomes reachable.
+                pmem::psync_obj(new_node);
+                // Install + persist the link (psync #2 of the update).
+                if store_link_persisted(&*pred_link, curr as u64, new_node as u64) {
+                    return true;
+                }
+            }
+        }
+    }
+
+    pub fn remove(&self, head: *const AtomicU64, key: u64) -> bool {
+        let _g = self.ebr.pin();
+        loop {
+            unsafe {
+                let (pred_link, curr) = self.find(head, key);
+                if curr.is_null() || (*curr).key.load(Ordering::Relaxed) != key {
+                    return false;
+                }
+                let succ_v = (*curr).next.load(Ordering::Acquire);
+                if succ_v & (MARK | DIRTY) != 0 {
+                    continue; // racing update on this node; re-find
+                }
+                // Mark + persist the logical delete (psync #1), then
+                // physically unlink with a persisted link update (psync #2).
+                if store_link_persisted(&(*curr).next, succ_v, succ_v | MARK) {
+                    if !self.trim(pred_link, curr) {
+                        let _ = self.find(head, key);
+                    }
+                    self.retire_node(curr);
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Wait-free read; persists any dirty link it depends on (this is the
+    /// reader-side flushing cost of log-free that SOFT eliminates).
+    pub fn get(&self, head: *const AtomicU64, key: u64) -> Option<u64> {
+        let _g = self.ebr.pin();
+        unsafe {
+            let mut curr = ptr_of::<LogFreeNode>(load_link_persisted(&*head));
+            while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) < key {
+                curr = ptr_of::<LogFreeNode>(load_link_persisted(&(*curr).next));
+            }
+            if curr.is_null() || (*curr).key.load(Ordering::Relaxed) != key {
+                return None;
+            }
+            if is_marked(load_link_persisted(&(*curr).next)) {
+                return None;
+            }
+            Some((*curr).value.load(Ordering::Relaxed))
+        }
+    }
+
+    pub fn count(&self, head: *const AtomicU64) -> usize {
+        self.snapshot_from(head).len()
+    }
+
+    pub fn snapshot_from(&self, head: *const AtomicU64) -> Vec<(u64, u64)> {
+        let _g = self.ebr.pin();
+        let mut out = Vec::new();
+        unsafe {
+            let mut curr = ptr_of::<LogFreeNode>((*head).load(Ordering::Acquire));
+            while !curr.is_null() {
+                let v = (*curr).next.load(Ordering::Acquire);
+                if !is_marked(v) {
+                    out.push((
+                        (*curr).key.load(Ordering::Relaxed),
+                        (*curr).value.load(Ordering::Relaxed),
+                    ));
+                }
+                curr = ptr_of::<LogFreeNode>(v);
+            }
+        }
+        out
+    }
+}
+
+/// The log-free sorted-list set. Its head is a named durable root cell so
+/// recovery can find the persisted structure.
+pub struct LogFreeList {
+    pub(crate) head: RootCell,
+    pub(crate) core: LogFreeCore,
+}
+
+unsafe impl Send for LogFreeList {}
+unsafe impl Sync for LogFreeList {}
+
+impl LogFreeList {
+    pub fn new() -> Self {
+        let core = LogFreeCore::new();
+        let head = root_cell(&format!("logfree.list.{}", core.pool.id().0));
+        head.word().store(0, Ordering::SeqCst);
+        head.persist();
+        LogFreeList { head, core }
+    }
+
+    pub(crate) fn from_parts(head: RootCell, core: LogFreeCore) -> Self {
+        LogFreeList { head, core }
+    }
+
+    pub fn pool_id(&self) -> crate::pmem::PoolId {
+        self.core.pool.id()
+    }
+
+    pub fn crash_preserve(&self) {
+        self.core.pool.preserve();
+    }
+
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        self.core.snapshot_from(self.head.word())
+    }
+}
+
+impl Default for LogFreeList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for LogFreeList {
+    fn drop(&mut self) {
+        unsafe { self.core.ebr.drain_all() };
+    }
+}
+
+impl crate::sets::ConcurrentSet for LogFreeList {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.core.insert(self.head.word(), key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.core.remove(self.head.word(), key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.core.get(self.head.word(), key).is_some()
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.core.get(self.head.word(), key)
+    }
+    fn len_approx(&self) -> usize {
+        self.core.count(self.head.word())
+    }
+    fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
+        Some(self.pool_id())
+    }
+    fn prepare_crash(&self) {
+        self.crash_preserve();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sets::ConcurrentSet;
+
+    #[test]
+    fn sequential_semantics() {
+        let l = LogFreeList::new();
+        assert!(l.insert(5, 50));
+        assert!(!l.insert(5, 51));
+        assert_eq!(l.get(5), Some(50));
+        assert!(l.insert(3, 30));
+        assert!(l.insert(7, 70));
+        assert_eq!(l.snapshot(), vec![(3, 30), (5, 50), (7, 70)]);
+        assert!(l.remove(5));
+        assert!(!l.remove(5));
+        assert_eq!(l.len_approx(), 2);
+    }
+
+    #[test]
+    fn update_costs_two_psyncs() {
+        let l = LogFreeList::new();
+        for k in 0..16u64 {
+            l.insert(k, k);
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(l.insert(100, 1));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 2, "log-free insert = node psync + link psync");
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(l.remove(100));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        // mark psync + unlink psync (+ the mark re-check in trim is clean).
+        assert_eq!(d.fences, 2, "log-free remove = mark psync + unlink psync");
+        let a = crate::pmem::stats::thread_snapshot();
+        for k in 0..16u64 {
+            assert!(l.contains(k));
+        }
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "clean links: reads cost no psync");
+    }
+
+    #[test]
+    fn matches_btreeset_model_random_ops() {
+        use crate::util::rng::Xoshiro256;
+        let l = LogFreeList::new();
+        let mut model = std::collections::BTreeSet::new();
+        let mut rng = Xoshiro256::new(0x10F5);
+        for _ in 0..10_000 {
+            let k = rng.below(48);
+            match rng.below(3) {
+                0 => assert_eq!(l.insert(k, k), model.insert(k)),
+                1 => assert_eq!(l.remove(k), model.remove(&k)),
+                _ => assert_eq!(l.contains(k), model.contains(&k)),
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_contention_net_count() {
+        use std::sync::Arc;
+        let l = Arc::new(LogFreeList::new());
+        let handles: Vec<_> = (0..6u64)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::new(t + 5);
+                    let mut net = 0i64;
+                    for _ in 0..2000 {
+                        let k = rng.below(24);
+                        if rng.below(2) == 0 {
+                            if l.insert(k, t) {
+                                net += 1;
+                            }
+                        } else if l.remove(k) {
+                            net -= 1;
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(l.len_approx() as i64, net);
+    }
+}

@@ -1,0 +1,24 @@
+//! **Log-free** durable sets — the state-of-the-art baseline the paper
+//! compares against (David et al., "Log-Free Concurrent Data Structures",
+//! USENIX ATC 2018).
+//!
+//! Unlike link-free/SOFT, the log-free approach persists the *structure*:
+//! every link update is written back with the **link-and-persist**
+//! technique — the CAS installs the new pointer with a *dirty* bit; the
+//! updater (or any reader that needs the link durable) psyncs the line and
+//! clears the bit. Durable anchor words (list head root cell / persistent
+//! bucket array) let recovery walk the persisted links directly.
+//!
+//! Cost profile (what the paper's evaluation exercises): ~2 psyncs per
+//! update (node content + link), plus reader-side psyncs when a dirty
+//! link is observed — versus 1 (SOFT) / ~1 (link-free).
+
+mod hash;
+mod list;
+mod node;
+mod recovery;
+
+pub use hash::LogFreeHash;
+pub use list::LogFreeList;
+pub use node::LogFreeNode;
+pub use recovery::{recover_hash, recover_list, RecoveredStats};

@@ -1,0 +1,96 @@
+//! Log-free node: one durable cache line; the `next` link itself is part
+//! of the persistent state (bit 0 = Harris mark, bit 1 = dirty).
+
+use crate::pmem;
+use crate::sets::tagged::{DIRTY, MARK};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[repr(C, align(64))]
+pub struct LogFreeNode {
+    pub key: AtomicU64,
+    pub value: AtomicU64,
+    /// Tagged durable link: bit 0 = mark, bit 1 = dirty (not yet persisted).
+    pub next: AtomicU64,
+}
+
+const _: () = assert!(std::mem::size_of::<LogFreeNode>() == 64);
+
+impl LogFreeNode {
+    /// Free pattern: marked null link — never a member on a recovery walk
+    /// (walks skip marked nodes), and never reachable anyway since links
+    /// to free slots are not persisted.
+    pub unsafe fn init_free_pattern(slot: *mut u8) {
+        let n = &*(slot as *const LogFreeNode);
+        n.key.store(0, Ordering::Relaxed);
+        n.value.store(0, Ordering::Relaxed);
+        n.next.store(MARK, Ordering::Relaxed);
+    }
+}
+
+/// Link-and-persist read: if the loaded link is dirty, psync it and try to
+/// clear the bit (any thread may; all write the same clean value). Returns
+/// the clean view of the link.
+#[inline]
+pub fn load_link_persisted(link: &AtomicU64) -> u64 {
+    let v = link.load(Ordering::Acquire);
+    if v & DIRTY == 0 {
+        return v;
+    }
+    pmem::psync(link as *const AtomicU64 as *const u8, 8);
+    let clean = v & !DIRTY;
+    let _ = link.compare_exchange(v, clean, Ordering::AcqRel, Ordering::Acquire);
+    clean
+}
+
+/// Install-and-persist a link: CAS `expect_clean -> new | DIRTY`, then
+/// psync and clear the dirty bit. Returns false if the CAS lost.
+#[inline]
+pub fn store_link_persisted(link: &AtomicU64, expect_clean: u64, new: u64) -> bool {
+    debug_assert_eq!(expect_clean & DIRTY, 0);
+    debug_assert_eq!(new & DIRTY, 0);
+    if link
+        .compare_exchange(expect_clean, new | DIRTY, Ordering::AcqRel, Ordering::Acquire)
+        .is_err()
+    {
+        return false;
+    }
+    pmem::psync(link as *const AtomicU64 as *const u8, 8);
+    let _ = link.compare_exchange(new | DIRTY, new, Ordering::AcqRel, Ordering::Acquire);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_then_load_is_clean_and_persisted() {
+        let link = AtomicU64::new(0);
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(store_link_persisted(&link, 0, 0x100));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "install psyncs once");
+        assert_eq!(link.load(Ordering::Relaxed), 0x100, "dirty bit cleared");
+        let a = crate::pmem::stats::thread_snapshot();
+        assert_eq!(load_link_persisted(&link), 0x100);
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "clean link loads do not psync");
+    }
+
+    #[test]
+    fn dirty_load_persists_and_clears() {
+        let link = AtomicU64::new(0x100 | DIRTY);
+        let a = crate::pmem::stats::thread_snapshot();
+        assert_eq!(load_link_persisted(&link), 0x100);
+        assert_eq!(link.load(Ordering::Relaxed), 0x100);
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1);
+    }
+
+    #[test]
+    fn stale_expectation_fails() {
+        let link = AtomicU64::new(0x200);
+        assert!(!store_link_persisted(&link, 0x100, 0x300));
+        assert_eq!(link.load(Ordering::Relaxed), 0x200);
+    }
+}

@@ -1,0 +1,195 @@
+//! Log-free recovery: walk the *persisted* links from the durable anchors
+//! (root cell / bucket array). Marked nodes are logically deleted; dirty
+//! bits are stripped (a dirty-but-present link was persisted by the psync
+//! that preceded the crash, or the value is the older clean one — either
+//! way the walk sees a consistent state). Area slots not reached as
+//! members (leaked by crashed inserts, or deleted) are reclaimed —
+//! leak-freedom without logging, same scan trick as link-free.
+
+use crate::alloc::{DurablePool, Ebr};
+use crate::pmem::region::{regions_of, RegionTag};
+use crate::pmem::root::root_cell;
+use crate::pmem::PoolId;
+use crate::sets::tagged::{is_marked, ptr_of, PTR_MASK};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::list::{LogFreeCore, LogFreeList};
+use super::node::LogFreeNode;
+use super::LogFreeHash;
+
+pub use crate::sets::linkfree::RecoveredStats;
+
+/// Walk one persisted chain; returns member node pointers in chain order.
+unsafe fn walk_chain(head_val: u64, members: &mut Vec<*mut LogFreeNode>) {
+    let mut curr = ptr_of::<LogFreeNode>(head_val & PTR_MASK);
+    while !curr.is_null() {
+        let v = (*curr).next.load(Ordering::Relaxed);
+        if !is_marked(v) {
+            members.push(curr);
+        }
+        curr = ptr_of::<LogFreeNode>(v & PTR_MASK);
+    }
+}
+
+/// Strip marks/dirt from the walked chains, reclaim unreached slots.
+fn rebuild(
+    pool: &DurablePool,
+    chains: &[(u64, Vec<*mut LogFreeNode>)],
+) -> RecoveredStats {
+    let mut stats = RecoveredStats::default();
+    let reached: HashSet<usize> = chains
+        .iter()
+        .flat_map(|(_, m)| m.iter().map(|&p| p as usize))
+        .collect();
+    stats.members = reached.len();
+    for slot in pool.iter_slots() {
+        if !reached.contains(&(slot as usize)) {
+            unsafe { pool.normalize_slot(slot) };
+            pool.free(slot);
+            stats.reclaimed += 1;
+        }
+    }
+    stats
+}
+
+/// Rewrite one chain cleanly (member -> member links, no marks, no dirt).
+/// Persisted in bulk afterwards by `persist_all_regions`.
+unsafe fn relink(members: &[*mut LogFreeNode]) -> u64 {
+    let mut next = 0u64;
+    for &n in members.iter().rev() {
+        (*n).next.store(next, Ordering::Relaxed);
+        next = n as u64;
+    }
+    next
+}
+
+/// Recover a log-free list from pool `id` (head = its named root cell).
+pub fn recover_list(id: PoolId) -> (LogFreeList, RecoveredStats) {
+    let pool = Arc::new(DurablePool::adopt(id, 64, LogFreeNode::init_free_pattern));
+    let head = root_cell(&format!("logfree.list.{}", id.0));
+    let mut members = Vec::new();
+    unsafe { walk_chain(head.word().load(Ordering::Relaxed), &mut members) };
+    let chains = vec![(0u64, members)];
+    let stats = rebuild(&pool, &chains);
+    let head_val = unsafe { relink(&chains[0].1) };
+    head.word().store(head_val, Ordering::Relaxed);
+    pool.persist_all_regions();
+    head.persist();
+    let core = LogFreeCore::from_parts(pool, Arc::new(Ebr::new()));
+    (LogFreeList::from_parts(head, core), stats)
+}
+
+/// Recover a log-free hash set from pool `id` (buckets = its persistent
+/// `Links` region).
+pub fn recover_hash(id: PoolId) -> (LogFreeHash, RecoveredStats) {
+    let pool = Arc::new(DurablePool::adopt(id, 64, LogFreeNode::init_free_pattern));
+    let links = regions_of(id)
+        .into_iter()
+        .find(|r| r.tag == RegionTag::Links)
+        .expect("log-free hash pool has no bucket region");
+    let nbuckets = links.len / 8;
+    let buckets = links.base as *const AtomicU64;
+    let mut chains = Vec::with_capacity(nbuckets);
+    for i in 0..nbuckets {
+        let cell = unsafe { &*buckets.add(i) };
+        let mut members = Vec::new();
+        unsafe { walk_chain(cell.load(Ordering::Relaxed), &mut members) };
+        chains.push((i as u64, members));
+    }
+    let stats = rebuild(&pool, &chains);
+    for (i, members) in chains.iter() {
+        let head_val = unsafe { relink(members) };
+        unsafe { (*buckets.add(*i as usize)).store(head_val, Ordering::Relaxed) };
+    }
+    pool.persist_all_regions();
+    let core = LogFreeCore::from_parts(pool, Arc::new(Ebr::new()));
+    (LogFreeHash::from_parts(buckets, nbuckets, core), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{self, CrashPolicy, Mode};
+    use crate::sets::ConcurrentSet;
+
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn logfree_list_crash_recovery() {
+        let _g = LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let l = LogFreeList::new();
+        let id = l.pool_id();
+        for k in 0..40u64 {
+            assert!(l.insert(k, k + 7));
+        }
+        for k in (0..40u64).step_by(5) {
+            assert!(l.remove(k));
+        }
+        l.crash_preserve();
+        drop(l);
+        pmem::crash(CrashPolicy::PESSIMISTIC);
+        let (l2, stats) = recover_list(id);
+        for k in 0..40u64 {
+            if k % 5 == 0 {
+                assert!(!l2.contains(k), "removed key {k} resurrected");
+            } else {
+                assert_eq!(l2.get(k), Some(k + 7), "key {k} lost");
+            }
+        }
+        assert_eq!(stats.members, 32);
+        assert!(l2.insert(500, 1));
+        pmem::set_mode(Mode::Perf);
+    }
+
+    #[test]
+    fn logfree_hash_crash_recovery_with_eviction() {
+        let _g = LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let h = LogFreeHash::new(16);
+        let id = h.pool_id();
+        for k in 0..120u64 {
+            assert!(h.insert(k, k));
+        }
+        for k in 60..90u64 {
+            assert!(h.remove(k));
+        }
+        h.crash_preserve();
+        drop(h);
+        pmem::crash(CrashPolicy::random(0.4, 11));
+        let (h2, stats) = recover_hash(id);
+        assert_eq!(h2.nbuckets(), 16);
+        for k in 0..120u64 {
+            let expect = !(60..90).contains(&k);
+            assert_eq!(h2.contains(k), expect, "key {k}");
+        }
+        assert_eq!(stats.members, 90);
+        pmem::set_mode(Mode::Perf);
+    }
+
+    #[test]
+    fn leaked_node_is_reclaimed_not_resurrected() {
+        let _g = LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let l = LogFreeList::new();
+        let id = l.pool_id();
+        assert!(l.insert(1, 1));
+        // Crashed insert: node content psync'd, link never installed.
+        unsafe {
+            let n = l.core.pool.alloc() as *mut LogFreeNode;
+            (*n).key.store(2, std::sync::atomic::Ordering::Relaxed);
+            (*n).value.store(2, std::sync::atomic::Ordering::Relaxed);
+            (*n).next.store(0, std::sync::atomic::Ordering::Relaxed);
+            pmem::psync_obj(n);
+        }
+        l.crash_preserve();
+        drop(l);
+        pmem::crash(CrashPolicy::PESSIMISTIC);
+        let (l2, stats) = recover_list(id);
+        assert!(!l2.contains(2), "leaked node must not appear in the set");
+        assert!(stats.reclaimed > 0);
+        pmem::set_mode(Mode::Perf);
+    }
+}

@@ -1,0 +1,109 @@
+//! The durable set algorithms.
+//!
+//! Four families, one trait:
+//!
+//! | family | module | durability | psyncs/update | psyncs/read |
+//! |---|---|---|---|---|
+//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 |
+//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 |
+//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 |
+//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 |
+//!
+//! Each family provides a sorted linked list and a fixed-bucket hash set
+//! built from the same core (a bucket is a bare link cell — see
+//! [`tagged`]), plus a recovery procedure rebuilding the volatile
+//! structure from the durable areas after a crash.
+
+pub mod linkfree;
+pub mod logfree;
+pub mod soft;
+pub mod tagged;
+pub mod volatile;
+
+/// The paper's set interface: unique `u64` keys with one word of data.
+///
+/// * `insert` adds `key -> value`; false if the key was present.
+/// * `remove` deletes `key`; false if it was absent.
+/// * `contains` is read-only (wait-free in all four families).
+pub trait ConcurrentSet: Send + Sync {
+    fn insert(&self, key: u64, value: u64) -> bool;
+    fn remove(&self, key: u64) -> bool;
+    fn contains(&self, key: u64) -> bool;
+
+    /// Value lookup (same traversal as `contains`).
+    fn get(&self, key: u64) -> Option<u64>;
+
+    /// Non-linearizable size estimate (testing/metrics only).
+    fn len_approx(&self) -> usize;
+
+    /// Durable pool identity, if this set persists anything (used by the
+    /// coordinator to recover shards after a crash).
+    fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
+        None
+    }
+
+    /// Keep durable regions alive across a simulated crash (no-op for
+    /// volatile sets).
+    fn prepare_crash(&self) {}
+}
+
+/// Algorithm family selector used by benches, the coordinator and the CLI.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Family {
+    LinkFree,
+    Soft,
+    LogFree,
+    Volatile,
+}
+
+impl Family {
+    pub const ALL: [Family; 4] = [Family::LinkFree, Family::Soft, Family::LogFree, Family::Volatile];
+
+    /// The three durable families compared in the paper's evaluation.
+    pub const DURABLE: [Family; 3] = [Family::LinkFree, Family::Soft, Family::LogFree];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::LinkFree => "link-free",
+            Family::Soft => "soft",
+            Family::LogFree => "log-free",
+            Family::Volatile => "volatile",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Family> {
+        match s.to_ascii_lowercase().as_str() {
+            "link-free" | "linkfree" | "lf" => Some(Family::LinkFree),
+            "soft" => Some(Family::Soft),
+            "log-free" | "logfree" => Some(Family::LogFree),
+            "volatile" | "harris" => Some(Family::Volatile),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Family {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Construct a list of the given family behind the common trait.
+pub fn new_list(family: Family) -> Box<dyn ConcurrentSet> {
+    match family {
+        Family::LinkFree => Box::new(linkfree::LfList::new()),
+        Family::Soft => Box::new(soft::SoftList::new()),
+        Family::LogFree => Box::new(logfree::LogFreeList::new()),
+        Family::Volatile => Box::new(volatile::VolatileList::new()),
+    }
+}
+
+/// Construct a hash set of the given family with `nbuckets` buckets.
+pub fn new_hash(family: Family, nbuckets: usize) -> Box<dyn ConcurrentSet> {
+    match family {
+        Family::LinkFree => Box::new(linkfree::LfHash::new(nbuckets)),
+        Family::Soft => Box::new(soft::SoftHash::new(nbuckets)),
+        Family::LogFree => Box::new(logfree::LogFreeHash::new(nbuckets)),
+        Family::Volatile => Box::new(volatile::VolatileHash::new(nbuckets)),
+    }
+}

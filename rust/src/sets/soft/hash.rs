@@ -1,0 +1,108 @@
+//! SOFT hash set — a table of bucket link cells over the SOFT list core.
+//! Bucket state bits are zero = `Inserted`, so a zeroed array is an empty
+//! table whose conceptual bucket heads are all durably "inserted".
+
+use crate::sets::ConcurrentSet;
+use crate::util::mix64;
+use std::sync::atomic::AtomicU64;
+
+use super::list::SoftCore;
+
+pub struct SoftHash {
+    pub(crate) buckets: Box<[AtomicU64]>,
+    pub(crate) core: SoftCore,
+}
+
+unsafe impl Send for SoftHash {}
+unsafe impl Sync for SoftHash {}
+
+impl SoftHash {
+    pub fn new(nbuckets: usize) -> Self {
+        Self::from_parts(nbuckets, SoftCore::new())
+    }
+
+    pub(crate) fn from_parts(nbuckets: usize, core: SoftCore) -> Self {
+        let n = nbuckets.next_power_of_two().max(1);
+        SoftHash { buckets: (0..n).map(|_| AtomicU64::new(0)).collect(), core }
+    }
+
+    #[inline(always)]
+    fn bucket_of(&self, key: u64) -> &AtomicU64 {
+        &self.buckets[(mix64(key) as usize) & (self.buckets.len() - 1)]
+    }
+
+    pub fn nbuckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn pool_id(&self) -> crate::pmem::PoolId {
+        self.core.dpool.id()
+    }
+
+    pub fn crash_preserve(&self) {
+        self.core.dpool.preserve();
+    }
+
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for b in self.buckets.iter() {
+            out.extend(self.core.snapshot_from(b));
+        }
+        out
+    }
+}
+
+impl Drop for SoftHash {
+    fn drop(&mut self) {
+        unsafe { self.core.ebr.drain_all() };
+    }
+}
+
+impl ConcurrentSet for SoftHash {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.core.insert(self.bucket_of(key), key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.core.remove(self.bucket_of(key), key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.core.get(self.bucket_of(key), key).is_some()
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.core.get(self.bucket_of(key), key)
+    }
+    fn len_approx(&self) -> usize {
+        self.buckets.iter().map(|b| self.core.count(b)).sum()
+    }
+    fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
+        Some(self.pool_id())
+    }
+    fn prepare_crash(&self) {
+        self.crash_preserve();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_soft_hash() {
+        let h = SoftHash::new(8);
+        for k in 0..64u64 {
+            assert!(h.insert(k, k + 1));
+        }
+        for k in 0..64u64 {
+            assert_eq!(h.get(k), Some(k + 1));
+        }
+        for k in 0..32u64 {
+            assert!(h.remove(k));
+        }
+        assert_eq!(h.len_approx(), 32);
+        for k in 0..32u64 {
+            assert!(!h.contains(k));
+            assert!(h.insert(k, k)); // reuse of PNode slots
+        }
+        assert_eq!(h.len_approx(), 64);
+    }
+}

@@ -1,0 +1,517 @@
+//! SOFT sorted list (paper Listings 9–12).
+//!
+//! Update logic: persist the PNode first (`create`/`destroy`, the single
+//! psync), then linearize on the volatile structure by swapping the 2-bit
+//! state — "the state a thread sees in SOFT already resides in the NVRAM"
+//! (paper §2.3). Intention states make competing threads help, which is
+//! what caps the psync count at one per update for the whole system.
+
+use crate::alloc::{DurablePool, Ebr, VolatilePool};
+use crate::sets::tagged::{compose, ptr_of, state_cas, tag_of, State, PTR_MASK};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::node::{SNode, SNODE_SIZE};
+use super::pnode::PNode;
+
+/// Shared engine for SOFT containers.
+pub(crate) struct SoftCore {
+    pub dpool: Arc<DurablePool>,
+    pub vpool: Arc<VolatilePool>,
+    pub ebr: Arc<Ebr>,
+}
+
+unsafe fn free_pnode(ptr: *mut u8, ctx: usize) {
+    (*(ctx as *const DurablePool)).free(ptr);
+}
+
+unsafe fn free_vnode(ptr: *mut u8, ctx: usize) {
+    (*(ctx as *const VolatilePool)).free(ptr);
+}
+
+/// Window returned by `find`: the link cell before `curr`, the exact
+/// tagged word observed in it (the CAS expectation), `curr`, and `curr`'s
+/// state at observation time.
+pub(crate) struct Window {
+    pred_link: *const AtomicU64,
+    pred_val: u64,
+    curr: *mut SNode,
+    curr_state: State,
+}
+
+impl SoftCore {
+    pub fn new() -> Self {
+        SoftCore {
+            dpool: Arc::new(DurablePool::new(64, PNode::init_free_pattern)),
+            vpool: Arc::new(VolatilePool::new(SNODE_SIZE)),
+            ebr: Arc::new(Ebr::new()),
+        }
+    }
+
+    pub fn from_parts(dpool: Arc<DurablePool>, vpool: Arc<VolatilePool>, ebr: Arc<Ebr>) -> Self {
+        SoftCore { dpool, vpool, ebr }
+    }
+
+    unsafe fn retire_pair(&self, vnode: *mut SNode) {
+        let pnode = (*vnode).pptr;
+        self.ebr
+            .retire(pnode as *mut u8, Arc::as_ptr(&self.dpool) as usize, free_pnode);
+        self.ebr
+            .retire(vnode as *mut u8, Arc::as_ptr(&self.vpool) as usize, free_vnode);
+    }
+
+    /// Physically unlink a "deleted"-state node (paper Listing 9 `trim`).
+    /// No psync: the PNode's removal was persisted before the state became
+    /// deleted, so an unflushed unlink can never resurrect anything.
+    unsafe fn trim(&self, pred_link: *const AtomicU64, pred_val: u64, curr: *mut SNode) -> bool {
+        debug_assert_eq!(ptr_of::<SNode>(pred_val), curr);
+        let succ = (*curr).next.load(Ordering::Acquire) & PTR_MASK;
+        let new_val = succ | tag_of(pred_val);
+        (*pred_link)
+            .compare_exchange(pred_val, new_val, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Paper Listing 9 `find`. Caller holds an EBR guard.
+    unsafe fn find(&self, head: *const AtomicU64, key: u64) -> Window {
+        self.find_from(head, head, key)
+    }
+
+    /// `find` starting from a validated hint link (skip-list fast path);
+    /// retries fall back to `head`.
+    pub(crate) unsafe fn find_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> Window {
+        let mut from = start;
+        'retry: loop {
+            let mut pred_link = std::mem::replace(&mut from, head);
+            let mut pred_val = (*pred_link).load(Ordering::Acquire);
+            // Hint staleness (TOCTOU): the hint node may have reached the
+            // "deleted" state after validation. Its frozen `next` would
+            // make us traverse an unlinked suffix — and, worse, a CAS
+            // expectation captured *with* the deleted bits would succeed
+            // against the dead cell. Reject and restart from the head.
+            if !std::ptr::eq(pred_link, head) && State::of(pred_val) == State::Deleted {
+                continue 'retry;
+            }
+            let mut curr = ptr_of::<SNode>(pred_val);
+            loop {
+                if curr.is_null() {
+                    return Window { pred_link, pred_val, curr, curr_state: State::Inserted };
+                }
+                let curr_val = (*curr).next.load(Ordering::Acquire);
+                let c_state = State::of(curr_val);
+                if c_state == State::Deleted {
+                    let new_val = (curr_val & PTR_MASK) | tag_of(pred_val);
+                    if (*pred_link)
+                        .compare_exchange(pred_val, new_val, Ordering::AcqRel, Ordering::Acquire)
+                        .is_err()
+                    {
+                        continue 'retry;
+                    }
+                    pred_val = new_val;
+                    curr = ptr_of::<SNode>(curr_val);
+                } else {
+                    if (*curr).key >= key {
+                        return Window { pred_link, pred_val, curr, curr_state: c_state };
+                    }
+                    pred_link = &(*curr).next as *const AtomicU64;
+                    pred_val = curr_val;
+                    curr = ptr_of::<SNode>(curr_val);
+                }
+            }
+        }
+    }
+
+    /// Paper Listing 11.
+    pub fn insert(&self, head: *const AtomicU64, key: u64, value: u64) -> bool {
+        self.insert_from(head, head, key, value)
+    }
+
+    /// Insert whose first window search starts at a validated hint link.
+    pub(crate) fn insert_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+        value: u64,
+    ) -> bool {
+        let _g = self.ebr.pin();
+        let mut alloc_v: *mut SNode = std::ptr::null_mut();
+        let mut from = start;
+        let (result_node, result) = loop {
+            unsafe {
+                let w = self.find_from(std::mem::replace(&mut from, head), head, key);
+                if !w.curr.is_null() && (*w.curr).key == key {
+                    if w.curr_state != State::IntendToInsert {
+                        // Key durably present (or being deleted — still
+                        // logically present): plain failure.
+                        if !alloc_v.is_null() {
+                            self.dpool.free((*alloc_v).pptr as *mut u8);
+                            self.vpool.free(alloc_v as *mut u8);
+                        }
+                        return false;
+                    }
+                    // Pending insert by someone else: help it finish
+                    // below, then fail.
+                    break (w.curr, false);
+                }
+                if alloc_v.is_null() {
+                    let pnode = self.dpool.alloc() as *mut PNode;
+                    let v = self.vpool.alloc() as *mut SNode;
+                    let pv = (*pnode).alloc();
+                    std::ptr::write(
+                        v,
+                        SNode {
+                            key,
+                            value,
+                            pptr: pnode,
+                            p_validity: pv,
+                            next: AtomicU64::new(0),
+                        },
+                    );
+                    alloc_v = v;
+                }
+                // Link with state "intention to insert": visible for
+                // helping but not yet logically in the set.
+                (*alloc_v)
+                    .next
+                    .store(compose(w.curr, State::IntendToInsert as u64), Ordering::Relaxed);
+                let new_val = (alloc_v as u64) | tag_of(w.pred_val);
+                if (*w.pred_link)
+                    .compare_exchange(w.pred_val, new_val, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    break (alloc_v, true);
+                }
+            }
+        };
+        unsafe {
+            // Completion (paper lines 30–33): persist the PNode, then
+            // publish the state. Both are idempotent — any helper may race.
+            (*(*result_node).pptr).create(
+                (*result_node).key,
+                (*result_node).value,
+                (*result_node).p_validity,
+            );
+            loop {
+                let v = (*result_node).next.load(Ordering::Acquire);
+                if State::of(v) != State::IntendToInsert {
+                    break;
+                }
+                state_cas(&(*result_node).next, State::IntendToInsert, State::Inserted);
+            }
+            if !result && !alloc_v.is_null() {
+                self.dpool.free((*alloc_v).pptr as *mut u8);
+                self.vpool.free(alloc_v as *mut u8);
+            }
+        }
+        result
+    }
+
+    /// Paper Listing 12.
+    pub fn remove(&self, head: *const AtomicU64, key: u64) -> bool {
+        self.remove_from(head, head, key)
+    }
+
+    /// Remove whose window search starts at a validated hint link.
+    pub(crate) fn remove_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> bool {
+        let _g = self.ebr.pin();
+        unsafe {
+            let w = self.find_from(start, head, key);
+            if w.curr.is_null() || (*w.curr).key != key {
+                return false;
+            }
+            if w.curr_state == State::IntendToInsert {
+                // Not yet guaranteed durable — logically absent.
+                return false;
+            }
+            let curr = w.curr;
+            // Compete for the "intention to delete" transition; exactly
+            // one remover wins and reports success.
+            let mut result = false;
+            loop {
+                let v = (*curr).next.load(Ordering::Acquire);
+                if State::of(v) != State::Inserted {
+                    break;
+                }
+                if state_cas(&(*curr).next, State::Inserted, State::IntendToDelete) {
+                    result = true;
+                    break;
+                }
+            }
+            // Help persist + complete regardless of who won (idempotent).
+            (*(*curr).pptr).destroy((*curr).p_validity);
+            loop {
+                let v = (*curr).next.load(Ordering::Acquire);
+                if State::of(v) != State::IntendToDelete {
+                    break;
+                }
+                state_cas(&(*curr).next, State::IntendToDelete, State::Deleted);
+            }
+            if result {
+                // Winner physically disconnects (reduces contention) and
+                // owns reclamation.
+                if !self.trim(w.pred_link, w.pred_val, curr) {
+                    let _ = self.find(head, key);
+                }
+                self.retire_pair(curr);
+            }
+            result
+        }
+    }
+
+    /// Paper Listing 10: wait-free, zero psyncs.
+    pub fn get(&self, head: *const AtomicU64, key: u64) -> Option<u64> {
+        self.get_from(head, head, key)
+    }
+
+    /// Wait-free read starting from a validated hint link (or the head).
+    pub(crate) fn get_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> Option<u64> {
+        let _g = self.ebr.pin();
+        unsafe {
+            let mut from = start;
+            // Same TOCTOU as find_from: a deleted hint's frozen suffix can
+            // miss nodes inserted at the unlink point.
+            if !std::ptr::eq(start, head)
+                && State::of((*start).load(Ordering::Acquire)) == State::Deleted
+            {
+                from = head;
+            }
+            let mut curr = ptr_of::<SNode>((*from).load(Ordering::Acquire));
+            while !curr.is_null() && (*curr).key < key {
+                curr = ptr_of::<SNode>((*curr).next.load(Ordering::Acquire));
+            }
+            if curr.is_null() || (*curr).key != key {
+                return None;
+            }
+            let s = State::of((*curr).next.load(Ordering::Acquire));
+            if s.in_set() {
+                Some((*curr).value)
+            } else {
+                None
+            }
+        }
+    }
+
+    /// In-set node count from one head (test/metrics only).
+    pub fn count(&self, head: *const AtomicU64) -> usize {
+        self.snapshot_from(head).len()
+    }
+
+    /// Ordered (key, value) snapshot of in-set nodes (test/debug only).
+    pub fn snapshot_from(&self, head: *const AtomicU64) -> Vec<(u64, u64)> {
+        let _g = self.ebr.pin();
+        let mut out = Vec::new();
+        unsafe {
+            let mut curr = ptr_of::<SNode>((*head).load(Ordering::Acquire));
+            while !curr.is_null() {
+                let v = (*curr).next.load(Ordering::Acquire);
+                if State::of(v).in_set() {
+                    out.push(((*curr).key, (*curr).value));
+                }
+                curr = ptr_of::<SNode>(v);
+            }
+        }
+        out
+    }
+}
+
+/// The SOFT sorted-list set.
+pub struct SoftList {
+    pub(crate) head: AtomicU64,
+    pub(crate) core: SoftCore,
+}
+
+unsafe impl Send for SoftList {}
+unsafe impl Sync for SoftList {}
+
+impl SoftList {
+    pub fn new() -> Self {
+        SoftList { head: AtomicU64::new(0), core: SoftCore::new() }
+    }
+
+    pub(crate) fn from_parts(head_value: u64, core: SoftCore) -> Self {
+        SoftList { head: AtomicU64::new(head_value), core }
+    }
+
+    pub fn pool_id(&self) -> crate::pmem::PoolId {
+        self.core.dpool.id()
+    }
+
+    pub fn crash_preserve(&self) {
+        self.core.dpool.preserve();
+    }
+
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        self.core.snapshot_from(&self.head)
+    }
+}
+
+impl Default for SoftList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for SoftList {
+    fn drop(&mut self) {
+        unsafe { self.core.ebr.drain_all() };
+    }
+}
+
+impl crate::sets::ConcurrentSet for SoftList {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.core.insert(&self.head, key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.core.remove(&self.head, key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.core.get(&self.head, key).is_some()
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.core.get(&self.head, key)
+    }
+    fn len_approx(&self) -> usize {
+        self.core.count(&self.head)
+    }
+    fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
+        Some(self.pool_id())
+    }
+    fn prepare_crash(&self) {
+        self.crash_preserve();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sets::ConcurrentSet;
+
+    #[test]
+    fn sequential_semantics() {
+        let l = SoftList::new();
+        assert!(!l.contains(5));
+        assert!(l.insert(5, 50));
+        assert!(!l.insert(5, 51));
+        assert_eq!(l.get(5), Some(50));
+        assert!(l.insert(3, 30));
+        assert!(l.insert(7, 70));
+        assert_eq!(l.snapshot(), vec![(3, 30), (5, 50), (7, 70)]);
+        assert!(l.remove(5));
+        assert!(!l.remove(5));
+        assert!(!l.contains(5));
+        assert_eq!(l.len_approx(), 2);
+    }
+
+    #[test]
+    fn optimal_flushing_bound() {
+        // The paper's headline property: exactly one psync per successful
+        // update, zero per read (and zero for failed ops that need no
+        // helping).
+        let l = SoftList::new();
+        for k in 0..32u64 {
+            l.insert(k, k); // warm up: areas allocated
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(l.insert(100, 1));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "insert must psync exactly once");
+
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(l.remove(100));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "remove must psync exactly once");
+
+        let a = crate::pmem::stats::thread_snapshot();
+        for k in 0..32u64 {
+            let _ = l.contains(k);
+        }
+        assert!(!l.insert(5, 5));
+        assert!(!l.remove(999));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "reads and plain failures must not psync");
+    }
+
+    #[test]
+    fn matches_btreeset_model_random_ops() {
+        use crate::util::rng::Xoshiro256;
+        let l = SoftList::new();
+        let mut model = std::collections::BTreeSet::new();
+        let mut rng = Xoshiro256::new(0xBEE5);
+        for _ in 0..20_000 {
+            let k = rng.below(64);
+            match rng.below(3) {
+                0 => assert_eq!(l.insert(k, k), model.insert(k)),
+                1 => assert_eq!(l.remove(k), model.remove(&k)),
+                _ => assert_eq!(l.contains(k), model.contains(&k)),
+            }
+        }
+        let snap: Vec<u64> = l.snapshot().iter().map(|kv| kv.0).collect();
+        let want: Vec<u64> = model.iter().copied().collect();
+        assert_eq!(snap, want);
+    }
+
+    #[test]
+    fn concurrent_contention_net_count() {
+        use std::sync::Arc;
+        let l = Arc::new(SoftList::new());
+        let handles: Vec<_> = (0..8u64)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::new(t + 99);
+                    let mut net = 0i64;
+                    for _ in 0..3000 {
+                        let k = rng.below(16);
+                        if rng.below(2) == 0 {
+                            if l.insert(k, t) {
+                                net += 1;
+                            }
+                        } else if l.remove(k) {
+                            net -= 1;
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(l.len_approx() as i64, net);
+        let snap = l.snapshot();
+        for w in snap.windows(2) {
+            assert!(w[0].0 < w[1].0, "list must stay strictly sorted");
+        }
+    }
+
+    #[test]
+    fn pnode_slots_are_recycled() {
+        let l = SoftList::new();
+        // Insert/remove far more keys than one area holds; the pool must
+        // not grow past a couple of areas if reclamation works.
+        for round in 0..40u64 {
+            for k in 0..512u64 {
+                assert!(l.insert(k, round));
+            }
+            for k in 0..512u64 {
+                assert!(l.remove(k));
+            }
+        }
+        let areas = l.core.dpool.regions().len();
+        assert!(areas <= 4, "PNode slots are not being recycled: {areas} areas");
+    }
+}

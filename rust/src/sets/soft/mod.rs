@@ -1,0 +1,25 @@
+//! **SOFT** — Sets with an Optimal Flushing Technique (paper §4).
+//!
+//! Each key has two representations: a persistent node ([`PNode`]) in the
+//! durable areas holding key/value/3 validity flags, and a volatile node
+//! taking part in the linked structure, carrying a 4-way state in the low
+//! bits of its own `next` ("intention" states trigger helping). Updates
+//! persist the PNode *before* the volatile linearization, so each update
+//! costs exactly one psync — the Cohen et al. 2018 lower bound — and
+//! reads cost zero.
+
+mod hash;
+pub(crate) mod list;
+mod node;
+mod pnode;
+mod recovery;
+mod skiplist;
+
+pub(crate) use list::SoftCore;
+
+pub use hash::SoftHash;
+pub use list::SoftList;
+pub use node::SNode;
+pub use pnode::PNode;
+pub use recovery::{recover_hash, recover_list, RecoveredStats};
+pub use skiplist::{recover_skiplist, SoftSkipList};

@@ -1,0 +1,41 @@
+//! SOFT volatile node (paper Listing 8).
+
+use std::sync::atomic::AtomicU64;
+
+use super::pnode::PNode;
+
+/// The volatile half of a SOFT key. Lives in the volatile slab pool, dies
+/// at a crash, is rebuilt by recovery. Its 4-way state (paper §2.3) is the
+/// low 2 bits of its own `next` link.
+///
+/// Deliberately *not* padded to a cache line: the paper observes that
+/// SOFT's extra PNode pointer makes ~1.5 volatile nodes share a line and
+/// pays traversal cache misses for it — that effect is part of the
+/// evaluation (§6: why link-free wins long lists).
+#[repr(C)]
+pub struct SNode {
+    pub key: u64,
+    pub value: u64,
+    pub pptr: *mut PNode,
+    /// The validity value this PNode lifecycle uses (paper `pValidity`).
+    pub p_validity: bool,
+    /// Tagged link: bits 0–1 = this node's [`State`](crate::sets::tagged::State).
+    pub next: AtomicU64,
+}
+
+/// Slab slot size for volatile nodes.
+pub const SNODE_SIZE: usize = std::mem::size_of::<SNode>();
+
+const _: () = assert!(SNODE_SIZE == 40, "keep the paper's ~1.5-nodes-per-line layout");
+const _: () = assert!(std::mem::align_of::<SNode>() == 8);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snode_is_40_bytes() {
+        // 8 key + 8 value + 8 pptr + 1(+7 pad) p_validity + 8 next.
+        assert_eq!(SNODE_SIZE, 40);
+    }
+}

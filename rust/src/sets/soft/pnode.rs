@@ -1,0 +1,159 @@
+//! SOFT persistent node (paper Listings 6–7) — one cache line.
+
+use crate::pmem;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// The durable half of a SOFT key. Three one-byte flags encode its state:
+///
+/// * all three equal               → *valid & removed* (allocatable)
+/// * `validStart != validEnd`      → *invalid* (interrupted insert)
+/// * `validStart == validEnd != deleted` → *valid & inserted* (member)
+///
+/// Allocation flips the meaning of "set" each reuse cycle: `alloc()`
+/// returns `pValidity = !validStart`, and `create`/`destroy` write that
+/// value, so a slot is reusable immediately after `destroy` with no reset
+/// write (paper §4.1: "exactly the same state as when the node was
+/// allocated").
+#[repr(C, align(64))]
+pub struct PNode {
+    valid_start: AtomicU8,
+    valid_end: AtomicU8,
+    deleted: AtomicU8,
+    _pad: [u8; 5],
+    pub key: AtomicU64,
+    pub value: AtomicU64,
+}
+
+const _: () = assert!(std::mem::size_of::<PNode>() == 64);
+
+impl PNode {
+    /// Canonical free pattern: all flags equal (valid & removed). A zeroed
+    /// region already satisfies it; recovery re-normalises invalid slots
+    /// to it.
+    ///
+    /// # Safety
+    /// `slot` must point to a writable 64-byte slot.
+    pub unsafe fn init_free_pattern(slot: *mut u8) {
+        let n = &*(slot as *const PNode);
+        let v = n.valid_start.load(Ordering::Relaxed) & 1;
+        n.valid_end.store(v, Ordering::Relaxed);
+        n.deleted.store(v, Ordering::Relaxed);
+    }
+
+    /// Paper `PNode::alloc`: the validity value this lifecycle will use.
+    #[inline]
+    pub fn alloc(&self) -> bool {
+        self.valid_start.load(Ordering::Acquire) & 1 == 0
+    }
+
+    /// Paper `PNode::create`: persist the insertion (the single psync of a
+    /// SOFT insert). Idempotent — helpers may race; all write identical
+    /// values.
+    pub fn create(&self, key: u64, value: u64, p_validity: bool) {
+        let v = p_validity as u8;
+        self.valid_start.store(v, Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::Release);
+        self.key.store(key, Ordering::Relaxed);
+        self.value.store(value, Ordering::Relaxed);
+        self.valid_end.store(v, Ordering::Release);
+        pmem::psync_obj(self);
+    }
+
+    /// Paper `PNode::destroy`: persist the removal (the single psync of a
+    /// SOFT remove). Leaves the slot in the free pattern for reuse.
+    pub fn destroy(&self, p_validity: bool) {
+        self.deleted.store(p_validity as u8, Ordering::Release);
+        pmem::psync_obj(self);
+    }
+
+    /// Recovery classification: member ⇔ validStart == validEnd != deleted.
+    #[inline]
+    pub fn is_member(&self) -> bool {
+        let vs = self.valid_start.load(Ordering::Acquire) & 1;
+        let ve = self.valid_end.load(Ordering::Acquire) & 1;
+        let dl = self.deleted.load(Ordering::Acquire) & 1;
+        vs == ve && dl != vs
+    }
+
+    /// Recovery: the pValidity a rebuilt volatile node must carry so that
+    /// a later destroy flips `deleted` to the right value.
+    #[inline]
+    pub fn current_validity(&self) -> bool {
+        self.valid_start.load(Ordering::Acquire) & 1 == 1
+    }
+
+    /// Raw flag bits (validStart, validEnd, deleted) for bulk plane
+    /// extraction (XLA-accelerated recovery).
+    #[inline]
+    pub fn raw_flags(&self) -> (u8, u8, u8) {
+        (
+            self.valid_start.load(Ordering::Relaxed) & 1,
+            self.valid_end.load(Ordering::Relaxed) & 1,
+            self.deleted.load(Ordering::Relaxed) & 1,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh() -> Box<PNode> {
+        // Zeroed, correctly aligned allocation (PNode is align(64)).
+        let mut b: Box<std::mem::MaybeUninit<PNode>> = Box::new(std::mem::MaybeUninit::uninit());
+        unsafe {
+            std::ptr::write_bytes(b.as_mut_ptr() as *mut u8, 0, 64);
+            std::mem::transmute(b)
+        }
+    }
+
+    #[test]
+    fn lifecycle_two_rounds() {
+        let p = fresh();
+        assert!(!p.is_member());
+        // Round 1: pValidity = true (validStart starts 0).
+        let pv = p.alloc();
+        assert!(pv);
+        p.create(7, 70, pv);
+        assert!(p.is_member());
+        assert_eq!(p.key.load(Ordering::Relaxed), 7);
+        p.destroy(pv);
+        assert!(!p.is_member(), "destroyed node is not a member");
+        // Round 2: flags all == 1, so pValidity flips to false.
+        let pv2 = p.alloc();
+        assert!(!pv2);
+        p.create(9, 90, pv2);
+        assert!(p.is_member());
+        assert_eq!(p.current_validity(), pv2);
+        p.destroy(pv2);
+        assert!(!p.is_member());
+    }
+
+    #[test]
+    fn interrupted_create_is_invalid_not_member() {
+        let p = fresh();
+        let pv = p.alloc();
+        // Simulate crash between validStart and validEnd stores.
+        p.valid_start.store(pv as u8, Ordering::Relaxed);
+        assert!(!p.is_member(), "half-created node must not be a member");
+        // Normalisation makes it allocatable again.
+        unsafe { PNode::init_free_pattern(&*p as *const PNode as *mut u8) };
+        assert!(!p.is_member());
+        let pv2 = p.alloc();
+        p.create(1, 2, pv2);
+        assert!(p.is_member());
+    }
+
+    #[test]
+    fn create_and_destroy_psync_once_each() {
+        let p = fresh();
+        let a = crate::pmem::stats::thread_snapshot();
+        let pv = p.alloc();
+        p.create(1, 1, pv);
+        let mid = crate::pmem::stats::thread_snapshot();
+        assert_eq!(mid.since(&a).fences, 1, "create = exactly one psync");
+        p.destroy(pv);
+        let d = crate::pmem::stats::thread_snapshot().since(&mid);
+        assert_eq!(d.fences, 1, "destroy = exactly one psync");
+    }
+}

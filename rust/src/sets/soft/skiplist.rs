@@ -1,0 +1,377 @@
+//! SOFT durable **skip list** — the symmetric extension (paper §2:
+//! "Both schemes are applicable to linked lists, hash tables, skip lists
+//! and binary search trees").
+//!
+//! Same shape as the link-free skip list: durable state is only the
+//! bottom-level PNodes (one psync per update, zero per read — unchanged);
+//! the tower index is a volatile hint structure over the volatile SNodes,
+//! validated under the EBR pin (an SNode observed in a non-deleted state
+//! cannot be unlinked-and-freed within our pin) and rebuilt at recovery.
+
+use crate::alloc::{Ebr, VolatilePool};
+use crate::pmem::PoolId;
+use crate::sets::tagged::{ptr_of, State};
+use crate::util::rng::Xoshiro256;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::list::SoftCore;
+use super::node::{SNode, SNODE_SIZE};
+use super::recovery::RecoveredStats;
+
+const MAX_LEVEL: usize = 16;
+const BRANCHING: u64 = 4;
+
+struct Tower {
+    key: u64,
+    node: *mut SNode,
+    nexts: [AtomicU64; MAX_LEVEL],
+}
+
+/// Durable lock-free skip list (SOFT family).
+pub struct SoftSkipList {
+    head: AtomicU64,
+    index: [AtomicU64; MAX_LEVEL],
+    core: SoftCore,
+    graveyard: UnsafeCell<Vec<*mut Tower>>,
+    grave_lock: std::sync::Mutex<()>,
+}
+
+unsafe impl Send for SoftSkipList {}
+unsafe impl Sync for SoftSkipList {}
+
+impl SoftSkipList {
+    pub fn new() -> Self {
+        Self::from_core(SoftCore::new())
+    }
+
+    fn from_core(core: SoftCore) -> Self {
+        const Z: AtomicU64 = AtomicU64::new(0);
+        SoftSkipList {
+            head: AtomicU64::new(0),
+            index: [Z; MAX_LEVEL],
+            core,
+            graveyard: UnsafeCell::new(Vec::new()),
+            grave_lock: std::sync::Mutex::new(()),
+        }
+    }
+
+    pub fn pool_id(&self) -> PoolId {
+        self.core.dpool.id()
+    }
+
+    pub fn crash_preserve(&self) {
+        self.core.dpool.preserve();
+    }
+
+    fn random_height(key: u64) -> usize {
+        let mut h = 1;
+        let mut r = Xoshiro256::new(key ^ 0x50F7_5C1A);
+        while h < MAX_LEVEL && r.below(BRANCHING) == 0 {
+            h += 1;
+        }
+        h
+    }
+
+    /// A tower target is stale when its SNode was recycled (key changed)
+    /// or its state is "deleted" (unlink pending/done).
+    unsafe fn stale(t: *const Tower) -> bool {
+        let node = (*t).node;
+        (*node).key != (*t).key
+            || State::of((*node).next.load(Ordering::Acquire)) == State::Deleted
+    }
+
+    /// Best validated hint link for `key`, or the head. Under an EBR pin.
+    unsafe fn hint_link(&self, key: u64) -> *const AtomicU64 {
+        let mut best: *const AtomicU64 = &self.head;
+        let mut level = MAX_LEVEL;
+        let mut pred_nexts: &[AtomicU64; MAX_LEVEL] = &self.index;
+        while level > 0 {
+            level -= 1;
+            loop {
+                let t_tag = pred_nexts[level].load(Ordering::Acquire);
+                let t = ptr_of::<Tower>(t_tag);
+                if t.is_null() {
+                    break;
+                }
+                if Self::stale(t) {
+                    let succ = (*t).nexts[level].load(Ordering::Acquire) & !1;
+                    let _ = pred_nexts[level].compare_exchange(
+                        t_tag,
+                        succ,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    );
+                    continue;
+                }
+                if (*t).key >= key {
+                    break;
+                }
+                best = &(*(*t).node).next as *const AtomicU64;
+                pred_nexts = &(*t).nexts;
+            }
+        }
+        best
+    }
+
+    unsafe fn index_insert(&self, key: u64, node: *mut SNode) {
+        let height = Self::random_height(key);
+        if height <= 1 {
+            return;
+        }
+        const Z: AtomicU64 = AtomicU64::new(0);
+        let tower = Box::into_raw(Box::new(Tower { key, node, nexts: [Z; MAX_LEVEL] }));
+        {
+            let _g = self.grave_lock.lock().unwrap();
+            (*self.graveyard.get()).push(tower);
+        }
+        for level in 0..height {
+            loop {
+                let (pred_nexts, succ_tag) = self.index_window(key, level);
+                (*tower).nexts[level].store(succ_tag & !1, Ordering::Relaxed);
+                if pred_nexts[level]
+                    .compare_exchange(succ_tag, tower as u64, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    break;
+                }
+            }
+        }
+    }
+
+    unsafe fn index_window(&self, key: u64, level: usize) -> (&[AtomicU64; MAX_LEVEL], u64) {
+        let mut pred_nexts: &[AtomicU64; MAX_LEVEL] = &self.index;
+        loop {
+            let t_tag = pred_nexts[level].load(Ordering::Acquire);
+            let t = ptr_of::<Tower>(t_tag);
+            if t.is_null() || (*t).key >= key {
+                return (pred_nexts, t_tag);
+            }
+            pred_nexts = &(*t).nexts;
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        self.core.snapshot_from(&self.head)
+    }
+}
+
+impl Default for SoftSkipList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for SoftSkipList {
+    fn drop(&mut self) {
+        unsafe {
+            self.core.ebr.drain_all();
+            for &t in (*self.graveyard.get()).iter() {
+                drop(Box::from_raw(t));
+            }
+        }
+    }
+}
+
+impl crate::sets::ConcurrentSet for SoftSkipList {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let g = self.core.ebr.pin();
+        let start = unsafe { self.hint_link(key) };
+        let inserted = self.core.insert_from(start, &self.head, key, value);
+        if inserted {
+            unsafe {
+                // Locate the (volatile) node we just inserted to index it;
+                // a racing remove just leaves a stale, lazily-culled tower.
+                let mut curr = ptr_of::<SNode>((*start).load(Ordering::Acquire));
+                while !curr.is_null() && (*curr).key < key {
+                    curr = ptr_of::<SNode>((*curr).next.load(Ordering::Acquire));
+                }
+                if !curr.is_null() && (*curr).key == key {
+                    self.index_insert(key, curr);
+                }
+            }
+        }
+        drop(g);
+        inserted
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        let g = self.core.ebr.pin();
+        let start = unsafe { self.hint_link(key) };
+        let r = self.core.remove_from(start, &self.head, key);
+        drop(g);
+        r
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.get(key).is_some()
+    }
+
+    fn get(&self, key: u64) -> Option<u64> {
+        let g = self.core.ebr.pin();
+        let start = unsafe { self.hint_link(key) };
+        let r = self.core.get_from(start, &self.head, key);
+        drop(g);
+        r
+    }
+
+    fn len_approx(&self) -> usize {
+        self.core.count(&self.head)
+    }
+
+    fn durable_pool(&self) -> Option<PoolId> {
+        Some(self.pool_id())
+    }
+
+    fn prepare_crash(&self) {
+        self.crash_preserve();
+    }
+}
+
+/// Recover a SOFT skip list: bottom level via the standard PNode scan
+/// (fresh volatile nodes, zero psyncs), index rebuilt randomized.
+pub fn recover_skiplist(id: PoolId) -> (SoftSkipList, RecoveredStats) {
+    let (list, stats) = super::recover_list(id);
+    let head_val = list.head.load(Ordering::Relaxed);
+    let core = SoftCore::from_parts(
+        list.core.dpool.clone(),
+        list.core.vpool.clone(),
+        Arc::new(Ebr::new()),
+    );
+    drop(list); // pool Arcs shared; recovered EBR limbo is empty
+    let skip = SoftSkipList::from_core(core);
+    skip.head.store(head_val, Ordering::Relaxed);
+    unsafe {
+        let mut curr = ptr_of::<SNode>(head_val);
+        while !curr.is_null() {
+            skip.index_insert((*curr).key, curr);
+            curr = ptr_of::<SNode>((*curr).next.load(Ordering::Relaxed));
+        }
+    }
+    (skip, stats)
+}
+
+/// Keep the volatile pool type name referenced for docs symmetry.
+#[allow(dead_code)]
+fn _types(_: &VolatilePool) -> usize {
+    SNODE_SIZE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{self, CrashPolicy, Mode};
+    use crate::sets::ConcurrentSet;
+
+    #[test]
+    fn sequential_and_psync_bound() {
+        let s = SoftSkipList::new();
+        for k in 0..2000u64 {
+            assert!(s.insert(k, k));
+        }
+        // The index must not change SOFT's durability cost: still exactly
+        // one psync per update, zero per read.
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(s.insert(5000, 1));
+        assert!(s.remove(5000));
+        assert!(s.contains(1234));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 2, "1 psync insert + 1 psync remove + 0 read");
+        for k in 0..2000u64 {
+            assert_eq!(s.get(k), Some(k));
+        }
+        for k in (0..2000u64).step_by(2) {
+            assert!(s.remove(k));
+        }
+        assert_eq!(s.len_approx(), 1000);
+    }
+
+    #[test]
+    fn model_equivalence_random_ops() {
+        use crate::util::rng::Xoshiro256;
+        let s = SoftSkipList::new();
+        let mut model = std::collections::BTreeSet::new();
+        let mut rng = Xoshiro256::new(0x50F7);
+        for _ in 0..30_000 {
+            let k = rng.below(512);
+            match rng.below(3) {
+                0 => assert_eq!(s.insert(k, k), model.insert(k)),
+                1 => assert_eq!(s.remove(k), model.remove(&k)),
+                _ => assert_eq!(s.contains(k), model.contains(&k)),
+            }
+        }
+        let snap: Vec<u64> = s.snapshot().iter().map(|kv| kv.0).collect();
+        let want: Vec<u64> = model.iter().copied().collect();
+        assert_eq!(snap, want);
+    }
+
+    #[test]
+    fn concurrent_stress() {
+        use std::sync::Arc;
+        let s = Arc::new(SoftSkipList::new());
+        let handles: Vec<_> = (0..6u64)
+            .map(|t| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::new(t + 17);
+                    let mut net = 0i64;
+                    for _ in 0..4000 {
+                        let k = rng.below(256);
+                        match rng.below(3) {
+                            0 => {
+                                if s.insert(k, t) {
+                                    net += 1;
+                                }
+                            }
+                            1 => {
+                                if s.remove(k) {
+                                    net -= 1;
+                                }
+                            }
+                            _ => {
+                                let _ = s.contains(k);
+                            }
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(s.len_approx() as i64, net);
+        let snap = s.snapshot();
+        for w in snap.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn soft_skiplist_crash_recovery() {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        let _g = LOCK.lock().unwrap();
+        pmem::set_mode(Mode::Sim);
+        let s = SoftSkipList::new();
+        let id = s.pool_id();
+        for k in 0..400u64 {
+            assert!(s.insert(k, k * 2));
+        }
+        for k in (0..400u64).step_by(5) {
+            assert!(s.remove(k));
+        }
+        s.crash_preserve();
+        drop(s);
+        pmem::crash(CrashPolicy::random(0.3, 9));
+        let (s2, stats) = recover_skiplist(id);
+        assert_eq!(stats.members as usize, (0..400).filter(|k| k % 5 != 0).count());
+        for k in 0..400u64 {
+            if k % 5 == 0 {
+                assert!(!s2.contains(k));
+            } else {
+                assert_eq!(s2.get(k), Some(k * 2));
+            }
+        }
+        assert!(s2.insert(9999, 1));
+        pmem::set_mode(Mode::Perf);
+    }
+}

@@ -1,0 +1,137 @@
+//! Tagged-pointer helpers.
+//!
+//! All list links are `AtomicU64` words holding a node address plus low
+//! tag bits (nodes are at least 8-byte aligned, durable nodes 64-byte):
+//!
+//! * **link-free / volatile**: bit 0 = Harris deletion mark on the node
+//!   *owning* the link ("mark a node" = set bit 0 of its `next`).
+//! * **log-free**: bit 0 = mark, bit 1 = *dirty* (link not yet persisted;
+//!   link-and-persist clears it after a psync).
+//! * **SOFT**: bits 0–1 = the owning node's 4-way state
+//!   (paper §2.3 / Listing 10's `createRef`/`getState`).
+//!
+//! A *link cell* (`*const AtomicU64`) stands for a position in a list: a
+//! list head, a hash bucket slot, or some node's `next` field. Operating
+//! on link cells instead of predecessor nodes lets a hash bucket be one
+//! 8-byte word instead of a 64-byte sentinel node; Harris's correctness
+//! argument carries over because a marked predecessor's `next` value has
+//! bit 0 set and therefore fails any CAS expecting a clean pointer.
+
+/// Harris deletion mark (bit 0).
+pub const MARK: u64 = 0b01;
+/// Log-free "link not persisted" bit (bit 1).
+pub const DIRTY: u64 = 0b10;
+/// Mask selecting the pointer part for 2 tag bits.
+pub const PTR_MASK: u64 = !0b11;
+
+#[inline(always)]
+pub fn is_marked(v: u64) -> bool {
+    v & MARK != 0
+}
+
+#[inline(always)]
+pub fn is_dirty(v: u64) -> bool {
+    v & DIRTY != 0
+}
+
+#[inline(always)]
+pub fn ptr_of<T>(v: u64) -> *mut T {
+    (v & PTR_MASK) as *mut T
+}
+
+#[inline(always)]
+pub fn tag_of(v: u64) -> u64 {
+    v & 0b11
+}
+
+#[inline(always)]
+pub fn compose<T>(p: *mut T, tag: u64) -> u64 {
+    debug_assert_eq!(p as u64 & 0b11, 0);
+    p as u64 | tag
+}
+
+/// SOFT volatile-node states (paper §2.3), stored in the low 2 bits of the
+/// owning node's `next`. `Inserted = 0` so that a zero-initialised bucket
+/// cell reads as an empty list with an "inserted" head.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u64)]
+pub enum State {
+    Inserted = 0b00,
+    IntendToInsert = 0b01,
+    IntendToDelete = 0b10,
+    Deleted = 0b11,
+}
+
+impl State {
+    #[inline(always)]
+    pub fn of(v: u64) -> State {
+        match v & 0b11 {
+            0b00 => State::Inserted,
+            0b01 => State::IntendToInsert,
+            0b10 => State::IntendToDelete,
+            _ => State::Deleted,
+        }
+    }
+
+    /// Is the key logically in the set (paper: "inserted" or "inserted
+    /// with intention to delete")?
+    #[inline(always)]
+    pub fn in_set(self) -> bool {
+        matches!(self, State::Inserted | State::IntendToDelete)
+    }
+}
+
+/// CAS that swaps only the state bits, preserving the pointer — the
+/// paper's `stateCAS` (Listing 10). Returns true on success.
+#[inline]
+pub fn state_cas(link: &std::sync::atomic::AtomicU64, old: State, new: State) -> bool {
+    use std::sync::atomic::Ordering;
+    let cur = link.load(Ordering::Acquire);
+    if State::of(cur) != old {
+        return false;
+    }
+    let want = (cur & PTR_MASK) | new as u64;
+    link.compare_exchange(cur, want, Ordering::AcqRel, Ordering::Acquire)
+        .is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn compose_decompose() {
+        let p = 0x1000 as *mut u8;
+        let v = compose(p, MARK);
+        assert!(is_marked(v));
+        assert!(!is_dirty(v));
+        assert_eq!(ptr_of::<u8>(v), p);
+        let v2 = compose(p, MARK | DIRTY);
+        assert!(is_dirty(v2));
+        assert_eq!(tag_of(v2), 0b11);
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        for s in [State::Inserted, State::IntendToInsert, State::IntendToDelete, State::Deleted] {
+            let v = compose(0x40 as *mut u8, s as u64);
+            assert_eq!(State::of(v), s);
+        }
+        assert!(State::Inserted.in_set());
+        assert!(State::IntendToDelete.in_set());
+        assert!(!State::IntendToInsert.in_set());
+        assert!(!State::Deleted.in_set());
+    }
+
+    #[test]
+    fn state_cas_swaps_only_state() {
+        let link = AtomicU64::new(compose(0x1000 as *mut u8, State::Inserted as u64));
+        assert!(state_cas(&link, State::Inserted, State::IntendToDelete));
+        let v = link.load(Ordering::Relaxed);
+        assert_eq!(ptr_of::<u8>(v), 0x1000 as *mut u8);
+        assert_eq!(State::of(v), State::IntendToDelete);
+        // Wrong expectation fails.
+        assert!(!state_cas(&link, State::Inserted, State::Deleted));
+    }
+}

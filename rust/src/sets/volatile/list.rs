@@ -1,0 +1,337 @@
+//! Plain lock-free Harris list + hash over volatile slab nodes.
+
+use crate::alloc::{Ebr, VolatilePool};
+use crate::sets::tagged::{is_marked, ptr_of, MARK};
+use crate::util::mix64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// 24-byte volatile node: key, value, markable next.
+#[repr(C)]
+struct VNode {
+    key: u64,
+    value: u64,
+    next: AtomicU64,
+}
+
+const VNODE_SIZE: usize = std::mem::size_of::<VNode>();
+const _: () = assert!(VNODE_SIZE == 24);
+
+pub(crate) struct VolatileCore {
+    pool: Arc<VolatilePool>,
+    ebr: Arc<Ebr>,
+}
+
+unsafe fn free_vnode(ptr: *mut u8, ctx: usize) {
+    (*(ctx as *const VolatilePool)).free(ptr);
+}
+
+impl VolatileCore {
+    fn new() -> Self {
+        VolatileCore {
+            pool: Arc::new(VolatilePool::new(VNODE_SIZE)),
+            ebr: Arc::new(Ebr::new()),
+        }
+    }
+
+    unsafe fn find(&self, head: *const AtomicU64, key: u64) -> (*const AtomicU64, *mut VNode) {
+        'retry: loop {
+            let mut pred_link = head;
+            let mut curr = ptr_of::<VNode>((*pred_link).load(Ordering::Acquire));
+            loop {
+                if curr.is_null() {
+                    return (pred_link, curr);
+                }
+                let succ_t = (*curr).next.load(Ordering::Acquire);
+                if is_marked(succ_t) {
+                    let succ = ptr_of::<VNode>(succ_t);
+                    if (*pred_link)
+                        .compare_exchange(
+                            curr as u64,
+                            succ as u64,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_err()
+                    {
+                        continue 'retry;
+                    }
+                    curr = succ;
+                } else {
+                    if (*curr).key >= key {
+                        return (pred_link, curr);
+                    }
+                    pred_link = &(*curr).next as *const AtomicU64;
+                    curr = ptr_of::<VNode>(succ_t);
+                }
+            }
+        }
+    }
+
+    fn insert(&self, head: *const AtomicU64, key: u64, value: u64) -> bool {
+        let _g = self.ebr.pin();
+        let mut node: *mut VNode = std::ptr::null_mut();
+        loop {
+            unsafe {
+                let (pred_link, curr) = self.find(head, key);
+                if !curr.is_null() && (*curr).key == key {
+                    if !node.is_null() {
+                        self.pool.free(node as *mut u8);
+                    }
+                    return false;
+                }
+                if node.is_null() {
+                    node = self.pool.alloc() as *mut VNode;
+                    std::ptr::write(
+                        node,
+                        VNode { key, value, next: AtomicU64::new(0) },
+                    );
+                }
+                (*node).next.store(curr as u64, Ordering::Relaxed);
+                if (*pred_link)
+                    .compare_exchange(curr as u64, node as u64, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    return true;
+                }
+            }
+        }
+    }
+
+    fn remove(&self, head: *const AtomicU64, key: u64) -> bool {
+        let _g = self.ebr.pin();
+        loop {
+            unsafe {
+                let (pred_link, curr) = self.find(head, key);
+                if curr.is_null() || (*curr).key != key {
+                    return false;
+                }
+                let succ_t = (*curr).next.load(Ordering::Acquire);
+                if is_marked(succ_t) {
+                    continue;
+                }
+                if (*curr)
+                    .next
+                    .compare_exchange(succ_t, succ_t | MARK, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    let succ = ptr_of::<VNode>(succ_t);
+                    if (*pred_link)
+                        .compare_exchange(
+                            curr as u64,
+                            succ as u64,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_err()
+                    {
+                        let _ = self.find(head, key);
+                    }
+                    self.ebr.retire(
+                        curr as *mut u8,
+                        Arc::as_ptr(&self.pool) as usize,
+                        free_vnode,
+                    );
+                    return true;
+                }
+            }
+        }
+    }
+
+    fn get(&self, head: *const AtomicU64, key: u64) -> Option<u64> {
+        let _g = self.ebr.pin();
+        unsafe {
+            let mut curr = ptr_of::<VNode>((*head).load(Ordering::Acquire));
+            while !curr.is_null() && (*curr).key < key {
+                curr = ptr_of::<VNode>((*curr).next.load(Ordering::Acquire));
+            }
+            if curr.is_null() || (*curr).key != key {
+                return None;
+            }
+            if is_marked((*curr).next.load(Ordering::Acquire)) {
+                return None;
+            }
+            Some((*curr).value)
+        }
+    }
+
+    fn count(&self, head: *const AtomicU64) -> usize {
+        let _g = self.ebr.pin();
+        let mut n = 0;
+        unsafe {
+            let mut curr = ptr_of::<VNode>((*head).load(Ordering::Acquire));
+            while !curr.is_null() {
+                let v = (*curr).next.load(Ordering::Acquire);
+                if !is_marked(v) {
+                    n += 1;
+                }
+                curr = ptr_of::<VNode>(v);
+            }
+        }
+        n
+    }
+}
+
+/// Volatile Harris list.
+pub struct VolatileList {
+    head: AtomicU64,
+    core: VolatileCore,
+}
+
+unsafe impl Send for VolatileList {}
+unsafe impl Sync for VolatileList {}
+
+impl VolatileList {
+    pub fn new() -> Self {
+        VolatileList { head: AtomicU64::new(0), core: VolatileCore::new() }
+    }
+}
+
+impl Default for VolatileList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for VolatileList {
+    fn drop(&mut self) {
+        unsafe { self.core.ebr.drain_all() };
+    }
+}
+
+impl crate::sets::ConcurrentSet for VolatileList {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.core.insert(&self.head, key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.core.remove(&self.head, key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.core.get(&self.head, key).is_some()
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.core.get(&self.head, key)
+    }
+    fn len_approx(&self) -> usize {
+        self.core.count(&self.head)
+    }
+}
+
+/// Volatile Harris hash set.
+pub struct VolatileHash {
+    buckets: Box<[AtomicU64]>,
+    core: VolatileCore,
+}
+
+unsafe impl Send for VolatileHash {}
+unsafe impl Sync for VolatileHash {}
+
+impl VolatileHash {
+    pub fn new(nbuckets: usize) -> Self {
+        let n = nbuckets.next_power_of_two().max(1);
+        VolatileHash {
+            buckets: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            core: VolatileCore::new(),
+        }
+    }
+
+    #[inline(always)]
+    fn bucket_of(&self, key: u64) -> &AtomicU64 {
+        &self.buckets[(mix64(key) as usize) & (self.buckets.len() - 1)]
+    }
+}
+
+impl Drop for VolatileHash {
+    fn drop(&mut self) {
+        unsafe { self.core.ebr.drain_all() };
+    }
+}
+
+impl crate::sets::ConcurrentSet for VolatileHash {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.core.insert(self.bucket_of(key), key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.core.remove(self.bucket_of(key), key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.core.get(self.bucket_of(key), key).is_some()
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.core.get(self.bucket_of(key), key)
+    }
+    fn len_approx(&self) -> usize {
+        self.buckets.iter().map(|b| self.core.count(b)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sets::ConcurrentSet;
+
+    #[test]
+    fn volatile_list_model_check() {
+        use crate::util::rng::Xoshiro256;
+        let l = VolatileList::new();
+        let mut model = std::collections::BTreeSet::new();
+        let mut rng = Xoshiro256::new(0x501);
+        for _ in 0..10_000 {
+            let k = rng.below(64);
+            match rng.below(3) {
+                0 => assert_eq!(l.insert(k, k), model.insert(k)),
+                1 => assert_eq!(l.remove(k), model.remove(&k)),
+                _ => assert_eq!(l.contains(k), model.contains(&k)),
+            }
+        }
+        assert_eq!(l.len_approx(), model.len());
+    }
+
+    #[test]
+    fn volatile_ops_never_psync() {
+        let l = VolatileList::new();
+        let h = VolatileHash::new(16);
+        let a = crate::pmem::stats::thread_snapshot();
+        for k in 0..100u64 {
+            l.insert(k, k);
+            h.insert(k, k);
+        }
+        for k in 0..50u64 {
+            l.remove(k);
+            h.remove(k);
+            let _ = l.contains(k);
+            let _ = h.contains(k + 50);
+        }
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.flushes, 0);
+        assert_eq!(d.fences, 0);
+    }
+
+    #[test]
+    fn volatile_hash_concurrent() {
+        use std::sync::Arc;
+        let h = Arc::new(VolatileHash::new(32));
+        let handles: Vec<_> = (0..6u64)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::new(t);
+                    let mut net = 0i64;
+                    for _ in 0..4000 {
+                        let k = rng.below(128);
+                        if rng.below(2) == 0 {
+                            if h.insert(k, k) {
+                                net += 1;
+                            }
+                        } else if h.remove(k) {
+                            net -= 1;
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(h.len_approx() as i64, net);
+    }
+}

@@ -1,0 +1,7 @@
+//! Volatile Harris list/hash (Harris 2001) — the non-durable ablation
+//! baseline: what the durable algorithms would cost with every psync and
+//! validity write removed. Nothing survives a crash.
+
+mod list;
+
+pub use list::{VolatileHash, VolatileList};

@@ -1,0 +1,72 @@
+//! Small shared utilities: RNG, timing, cache-line constants, thread ids.
+//!
+//! Everything here is dependency-free (the offline crate set has no `rand`),
+//! deterministic where it matters (benchmarks, property tests), and cheap
+//! enough for the hot paths that use it.
+
+pub mod rng;
+pub mod spin;
+pub mod tid;
+
+/// Cache line size assumed throughout the persistent-memory model.
+///
+/// Both the paper's durable node kinds (`Node` in link-free, `PNode` in
+/// SOFT) are sized and aligned to exactly one cache line so that a single
+/// `psync` persists the whole logical record.
+pub const CACHE_LINE: usize = 64;
+
+/// Maximum number of concurrently registered threads (paper machine: 64
+/// hardware threads; we leave headroom for oversubscribed runs and tests).
+pub const MAX_THREADS: usize = 128;
+
+/// Round `n` down to a cache-line boundary.
+#[inline(always)]
+pub const fn line_down(n: usize) -> usize {
+    n & !(CACHE_LINE - 1)
+}
+
+/// Round `n` up to a cache-line boundary.
+#[inline(always)]
+pub const fn line_up(n: usize) -> usize {
+    (n + CACHE_LINE - 1) & !(CACHE_LINE - 1)
+}
+
+/// splitmix64 finalizer — the mixing function used for bucket hashing in
+/// the hash sets *and* (bit-for-bit identically) in the L1 Pallas
+/// `bucket_hash` kernel, so that the XLA-accelerated recovery plan and the
+/// Rust structures agree on bucket placement.
+#[inline(always)]
+pub const fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_rounding() {
+        assert_eq!(line_down(0), 0);
+        assert_eq!(line_down(63), 0);
+        assert_eq!(line_down(64), 64);
+        assert_eq!(line_up(0), 0);
+        assert_eq!(line_up(1), 64);
+        assert_eq!(line_up(64), 64);
+        assert_eq!(line_up(65), 128);
+    }
+
+    #[test]
+    fn mix64_is_a_bijection_probe() {
+        // Not a proof, but distinct inputs must give distinct outputs on a
+        // decent sample if the constants were transcribed correctly.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(mix64(i)));
+        }
+        // Known vector: splitmix64(0) first output.
+        assert_eq!(mix64(0), 0xE220A8397B1DCDAF);
+    }
+}

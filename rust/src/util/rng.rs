@@ -1,0 +1,128 @@
+//! Deterministic PRNGs for workload generation and property testing.
+//!
+//! `SplitMix64` is the stateless/counter-friendly generator (also mirrored
+//! in the L1 workload kernel); `Xoshiro256` is the fast stateful stream
+//! generator used inside benchmark threads.
+
+use super::mix64;
+
+/// SplitMix64: tiny, seedable, passes BigCrush for our purposes.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        // mix64 adds the increment itself; feed the pre-increment state.
+        mix64(self.state.wrapping_sub(0x9E3779B97F4A7C15))
+    }
+}
+
+/// xoshiro256** — fast stream RNG for hot benchmark loops.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        // Seed the state from splitmix64, per the xoshiro authors' advice.
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = sm.next_u64();
+        }
+        // All-zero state is invalid; splitmix of any seed never yields it,
+        // but be defensive.
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Self { s }
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's multiply-shift reduction;
+    /// the tiny modulo bias is irrelevant for workloads).
+    #[inline(always)]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform float in `[0, 1)`.
+    #[inline(always)]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_known_vector() {
+        // splitmix64 with seed 0: first output is the canonical constant.
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220A8397B1DCDAF);
+    }
+
+    #[test]
+    fn xoshiro_below_in_range() {
+        let mut r = Xoshiro256::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn xoshiro_f64_in_unit() {
+        let mut r = Xoshiro256::new(9);
+        for _ in 0..10_000 {
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn xoshiro_roughly_uniform() {
+        let mut r = Xoshiro256::new(3);
+        let mut buckets = [0usize; 8];
+        let n = 80_000;
+        for _ in 0..n {
+            buckets[r.below(8) as usize] += 1;
+        }
+        for &b in &buckets {
+            // each bucket expects 10_000; allow +-10%
+            assert!((9_000..=11_000).contains(&b), "bucket count {b}");
+        }
+    }
+}

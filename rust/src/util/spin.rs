@@ -1,0 +1,71 @@
+//! Calibrated busy-wait used to model NVRAM write-back latency.
+//!
+//! The paper measures on DRAM and assumes data is durable once it reaches
+//! the memory controller; `clflush` still costs real time (~100ns class).
+//! Our simulated `psync` injects a configurable busy-wait so that
+//! psync-bound regimes (short lists, hash tables) remain visible even on
+//! hardware without persistence instructions. Calibration happens once at
+//! startup.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Iterations of the spin kernel per microsecond, calibrated lazily.
+static SPINS_PER_US: AtomicU64 = AtomicU64::new(0);
+
+#[inline(always)]
+fn spin_kernel(iters: u64) {
+    for _ in 0..iters {
+        std::hint::spin_loop();
+    }
+}
+
+fn calibrate() -> u64 {
+    // Run a few rounds and take the max rate (min interference).
+    let mut best = 0u64;
+    for _ in 0..3 {
+        let iters = 2_000_000u64;
+        let t0 = Instant::now();
+        spin_kernel(iters);
+        let us = t0.elapsed().as_micros().max(1) as u64;
+        best = best.max(iters / us);
+    }
+    best.max(1)
+}
+
+/// Busy-wait for roughly `ns` nanoseconds. `ns == 0` returns immediately.
+#[inline]
+pub fn spin_ns(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let mut rate = SPINS_PER_US.load(Ordering::Relaxed);
+    if rate == 0 {
+        rate = calibrate();
+        SPINS_PER_US.store(rate, Ordering::Relaxed);
+    }
+    spin_kernel((ns * rate) / 1000 + 1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spin_zero_is_free() {
+        spin_ns(0);
+    }
+
+    #[test]
+    fn spin_takes_roughly_right_time() {
+        spin_ns(1); // force calibration
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            spin_ns(1_000); // 1us each
+        }
+        let elapsed = t0.elapsed().as_micros();
+        // 1000 x 1us = 1ms nominal; accept a generous band (shared CPU).
+        assert!(elapsed >= 300, "spun too fast: {elapsed}us");
+        assert!(elapsed < 100_000, "spun too slow: {elapsed}us");
+    }
+}

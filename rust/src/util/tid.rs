@@ -1,0 +1,92 @@
+//! Process-wide small-integer thread ids.
+//!
+//! The durable-area allocator, the EBR epoch table, and the pmem statistics
+//! are all per-thread arrays indexed by a dense thread id, exactly like the
+//! paper's ssmem setup ("each thread has its own personal allocator").
+//! Threads register lazily on first use and release their slot on exit, so
+//! short-lived test threads do not exhaust the table.
+
+use super::MAX_THREADS;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SLOTS: [AtomicBool; MAX_THREADS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const FREE: AtomicBool = AtomicBool::new(false);
+    [FREE; MAX_THREADS]
+};
+
+struct TidGuard(usize);
+
+impl Drop for TidGuard {
+    fn drop(&mut self) {
+        SLOTS[self.0].store(false, Ordering::Release);
+    }
+}
+
+thread_local! {
+    static TID: TidGuard = TidGuard(acquire_slot());
+}
+
+fn acquire_slot() -> usize {
+    for i in 0..MAX_THREADS {
+        if SLOTS[i]
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+        {
+            return i;
+        }
+    }
+    panic!("more than {MAX_THREADS} concurrently live threads using durasets");
+}
+
+/// Dense id of the calling thread, in `[0, MAX_THREADS)`.
+#[inline]
+pub fn tid() -> usize {
+    TID.with(|g| g.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tid_is_stable_within_thread() {
+        let a = tid();
+        let b = tid();
+        assert_eq!(a, b);
+        assert!(a < MAX_THREADS);
+    }
+
+    #[test]
+    fn tids_are_distinct_across_live_threads() {
+        use std::sync::{Arc, Barrier};
+        let n = 8;
+        let barrier = Arc::new(Barrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let t = tid();
+                    barrier.wait(); // all alive at once => ids must differ
+                    t
+                })
+            })
+            .collect();
+        let mut ids: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn slots_are_reused_after_thread_exit() {
+        // Spawn many short-lived threads sequentially; must not panic.
+        for _ in 0..(MAX_THREADS * 2) {
+            std::thread::spawn(|| {
+                let _ = tid();
+            })
+            .join()
+            .unwrap();
+        }
+    }
+}

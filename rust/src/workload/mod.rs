@@ -1,0 +1,212 @@
+//! Workload engine: the op streams of the paper's evaluation (§6.1).
+//!
+//! Streams are *stateless*: op `i` of thread `t` is a pure function of
+//! `(seed, t, i)` using the same splitmix64 chain as the L1 workload
+//! kernel, so the pure-Rust generator and the AOT artifact produce
+//! identical streams (checked by tests) and every run is reproducible.
+//!
+//! The paper's workloads: uniform keys over a range, the set pre-filled to
+//! half the range, read fractions 50–100% (YCSB A/B/C at 50/95/100).
+
+pub mod ycsb;
+pub mod zipf;
+
+use crate::util::mix64;
+
+/// One generated operation.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Op {
+    Contains(u64),
+    Insert(u64),
+    Remove(u64),
+}
+
+impl Op {
+    pub fn key(&self) -> u64 {
+        match *self {
+            Op::Contains(k) | Op::Insert(k) | Op::Remove(k) => k,
+        }
+    }
+
+    pub fn is_read(&self) -> bool {
+        matches!(self, Op::Contains(_))
+    }
+}
+
+/// Key distribution.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum KeyDist {
+    Uniform,
+    /// Zipfian with the given skew (YCSB default 0.99).
+    Zipfian(f64),
+}
+
+/// Workload definition.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    /// Keys are drawn from `[0, key_range)`.
+    pub key_range: u64,
+    /// Reads per million ops (900_000 = the paper's default 90%).
+    pub read_micros: u64,
+    pub dist: KeyDist,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn uniform(key_range: u64, read_pct: u32, seed: u64) -> Self {
+        WorkloadSpec {
+            key_range,
+            read_micros: read_pct as u64 * 10_000,
+            dist: KeyDist::Uniform,
+            seed,
+        }
+    }
+
+    /// Stream for one thread. Matches `kernels/workload.py` exactly in the
+    /// uniform case (same mix64 chain, same op thresholds).
+    pub fn stream(&self, thread: u64) -> OpStream {
+        OpStream {
+            spec: *self,
+            seed_mix: mix64(self.seed ^ thread.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            idx: 0,
+            zipf: match self.dist {
+                KeyDist::Zipfian(theta) => Some(zipf::Zipf::new(self.key_range, theta)),
+                KeyDist::Uniform => None,
+            },
+        }
+    }
+
+    /// The stream the AOT workload artifact produces for `(seed, base)` —
+    /// thread streams use `seed ^ t*phi` as the artifact seed.
+    pub fn artifact_seed(&self, thread: u64) -> u64 {
+        self.seed ^ thread.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+}
+
+/// Infinite deterministic op stream.
+pub struct OpStream {
+    spec: WorkloadSpec,
+    seed_mix: u64,
+    idx: u64,
+    zipf: Option<zipf::Zipf>,
+}
+
+impl OpStream {
+    /// The `i`-th op of this stream (random access).
+    pub fn op_at(&mut self, i: u64) -> Op {
+        let h1 = mix64(i ^ self.seed_mix);
+        let h2 = mix64(h1);
+        let key = match &mut self.zipf {
+            None => h1 % self.spec.key_range,
+            Some(z) => z.sample(h1),
+        };
+        let draw = h2 % 1_000_000;
+        if draw < self.spec.read_micros {
+            Op::Contains(key)
+        } else if (h2 >> 32) & 1 == 0 {
+            Op::Insert(key)
+        } else {
+            Op::Remove(key)
+        }
+    }
+
+    /// Next op (sequential use).
+    #[inline]
+    pub fn next_op(&mut self) -> Op {
+        let op = self.op_at(self.idx);
+        self.idx += 1;
+        op
+    }
+}
+
+/// Pre-fill a set with half the key range (every even key), the paper's
+/// setup for a 50-50 insert/remove success split. Returns #inserted.
+pub fn prefill(set: &dyn crate::sets::ConcurrentSet, key_range: u64) -> usize {
+    let mut n = 0;
+    for k in (0..key_range).step_by(2) {
+        if set.insert(k, k) {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_is_deterministic_and_in_range() {
+        let spec = WorkloadSpec::uniform(1024, 90, 7);
+        let mut a = spec.stream(3);
+        let mut b = spec.stream(3);
+        for i in 0..1000 {
+            let (x, y) = (a.op_at(i), b.op_at(i));
+            assert_eq!(x, y);
+            assert!(x.key() < 1024);
+        }
+        let mut c = spec.stream(4);
+        let diff = (0..1000).filter(|&i| a.op_at(i) != c.op_at(i)).count();
+        assert!(diff > 900, "different threads must get different streams");
+    }
+
+    #[test]
+    fn read_fraction_is_respected() {
+        for pct in [50u32, 90, 95, 100] {
+            let spec = WorkloadSpec::uniform(4096, pct, 11);
+            let mut s = spec.stream(0);
+            let n = 40_000;
+            let reads = (0..n).filter(|&i| s.op_at(i).is_read()).count();
+            let frac = reads as f64 / n as f64;
+            assert!(
+                (frac - pct as f64 / 100.0).abs() < 0.01,
+                "pct={pct} got {frac}"
+            );
+        }
+    }
+
+    #[test]
+    fn updates_split_evenly() {
+        let spec = WorkloadSpec::uniform(4096, 50, 13);
+        let mut s = spec.stream(0);
+        let mut ins = 0;
+        let mut rem = 0;
+        for i in 0..40_000 {
+            match s.op_at(i) {
+                Op::Insert(_) => ins += 1,
+                Op::Remove(_) => rem += 1,
+                _ => {}
+            }
+        }
+        let ratio = ins as f64 / (ins + rem) as f64;
+        assert!((0.48..0.52).contains(&ratio), "insert/remove ratio {ratio}");
+    }
+
+    #[test]
+    fn prefill_half_range() {
+        let set = crate::sets::new_hash(crate::sets::Family::Volatile, 64);
+        let n = prefill(set.as_ref(), 100);
+        assert_eq!(n, 50);
+        assert_eq!(set.len_approx(), 50);
+    }
+
+    #[test]
+    fn matches_workload_kernel_math() {
+        // Mirror of kernels/workload.py: h1 = mix64(i ^ mix64(seed)).
+        let spec = WorkloadSpec {
+            key_range: 1000,
+            read_micros: 900_000,
+            dist: KeyDist::Uniform,
+            seed: 42,
+        };
+        // artifact stream for thread t uses seed' = artifact_seed(t); the
+        // rust stream hashes i ^ mix64(seed'), same as the kernel.
+        let mut s = spec.stream(0);
+        let seed_mix = crate::util::mix64(spec.artifact_seed(0));
+        for i in 0..100u64 {
+            let h1 = crate::util::mix64(i ^ seed_mix);
+            let expect_key = h1 % 1000;
+            assert_eq!(s.op_at(i).key(), expect_key);
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! YCSB workload presets (Cooper et al., SoCC'10), as referenced by the
+//! paper's §6.1: A = 50% reads, B = 95% reads, C = 100% reads. Updates are
+//! split evenly between inserts and removes (set semantics).
+
+use super::{KeyDist, WorkloadSpec};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum YcsbWorkload {
+    A,
+    B,
+    C,
+}
+
+impl YcsbWorkload {
+    pub fn read_pct(&self) -> u32 {
+        match self {
+            YcsbWorkload::A => 50,
+            YcsbWorkload::B => 95,
+            YcsbWorkload::C => 100,
+        }
+    }
+
+    /// Uniform-key variant (the paper's configuration).
+    pub fn uniform(&self, key_range: u64, seed: u64) -> WorkloadSpec {
+        WorkloadSpec::uniform(key_range, self.read_pct(), seed)
+    }
+
+    /// Zipfian-key variant (YCSB's default request distribution).
+    pub fn zipfian(&self, key_range: u64, seed: u64) -> WorkloadSpec {
+        WorkloadSpec {
+            key_range,
+            read_micros: self.read_pct() as u64 * 10_000,
+            dist: KeyDist::Zipfian(0.99),
+            seed,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_uppercase().as_str() {
+            "A" => Some(YcsbWorkload::A),
+            "B" => Some(YcsbWorkload::B),
+            "C" => Some(YcsbWorkload::C),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_paper_read_fractions() {
+        assert_eq!(YcsbWorkload::A.read_pct(), 50);
+        assert_eq!(YcsbWorkload::B.read_pct(), 95);
+        assert_eq!(YcsbWorkload::C.read_pct(), 100);
+        assert_eq!(YcsbWorkload::parse("a"), Some(YcsbWorkload::A));
+        assert_eq!(YcsbWorkload::parse("x"), None);
+    }
+
+    #[test]
+    fn zipfian_variant_samples_hot_keys() {
+        let spec = YcsbWorkload::B.zipfian(10_000, 5);
+        let mut s = spec.stream(0);
+        let n = 20_000u64;
+        let hot = (0..n).filter(|&i| s.op_at(i).key() < 100).count();
+        assert!(hot as f64 / n as f64 > 0.2);
+    }
+}

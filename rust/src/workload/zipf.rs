@@ -1,0 +1,99 @@
+//! Zipfian key sampler (Gray et al. "Quickly generating billion-record
+//! synthetic databases", the YCSB ZipfianGenerator formula): constant-time
+//! sampling after an O(n) zeta precomputation.
+
+/// Zipfian distribution over `[0, n)` with skew `theta` (0 < theta < 1;
+/// YCSB default 0.99).
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta > 0.0 && theta < 1.0);
+        let zetan = zeta(n, theta);
+        let zeta2 = zeta(2.min(n), theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipf { n, theta, alpha, zetan, eta }
+    }
+
+    /// Map a uniform 64-bit hash to a zipf-distributed rank. Rank 0 is the
+    /// hottest key; callers typically scatter ranks via a fixed
+    /// permutation to avoid clustering hot keys in one hash bucket.
+    pub fn sample(&self, hash: u64) -> u64 {
+        let u = (hash >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let r = ((self.n as f64) * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        r.min(self.n - 1)
+    }
+}
+
+fn zeta(n: u64, theta: f64) -> f64 {
+    // Direct sum for small n; Euler-Maclaurin tail estimate for large n
+    // keeps construction O(1e6) worst-case instead of O(n).
+    const DIRECT: u64 = 1_000_000;
+    if n <= DIRECT {
+        (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+    } else {
+        let head: f64 = (1..=DIRECT).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+        // integral_{DIRECT}^{n} x^-theta dx
+        let a = DIRECT as f64;
+        let b = n as f64;
+        head + (b.powf(1.0 - theta) - a.powf(1.0 - theta)) / (1.0 - theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..10_000 {
+            assert!(z.sample(rng.next_u64()) < 1000);
+        }
+    }
+
+    #[test]
+    fn is_actually_skewed() {
+        let z = Zipf::new(10_000, 0.99);
+        let mut rng = Xoshiro256::new(2);
+        let n = 100_000;
+        let hot = (0..n).filter(|_| z.sample(rng.next_u64()) < 10).count();
+        let frac = hot as f64 / n as f64;
+        // Top-10 of 10k keys should draw a large share under theta=.99.
+        assert!(frac > 0.2, "zipf not skewed: top-10 share {frac}");
+        // ...and rank 0 must dominate rank 9.
+        let mut counts = [0usize; 10];
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..n {
+            let s = z.sample(rng.next_u64());
+            if s < 10 {
+                counts[s as usize] += 1;
+            }
+        }
+        assert!(counts[0] > counts[9] * 2, "{counts:?}");
+    }
+
+    #[test]
+    fn zeta_tail_estimate_is_close() {
+        // Compare direct vs estimated on a size just above the cutoff.
+        let direct: f64 = (1..=1_100_000u64).map(|i| 1.0 / (i as f64).powf(0.9)).sum();
+        let est = super::zeta(1_100_000, 0.9);
+        assert!((direct - est).abs() / direct < 1e-3);
+    }
+}

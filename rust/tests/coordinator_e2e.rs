@@ -1,0 +1,127 @@
+//! End-to-end coordinator test: TCP clients drive the sharded durable KV
+//! service, the machine crashes mid-service, recovery restores it, and a
+//! fresh server serves the recovered state.
+
+use durasets::config::Config;
+use durasets::coordinator::{server, DuraKv};
+use durasets::pmem::{self, CrashPolicy, Mode};
+use durasets::sets::Family;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { writer: stream, reader }
+    }
+
+    fn send(&mut self, line: &str) -> String {
+        writeln!(self.writer, "{line}").unwrap();
+        let mut out = String::new();
+        self.reader.read_line(&mut out).unwrap();
+        out.trim_end().to_string()
+    }
+}
+
+#[test]
+fn serve_crash_recover_serve() {
+    let _g = LOCK.lock().unwrap();
+    let mut cfg = Config::default();
+    cfg.family = Family::Soft;
+    cfg.shards = 3;
+    cfg.key_range = 1 << 14;
+    cfg.sim = true;
+    cfg.psync_ns = 0;
+
+    let kv = Arc::new(DuraKv::create(cfg));
+    let srv = server::serve(kv.clone(), 0).unwrap();
+    let addr = srv.addr;
+
+    // Phase 1: concurrent clients write through the wire.
+    let handles: Vec<_> = (0..3u64)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                for i in 0..200u64 {
+                    let k = t * 10_000 + i;
+                    assert_eq!(c.send(&format!("PUT {k} {}", k * 7)), "OK NEW");
+                }
+                // Delete the last 50.
+                for i in 150..200u64 {
+                    let k = t * 10_000 + i;
+                    assert_eq!(c.send(&format!("DEL {k}")), "OK DELETED");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(kv.len_approx(), 3 * 150);
+    let served_ops = kv.metrics.ops_total();
+    assert_eq!(served_ops, 3 * 250);
+
+    // Phase 2: stop the server, crash the machine, recover.
+    drop(srv);
+    let kv = Arc::try_unwrap(kv).map_err(|_| ()).expect("server released all refs");
+    let ticket = kv.crash(CrashPolicy::random(0.3, 99));
+    let (kv2, report) = ticket.recover().unwrap();
+    assert_eq!(report.members, 3 * 150);
+
+    // Phase 3: fresh server over the recovered store.
+    let kv2 = Arc::new(kv2);
+    let srv2 = server::serve(kv2.clone(), 0).unwrap();
+    let mut c = Client::connect(srv2.addr);
+    for t in 0..3u64 {
+        for i in 0..150u64 {
+            let k = t * 10_000 + i;
+            assert_eq!(c.send(&format!("GET {k}")), format!("FOUND {}", k * 7));
+        }
+        for i in 150..200u64 {
+            let k = t * 10_000 + i;
+            assert_eq!(c.send(&format!("GET {k}")), "MISSING");
+        }
+    }
+    assert_eq!(c.send("LEN"), format!("LEN {}", 3 * 150));
+    assert_eq!(c.send("QUIT"), "BYE");
+    drop(srv2);
+    pmem::set_mode(Mode::Perf);
+}
+
+#[test]
+fn backpressure_queue_survives_burst() {
+    let _g = LOCK.lock().unwrap();
+    let mut cfg = Config::default();
+    cfg.shards = 1; // single queue: the burst must be absorbed in order
+    cfg.key_range = 1 << 12;
+    cfg.psync_ns = 0;
+    cfg.sim = false;
+    let kv = Arc::new(DuraKv::create(cfg));
+    let srv = server::serve(kv.clone(), 0).unwrap();
+    // Blast >QUEUE_CAP pipelined requests down one connection.
+    let mut c = Client::connect(srv.addr);
+    for i in 0..3000u64 {
+        writeln!(c.writer, "PUT {i} {i}").unwrap();
+    }
+    c.writer.flush().unwrap();
+    let mut ok = 0;
+    for _ in 0..3000 {
+        let mut line = String::new();
+        c.reader.read_line(&mut line).unwrap();
+        if line.starts_with("OK NEW") {
+            ok += 1;
+        }
+    }
+    assert_eq!(ok, 3000);
+    assert_eq!(kv.len_approx(), 3000);
+    drop(srv);
+}

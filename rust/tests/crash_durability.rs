@@ -1,0 +1,248 @@
+//! Durable linearizability under concurrency and mid-operation power loss.
+//!
+//! Protocol: worker threads own disjoint key stripes and log every *acked*
+//! op. A flush-fault is armed so one thread dies by simulated power loss
+//! in the middle of an update (at a psync boundary — the adversarial
+//! instant); everyone else stops at an op boundary. Then the machine
+//! "crashes" (only flushed lines survive, plus random evictions), recovery
+//! runs, and we check, per stripe:
+//!
+//!   * every key whose last acked op was a successful insert is present
+//!     with the right value;
+//!   * every key whose last acked op was a successful remove is absent;
+//!   * the single in-flight op (the power-loss victim's) may have gone
+//!     either way — both outcomes are checked for consistency.
+//!
+//! This is Definition A.2 instantiated: acked ops happened-before the
+//! crash and must be reflected; the pending op may be linearized or not.
+
+use durasets::pmem::{self, CrashPolicy, Mode, POWER_LOSS};
+use durasets::sets::{self, ConcurrentSet, Family};
+use durasets::util::rng::Xoshiro256;
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Last acked state of a key: Some(value) = inserted, None = removed.
+type StripeLog = HashMap<u64, Option<u64>>;
+
+struct Outcome {
+    log: StripeLog,
+    /// The op that was in flight when the power died, if this thread was
+    /// the victim: (key, was_insert, value).
+    in_flight: Option<(u64, bool, u64)>,
+}
+
+fn worker(
+    set: &dyn ConcurrentSet,
+    stripe: u64,
+    nstripes: u64,
+    range: u64,
+    seed: u64,
+    stop: &AtomicBool,
+) -> Outcome {
+    let mut rng = Xoshiro256::new(seed ^ stripe);
+    let mut log: StripeLog = HashMap::new();
+    while !stop.load(Ordering::Relaxed) {
+        let k = rng.below(range / nstripes) * nstripes + stripe; // stripe-owned key
+        let ins = rng.below(2) == 0;
+        let v = rng.next_u64() >> 1;
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if ins {
+                set.insert(k, v)
+            } else {
+                set.remove(k)
+            }
+        }));
+        match result {
+            Ok(success) => {
+                if success {
+                    log.insert(k, if ins { Some(v) } else { None });
+                }
+            }
+            Err(payload) => {
+                // Power loss mid-op: record the pending op and die.
+                assert_eq!(
+                    payload.downcast_ref::<&str>().copied(),
+                    Some(POWER_LOSS),
+                    "unexpected panic in lock-free op"
+                );
+                return Outcome { log, in_flight: Some((k, ins, v)) };
+            }
+        }
+    }
+    Outcome { log, in_flight: None }
+}
+
+/// Silence the injected power-loss panics (keep real ones loud).
+fn quiet_power_loss_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<&str>() != Some(&POWER_LOSS) {
+                default_hook(info);
+            }
+        }));
+    });
+}
+
+fn run_torture(family: Family, evict_prob: f64, seed: u64) {
+    let _g = LOCK.lock().unwrap();
+    quiet_power_loss_panics();
+    pmem::set_mode(Mode::Sim);
+    pmem::set_psync_ns(0);
+    let range = 4096u64;
+    let nthreads = 4u64;
+
+    let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(family, 256));
+    let pool = set.durable_pool().unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let barrier = Arc::new(Barrier::new(nthreads as usize + 1));
+    let handles: Vec<_> = (0..nthreads)
+        .map(|t| {
+            let set = set.clone();
+            let stop = stop.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                worker(set.as_ref(), t, nthreads, range, seed, &stop)
+            })
+        })
+        .collect();
+    barrier.wait();
+    // Let them run, then kill one thread mid-psync and stop the rest.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    pmem::arm_flush_fault(50);
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    stop.store(true, Ordering::Relaxed);
+    let outcomes: Vec<Outcome> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    pmem::disarm_flush_fault();
+
+    let victims = outcomes.iter().filter(|o| o.in_flight.is_some()).count();
+    assert!(victims <= 1, "at most one thread dies per armed fault");
+
+    // Crash + recover.
+    set.prepare_crash();
+    drop(set);
+    pmem::crash(CrashPolicy::random(evict_prob, seed));
+    let recovered: Box<dyn ConcurrentSet> = match family {
+        Family::LinkFree => Box::new(sets::linkfree::recover_hash(pool, 256).0),
+        Family::Soft => Box::new(sets::soft::recover_hash(pool, 256).0),
+        Family::LogFree => Box::new(sets::logfree::recover_hash(pool).0),
+        Family::Volatile => unreachable!(),
+    };
+
+    // Check every stripe's acked history.
+    let mut checked = 0;
+    for o in &outcomes {
+        for (&k, &state) in &o.log {
+            if let Some((fk, _, _)) = o.in_flight {
+                if fk == k {
+                    continue; // pending op on this key: either way is legal
+                }
+            }
+            match state {
+                Some(v) => {
+                    assert_eq!(
+                        recovered.get(k),
+                        Some(v),
+                        "{family}: acked insert of {k} lost (evict={evict_prob})"
+                    );
+                }
+                None => {
+                    assert!(
+                        !recovered.contains(k),
+                        "{family}: acked remove of {k} resurrected"
+                    );
+                }
+            }
+            checked += 1;
+        }
+        // Pending op: membership may be either, but if present the value
+        // must be the pending insert's value or the last acked value.
+        if let Some((k, ins, v)) = o.in_flight {
+            if let Some(got) = recovered.get(k) {
+                let last_acked = o.log.get(&k).copied().flatten();
+                let legal = (ins && got == v) || last_acked == Some(got);
+                assert!(legal, "{family}: key {k} has impossible value {got}");
+            }
+        }
+    }
+    assert!(checked > 100, "{family}: torture too weak ({checked} checks)");
+    pmem::set_mode(Mode::Perf);
+}
+
+#[test]
+fn linkfree_torture_pessimistic() {
+    run_torture(Family::LinkFree, 0.0, 0x71);
+}
+
+#[test]
+fn linkfree_torture_random_eviction() {
+    run_torture(Family::LinkFree, 0.5, 0x72);
+}
+
+#[test]
+fn soft_torture_pessimistic() {
+    run_torture(Family::Soft, 0.0, 0x73);
+}
+
+#[test]
+fn soft_torture_random_eviction() {
+    run_torture(Family::Soft, 0.5, 0x74);
+}
+
+#[test]
+fn logfree_torture_pessimistic() {
+    run_torture(Family::LogFree, 0.0, 0x75);
+}
+
+#[test]
+fn logfree_torture_random_eviction() {
+    run_torture(Family::LogFree, 0.5, 0x76);
+}
+
+/// The §3.3 validity-race scenario: two threads race inserts of the same
+/// key; under random eviction the loser's node may hit NVRAM without an
+/// explicit flush. Recovery must never see two members with one key.
+#[test]
+fn section_3_3_two_insert_race_no_duplicates() {
+    let _g = LOCK.lock().unwrap();
+    pmem::set_mode(Mode::Sim);
+    pmem::set_psync_ns(0);
+    for round in 0..20u64 {
+        let set = sets::linkfree::LfHash::new(8);
+        let pool = set.pool_id();
+        let set = Arc::new(set);
+        let barrier = Arc::new(Barrier::new(2));
+        let handles: Vec<_> = (0..2u64)
+            .map(|t| {
+                let set = set.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    for k in 0..64u64 {
+                        set.insert(k, t * 1000 + k);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        set.crash_preserve();
+        drop(set);
+        pmem::crash(CrashPolicy::random(1.0, round)); // everything persists
+        let (recovered, stats) = sets::linkfree::recover_hash(pool, 8);
+        assert_eq!(stats.members, 64, "round {round}");
+        for k in 0..64u64 {
+            assert!(recovered.contains(k));
+        }
+    }
+    pmem::set_mode(Mode::Perf);
+}

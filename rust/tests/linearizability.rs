@@ -1,0 +1,222 @@
+//! True linearizability checking of concurrent histories (Wing & Gong /
+//! WGL style), applied to every set family.
+//!
+//! Worker threads record timestamped invocation/response pairs for random
+//! ops over a tiny key space. The checker searches for a linearization:
+//! a total order that (a) respects real-time order (if resp(q) < inv(p),
+//! q precedes p), (b) respects per-thread program order, and (c) replays
+//! correctly against the sequential set specification.
+//!
+//! Tractability: per-thread subhistories are sequential, so the DFS state
+//! is (per-thread progress vector, abstract set state) — memoizable and
+//! tiny for small key spaces. This checks the *volatile* linearizability
+//! claims (paper Appendix B/C assume them); durable linearizability under
+//! crashes is covered by `crash_durability.rs`.
+
+use durasets::sets::{self, ConcurrentSet, Family};
+use durasets::util::rng::Xoshiro256;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Insert,
+    Remove,
+    Contains,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    kind: Kind,
+    key: u64,
+    result: bool,
+    inv: u64,
+    resp: u64,
+}
+
+/// One thread's recorded (sequential) subhistory.
+type ThreadHistory = Vec<Event>;
+
+fn record(
+    family: Family,
+    threads: usize,
+    ops_per_thread: usize,
+    keys: u64,
+    seed: u64,
+) -> Vec<ThreadHistory> {
+    let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(family, 4));
+    let clock = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(threads));
+    let handles: Vec<_> = (0..threads as u64)
+        .map(|t| {
+            let set = set.clone();
+            let clock = clock.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(seed ^ (t * 0x9E37));
+                let mut hist = Vec::with_capacity(ops_per_thread);
+                barrier.wait();
+                for _ in 0..ops_per_thread {
+                    let key = rng.below(keys);
+                    let kind = match rng.below(3) {
+                        0 => Kind::Insert,
+                        1 => Kind::Remove,
+                        _ => Kind::Contains,
+                    };
+                    let inv = clock.fetch_add(1, Ordering::SeqCst);
+                    let result = match kind {
+                        Kind::Insert => set.insert(key, key),
+                        Kind::Remove => set.remove(key),
+                        Kind::Contains => set.contains(key),
+                    };
+                    let resp = clock.fetch_add(1, Ordering::SeqCst);
+                    hist.push(Event { kind, key, result, inv, resp });
+                }
+                hist
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Replay `e` against the abstract set state (bitmask over keys < 64).
+/// Returns the new state, or None if the observed result contradicts the
+/// sequential specification.
+fn step(state: u64, e: &Event) -> Option<u64> {
+    let bit = 1u64 << e.key;
+    match e.kind {
+        Kind::Insert => {
+            let fresh = state & bit == 0;
+            if e.result != fresh {
+                return None;
+            }
+            Some(state | bit)
+        }
+        Kind::Remove => {
+            let present = state & bit != 0;
+            if e.result != present {
+                return None;
+            }
+            Some(state & !bit)
+        }
+        Kind::Contains => {
+            if e.result != (state & bit != 0) {
+                return None;
+            }
+            Some(state)
+        }
+    }
+}
+
+/// WGL search: is there a valid linearization?
+fn linearizable(hist: &[ThreadHistory]) -> bool {
+    let n = hist.len();
+    let mut memo: HashSet<(Vec<usize>, u64)> = HashSet::new();
+    // Iterative DFS over (progress vector, state).
+    let mut stack = vec![(vec![0usize; n], 0u64)];
+    while let Some((prog, state)) = stack.pop() {
+        if prog.iter().zip(hist).all(|(&i, h)| i == h.len()) {
+            return true;
+        }
+        if !memo.insert((prog.clone(), state)) {
+            continue;
+        }
+        // Candidate next op from each thread: its front unlinearized op p
+        // is admissible iff no other unlinearized op q responded before
+        // p's invocation (real-time order).
+        for t in 0..n {
+            let i = prog[t];
+            if i == hist[t].len() {
+                continue;
+            }
+            let p = &hist[t][i];
+            let mut admissible = true;
+            for (u, h) in hist.iter().enumerate() {
+                for q in &h[prog[u]..] {
+                    if (u != t || q.inv != p.inv) && q.resp < p.inv {
+                        admissible = false;
+                        break;
+                    }
+                }
+                if !admissible {
+                    break;
+                }
+            }
+            if !admissible {
+                continue;
+            }
+            if let Some(next_state) = step(state, p) {
+                let mut next_prog = prog.clone();
+                next_prog[t] += 1;
+                stack.push((next_prog, next_state));
+            }
+        }
+    }
+    false
+}
+
+fn check_family(family: Family, rounds: u64) {
+    for round in 0..rounds {
+        let hist = record(family, 3, 60, 4, 0xC0DE ^ round);
+        let total: usize = hist.iter().map(|h| h.len()).sum();
+        assert!(
+            linearizable(&hist),
+            "{family}: history of {total} ops is NOT linearizable (round {round}): {hist:#?}"
+        );
+    }
+}
+
+#[test]
+fn linkfree_hash_is_linearizable() {
+    check_family(Family::LinkFree, 8);
+}
+
+#[test]
+fn soft_hash_is_linearizable() {
+    check_family(Family::Soft, 8);
+}
+
+#[test]
+fn logfree_hash_is_linearizable() {
+    check_family(Family::LogFree, 8);
+}
+
+#[test]
+fn volatile_hash_is_linearizable() {
+    check_family(Family::Volatile, 8);
+}
+
+/// The checker itself must reject broken histories (meta-test).
+#[test]
+fn checker_rejects_impossible_history() {
+    // Thread A: insert(1) -> true, completing before thread B starts;
+    // thread B: contains(1) -> false. No linearization exists.
+    let a = vec![Event { kind: Kind::Insert, key: 1, result: true, inv: 0, resp: 1 }];
+    let b = vec![Event { kind: Kind::Contains, key: 1, result: false, inv: 2, resp: 3 }];
+    assert!(!linearizable(&[a, b]));
+
+    // Overlapping version IS linearizable (contains may precede insert).
+    let a = vec![Event { kind: Kind::Insert, key: 1, result: true, inv: 0, resp: 3 }];
+    let b = vec![Event { kind: Kind::Contains, key: 1, result: false, inv: 1, resp: 2 }];
+    assert!(linearizable(&[a, b]));
+
+    // Double-successful insert of the same key with no remove: impossible.
+    let a = vec![Event { kind: Kind::Insert, key: 2, result: true, inv: 0, resp: 1 }];
+    let b = vec![Event { kind: Kind::Insert, key: 2, result: true, inv: 2, resp: 3 }];
+    assert!(!linearizable(&[a, b]));
+}
+
+/// Larger memoization sanity: states dedup across interleavings.
+#[test]
+fn memoization_keeps_search_tractable() {
+    use std::time::Instant;
+    let hist = record(Family::Soft, 3, 100, 3, 0xFEED0);
+    let t0 = Instant::now();
+    assert!(linearizable(&hist));
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "checker blew up: {:?}",
+        t0.elapsed()
+    );
+}

@@ -1,0 +1,172 @@
+//! Randomized property tests (in-repo harness; proptest is not in the
+//! offline crate set). Each property runs across many seeds; a failure
+//! reports the seed for deterministic reproduction.
+//!
+//! Properties:
+//!   P1 sequential model equivalence — any op sequence on any family ==
+//!      BTreeMap model (list + hash).
+//!   P2 crash idempotence — recover(crash(S)) == persisted view of S, and
+//!      recovering twice yields the same set.
+//!   P3 router/stripe composition — DuraKv over N shards == one flat model.
+//!   P4 config roundtrip — every generated config re-parses to itself.
+
+use durasets::config::{Config, Structure};
+use durasets::coordinator::DuraKv;
+use durasets::pmem::{self, CrashPolicy, Mode};
+use durasets::sets::{self, ConcurrentSet, Family};
+use durasets::util::rng::Xoshiro256;
+use std::collections::BTreeMap;
+
+static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+const SEEDS: u64 = 12;
+
+fn families() -> [Family; 4] {
+    Family::ALL
+}
+
+#[test]
+fn p1_model_equivalence_all_families() {
+    for family in families() {
+        for structure in [Structure::Hash, Structure::List] {
+            for seed in 0..SEEDS {
+                let set: Box<dyn ConcurrentSet> = match structure {
+                    Structure::Hash => sets::new_hash(family, 16),
+                    Structure::List => sets::new_list(family),
+                };
+                let mut model: BTreeMap<u64, u64> = BTreeMap::new();
+                let mut rng = Xoshiro256::new(0xAA ^ seed.wrapping_mul(0x9E37));
+                for step in 0..3000 {
+                    let k = rng.below(48);
+                    let ctx = format!("{family:?}/{structure:?} seed={seed} step={step} key={k}");
+                    match rng.below(4) {
+                        0 | 1 => {
+                            let v = rng.next_u64();
+                            assert_eq!(
+                                set.insert(k, v),
+                                !model.contains_key(&k),
+                                "insert {ctx}"
+                            );
+                            model.entry(k).or_insert(v);
+                        }
+                        2 => {
+                            assert_eq!(set.remove(k), model.remove(&k).is_some(), "remove {ctx}");
+                        }
+                        _ => {
+                            assert_eq!(set.get(k), model.get(&k).copied(), "get {ctx}");
+                        }
+                    }
+                }
+                assert_eq!(set.len_approx(), model.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn p2_crash_idempotence() {
+    let _g = LOCK.lock().unwrap();
+    pmem::set_mode(Mode::Sim);
+    pmem::set_psync_ns(0);
+    for family in [Family::LinkFree, Family::Soft, Family::LogFree] {
+        for seed in 0..SEEDS {
+            let set = sets::new_hash(family, 32);
+            let pool = set.durable_pool().unwrap();
+            let mut model: BTreeMap<u64, u64> = BTreeMap::new();
+            let mut rng = Xoshiro256::new(0xBB ^ seed);
+            for _ in 0..2000 {
+                let k = rng.below(128);
+                if rng.below(2) == 0 {
+                    let v = rng.next_u64();
+                    if set.insert(k, v) {
+                        model.insert(k, v);
+                    }
+                } else if set.remove(k) {
+                    model.remove(&k);
+                }
+            }
+            set.prepare_crash();
+            drop(set);
+            pmem::crash(CrashPolicy::random((seed % 3) as f64 * 0.4, seed));
+
+            let recover = |pool| -> Box<dyn ConcurrentSet> {
+                match family {
+                    Family::LinkFree => Box::new(sets::linkfree::recover_hash(pool, 32).0),
+                    Family::Soft => Box::new(sets::soft::recover_hash(pool, 32).0),
+                    Family::LogFree => Box::new(sets::logfree::recover_hash(pool).0),
+                    Family::Volatile => unreachable!(),
+                }
+            };
+            let r1 = recover(pool);
+            // All ops completed before the crash => exact match.
+            assert_eq!(r1.len_approx(), model.len(), "{family:?} seed={seed}");
+            for (&k, &v) in &model {
+                assert_eq!(r1.get(k), Some(v), "{family:?} seed={seed} key={k}");
+            }
+            // Crash again with NO ops in between: recovery must be
+            // idempotent.
+            r1.prepare_crash();
+            drop(r1);
+            pmem::crash(CrashPolicy::PESSIMISTIC);
+            let r2 = recover(pool);
+            assert_eq!(r2.len_approx(), model.len(), "{family:?} seed={seed} (2nd)");
+            for (&k, &v) in &model {
+                assert_eq!(r2.get(k), Some(v), "{family:?} seed={seed} key={k} (2nd)");
+            }
+        }
+    }
+    pmem::set_mode(Mode::Perf);
+}
+
+#[test]
+fn p3_sharded_kv_equals_flat_model() {
+    for seed in 0..SEEDS {
+        let mut cfg = Config::default();
+        cfg.shards = 1 + (seed as usize % 5);
+        cfg.key_range = 1024;
+        cfg.psync_ns = 0;
+        let kv = DuraKv::create(cfg);
+        let mut model: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut rng = Xoshiro256::new(0xCC ^ seed);
+        for _ in 0..3000 {
+            let k = rng.below(512);
+            match rng.below(4) {
+                0 | 1 => {
+                    let v = rng.next_u64();
+                    assert_eq!(kv.put(k, v), !model.contains_key(&k), "seed={seed}");
+                    model.entry(k).or_insert(v);
+                }
+                2 => {
+                    assert_eq!(kv.del(k), model.remove(&k).is_some(), "seed={seed}");
+                }
+                _ => {
+                    assert_eq!(kv.get(k), model.get(&k).copied(), "seed={seed}");
+                }
+            }
+        }
+        assert_eq!(kv.len_approx(), model.len(), "seed={seed}");
+    }
+}
+
+#[test]
+fn p4_config_values_roundtrip() {
+    for seed in 0..SEEDS {
+        let mut rng = Xoshiro256::new(0xDD ^ seed);
+        let families = ["soft", "link-free", "log-free", "volatile"];
+        let fam = families[rng.below(4) as usize];
+        let shards = 1 + rng.below(8);
+        let range = 1 + rng.below(1 << 20);
+        let pct = rng.below(101);
+        let overrides = vec![
+            format!("family={fam}"),
+            format!("shards={shards}"),
+            format!("key_range={range}"),
+            format!("read_pct={pct}"),
+        ];
+        let cfg = Config::load(None, &overrides).unwrap();
+        assert_eq!(cfg.family, Family::parse(fam).unwrap(), "seed={seed}");
+        assert_eq!(cfg.shards as u64, shards);
+        assert_eq!(cfg.key_range, range);
+        assert_eq!(cfg.read_pct as u64, pct);
+    }
+}

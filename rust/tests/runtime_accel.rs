@@ -1,0 +1,133 @@
+//! Integration: XLA-accelerated recovery == pure-Rust recovery,
+//! bit-for-bit, through a real crash/recovery cycle.
+
+use durasets::pmem::{self, CrashPolicy, Mode};
+use durasets::runtime::recovery_accel::{
+    recover_linkfree_hash_accel, recover_soft_hash_accel,
+};
+use durasets::runtime::RecoveryPlanner;
+use durasets::sets::{linkfree, soft, ConcurrentSet};
+use durasets::util::rng::Xoshiro256;
+
+fn have_artifacts() -> bool {
+    durasets::runtime::artifacts_dir().join("manifest.json").exists()
+}
+
+/// Whole-process serialisation: crash() is global.
+static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn soft_accel_recovery_matches_rust_recovery() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let _g = LOCK.lock().unwrap();
+    pmem::set_mode(Mode::Sim);
+
+    // Two identical structures, driven by the same op sequence.
+    let a = soft::SoftHash::new(64);
+    let b = soft::SoftHash::new(64);
+    let mut rng = Xoshiro256::new(0xACCE1);
+    for _ in 0..5000 {
+        let k = rng.below(512);
+        match rng.below(3) {
+            0 => {
+                a.insert(k, k * 3);
+                b.insert(k, k * 3);
+            }
+            1 => {
+                a.remove(k);
+                b.remove(k);
+            }
+            _ => {}
+        }
+    }
+    let (ida, idb) = (a.pool_id(), b.pool_id());
+    a.crash_preserve();
+    b.crash_preserve();
+    drop(a);
+    drop(b);
+    pmem::crash(CrashPolicy::random(0.2, 3));
+
+    let planner = RecoveryPlanner::load().unwrap();
+    let (ha, sa) = recover_soft_hash_accel(&planner, ida, 64).unwrap();
+    let (hb, sb) = soft::recover_hash(idb, 64);
+
+    assert_eq!(sa.members, sb.members, "accel vs rust member count");
+    let mut snap_a = ha.snapshot();
+    let mut snap_b = hb.snapshot();
+    snap_a.sort_unstable();
+    snap_b.sort_unstable();
+    assert_eq!(snap_a, snap_b, "recovered contents differ");
+
+    // Both recovered structures stay fully operational.
+    for k in 0..100u64 {
+        assert_eq!(ha.insert(10_000 + k, k), hb.insert(10_000 + k, k));
+    }
+    pmem::set_mode(Mode::Perf);
+}
+
+#[test]
+fn linkfree_accel_recovery_matches_rust_recovery() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let _g = LOCK.lock().unwrap();
+    pmem::set_mode(Mode::Sim);
+
+    let a = linkfree::LfHash::new(32);
+    let b = linkfree::LfHash::new(32);
+    let mut rng = Xoshiro256::new(0xACCE2);
+    for _ in 0..5000 {
+        let k = rng.below(400);
+        match rng.below(3) {
+            0 => {
+                a.insert(k, k + 9);
+                b.insert(k, k + 9);
+            }
+            1 => {
+                a.remove(k);
+                b.remove(k);
+            }
+            _ => {}
+        }
+    }
+    let (ida, idb) = (a.pool_id(), b.pool_id());
+    a.crash_preserve();
+    b.crash_preserve();
+    drop(a);
+    drop(b);
+    pmem::crash(CrashPolicy::PESSIMISTIC);
+
+    let planner = RecoveryPlanner::load().unwrap();
+    let (ha, sa) = recover_linkfree_hash_accel(&planner, ida, 32).unwrap();
+    let (hb, sb) = linkfree::recover_hash(idb, 32);
+
+    assert_eq!(sa.members, sb.members);
+    let mut snap_a = ha.snapshot();
+    let mut snap_b = hb.snapshot();
+    snap_a.sort_unstable();
+    snap_b.sort_unstable();
+    assert_eq!(snap_a, snap_b);
+    pmem::set_mode(Mode::Perf);
+}
+
+#[test]
+fn workload_accel_stream_is_deterministic_and_plausible() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let gen = durasets::runtime::WorkloadGen::load().unwrap();
+    let (k1, o1) = gen.batch(42, 0, 1024, 900_000).unwrap();
+    let (k2, o2) = gen.batch(42, 0, 1024, 900_000).unwrap();
+    assert_eq!(k1, k2, "same params => same stream");
+    assert_eq!(o1, o2);
+    let (k3, _) = gen.batch(42, gen.batch_len() as u64, 1024, 900_000).unwrap();
+    assert_ne!(k1, k3, "different base => different stream");
+    assert!(k1.iter().all(|&k| k < 1024));
+    let reads = o1.iter().filter(|&&o| o == 0).count() as f64 / o1.len() as f64;
+    assert!((0.88..0.92).contains(&reads));
+}

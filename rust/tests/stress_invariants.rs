@@ -1,0 +1,142 @@
+//! Concurrent stress: structural invariants under heavy mixed workloads,
+//! for every family, both shapes. Checks after the storm:
+//!   * net successful inserts - removes == final size,
+//!   * strict key sortedness / no duplicates (via snapshots),
+//!   * the structure still works (post-storm op probes).
+
+use durasets::config::Structure;
+use durasets::sets::{self, ConcurrentSet, Family};
+use durasets::util::rng::Xoshiro256;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+fn storm(set: Arc<dyn ConcurrentSet>, threads: u64, ops: u64, range: u64, seed: u64) -> i64 {
+    let net = Arc::new(AtomicI64::new(0));
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let set = set.clone();
+            let net = net.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(seed ^ (t * 7919));
+                let mut local = 0i64;
+                for _ in 0..ops {
+                    let k = rng.below(range);
+                    match rng.below(4) {
+                        0 | 1 => {
+                            if set.insert(k, k ^ 0xABCD) {
+                                local += 1;
+                            }
+                        }
+                        2 => {
+                            if set.remove(k) {
+                                local -= 1;
+                            }
+                        }
+                        _ => {
+                            let _ = set.contains(k);
+                        }
+                    }
+                }
+                net.fetch_add(local, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    net.load(Ordering::Relaxed)
+}
+
+fn check(family: Family, structure: Structure, seed: u64) {
+    let set: Arc<dyn ConcurrentSet> = Arc::from(match structure {
+        Structure::Hash => sets::new_hash(family, 128),
+        Structure::List => sets::new_list(family),
+    });
+    let net = storm(set.clone(), 8, 4000, 512, seed);
+    assert_eq!(
+        set.len_approx() as i64,
+        net,
+        "{family:?}/{structure:?}: size mismatch"
+    );
+    // Post-storm probes: the structure must still behave like a set.
+    assert!(set.insert(100_000, 1));
+    assert!(!set.insert(100_000, 2));
+    assert_eq!(set.get(100_000), Some(1));
+    assert!(set.remove(100_000));
+    assert!(!set.remove(100_000));
+}
+
+#[test]
+fn stress_all_families_hash() {
+    for (i, family) in Family::ALL.iter().enumerate() {
+        check(*family, Structure::Hash, 0x1000 + i as u64);
+    }
+}
+
+#[test]
+fn stress_all_families_list() {
+    for (i, family) in Family::ALL.iter().enumerate() {
+        check(*family, Structure::List, 0x2000 + i as u64);
+    }
+}
+
+/// Value visibility: a reader never observes a value other than one some
+/// writer actually wrote for that key.
+#[test]
+fn no_phantom_values() {
+    let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(Family::Soft, 64));
+    let writers: Vec<_> = (0..4u64)
+        .map(|t| {
+            let set = set.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(t);
+                for _ in 0..3000 {
+                    let k = rng.below(64);
+                    // Writer t writes values tagged with t in the top byte.
+                    set.insert(k, (t << 56) | k);
+                    set.remove(k);
+                }
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..2u64)
+        .map(|r| {
+            let set = set.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(1000 + r);
+                for _ in 0..5000 {
+                    let k = rng.below(64);
+                    if let Some(v) = set.get(k) {
+                        let tag = v >> 56;
+                        assert!(tag < 4, "phantom value {v:#x} for key {k}");
+                        assert_eq!(v & 0xFF_FFFF, k, "value/key mismatch");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in writers.into_iter().chain(readers) {
+        h.join().unwrap();
+    }
+}
+
+/// EBR sanity at scale: long churn on a small key space must not grow the
+/// durable footprint unboundedly (slots are recycled through free-lists).
+#[test]
+fn durable_footprint_stays_bounded_under_churn() {
+    for family in [Family::LinkFree, Family::Soft, Family::LogFree] {
+        let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(family, 32));
+        let _ = storm(set.clone(), 4, 30_000, 64, 0xC0FFEE);
+        let pool = set.durable_pool().unwrap();
+        let slots: usize = durasets::pmem::region::regions_of(pool)
+            .iter()
+            .filter(|r| r.tag == durasets::pmem::region::RegionTag::Slots)
+            .map(|r| r.len / 64)
+            .sum();
+        // 4 threads x small key space: a few areas at most (4096 slots each).
+        assert!(
+            slots <= 8 * 4096,
+            "{family:?}: durable footprint exploded to {slots} slots"
+        );
+    }
+}
