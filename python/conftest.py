@@ -1,0 +1,11 @@
+"""Pytest bootstrap for the python/ tree.
+
+Puts this directory on sys.path so the test modules can `from compile
+import ...` regardless of the invocation directory (`pytest python/tests`,
+`pytest`, or running from within python/).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -2,6 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# See test_kernels.py: skip cleanly when hypothesis is unavailable.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile import model

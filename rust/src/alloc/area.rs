@@ -57,6 +57,10 @@ pub struct DurablePool {
     /// When true, `Drop` leaves the regions registered (crash simulation:
     /// the durable image must survive for recovery to adopt).
     preserve_on_drop: std::sync::atomic::AtomicBool,
+    /// Balance of `alloc()` minus `free()` calls on this handle (leak
+    /// assertions in tests). Recovery adopts pools with fresh counters and
+    /// frees slots it never allocated, so adopted pools can go negative.
+    outstanding: std::sync::atomic::AtomicI64,
 }
 
 unsafe impl Send for DurablePool {}
@@ -80,6 +84,7 @@ impl DurablePool {
             init_slot,
             per_thread,
             preserve_on_drop: std::sync::atomic::AtomicBool::new(false),
+            outstanding: std::sync::atomic::AtomicI64::new(0),
         }
     }
 
@@ -106,6 +111,8 @@ impl DurablePool {
     /// pattern a previous `free` left — valid-and-deleted in both
     /// algorithms' schemes).
     pub fn alloc(&self) -> *mut u8 {
+        self.outstanding
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let ta = self.local();
         if let Some(p) = ta.free.pop() {
             return p;
@@ -137,7 +144,15 @@ impl DurablePool {
     /// guarantee the slot is unreachable (EBR grace period elapsed) and
     /// already carries a recoverable-as-free pattern.
     pub fn free(&self, slot: *mut u8) {
+        self.outstanding
+            .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
         self.local().free.push(slot);
+    }
+
+    /// `alloc()` minus `free()` balance (see the field docs; 0 after a
+    /// leak-free teardown of a fresh pool).
+    pub fn outstanding(&self) -> i64 {
+        self.outstanding.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// All durable regions of this pool (recovery scan).

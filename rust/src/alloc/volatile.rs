@@ -33,6 +33,8 @@ impl ThreadSlab {
 pub struct VolatilePool {
     slot_size: usize,
     per_thread: Box<[CachePadded<UnsafeCell<ThreadSlab>>]>,
+    /// Balance of `alloc()` minus `free()` calls (leak assertions).
+    outstanding: std::sync::atomic::AtomicI64,
 }
 
 unsafe impl Send for VolatilePool {}
@@ -46,6 +48,7 @@ impl VolatilePool {
             per_thread: (0..MAX_THREADS)
                 .map(|_| CachePadded::new(UnsafeCell::new(ThreadSlab::new())))
                 .collect(),
+            outstanding: std::sync::atomic::AtomicI64::new(0),
         }
     }
 
@@ -55,6 +58,8 @@ impl VolatilePool {
 
     /// Allocate one uninitialised slot.
     pub fn alloc(&self) -> *mut u8 {
+        self.outstanding
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         // Safety: tid-indexed, single-thread access.
         let slab = unsafe { &mut *self.per_thread[tid()].get() };
         if let Some(p) = slab.free.pop() {
@@ -75,8 +80,15 @@ impl VolatilePool {
     /// Return a slot to the calling thread's free-list (caller guarantees
     /// unreachability, i.e. EBR grace elapsed).
     pub fn free(&self, p: *mut u8) {
+        self.outstanding
+            .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
         let slab = unsafe { &mut *self.per_thread[tid()].get() };
         slab.free.push(p);
+    }
+
+    /// `alloc()` minus `free()` balance (0 after a leak-free teardown).
+    pub fn outstanding(&self) -> i64 {
+        self.outstanding.load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 

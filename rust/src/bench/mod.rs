@@ -55,8 +55,9 @@ pub fn run_phase(
 ) -> Sample {
     let stop = AtomicBool::new(false);
     let barrier = Barrier::new(threads + 1);
-    let before = stats::snapshot();
     let mut total_ops = 0u64;
+    let mut flushes = 0u64;
+    let mut fences = 0u64;
     let mut elapsed = Duration::ZERO;
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(threads);
@@ -66,6 +67,10 @@ pub fn run_phase(
             handles.push(scope.spawn(move || {
                 let mut stream = spec.stream(t as u64);
                 barrier.wait();
+                // Meter this worker's own counters: a process-global
+                // snapshot would charge whatever else the process runs
+                // (parallel tests!) to this phase.
+                let before = stats::thread_snapshot();
                 let mut ops = 0u64;
                 while !stop.load(Ordering::Relaxed) {
                     // Batch 64 ops per stop-flag check.
@@ -84,7 +89,7 @@ pub fn run_phase(
                     }
                     ops += 64;
                 }
-                ops
+                (ops, stats::thread_snapshot().since(&before))
             }));
         }
         barrier.wait();
@@ -92,12 +97,14 @@ pub fn run_phase(
         std::thread::sleep(duration);
         stop.store(true, Ordering::Relaxed);
         for h in handles {
-            total_ops += h.join().unwrap();
+            let (ops, d) = h.join().unwrap();
+            total_ops += ops;
+            flushes += d.flushes;
+            fences += d.fences;
         }
         elapsed = t0.elapsed();
     });
-    let delta = stats::snapshot().since(&before);
-    Sample { ops: total_ops, elapsed, flushes: delta.flushes, fences: delta.fences }
+    Sample { ops: total_ops, elapsed, flushes, fences }
 }
 
 /// Build + pre-fill one structure for a data point.

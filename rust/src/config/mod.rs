@@ -172,13 +172,17 @@ impl Config {
     }
 
     /// Apply the pmem-level settings (mode + psync latency) globally.
+    ///
+    /// Only *enables* Sim mode; it never downgrades to Perf. The mode is a
+    /// process-global, and a non-sim store created while a crash test (or
+    /// another sim store) is live must not silently stop its shadowing —
+    /// the seed did exactly that and made the crash suites flaky. Leaving
+    /// Sim on merely costs a shadow copy per flush.
     pub fn apply_pmem(&self) {
         crate::pmem::set_psync_ns(self.psync_ns);
-        crate::pmem::set_mode(if self.sim {
-            crate::pmem::Mode::Sim
-        } else {
-            crate::pmem::Mode::Perf
-        });
+        if self.sim {
+            crate::pmem::set_mode(crate::pmem::Mode::Sim);
+        }
     }
 }
 

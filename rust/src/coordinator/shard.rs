@@ -63,18 +63,21 @@ impl Shard {
             }
             (Family::Volatile, Structure::List, _) => sets::new_list(Family::Volatile),
             (family, structure, Some(pool)) => match (family, structure) {
+                // Hash shards are resizable: recover the family list and
+                // re-wrap it, restoring the persisted bucket-count epoch
+                // (meta.nbuckets is only the pre-epoch fallback).
                 (Family::LinkFree, Structure::Hash) => {
-                    Box::new(sets::linkfree::recover_hash(pool, meta.nbuckets).0)
+                    Box::new(sets::resizable::recover_linkfree(pool, meta.nbuckets).0)
                 }
                 (Family::LinkFree, Structure::List) => {
                     Box::new(sets::linkfree::recover_list(pool).0)
                 }
                 (Family::Soft, Structure::Hash) => {
-                    Box::new(sets::soft::recover_hash(pool, meta.nbuckets).0)
+                    Box::new(sets::resizable::recover_soft(pool, meta.nbuckets).0)
                 }
                 (Family::Soft, Structure::List) => Box::new(sets::soft::recover_list(pool).0),
                 (Family::LogFree, Structure::Hash) => {
-                    Box::new(sets::logfree::recover_hash(pool).0)
+                    Box::new(sets::resizable::recover_logfree(pool, meta.nbuckets).0)
                 }
                 (Family::LogFree, Structure::List) => {
                     Box::new(sets::logfree::recover_list(pool).0)

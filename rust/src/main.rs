@@ -220,12 +220,13 @@ fn cmd_recover_demo(args: &Args) -> Result<()> {
         rep.wall,
         (rep.members + rep.reclaimed) as f64 / rep.wall.as_secs_f64() / 1e6
     );
-    // Crash again and recover through the XLA artifacts.
+    // Crash again and recover through the accel entry point (routes to the
+    // same exact Rust path for resizable hash shards; see recover_accel).
     let _ = metas;
     let ticket = kv2.crash(CrashPolicy::PESSIMISTIC);
     let (kv3, rep2) = ticket.recover_accel()?;
     println!(
-        "accel recovery: {} members, {} reclaimed slots, {:?} ({:.1} Mslots/s) [XLA artifacts]",
+        "2nd recovery:   {} members, {} reclaimed slots, {:?} ({:.1} Mslots/s)",
         rep2.members,
         rep2.reclaimed,
         rep2.wall,

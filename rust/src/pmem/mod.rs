@@ -208,9 +208,55 @@ impl CrashPolicy {
 ///
 /// Returns the number of lines that survived via random eviction (0 under
 /// the pessimistic policy).
+///
+/// Whole-process semantics: every registered region of every pool reverts,
+/// so this is only safe when the process runs nothing else (demos, the
+/// CLI). Concurrent test binaries must use [`crash_pools`] instead — the
+/// seed suite called this from per-module tests and zeroed unrelated
+/// live structures mid-test.
 pub fn crash(policy: CrashPolicy) -> usize {
     assert_eq!(mode(), Mode::Sim, "crash() requires pmem Mode::Sim");
-    shadow::crash_all(policy)
+    shadow::crash_all(policy, None)
+}
+
+/// [`crash`], scoped to the durable regions of the given pools only.
+///
+/// This is the crash entry point for tests and for the coordinator (which
+/// knows its shards' pools): other pools' regions — including structures
+/// owned by concurrently running tests — are left untouched. Named root
+/// cells live in their own registry pool and are *not* reverted; they are
+/// write-through anchors (every update is immediately persisted), so their
+/// working content is their persisted content outside a mid-op window.
+pub fn crash_pools(policy: CrashPolicy, pools: &[PoolId]) -> usize {
+    assert_eq!(mode(), Mode::Sim, "crash_pools() requires pmem Mode::Sim");
+    shadow::crash_all(policy, Some(pools))
+}
+
+/// RAII guard serializing simulated-crash testing process-wide.
+///
+/// [`Mode`] is a process-global: two crash tests in different modules each
+/// flipping Sim→Perf with only module-local locks corrupt each other (the
+/// first test's flushes silently stop shadowing when the second restores
+/// Perf). Every test that needs Sim mode takes this session instead; the
+/// guard holds a global lock, enters Sim, and restores Perf on drop.
+pub struct SimSession {
+    _lock: std::sync::MutexGuard<'static, ()>,
+}
+
+impl Drop for SimSession {
+    fn drop(&mut self) {
+        set_mode(Mode::Perf);
+    }
+}
+
+/// Enter [`Mode::Sim`] under the global crash-test lock (see [`SimSession`]).
+pub fn sim_session() -> SimSession {
+    static SIM_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    // A previous test may have panicked on an assertion while holding the
+    // session; the poison carries no state worth propagating.
+    let lock = SIM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_mode(Mode::Sim);
+    SimSession { _lock: lock }
 }
 
 #[cfg(test)]

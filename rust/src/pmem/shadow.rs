@@ -28,14 +28,20 @@ pub(crate) fn shadow_copy_line(ptr: *const u8) {
     }
 }
 
-/// Revert every registered region to its persisted image, applying the
-/// eviction policy first. Returns how many unflushed lines survived via
-/// random eviction.
-pub(crate) fn crash_all(policy: CrashPolicy) -> usize {
+/// Revert registered regions to their persisted image, applying the
+/// eviction policy first. `pools = None` reverts everything (whole-process
+/// crash); `Some(pools)` scopes the blast radius to those pools' regions.
+/// Returns how many unflushed lines survived via random eviction.
+pub(crate) fn crash_all(policy: CrashPolicy, pools: Option<&[super::PoolId]>) -> usize {
     let reg = REGISTRY.write().unwrap();
     let mut rng = Xoshiro256::new(policy.seed ^ 0xC5A5_17E0_D00D_F00D);
     let mut evicted = 0usize;
     for r in reg.iter() {
+        if let Some(pools) = pools {
+            if !pools.contains(&r.pool) {
+                continue;
+            }
+        }
         let lines = r.len / CACHE_LINE;
         if policy.evict_prob > 0.0 {
             for l in 0..lines {
@@ -62,15 +68,11 @@ pub(crate) fn crash_all(policy: CrashPolicy) -> usize {
 
 #[cfg(test)]
 mod tests {
-    use crate::pmem::{self, region, CrashPolicy, Mode, PoolId};
-
-    /// Global-pmem tests mutate the global mode; serialize them.
-    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    use crate::pmem::{self, region, CrashPolicy, PoolId};
 
     #[test]
     fn unflushed_data_dies_flushed_survives() {
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let pool = PoolId::fresh();
         let base = region::alloc_region(pool, 256, region::RegionTag::Links, 0);
         unsafe {
@@ -78,44 +80,57 @@ mod tests {
             *(base as *mut u64) = 0xAAAA;
             *(base.add(64) as *mut u64) = 0xBBBB;
             pmem::psync(base, 8);
-            pmem::crash(CrashPolicy::PESSIMISTIC);
+            pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[pool]);
             assert_eq!(*(base as *const u64), 0xAAAA, "flushed line must survive");
             assert_eq!(*(base.add(64) as *const u64), 0, "unflushed line must die");
         }
         region::release_pool(pool);
-        pmem::set_mode(Mode::Perf);
     }
 
     #[test]
     fn eviction_probability_one_persists_everything() {
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let pool = PoolId::fresh();
         let base = region::alloc_region(pool, 256, region::RegionTag::Links, 0);
         unsafe {
             *(base.add(128) as *mut u64) = 0xCCCC;
-            let evicted = pmem::crash(CrashPolicy::random(1.0, 1));
+            let evicted = pmem::crash_pools(CrashPolicy::random(1.0, 1), &[pool]);
             assert!(evicted > 0);
             assert_eq!(*(base.add(128) as *const u64), 0xCCCC);
         }
         region::release_pool(pool);
-        pmem::set_mode(Mode::Perf);
     }
 
     #[test]
     fn crash_reverts_to_last_flushed_version() {
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let pool = PoolId::fresh();
         let base = region::alloc_region(pool, 64, region::RegionTag::Links, 0);
         unsafe {
             *(base as *mut u64) = 1;
             pmem::psync(base, 8);
             *(base as *mut u64) = 2; // newer, unflushed
-            pmem::crash(CrashPolicy::PESSIMISTIC);
+            pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[pool]);
             assert_eq!(*(base as *const u64), 1);
         }
         region::release_pool(pool);
-        pmem::set_mode(Mode::Perf);
+    }
+
+    #[test]
+    fn scoped_crash_leaves_other_pools_alone() {
+        let _sim = pmem::sim_session();
+        let a = PoolId::fresh();
+        let b = PoolId::fresh();
+        let pa = region::alloc_region(a, 64, region::RegionTag::Links, 0);
+        let pb = region::alloc_region(b, 64, region::RegionTag::Links, 0);
+        unsafe {
+            *(pa as *mut u64) = 7; // unflushed
+            *(pb as *mut u64) = 9; // unflushed
+            pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[a]);
+            assert_eq!(*(pa as *const u64), 0, "scoped pool reverts");
+            assert_eq!(*(pb as *const u64), 9, "unscoped pool untouched");
+        }
+        region::release_pool(a);
+        region::release_pool(b);
     }
 }

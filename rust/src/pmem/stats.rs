@@ -96,11 +96,13 @@ mod tests {
 
     #[test]
     fn counters_accumulate() {
-        let a = snapshot();
+        // Thread-scoped snapshot: the global sum moves under parallel
+        // tests, so exact deltas are only assertable per thread.
+        let a = thread_snapshot();
         count_flush();
         count_flush();
         count_fence();
-        let b = snapshot();
+        let b = thread_snapshot();
         let d = b.since(&a);
         assert_eq!(d.flushes, 2);
         assert_eq!(d.fences, 1);
@@ -122,6 +124,8 @@ mod tests {
             h.join().unwrap();
         }
         let d = snapshot().since(&a);
-        assert_eq!(d.flushes, 400);
+        // Concurrently running tests may add flushes of their own — the
+        // global sum must reflect at least everything these threads did.
+        assert!(d.flushes >= 400, "lost flushes: {}", d.flushes);
     }
 }

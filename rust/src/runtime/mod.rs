@@ -4,17 +4,35 @@
 //! only consumer of its output. One CPU PJRT client per process, one
 //! compiled executable per artifact, reused across calls — nothing here
 //! ever shells out to Python.
+//!
+//! The PJRT path depends on the `xla` crate, which the offline build
+//! cannot fetch; it is therefore gated behind the `accel` cargo feature
+//! (enabling it also requires adding the `xla` dependency to the
+//! manifest). Without the feature, [`stub`] provides the same public API
+//! surface — loaders return a clear "accel disabled" error at runtime, and
+//! every caller either gates on artifact presence or falls back to the
+//! pure-Rust paths.
 
+#[cfg(feature = "accel")]
 pub mod executable;
+#[cfg(feature = "accel")]
 pub mod recovery_accel;
+#[cfg(feature = "accel")]
 pub mod workload_accel;
+
+#[cfg(not(feature = "accel"))]
+mod stub;
+#[cfg(not(feature = "accel"))]
+pub use stub::{recovery_accel, workload_accel};
 
 use std::path::PathBuf;
 
+#[cfg(feature = "accel")]
 pub use executable::HloExecutable;
 pub use recovery_accel::RecoveryPlanner;
 pub use workload_accel::WorkloadGen;
 
+#[cfg(feature = "accel")]
 thread_local! {
     // The `xla` crate's PJRT handles are Rc-based (neither Send nor Sync),
     // so each thread that touches the runtime gets its own client, and
@@ -24,6 +42,7 @@ thread_local! {
 }
 
 /// Run `f` with the calling thread's PJRT CPU client.
+#[cfg(feature = "accel")]
 pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> R) -> R {
     CLIENT.with(f)
 }
@@ -37,6 +56,7 @@ pub fn artifacts_dir() -> PathBuf {
 
 /// Parse `"key": <integer>` out of the manifest (the offline crate set has
 /// no JSON parser; the manifest is machine-written with this exact shape).
+#[cfg_attr(not(feature = "accel"), allow(dead_code))]
 pub(crate) fn manifest_u64(key: &str) -> anyhow::Result<u64> {
     let path = artifacts_dir().join("manifest.json");
     let text = std::fs::read_to_string(&path)

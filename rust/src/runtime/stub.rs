@@ -1,0 +1,92 @@
+//! Offline stand-in for the `accel` feature: same public surface as the
+//! PJRT-backed modules, but every loader fails with a clear error. Callers
+//! all gate on artifact presence (tests) or fall back to the pure-Rust
+//! recovery/workload paths (coordinator, benches), so a build without the
+//! feature is fully functional — it just never claims acceleration.
+
+pub mod recovery_accel {
+    use crate::pmem::PoolId;
+    use crate::sets::linkfree::{LfHash, RecoveredStats};
+    use crate::sets::soft::SoftHash;
+    use anyhow::Result;
+
+    fn disabled() -> anyhow::Error {
+        anyhow::anyhow!(
+            "XLA runtime disabled: rebuild with `--features accel` (requires the `xla` crate)"
+        )
+    }
+
+    /// Stub for the loaded recovery artifacts.
+    pub struct RecoveryPlanner {
+        _private: (),
+    }
+
+    impl RecoveryPlanner {
+        pub fn load() -> Result<Self> {
+            Err(disabled())
+        }
+
+        /// The accel feature is off, so there is never a cached planner —
+        /// this always reports the disabled error without invoking `f`.
+        pub fn with_cached<R>(f: impl FnOnce(&RecoveryPlanner) -> Result<R>) -> Result<R> {
+            let _ = f;
+            Err(disabled())
+        }
+
+        pub fn batch(&self) -> usize {
+            0
+        }
+    }
+
+    pub fn recover_soft_hash_accel(
+        _planner: &RecoveryPlanner,
+        _id: PoolId,
+        _nbuckets: usize,
+    ) -> Result<(SoftHash, RecoveredStats)> {
+        Err(disabled())
+    }
+
+    pub fn recover_linkfree_hash_accel(
+        _planner: &RecoveryPlanner,
+        _id: PoolId,
+        _nbuckets: usize,
+    ) -> Result<(LfHash, RecoveredStats)> {
+        Err(disabled())
+    }
+}
+
+pub mod workload_accel {
+    use anyhow::Result;
+
+    /// Op kinds in the generated stream (must match kernels/workload.py).
+    pub const OP_CONTAINS: i32 = 0;
+    pub const OP_INSERT: i32 = 1;
+    pub const OP_REMOVE: i32 = 2;
+
+    /// Stub for the AOT workload generator.
+    pub struct WorkloadGen {
+        _private: (),
+    }
+
+    impl WorkloadGen {
+        pub fn load() -> Result<Self> {
+            Err(anyhow::anyhow!(
+                "XLA runtime disabled: rebuild with `--features accel` (requires the `xla` crate)"
+            ))
+        }
+
+        pub fn batch_len(&self) -> usize {
+            0
+        }
+
+        pub fn batch(
+            &self,
+            _seed: u64,
+            _base: u64,
+            _key_range: u64,
+            _read_micros: u64,
+        ) -> Result<(Vec<u64>, Vec<i32>)> {
+            Err(anyhow::anyhow!("XLA runtime disabled"))
+        }
+    }
+}

@@ -478,6 +478,45 @@ mod tests {
     }
 
     #[test]
+    fn failed_ops_flush_bounds() {
+        // Link-free failed ops: a failed insert *helps* the earlier insert
+        // of the key become durable (§3.3) — the flush flag elides the
+        // psync when it already is; a failed remove needs nothing.
+        let l = LfList::new();
+        for k in 0..8u64 {
+            assert!(l.insert(k, k));
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.insert(3, 99), "duplicate insert fails");
+        assert!(!l.remove(999), "absent remove fails");
+        for k in 0..8u64 {
+            assert!(l.contains(k));
+        }
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "failed ops over durable keys are psync-free");
+
+        // Strip key 3's insert-flushed flag (as if its inserter has not
+        // psync'd yet): the next failed insert must help-persist it.
+        unsafe {
+            use crate::sets::tagged::ptr_of;
+            let mut curr = ptr_of::<LfNode>(l.head.load(Ordering::Acquire));
+            while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) != 3 {
+                curr = ptr_of::<LfNode>((*curr).next.load(Ordering::Acquire));
+            }
+            assert!(!curr.is_null());
+            (*curr).reset_flush_flags();
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.insert(3, 99));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "helping a not-yet-durable insert costs its psync");
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.insert(3, 99));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "the helped psync is flag-elided afterwards");
+    }
+
+    #[test]
     fn contention_on_same_keys() {
         use std::sync::Arc;
         let l = Arc::new(LfList::new());

@@ -114,16 +114,12 @@ pub fn recover_hash(id: PoolId, nbuckets: usize) -> (LfHash, RecoveredStats) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pmem::{self, CrashPolicy, Mode};
+    use crate::pmem::{self, CrashPolicy};
     use crate::sets::ConcurrentSet;
-
-    /// Crash tests flip the global pmem mode — serialize them.
-    pub(crate) static CRASH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     #[test]
     fn recover_list_after_pessimistic_crash() {
-        let _g = CRASH_LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let l = LfList::new();
         let id = l.pool_id();
         for k in 0..50u64 {
@@ -134,7 +130,7 @@ mod tests {
         }
         l.crash_preserve();
         drop(l);
-        pmem::crash(CrashPolicy::PESSIMISTIC);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
 
         let (l2, stats) = recover_list(id);
         // Every completed insert/remove was psync'd, so the recovered set
@@ -150,13 +146,11 @@ mod tests {
         // Post-recovery the structure is fully operational.
         assert!(l2.insert(999, 1));
         assert!(l2.remove(1));
-        pmem::set_mode(Mode::Perf);
     }
 
     #[test]
     fn recover_hash_after_random_eviction_crash() {
-        let _g = CRASH_LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let h = LfHash::new(32);
         let id = h.pool_id();
         for k in 0..200u64 {
@@ -169,7 +163,7 @@ mod tests {
         drop(h);
         // Random eviction may persist *extra* lines, never fewer: acked
         // ops must still be exact.
-        pmem::crash(CrashPolicy::random(0.5, 42));
+        pmem::crash_pools(CrashPolicy::random(0.5, 42), &[id]);
 
         let (h2, stats) = recover_hash(id, 32);
         for k in 0..200u64 {
@@ -182,13 +176,11 @@ mod tests {
         for k in 1000..1100u64 {
             assert!(h2.insert(k, k));
         }
-        pmem::set_mode(Mode::Perf);
     }
 
     #[test]
     fn unflushed_insert_does_not_survive_pessimistic_crash() {
-        let _g = CRASH_LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         // Build a list, then hand-craft an in-flight insert: linked and
         // valid in volatile memory but never psync'd.
         let l = LfList::new();
@@ -205,17 +197,15 @@ mod tests {
         }
         l.crash_preserve();
         drop(l);
-        pmem::crash(CrashPolicy::PESSIMISTIC);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
         let (l2, _) = recover_list(id);
         assert!(l2.contains(1));
         assert!(!l2.contains(2), "unflushed insert must not survive");
-        pmem::set_mode(Mode::Perf);
     }
 
     #[test]
     fn double_crash_no_ghosts() {
-        let _g = CRASH_LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let l = LfList::new();
         let id = l.pool_id();
         for k in 0..20u64 {
@@ -226,18 +216,17 @@ mod tests {
         }
         l.crash_preserve();
         drop(l);
-        pmem::crash(CrashPolicy::PESSIMISTIC);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
         let (l2, _) = recover_list(id);
         // Crash again immediately: normalisation of reclaimed slots was
         // persisted by recovery, so the second recovery sees the same set.
         l2.crash_preserve();
         drop(l2);
-        pmem::crash(CrashPolicy::PESSIMISTIC);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
         let (l3, stats) = recover_list(id);
         for k in 0..20u64 {
             assert_eq!(l3.contains(k), k >= 10, "key {k} after double crash");
         }
         assert_eq!(stats.members, 10);
-        pmem::set_mode(Mode::Perf);
     }
 }

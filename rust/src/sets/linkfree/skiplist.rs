@@ -296,7 +296,7 @@ pub fn recover_skiplist(id: PoolId) -> (LfSkipList, RecoveredStats) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pmem::{self, CrashPolicy, Mode};
+    use crate::pmem::{self, CrashPolicy};
     use crate::sets::ConcurrentSet;
 
     #[test]
@@ -398,9 +398,7 @@ mod tests {
 
     #[test]
     fn skiplist_crash_recovery() {
-        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let s = LfSkipList::new();
         let id = s.pool_id();
         for k in 0..500u64 {
@@ -411,7 +409,7 @@ mod tests {
         }
         s.crash_preserve();
         drop(s);
-        pmem::crash(CrashPolicy::random(0.4, 21));
+        pmem::crash_pools(CrashPolicy::random(0.4, 21), &[id]);
         let (s2, stats) = recover_skiplist(id);
         assert_eq!(stats.members as usize, (0..500).filter(|k| k % 3 != 0).count());
         for k in 0..500u64 {
@@ -424,6 +422,5 @@ mod tests {
         // Index works post-recovery and the structure is writable.
         assert!(s2.insert(10_000, 1));
         assert!(s2.remove(1));
-        pmem::set_mode(Mode::Perf);
     }
 }

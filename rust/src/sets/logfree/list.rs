@@ -58,8 +58,28 @@ impl LogFreeCore {
         head: *const AtomicU64,
         key: u64,
     ) -> (*const AtomicU64, *mut LogFreeNode) {
+        self.find_from(head, head, key)
+    }
+
+    /// `find` starting from a validated hint link (resizable-hash fast
+    /// path); retries fall back to `head`.
+    unsafe fn find_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> (*const AtomicU64, *mut LogFreeNode) {
+        let mut from = start;
         'retry: loop {
-            let mut pred_link = head;
+            let mut pred_link = std::mem::replace(&mut from, head);
+            // Hint staleness: a marked start cell belongs to a deleted
+            // node (frozen suffix), a dirty one to an in-flight update —
+            // either way restart from the head.
+            if !std::ptr::eq(pred_link, head)
+                && (*pred_link).load(Ordering::Acquire) & (MARK | DIRTY) != 0
+            {
+                continue 'retry;
+            }
             let mut curr = ptr_of::<LogFreeNode>(load_link_persisted(&*pred_link));
             loop {
                 if curr.is_null() {
@@ -83,11 +103,24 @@ impl LogFreeCore {
     }
 
     pub fn insert(&self, head: *const AtomicU64, key: u64, value: u64) -> bool {
+        self.insert_from(head, head, key, value)
+    }
+
+    /// Insert whose first window search starts at a validated hint link.
+    pub(crate) fn insert_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+        value: u64,
+    ) -> bool {
         let _g = self.ebr.pin();
         let mut new_node: *mut LogFreeNode = std::ptr::null_mut();
+        let mut from = start;
         loop {
             unsafe {
-                let (pred_link, curr) = self.find(head, key);
+                let (pred_link, curr) =
+                    self.find_from(std::mem::replace(&mut from, head), head, key);
                 if !curr.is_null() && (*curr).key.load(Ordering::Relaxed) == key {
                     if !new_node.is_null() {
                         LogFreeNode::init_free_pattern(new_node as *mut u8);
@@ -102,11 +135,25 @@ impl LogFreeCore {
                     (*new_node).key.store(key, Ordering::Relaxed);
                     (*new_node).value.store(value, Ordering::Relaxed);
                 }
-                (*new_node).next.store(curr as u64, Ordering::Relaxed);
+                // The unlinked node's own link keeps DIRTY until it is
+                // published, so a stale bucket hint probing a recycled
+                // slot can never mistake a mid-insert node for a linked
+                // one. Recovery masks tag bits, so the persisted DIRTY is
+                // harmless.
+                (*new_node).next.store(curr as u64 | DIRTY, Ordering::Relaxed);
                 // Persist node content BEFORE it becomes reachable.
                 pmem::psync_obj(new_node);
                 // Install + persist the link (psync #2 of the update).
                 if store_link_persisted(&*pred_link, curr as u64, new_node as u64) {
+                    // Published: clear the pre-link DIRTY (the pointer part
+                    // was persisted by the content psync above; a racing
+                    // reader that saw the bit first simply re-psyncs).
+                    let _ = (*new_node).next.compare_exchange(
+                        curr as u64 | DIRTY,
+                        curr as u64,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    );
                     return true;
                 }
             }
@@ -114,10 +161,22 @@ impl LogFreeCore {
     }
 
     pub fn remove(&self, head: *const AtomicU64, key: u64) -> bool {
+        self.remove_from(head, head, key)
+    }
+
+    /// Remove whose window search starts at a validated hint link.
+    pub(crate) fn remove_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> bool {
         let _g = self.ebr.pin();
+        let mut from = start;
         loop {
             unsafe {
-                let (pred_link, curr) = self.find(head, key);
+                let (pred_link, curr) =
+                    self.find_from(std::mem::replace(&mut from, head), head, key);
                 if curr.is_null() || (*curr).key.load(Ordering::Relaxed) != key {
                     return false;
                 }
@@ -141,9 +200,26 @@ impl LogFreeCore {
     /// Wait-free read; persists any dirty link it depends on (this is the
     /// reader-side flushing cost of log-free that SOFT eliminates).
     pub fn get(&self, head: *const AtomicU64, key: u64) -> Option<u64> {
+        self.get_from(head, head, key)
+    }
+
+    /// Wait-free read starting from a validated hint link (or the head).
+    pub(crate) fn get_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> Option<u64> {
         let _g = self.ebr.pin();
         unsafe {
-            let mut curr = ptr_of::<LogFreeNode>(load_link_persisted(&*head));
+            let mut from = start;
+            // Same staleness screen as find_from (reads have no CAS net).
+            if !std::ptr::eq(start, head)
+                && (*start).load(Ordering::Acquire) & (MARK | DIRTY) != 0
+            {
+                from = head;
+            }
+            let mut curr = ptr_of::<LogFreeNode>(load_link_persisted(&*from));
             while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) < key {
                 curr = ptr_of::<LogFreeNode>(load_link_persisted(&(*curr).next));
             }
@@ -293,6 +369,14 @@ mod tests {
         }
         let d = crate::pmem::stats::thread_snapshot().since(&a);
         assert_eq!(d.fences, 0, "clean links: reads cost no psync");
+
+        // Failed ops over clean links: find() traverses only persisted
+        // links, so neither direction has anything left to flush.
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.insert(5, 99), "duplicate insert fails");
+        assert!(!l.remove(999), "absent remove fails");
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "failed ops over clean links are psync-free");
     }
 
     #[test]

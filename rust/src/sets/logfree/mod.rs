@@ -18,6 +18,8 @@ mod list;
 mod node;
 mod recovery;
 
+pub(crate) use node::load_link_persisted;
+
 pub use hash::LogFreeHash;
 pub use list::LogFreeList;
 pub use node::LogFreeNode;

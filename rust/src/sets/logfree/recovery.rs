@@ -111,15 +111,12 @@ pub fn recover_hash(id: PoolId) -> (LogFreeHash, RecoveredStats) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pmem::{self, CrashPolicy, Mode};
+    use crate::pmem::{self, CrashPolicy};
     use crate::sets::ConcurrentSet;
-
-    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     #[test]
     fn logfree_list_crash_recovery() {
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let l = LogFreeList::new();
         let id = l.pool_id();
         for k in 0..40u64 {
@@ -130,7 +127,7 @@ mod tests {
         }
         l.crash_preserve();
         drop(l);
-        pmem::crash(CrashPolicy::PESSIMISTIC);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
         let (l2, stats) = recover_list(id);
         for k in 0..40u64 {
             if k % 5 == 0 {
@@ -141,13 +138,11 @@ mod tests {
         }
         assert_eq!(stats.members, 32);
         assert!(l2.insert(500, 1));
-        pmem::set_mode(Mode::Perf);
     }
 
     #[test]
     fn logfree_hash_crash_recovery_with_eviction() {
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let h = LogFreeHash::new(16);
         let id = h.pool_id();
         for k in 0..120u64 {
@@ -158,7 +153,7 @@ mod tests {
         }
         h.crash_preserve();
         drop(h);
-        pmem::crash(CrashPolicy::random(0.4, 11));
+        pmem::crash_pools(CrashPolicy::random(0.4, 11), &[id]);
         let (h2, stats) = recover_hash(id);
         assert_eq!(h2.nbuckets(), 16);
         for k in 0..120u64 {
@@ -166,13 +161,11 @@ mod tests {
             assert_eq!(h2.contains(k), expect, "key {k}");
         }
         assert_eq!(stats.members, 90);
-        pmem::set_mode(Mode::Perf);
     }
 
     #[test]
     fn leaked_node_is_reclaimed_not_resurrected() {
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let l = LogFreeList::new();
         let id = l.pool_id();
         assert!(l.insert(1, 1));
@@ -186,10 +179,9 @@ mod tests {
         }
         l.crash_preserve();
         drop(l);
-        pmem::crash(CrashPolicy::PESSIMISTIC);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
         let (l2, stats) = recover_list(id);
         assert!(!l2.contains(2), "leaked node must not appear in the set");
         assert!(stats.reclaimed > 0);
-        pmem::set_mode(Mode::Perf);
     }
 }

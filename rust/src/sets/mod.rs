@@ -2,23 +2,37 @@
 //!
 //! Four families, one trait:
 //!
-//! | family | module | durability | psyncs/update | psyncs/read |
-//! |---|---|---|---|---|
-//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 |
-//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 |
-//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 |
-//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 |
+//! | family | module | durability | psyncs/update | psyncs/read | hash growth |
+//! |---|---|---|---|---|---|
+//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | [`resizable`] |
+//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | [`resizable`] |
+//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | [`resizable`] |
+//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | fixed |
 //!
-//! Each family provides a sorted linked list and a fixed-bucket hash set
-//! built from the same core (a bucket is a bare link cell — see
-//! [`tagged`]), plus a recovery procedure rebuilding the volatile
-//! structure from the durable areas after a crash.
+//! Each family provides a sorted linked list and a hash set built from the
+//! same core (a bucket is a bare link cell — see [`tagged`]), plus a
+//! recovery procedure rebuilding the volatile structure from the durable
+//! areas after a crash.
+//!
+//! Hash sets of the three durable families are **resizable**
+//! ([`ResizableHash`]): one family list in `mix64(key)` order plus a
+//! lock-free doubling array of bucket entry hints. Growth triggers when
+//! the average chain length crosses [`resizable::GROW_LOAD`], migration is
+//! split-ordered-style first-touch hint population (zero psyncs, nothing
+//! ever moves), and the bucket-count epoch is persisted in a root cell so
+//! recovery restores the table size. The fixed-bucket variants
+//! ([`linkfree::LfHash`], [`soft::SoftHash`], [`logfree::LogFreeHash`])
+//! remain for the paper's load-factor-1 evaluation and the XLA-accelerated
+//! recovery path.
 
 pub mod linkfree;
 pub mod logfree;
+pub mod resizable;
 pub mod soft;
 pub mod tagged;
 pub mod volatile;
+
+pub use resizable::{ResizableHash, ResizableLfHash, ResizableLogFreeHash, ResizableSoftHash};
 
 /// The paper's set interface: unique `u64` keys with one word of data.
 ///
@@ -98,12 +112,14 @@ pub fn new_list(family: Family) -> Box<dyn ConcurrentSet> {
     }
 }
 
-/// Construct a hash set of the given family with `nbuckets` buckets.
+/// Construct a hash set of the given family with `nbuckets` *initial*
+/// buckets. Durable families get the resizable table (the array doubles
+/// under load); the volatile ablation keeps its fixed table.
 pub fn new_hash(family: Family, nbuckets: usize) -> Box<dyn ConcurrentSet> {
     match family {
-        Family::LinkFree => Box::new(linkfree::LfHash::new(nbuckets)),
-        Family::Soft => Box::new(soft::SoftHash::new(nbuckets)),
-        Family::LogFree => Box::new(logfree::LogFreeHash::new(nbuckets)),
+        Family::LinkFree => Box::new(ResizableHash::new_linkfree(nbuckets)),
+        Family::Soft => Box::new(ResizableHash::new_soft(nbuckets)),
+        Family::LogFree => Box::new(ResizableHash::new_logfree(nbuckets)),
         Family::Volatile => Box::new(volatile::VolatileHash::new(nbuckets)),
     }
 }

@@ -1,0 +1,888 @@
+//! Lock-free **resizable** durable hash sets — dynamic bucket-array growth
+//! for all three durable families.
+//!
+//! # Design (split-ordered, without moving a single node)
+//!
+//! A fixed-bucket table keyed by `mix64(key) & (n-1)` cannot grow without
+//! physically re-chaining nodes between buckets, and any scheme that moves
+//! nodes needs extra fences or freeze bits the families don't have. This
+//! layer takes the split-ordered route instead, adapted to the repo's
+//! link-cell protocol:
+//!
+//! * The structure is **one** list of the family, ordered by
+//!   `okey = mix64(key)` (a bijection, so user keys stay unique and
+//!   [`crate::util::mix64_inv`] recovers them). Bucket `j` of a table with
+//!   `n = 2^L` buckets owns the contiguous okey range
+//!   `[j << (64-L), (j+1) << (64-L))` — the *high* hash bits, so doubling
+//!   splits every bucket's range exactly in half.
+//! * The bucket array holds volatile **entry hints**: tagged pointers to a
+//!   linked node whose okey lies at/near the bucket's start. An operation
+//!   starts its window search at the hint's own link cell (`&node.next`),
+//!   exactly like the skip lists' `find_from` fast path; a stale hint is
+//!   detected (deleted/marked/mid-insert state, or okey ≥ search okey) and
+//!   falls back to the bucket's ancestors (clear the lowest set index bit,
+//!   ≤ log n hops) and finally the list head. Hints are repopulated by
+//!   successful inserts.
+//! * **Growth** doubles the array when the item count crosses
+//!   `GROW_LOAD · n`: allocate, seed both child cells from the parent cell
+//!   (safe: hints are only *used* after validation), publish with one CAS.
+//!   Migration is therefore pure hint population that piggybacks on normal
+//!   operations, costs **zero psyncs**, and never blocks: reads and
+//!   updates proceed through the parent hint or head meanwhile.
+//! * The **bucket-count epoch** is persisted in a named root cell
+//!   (`resizable.<family>.<pool>`), so recovery rebuilds the right table
+//!   size: recover the family's list (members relinked in okey order —
+//!   exactly this structure's chain), read the epoch, start with empty
+//!   hints.
+//!
+//! Durability is untouched: the only durable state is the family's own
+//! node protocol plus the epoch cell (persisted once per doubling), so
+//! updates keep their 1 (SOFT) / ~1 (link-free) / ~2 (log-free) psyncs and
+//! `contains`/`get` stay psync-free — asserted by tests below.
+//!
+//! ## Hint-validation hazard (shared with the skip lists)
+//!
+//! A hint may point at a node that was unlinked, reclaimed and
+//! re-allocated after the hint was stored. Validation (state + okey check
+//! under the EBR pin) rejects free-pattern and mid-operation nodes — the
+//! families were hardened so an allocated-but-unlinked node is never in a
+//! "linked-looking" state (SOFT: pre-link `IntendToInsert`; link-free:
+//! pre-link invalid; log-free: pre-link `DIRTY`). A node that passes
+//! validation is either currently linked (a correct window start, as in
+//! Harris traversals) or a re-inserted slot that is linked at its key's
+//! sorted position — also correct, because there is only one list.
+
+use crate::alloc::Ebr;
+use crate::pmem::root::{root_cell, RootCell};
+use crate::pmem::PoolId;
+use crate::sets::linkfree::{LfList, LfNode, RecoveredStats};
+use crate::sets::logfree::{load_link_persisted, LogFreeList, LogFreeNode};
+use crate::sets::soft::{SNode, SoftList};
+use crate::sets::tagged::{is_marked, ptr_of, DIRTY, MARK};
+use crate::sets::ConcurrentSet;
+use crate::util::{mix64, mix64_inv};
+use std::sync::atomic::{AtomicI64, AtomicPtr, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Average chain length that triggers a doubling.
+pub const GROW_LOAD: usize = 4;
+
+/// Hard cap on the bucket-array size (2^24 cells = 128 MiB of hints).
+const MAX_LOG2: u32 = 24;
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for crate::sets::linkfree::LfList {}
+    impl Sealed for crate::sets::soft::SoftList {}
+    impl Sealed for crate::sets::logfree::LogFreeList {}
+}
+
+/// Family plumbing for [`ResizableHash`] (sealed; implemented by the three
+/// durable list types). The methods mirror the cores' hint-aware entry
+/// points; all of this is an implementation detail of the resizable layer.
+pub trait ResizableFamily: sealed::Sealed + Send + Sync + 'static {
+    #[doc(hidden)]
+    type Node;
+    #[doc(hidden)]
+    const FAMILY: &'static str;
+
+    #[doc(hidden)]
+    fn head_cell(&self) -> *const AtomicU64;
+    #[doc(hidden)]
+    fn ebr(&self) -> &Ebr;
+    #[doc(hidden)]
+    fn insert_from(&self, start: *const AtomicU64, okey: u64, value: u64) -> bool;
+    #[doc(hidden)]
+    fn remove_from(&self, start: *const AtomicU64, okey: u64) -> bool;
+    #[doc(hidden)]
+    fn get_from(&self, start: *const AtomicU64, okey: u64) -> Option<u64>;
+    #[doc(hidden)]
+    fn count(&self) -> usize;
+    #[doc(hidden)]
+    fn snapshot_okey(&self) -> Vec<(u64, u64)>;
+    #[doc(hidden)]
+    fn pool(&self) -> PoolId;
+    #[doc(hidden)]
+    fn preserve(&self);
+
+    /// The link cell owned by `node` (its `next` word).
+    #[doc(hidden)]
+    unsafe fn node_link(node: *mut Self::Node) -> *const AtomicU64;
+    /// `Some(okey)` iff `node` currently looks linked-and-alive (rejects
+    /// free-pattern, deleted and mid-operation nodes).
+    #[doc(hidden)]
+    unsafe fn node_key_if_linked(node: *mut Self::Node) -> Option<u64>;
+    /// The linked node holding exactly `okey`, searched from `start`.
+    #[doc(hidden)]
+    unsafe fn find_linked(&self, start: *const AtomicU64, okey: u64) -> Option<*mut Self::Node>;
+}
+
+impl ResizableFamily for LfList {
+    type Node = LfNode;
+    const FAMILY: &'static str = "linkfree";
+
+    fn head_cell(&self) -> *const AtomicU64 {
+        &self.head
+    }
+
+    fn ebr(&self) -> &Ebr {
+        self.core.ebr.as_ref()
+    }
+
+    fn insert_from(&self, start: *const AtomicU64, okey: u64, value: u64) -> bool {
+        self.core.insert_from(start, &self.head, okey, value)
+    }
+
+    fn remove_from(&self, start: *const AtomicU64, okey: u64) -> bool {
+        self.core.remove_from(start, &self.head, okey)
+    }
+
+    fn get_from(&self, start: *const AtomicU64, okey: u64) -> Option<u64> {
+        self.core.get_from(start, &self.head, okey)
+    }
+
+    fn count(&self) -> usize {
+        self.core.count(&self.head)
+    }
+
+    fn snapshot_okey(&self) -> Vec<(u64, u64)> {
+        self.core.snapshot(&self.head)
+    }
+
+    fn pool(&self) -> PoolId {
+        self.pool_id()
+    }
+
+    fn preserve(&self) {
+        self.crash_preserve();
+    }
+
+    unsafe fn node_link(node: *mut LfNode) -> *const AtomicU64 {
+        &(*node).next
+    }
+
+    unsafe fn node_key_if_linked(node: *mut LfNode) -> Option<u64> {
+        // Free pattern is valid+marked; a deleted node is marked; a
+        // mid-insert node is invalid until its link CAS succeeds.
+        if is_marked((*node).next.load(Ordering::Acquire)) || !(*node).is_valid() {
+            return None;
+        }
+        Some((*node).key.load(Ordering::Acquire))
+    }
+
+    unsafe fn find_linked(&self, start: *const AtomicU64, okey: u64) -> Option<*mut LfNode> {
+        let mut curr = ptr_of::<LfNode>((*start).load(Ordering::Acquire));
+        while !curr.is_null() {
+            let k = (*curr).key.load(Ordering::Relaxed);
+            if k > okey {
+                return None;
+            }
+            let next = (*curr).next.load(Ordering::Acquire);
+            if k == okey {
+                return if is_marked(next) { None } else { Some(curr) };
+            }
+            curr = ptr_of::<LfNode>(next);
+        }
+        None
+    }
+}
+
+impl ResizableFamily for SoftList {
+    type Node = SNode;
+    const FAMILY: &'static str = "soft";
+
+    fn head_cell(&self) -> *const AtomicU64 {
+        &self.head
+    }
+
+    fn ebr(&self) -> &Ebr {
+        self.core.ebr.as_ref()
+    }
+
+    fn insert_from(&self, start: *const AtomicU64, okey: u64, value: u64) -> bool {
+        self.core.insert_from(start, &self.head, okey, value)
+    }
+
+    fn remove_from(&self, start: *const AtomicU64, okey: u64) -> bool {
+        self.core.remove_from(start, &self.head, okey)
+    }
+
+    fn get_from(&self, start: *const AtomicU64, okey: u64) -> Option<u64> {
+        self.core.get_from(start, &self.head, okey)
+    }
+
+    fn count(&self) -> usize {
+        self.core.count(&self.head)
+    }
+
+    fn snapshot_okey(&self) -> Vec<(u64, u64)> {
+        self.core.snapshot_from(&self.head)
+    }
+
+    fn pool(&self) -> PoolId {
+        self.pool_id()
+    }
+
+    fn preserve(&self) {
+        self.crash_preserve();
+    }
+
+    unsafe fn node_link(node: *mut SNode) -> *const AtomicU64 {
+        &(*node).next
+    }
+
+    unsafe fn node_key_if_linked(node: *mut SNode) -> Option<u64> {
+        // Reclaimed SNodes keep their Deleted state; allocated-but-unlinked
+        // ones are written as IntendToInsert. Only in-set states pass.
+        let s = crate::sets::tagged::State::of((*node).next.load(Ordering::Acquire));
+        if s.in_set() {
+            Some((*node).key)
+        } else {
+            None
+        }
+    }
+
+    unsafe fn find_linked(&self, start: *const AtomicU64, okey: u64) -> Option<*mut SNode> {
+        let mut curr = ptr_of::<SNode>((*start).load(Ordering::Acquire));
+        while !curr.is_null() && (*curr).key < okey {
+            curr = ptr_of::<SNode>((*curr).next.load(Ordering::Acquire));
+        }
+        if !curr.is_null() && (*curr).key == okey {
+            Some(curr)
+        } else {
+            None
+        }
+    }
+}
+
+impl ResizableFamily for LogFreeList {
+    type Node = LogFreeNode;
+    const FAMILY: &'static str = "logfree";
+
+    fn head_cell(&self) -> *const AtomicU64 {
+        self.head.word()
+    }
+
+    fn ebr(&self) -> &Ebr {
+        self.core.ebr.as_ref()
+    }
+
+    fn insert_from(&self, start: *const AtomicU64, okey: u64, value: u64) -> bool {
+        self.core.insert_from(start, self.head.word(), okey, value)
+    }
+
+    fn remove_from(&self, start: *const AtomicU64, okey: u64) -> bool {
+        self.core.remove_from(start, self.head.word(), okey)
+    }
+
+    fn get_from(&self, start: *const AtomicU64, okey: u64) -> Option<u64> {
+        self.core.get_from(start, self.head.word(), okey)
+    }
+
+    fn count(&self) -> usize {
+        self.core.count(self.head.word())
+    }
+
+    fn snapshot_okey(&self) -> Vec<(u64, u64)> {
+        self.core.snapshot_from(self.head.word())
+    }
+
+    fn pool(&self) -> PoolId {
+        self.pool_id()
+    }
+
+    fn preserve(&self) {
+        self.crash_preserve();
+    }
+
+    unsafe fn node_link(node: *mut LogFreeNode) -> *const AtomicU64 {
+        &(*node).next
+    }
+
+    unsafe fn node_key_if_linked(node: *mut LogFreeNode) -> Option<u64> {
+        // Free pattern and deleted nodes are marked; a mid-insert node
+        // keeps DIRTY on its own link until published.
+        if (*node).next.load(Ordering::Acquire) & (MARK | DIRTY) != 0 {
+            return None;
+        }
+        Some((*node).key.load(Ordering::Acquire))
+    }
+
+    unsafe fn find_linked(
+        &self,
+        start: *const AtomicU64,
+        okey: u64,
+    ) -> Option<*mut LogFreeNode> {
+        // Hint publication must only hand out nodes whose inbound link is
+        // durable: walk with link-and-persist loads, which psync any dirty
+        // link before relying on it (readers entering at the hint then
+        // inherit a durably-justified position).
+        let mut curr = ptr_of::<LogFreeNode>(load_link_persisted(&*start));
+        while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) < okey {
+            curr = ptr_of::<LogFreeNode>(load_link_persisted(&(*curr).next));
+        }
+        if !curr.is_null()
+            && (*curr).key.load(Ordering::Relaxed) == okey
+            && !is_marked((*curr).next.load(Ordering::Acquire))
+        {
+            Some(curr)
+        } else {
+            None
+        }
+    }
+}
+
+/// One published bucket array. Old tables are retired (kept allocated) on
+/// growth because readers may still hold references; they are freed when
+/// the hash drops.
+struct Table {
+    log2n: u32,
+    cells: Box<[AtomicU64]>,
+}
+
+impl Table {
+    fn alloc(log2n: u32) -> *mut Table {
+        let n = 1usize << log2n;
+        Box::into_raw(Box::new(Table {
+            log2n,
+            cells: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }))
+    }
+
+    #[inline]
+    fn nbuckets(&self) -> usize {
+        1usize << self.log2n
+    }
+
+    #[inline]
+    fn bucket_of(&self, okey: u64) -> usize {
+        if self.log2n == 0 {
+            0
+        } else {
+            (okey >> (64 - self.log2n)) as usize
+        }
+    }
+
+    /// First okey of bucket `j`'s range.
+    #[inline]
+    fn bucket_lo(&self, j: usize) -> u64 {
+        if self.log2n == 0 {
+            0
+        } else {
+            (j as u64) << (64 - self.log2n)
+        }
+    }
+}
+
+/// A lock-free durable hash set that grows its bucket array on demand.
+/// See the module docs for the design; construct via the per-family
+/// constructors or [`crate::sets::new_hash`].
+pub struct ResizableHash<F: ResizableFamily> {
+    inner: F,
+    table: AtomicPtr<Table>,
+    /// Superseded tables, freed on drop (readers may hold them).
+    retired: Mutex<Vec<*mut Table>>,
+    /// Approximate live-item balance driving the growth trigger.
+    items: AtomicI64,
+    /// Durable bucket-count epoch: `log2n + 1` (0 = never written).
+    epoch: RootCell,
+}
+
+unsafe impl<F: ResizableFamily> Send for ResizableHash<F> {}
+unsafe impl<F: ResizableFamily> Sync for ResizableHash<F> {}
+
+/// Resizable link-free hash set.
+pub type ResizableLfHash = ResizableHash<LfList>;
+/// Resizable SOFT hash set.
+pub type ResizableSoftHash = ResizableHash<SoftList>;
+/// Resizable log-free hash set.
+pub type ResizableLogFreeHash = ResizableHash<LogFreeList>;
+
+impl ResizableHash<LfList> {
+    pub fn new_linkfree(nbuckets: usize) -> Self {
+        Self::with_inner(LfList::new(), nbuckets)
+    }
+}
+
+impl ResizableHash<SoftList> {
+    pub fn new_soft(nbuckets: usize) -> Self {
+        Self::with_inner(SoftList::new(), nbuckets)
+    }
+}
+
+impl ResizableHash<LogFreeList> {
+    pub fn new_logfree(nbuckets: usize) -> Self {
+        Self::with_inner(LogFreeList::new(), nbuckets)
+    }
+}
+
+impl<F: ResizableFamily> ResizableHash<F> {
+    fn with_inner(inner: F, nbuckets: usize) -> Self {
+        let log2n = nbuckets
+            .next_power_of_two()
+            .max(1)
+            .trailing_zeros()
+            .min(MAX_LOG2);
+        let epoch = root_cell(&format!("resizable.{}.{}", F::FAMILY, inner.pool().0));
+        let h = ResizableHash {
+            inner,
+            table: AtomicPtr::new(Table::alloc(log2n)),
+            retired: Mutex::new(Vec::new()),
+            items: AtomicI64::new(0),
+            epoch,
+        };
+        h.persist_epoch(log2n);
+        h
+    }
+
+    /// Wrap a recovered list, restoring the persisted bucket-count epoch
+    /// (falling back to `default_nbuckets` for pre-epoch images). The
+    /// items balance is re-seeded from the recovered chain so the growth
+    /// trigger keeps working after recovery.
+    fn adopt(inner: F, default_nbuckets: usize) -> Self {
+        let epoch = root_cell(&format!("resizable.{}.{}", F::FAMILY, inner.pool().0));
+        let stored = epoch.word().load(Ordering::SeqCst);
+        let log2n = if stored > 0 {
+            ((stored - 1) as u32).min(MAX_LOG2)
+        } else {
+            default_nbuckets
+                .next_power_of_two()
+                .max(1)
+                .trailing_zeros()
+                .min(MAX_LOG2)
+        };
+        let members = inner.count() as i64;
+        let h = ResizableHash {
+            inner,
+            table: AtomicPtr::new(Table::alloc(log2n)),
+            retired: Mutex::new(Vec::new()),
+            items: AtomicI64::new(members),
+            epoch,
+        };
+        h.persist_epoch(log2n);
+        h
+    }
+
+    fn persist_epoch(&self, log2n: u32) {
+        // Monotone max-CAS: a doubling winner that stalls before recording
+        // its epoch must not later overwrite a larger value some newer
+        // doubling already persisted (the recovered table would shrink).
+        let want = log2n as u64 + 1;
+        let word = self.epoch.word();
+        let mut cur = word.load(Ordering::SeqCst);
+        loop {
+            if cur >= want {
+                return;
+            }
+            match word.compare_exchange(cur, want, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        self.epoch.persist();
+    }
+
+    /// Current bucket count (monotonically non-decreasing).
+    pub fn nbuckets(&self) -> usize {
+        unsafe { (*self.table.load(Ordering::Acquire)).nbuckets() }
+    }
+
+    pub fn pool_id(&self) -> PoolId {
+        self.inner.pool()
+    }
+
+    pub fn crash_preserve(&self) {
+        self.inner.preserve();
+    }
+
+    /// All (user key, value) pairs, unordered (test/debug only).
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        self.inner
+            .snapshot_okey()
+            .into_iter()
+            .map(|(okey, v)| (mix64_inv(okey), v))
+            .collect()
+    }
+
+    /// Entry point for `okey`: the best validated hint link of its bucket
+    /// or an ancestor bucket, else the list head. Caller holds an EBR pin.
+    fn entry(&self, okey: u64) -> (*const AtomicU64, *mut Table, usize) {
+        let t = self.table.load(Ordering::Acquire);
+        let tr = unsafe { &*t };
+        let j = tr.bucket_of(okey);
+        let mut b = j;
+        loop {
+            let cell = tr.cells[b].load(Ordering::Acquire);
+            if cell != 0 {
+                let node = cell as *mut F::Node;
+                if let Some(k) = unsafe { F::node_key_if_linked(node) } {
+                    // Any linked node strictly below the search key is a
+                    // correct window start (single list); the bucket walk
+                    // only bounds how far the window search travels.
+                    if k < okey {
+                        return (unsafe { F::node_link(node) }, t, j);
+                    }
+                }
+            }
+            if b == 0 {
+                break;
+            }
+            // Ancestor bucket: clear the lowest set bit — its okey range
+            // starts earlier and encloses ours, ≤ log n hops to 0.
+            b &= b - 1;
+        }
+        (self.inner.head_cell(), t, j)
+    }
+
+    /// Does bucket `cell` want `okey`'s node as its hint? True when the
+    /// cell is empty/stale, still carries a coarser ancestor's hint
+    /// (`k < bucket_lo` — kept from a doubling; the bucket never truly
+    /// splits until it is replaced), or points later than `okey`.
+    unsafe fn hint_wants(cell: &AtomicU64, bucket_lo: u64, okey: u64) -> bool {
+        let cur = cell.load(Ordering::Acquire);
+        if cur == 0 {
+            return true;
+        }
+        match F::node_key_if_linked(cur as *mut F::Node) {
+            Some(k) => k < bucket_lo || k > okey,
+            None => true,
+        }
+    }
+
+    /// Install `node` as bucket `cell`'s hint unless a hint that is inside
+    /// the bucket's own range and at-or-before `okey` is already present.
+    unsafe fn publish_hint(cell: &AtomicU64, node: *mut F::Node, bucket_lo: u64, okey: u64) {
+        loop {
+            let cur = cell.load(Ordering::Acquire);
+            if cur != 0 {
+                if let Some(k) = F::node_key_if_linked(cur as *mut F::Node) {
+                    if k >= bucket_lo && k <= okey {
+                        return;
+                    }
+                }
+            }
+            if cell
+                .compare_exchange(cur, node as u64, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    /// Double the bucket array once `items` crosses the load trigger.
+    /// Lock-free: losers of the publish CAS free their candidate and move
+    /// on; the winner persists the new epoch (one psync per doubling).
+    fn maybe_grow(&self, items: i64) {
+        let t = self.table.load(Ordering::Acquire);
+        let tr = unsafe { &*t };
+        if tr.log2n >= MAX_LOG2 || items < (GROW_LOAD as i64) << tr.log2n {
+            return;
+        }
+        let new = Table::alloc(tr.log2n + 1);
+        {
+            let nr = unsafe { &*new };
+            for i in 0..tr.nbuckets() {
+                // Seed both children from the parent hint: hints are
+                // validated before use, so a lower-half hint in the upper
+                // child merely causes one fallback hop until repopulated.
+                let h = tr.cells[i].load(Ordering::Relaxed);
+                nr.cells[2 * i].store(h, Ordering::Relaxed);
+                nr.cells[2 * i + 1].store(h, Ordering::Relaxed);
+            }
+        }
+        if self
+            .table
+            .compare_exchange(t, new, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.retired.lock().unwrap().push(t);
+            self.persist_epoch(tr.log2n + 1);
+        } else {
+            unsafe { drop(Box::from_raw(new)) };
+        }
+    }
+}
+
+impl<F: ResizableFamily> ConcurrentSet for ResizableHash<F> {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let okey = mix64(key);
+        let inserted = {
+            let _g = self.inner.ebr().pin();
+            let (start, t, j) = self.entry(okey);
+            let ok = self.inner.insert_from(start, okey, value);
+            if ok {
+                unsafe {
+                    // First-touch bucket initialization / refinement. Check
+                    // whether the cell even wants this node first: in steady
+                    // state it already holds an in-range hint, and the
+                    // locate walk would be pure waste.
+                    let cell = &(*t).cells[j];
+                    let lo = (*t).bucket_lo(j);
+                    if Self::hint_wants(cell, lo, okey) {
+                        if let Some(node) = self.inner.find_linked(start, okey) {
+                            Self::publish_hint(cell, node, lo, okey);
+                        }
+                    }
+                }
+            }
+            ok
+        };
+        if inserted {
+            let n = self.items.fetch_add(1, Ordering::Relaxed) + 1;
+            self.maybe_grow(n);
+        }
+        inserted
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        let okey = mix64(key);
+        let removed = {
+            let _g = self.inner.ebr().pin();
+            let (start, _, _) = self.entry(okey);
+            self.inner.remove_from(start, okey)
+        };
+        if removed {
+            self.items.fetch_sub(1, Ordering::Relaxed);
+        }
+        removed
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.get(key).is_some()
+    }
+
+    fn get(&self, key: u64) -> Option<u64> {
+        let okey = mix64(key);
+        let _g = self.inner.ebr().pin();
+        let (start, _, _) = self.entry(okey);
+        self.inner.get_from(start, okey)
+    }
+
+    fn len_approx(&self) -> usize {
+        self.inner.count()
+    }
+
+    fn durable_pool(&self) -> Option<PoolId> {
+        Some(self.inner.pool())
+    }
+
+    fn prepare_crash(&self) {
+        self.inner.preserve();
+    }
+}
+
+impl<F: ResizableFamily> Drop for ResizableHash<F> {
+    fn drop(&mut self) {
+        unsafe {
+            drop(Box::from_raw(self.table.load(Ordering::Relaxed)));
+            for &t in self.retired.lock().unwrap().iter() {
+                drop(Box::from_raw(t));
+            }
+        }
+    }
+}
+
+/// Recover a resizable link-free hash from the durable areas of `id`.
+pub fn recover_linkfree(id: PoolId, default_nbuckets: usize) -> (ResizableLfHash, RecoveredStats) {
+    let (list, stats) = crate::sets::linkfree::recover_list(id);
+    (ResizableHash::adopt(list, default_nbuckets), stats)
+}
+
+/// Recover a resizable SOFT hash from the durable areas of `id`.
+pub fn recover_soft(id: PoolId, default_nbuckets: usize) -> (ResizableSoftHash, RecoveredStats) {
+    let (list, stats) = crate::sets::soft::recover_list(id);
+    (ResizableHash::adopt(list, default_nbuckets), stats)
+}
+
+/// Recover a resizable log-free hash from pool `id` (durable anchor: the
+/// list's root cell, walked link-by-link as for the plain list).
+pub fn recover_logfree(
+    id: PoolId,
+    default_nbuckets: usize,
+) -> (ResizableLogFreeHash, RecoveredStats) {
+    let (list, stats) = crate::sets::logfree::recover_list(id);
+    (ResizableHash::adopt(list, default_nbuckets), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{self, CrashPolicy};
+    use std::collections::BTreeSet;
+
+    fn model_check<F: ResizableFamily>(h: &ResizableHash<F>, seed: u64) {
+        use crate::util::rng::Xoshiro256;
+        let initial = h.nbuckets();
+        let mut model = BTreeSet::new();
+        let mut rng = Xoshiro256::new(seed);
+        for _ in 0..30_000 {
+            let k = rng.below(1024);
+            match rng.below(4) {
+                0 | 1 => assert_eq!(h.insert(k, k ^ 0xF00D), model.insert(k), "insert {k}"),
+                2 => assert_eq!(h.remove(k), model.remove(&k), "remove {k}"),
+                _ => assert_eq!(h.contains(k), model.contains(&k), "contains {k}"),
+            }
+        }
+        assert_eq!(h.len_approx(), model.len());
+        let mut snap: Vec<u64> = h.snapshot().iter().map(|kv| kv.0).collect();
+        snap.sort_unstable();
+        let want: Vec<u64> = model.iter().copied().collect();
+        assert_eq!(snap, want, "snapshot must equal the model set");
+        assert!(
+            h.nbuckets() >= initial * 4,
+            "expected >= 2 doublings, got {} -> {}",
+            initial,
+            h.nbuckets()
+        );
+    }
+
+    #[test]
+    fn linkfree_grows_and_matches_model() {
+        model_check(&ResizableHash::new_linkfree(2), 0x51A);
+    }
+
+    #[test]
+    fn soft_grows_and_matches_model() {
+        model_check(&ResizableHash::new_soft(2), 0x51B);
+    }
+
+    #[test]
+    fn logfree_grows_and_matches_model() {
+        model_check(&ResizableHash::new_logfree(2), 0x51C);
+    }
+
+    fn assert_zero_psync_reads<F: ResizableFamily>(h: &ResizableHash<F>) {
+        for k in 0..200u64 {
+            assert!(h.insert(k, k + 1));
+        }
+        // First read pass may repopulate nothing durable either, but the
+        // families' flush flags settle on the update path; pin the steady
+        // state: reads are psync-free.
+        for k in 0..200u64 {
+            assert_eq!(h.get(k), Some(k + 1));
+        }
+        let a = pmem::stats::thread_snapshot();
+        for k in 0..200u64 {
+            assert!(h.contains(k));
+            assert_eq!(h.get(k), Some(k + 1));
+        }
+        for k in 1000..1100u64 {
+            assert!(!h.contains(k));
+        }
+        let d = pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "{}: reads must not psync", F::FAMILY);
+        assert_eq!(d.flushes, 0, "{}: reads must not flush", F::FAMILY);
+    }
+
+    #[test]
+    fn reads_stay_psync_free_across_growth() {
+        // 200 items over 2 initial buckets: multiple doublings happen
+        // during the insert phase; reads afterwards must still cost zero.
+        assert_zero_psync_reads(&ResizableHash::new_linkfree(2));
+        assert_zero_psync_reads(&ResizableHash::new_soft(2));
+        assert_zero_psync_reads(&ResizableHash::new_logfree(2));
+    }
+
+    fn assert_update_budget<F: ResizableFamily>(h: &ResizableHash<F>, per_update: u64) {
+        // Tables sized 1<<10 with 64 items never grow, so this measures
+        // the pure hint-layer overhead: none allowed.
+        for k in 0..64u64 {
+            h.insert(k, k);
+        }
+        let a = pmem::stats::thread_snapshot();
+        assert!(h.insert(500, 1));
+        assert!(h.remove(500));
+        let d = pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(
+            d.fences,
+            2 * per_update,
+            "{}: the hash layer must not add fences to the update protocol",
+            F::FAMILY
+        );
+    }
+
+    #[test]
+    fn update_psync_budget_unchanged_by_resizable_layer() {
+        // The hint layer must not add fences to any family's update
+        // protocol (growth itself pays 1 per doubling, measured apart):
+        // SOFT = 1/update, link-free = 1 (flag-elided), log-free = 2.
+        assert_update_budget(&ResizableHash::new_soft(1 << 10), 1);
+        assert_update_budget(&ResizableHash::new_linkfree(1 << 10), 1);
+        assert_update_budget(&ResizableHash::new_logfree(1 << 10), 2);
+    }
+
+    fn crash_recover_roundtrip<F, R>(mk: impl FnOnce() -> ResizableHash<F>, recover: R)
+    where
+        F: ResizableFamily,
+        R: FnOnce(PoolId, usize) -> (ResizableHash<F>, RecoveredStats),
+    {
+        let _sim = pmem::sim_session();
+        let h = mk();
+        let id = h.pool_id();
+        for k in 0..300u64 {
+            assert!(h.insert(k, k * 3));
+        }
+        for k in 0..60u64 {
+            assert!(h.remove(k));
+        }
+        let grown = h.nbuckets();
+        assert!(grown >= 8, "test must exercise growth (got {grown})");
+        h.crash_preserve();
+        drop(h);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+
+        let (h2, stats) = recover(id, 2);
+        assert_eq!(stats.members, 240);
+        assert_eq!(
+            h2.nbuckets(),
+            grown,
+            "bucket-count epoch must survive the crash"
+        );
+        for k in 0..300u64 {
+            assert_eq!(h2.get(k), if k < 60 { None } else { Some(k * 3) }, "key {k}");
+        }
+        // Fully operational after recovery, including further growth.
+        for k in 1000..3000u64 {
+            assert!(h2.insert(k, k));
+        }
+        assert!(h2.nbuckets() > grown, "recovered table must keep growing");
+    }
+
+    #[test]
+    fn linkfree_recovers_size_and_contents() {
+        crash_recover_roundtrip(|| ResizableHash::new_linkfree(2), recover_linkfree);
+    }
+
+    #[test]
+    fn soft_recovers_size_and_contents() {
+        crash_recover_roundtrip(|| ResizableHash::new_soft(2), recover_soft);
+    }
+
+    #[test]
+    fn logfree_recovers_size_and_contents() {
+        crash_recover_roundtrip(|| ResizableHash::new_logfree(2), recover_logfree);
+    }
+
+    #[test]
+    fn zipfian_skew_over_growing_keyspace() {
+        // The scenario fixed tables silently degrade on: a zipf-skewed
+        // stream over a keyspace much larger than the initial table.
+        use crate::util::rng::Xoshiro256;
+        use crate::workload::zipf::Zipf;
+        let h = ResizableHash::new_soft(4);
+        let z = Zipf::new(100_000, 0.9);
+        let mut rng = Xoshiro256::new(0x21F);
+        let mut model = BTreeSet::new();
+        for _ in 0..40_000 {
+            let k = z.sample(rng.next_u64());
+            match rng.below(3) {
+                0 => assert_eq!(h.insert(k, k), model.insert(k)),
+                1 => assert_eq!(h.remove(k), model.remove(&k)),
+                _ => assert_eq!(h.contains(k), model.contains(&k)),
+            }
+        }
+        assert_eq!(h.len_approx(), model.len());
+        assert!(h.nbuckets() > 4, "skewed growth must still trigger resizes");
+    }
+}

@@ -54,7 +54,14 @@ impl SoftHash {
 
 impl Drop for SoftHash {
     fn drop(&mut self) {
-        unsafe { self.core.ebr.drain_all() };
+        unsafe {
+            // Deferred frees, then every still-linked SNode/PNode pair in
+            // every bucket (see SoftList::drop).
+            self.core.ebr.drain_all();
+            for b in self.buckets.iter() {
+                self.core.free_chain(b);
+            }
+        }
     }
 }
 
@@ -104,5 +111,21 @@ mod tests {
             assert!(h.insert(k, k)); // reuse of PNode slots
         }
         assert_eq!(h.len_approx(), 64);
+    }
+
+    #[test]
+    fn drop_returns_every_linked_pair_to_the_pools() {
+        let h = SoftHash::new(16);
+        for k in 0..800u64 {
+            assert!(h.insert(k, k));
+        }
+        for k in 0..300u64 {
+            assert!(h.remove(k));
+        }
+        let dpool = h.core.dpool.clone();
+        let vpool = h.core.vpool.clone();
+        drop(h);
+        assert_eq!(dpool.outstanding(), 0, "PNode slots leaked on drop");
+        assert_eq!(vpool.outstanding(), 0, "SNode slots leaked on drop");
     }
 }

@@ -163,6 +163,10 @@ impl SoftCore {
                     let pnode = self.dpool.alloc() as *mut PNode;
                     let v = self.vpool.alloc() as *mut SNode;
                     let pv = (*pnode).alloc();
+                    // The pre-link node must never present an "inserted"
+                    // state: a stale bucket hint probing a recycled slot
+                    // rejects IntendToInsert, but would accept Inserted(0)
+                    // and start a traversal at an unlinked node.
                     std::ptr::write(
                         v,
                         SNode {
@@ -170,7 +174,7 @@ impl SoftCore {
                             value,
                             pptr: pnode,
                             p_validity: pv,
-                            next: AtomicU64::new(0),
+                            next: AtomicU64::new(State::IntendToInsert as u64),
                         },
                     );
                     alloc_v = v;
@@ -307,6 +311,23 @@ impl SoftCore {
         }
     }
 
+    /// Free every node still linked below `head` (its SNode/PNode pair
+    /// both return to their pools) and clear the head.
+    ///
+    /// # Safety
+    /// Callable only when no thread is inside an operation on the owning
+    /// structure (single-threaded teardown).
+    pub(crate) unsafe fn free_chain(&self, head: &AtomicU64) {
+        let mut curr = ptr_of::<SNode>(head.load(Ordering::Relaxed));
+        while !curr.is_null() {
+            let next = ptr_of::<SNode>((*curr).next.load(Ordering::Relaxed));
+            self.dpool.free((*curr).pptr as *mut u8);
+            self.vpool.free(curr as *mut u8);
+            curr = next;
+        }
+        head.store(0, Ordering::Relaxed);
+    }
+
     /// In-set node count from one head (test/metrics only).
     pub fn count(&self, head: *const AtomicU64) -> usize {
         self.snapshot_from(head).len()
@@ -348,6 +369,21 @@ impl SoftList {
         SoftList { head: AtomicU64::new(head_value), core }
     }
 
+    /// Dismantle without running `Drop` (the chain's nodes stay alive):
+    /// used when another structure adopts the chain, e.g. skip-list or
+    /// resizable-hash recovery re-wrapping a recovered list.
+    pub(crate) fn into_parts(self) -> (u64, SoftCore) {
+        let me = std::mem::ManuallyDrop::new(self);
+        // Deferred frees are unlinked pairs — safe to flush here; only the
+        // *linked* nodes must survive for the adopter.
+        unsafe { me.core.ebr.drain_all() };
+        let head = me.head.load(Ordering::Relaxed);
+        // Safety: `me` is ManuallyDrop, so the core is never dropped (or
+        // read) again through it.
+        let core = unsafe { std::ptr::read(&me.core) };
+        (head, core)
+    }
+
     pub fn pool_id(&self) -> crate::pmem::PoolId {
         self.core.dpool.id()
     }
@@ -369,7 +405,15 @@ impl Default for SoftList {
 
 impl Drop for SoftList {
     fn drop(&mut self) {
-        unsafe { self.core.ebr.drain_all() };
+        unsafe {
+            // Deferred frees first (all unlinked), then every still-linked
+            // SNode/PNode pair — `drain_all` alone leaked the live chain
+            // (the pools reclaimed the bytes, but the slots were never
+            // returned, which matters whenever the pools are shared or
+            // outlive this handle).
+            self.core.ebr.drain_all();
+            self.core.free_chain(&self.head);
+        }
     }
 }
 
@@ -445,6 +489,70 @@ mod tests {
         assert!(!l.remove(999));
         let d = crate::pmem::stats::thread_snapshot().since(&a);
         assert_eq!(d.fences, 0, "reads and plain failures must not psync");
+    }
+
+    /// Find key `key`'s volatile node by walking the chain (test helper).
+    unsafe fn node_of(l: &SoftList, key: u64) -> *mut SNode {
+        use crate::sets::tagged::ptr_of;
+        let mut curr = ptr_of::<SNode>(l.head.load(std::sync::atomic::Ordering::Acquire));
+        while !curr.is_null() && (*curr).key != key {
+            curr = ptr_of::<SNode>((*curr).next.load(std::sync::atomic::Ordering::Acquire));
+        }
+        assert!(!curr.is_null(), "key {key} not found");
+        curr
+    }
+
+    #[test]
+    fn failed_ops_that_help_psync_exactly_once() {
+        // Paper Listing 11/12 semantics: an insert that finds a pending
+        // IntendToInsert, or a remove that finds IntendToDelete, must help
+        // the pending op complete — which costs exactly the helped op's
+        // one psync — and then report failure. Plain failures stay free
+        // (asserted in optimal_flushing_bound).
+        use crate::sets::tagged::{state_cas, State};
+        let l = SoftList::new();
+        assert!(l.insert(7, 70));
+        assert!(l.insert(9, 90));
+
+        // Rewind key 7 to IntendToInsert (as if its inserter stalled
+        // between linking and completing).
+        unsafe {
+            let n = node_of(&l, 7);
+            assert!(state_cas(&(*n).next, State::Inserted, State::IntendToInsert));
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.insert(7, 71), "pending insert means the key wins, we fail");
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "helping a pending insert = its one create psync");
+        assert_eq!(l.get(7), Some(70), "helper completed the original insert");
+
+        // Push key 9 to IntendToDelete without persisting the removal (as
+        // if its remover stalled between the state CAS and destroy).
+        unsafe {
+            let n = node_of(&l, 9);
+            assert!(state_cas(&(*n).next, State::Inserted, State::IntendToDelete));
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.remove(9), "the stalled remover owns the removal; we fail");
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "helping a pending remove = its one destroy psync");
+        assert!(!l.contains(9), "helper completed the original remove");
+    }
+
+    #[test]
+    fn drop_returns_every_linked_pair_to_the_pools() {
+        let l = SoftList::new();
+        for k in 0..700u64 {
+            assert!(l.insert(k, k));
+        }
+        for k in 0..200u64 {
+            assert!(l.remove(k)); // retired pairs drain in Drop
+        }
+        let dpool = l.core.dpool.clone();
+        let vpool = l.core.vpool.clone();
+        drop(l);
+        assert_eq!(dpool.outstanding(), 0, "PNode slots leaked on drop");
+        assert_eq!(vpool.outstanding(), 0, "SNode slots leaked on drop");
     }
 
     #[test]

@@ -109,15 +109,12 @@ pub fn recover_hash(id: PoolId, nbuckets: usize) -> (SoftHash, RecoveredStats) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pmem::{self, CrashPolicy, Mode};
+    use crate::pmem::{self, CrashPolicy};
     use crate::sets::ConcurrentSet;
-
-    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     #[test]
     fn soft_list_survives_pessimistic_crash() {
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let l = SoftList::new();
         let id = l.pool_id();
         for k in 0..60u64 {
@@ -128,7 +125,7 @@ mod tests {
         }
         l.crash_preserve();
         drop(l);
-        pmem::crash(CrashPolicy::PESSIMISTIC);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
 
         let (l2, stats) = recover_list(id);
         for k in 0..60u64 {
@@ -143,13 +140,11 @@ mod tests {
         assert!(l2.insert(0, 1));
         assert!(l2.remove(1));
         assert!(l2.insert(1000, 1));
-        pmem::set_mode(Mode::Perf);
     }
 
     #[test]
     fn soft_hash_survives_random_eviction_crash() {
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let h = SoftHash::new(16);
         let id = h.pool_id();
         for k in 0..150u64 {
@@ -160,19 +155,17 @@ mod tests {
         }
         h.crash_preserve();
         drop(h);
-        pmem::crash(CrashPolicy::random(0.3, 7));
+        pmem::crash_pools(CrashPolicy::random(0.3, 7), &[id]);
         let (h2, stats) = recover_hash(id, 16);
         for k in 0..150u64 {
             assert_eq!(h2.contains(k), k >= 50, "key {k}");
         }
         assert_eq!(stats.members, 100);
-        pmem::set_mode(Mode::Perf);
     }
 
     #[test]
     fn interrupted_soft_insert_dies_interrupted_remove_survives() {
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let l = SoftList::new();
         let id = l.pool_id();
         assert!(l.insert(1, 10));
@@ -203,11 +196,10 @@ mod tests {
         }
         l.crash_preserve();
         drop(l);
-        pmem::crash(CrashPolicy::PESSIMISTIC);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
         let (l2, _) = recover_list(id);
         assert!(l2.contains(1));
         assert!(!l2.contains(2), "unpersisted insert must not survive");
         assert!(!l2.contains(3), "persisted (intention-completed) remove must hold");
-        pmem::set_mode(Mode::Perf);
     }
 }

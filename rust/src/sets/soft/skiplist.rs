@@ -233,13 +233,10 @@ impl crate::sets::ConcurrentSet for SoftSkipList {
 /// (fresh volatile nodes, zero psyncs), index rebuilt randomized.
 pub fn recover_skiplist(id: PoolId) -> (SoftSkipList, RecoveredStats) {
     let (list, stats) = super::recover_list(id);
-    let head_val = list.head.load(Ordering::Relaxed);
-    let core = SoftCore::from_parts(
-        list.core.dpool.clone(),
-        list.core.vpool.clone(),
-        Arc::new(Ebr::new()),
-    );
-    drop(list); // pool Arcs shared; recovered EBR limbo is empty
+    // Adopt the recovered chain without dropping the list (its Drop would
+    // free every linked node pair).
+    let (head_val, core0) = list.into_parts();
+    let core = SoftCore::from_parts(core0.dpool, core0.vpool, Arc::new(Ebr::new()));
     let skip = SoftSkipList::from_core(core);
     skip.head.store(head_val, Ordering::Relaxed);
     unsafe {
@@ -261,7 +258,7 @@ fn _types(_: &VolatilePool) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pmem::{self, CrashPolicy, Mode};
+    use crate::pmem::{self, CrashPolicy};
     use crate::sets::ConcurrentSet;
 
     #[test]
@@ -348,9 +345,7 @@ mod tests {
 
     #[test]
     fn soft_skiplist_crash_recovery() {
-        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-        let _g = LOCK.lock().unwrap();
-        pmem::set_mode(Mode::Sim);
+        let _sim = pmem::sim_session();
         let s = SoftSkipList::new();
         let id = s.pool_id();
         for k in 0..400u64 {
@@ -361,7 +356,7 @@ mod tests {
         }
         s.crash_preserve();
         drop(s);
-        pmem::crash(CrashPolicy::random(0.3, 9));
+        pmem::crash_pools(CrashPolicy::random(0.3, 9), &[id]);
         let (s2, stats) = recover_skiplist(id);
         assert_eq!(stats.members as usize, (0..400).filter(|k| k % 5 != 0).count());
         for k in 0..400u64 {
@@ -372,6 +367,5 @@ mod tests {
             }
         }
         assert!(s2.insert(9999, 1));
-        pmem::set_mode(Mode::Perf);
     }
 }

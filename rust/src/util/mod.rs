@@ -43,6 +43,19 @@ pub const fn mix64(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Exact inverse of [`mix64`] (splitmix64 is a bijection on `u64`). The
+/// resizable hash sets store `mix64(key)` as the list order key so bucket
+/// ranges are contiguous; snapshots and recovery map back with this.
+#[inline(always)]
+pub const fn mix64_inv(mut z: u64) -> u64 {
+    z = z ^ (z >> 31) ^ (z >> 62);
+    z = z.wrapping_mul(0x319642B2D24D8EC3); // modular inverse of 0x94D049BB133111EB
+    z = z ^ (z >> 27) ^ (z >> 54);
+    z = z.wrapping_mul(0x96DE1B173F119089); // modular inverse of 0xBF58476D1CE4E5B9
+    z = z ^ (z >> 30) ^ (z >> 60);
+    z.wrapping_sub(0x9E3779B97F4A7C15)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,5 +81,16 @@ mod tests {
         }
         // Known vector: splitmix64(0) first output.
         assert_eq!(mix64(0), 0xE220A8397B1DCDAF);
+    }
+
+    #[test]
+    fn mix64_inv_roundtrips() {
+        for i in 0..10_000u64 {
+            assert_eq!(mix64_inv(mix64(i)), i);
+            let x = i.wrapping_mul(0x9E3779B97F4A7C15) ^ (i << 32);
+            assert_eq!(mix64_inv(mix64(x)), x);
+        }
+        assert_eq!(mix64_inv(mix64(u64::MAX)), u64::MAX);
+        assert_eq!(mix64_inv(0xE220A8397B1DCDAF), 0);
     }
 }

@@ -4,7 +4,7 @@
 
 use durasets::config::Config;
 use durasets::coordinator::{server, DuraKv};
-use durasets::pmem::{self, CrashPolicy, Mode};
+use durasets::pmem::{self, CrashPolicy};
 use durasets::sets::Family;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -35,6 +35,7 @@ impl Client {
 #[test]
 fn serve_crash_recover_serve() {
     let _g = LOCK.lock().unwrap();
+    let _sim = pmem::sim_session();
     let mut cfg = Config::default();
     cfg.family = Family::Soft;
     cfg.shards = 3;
@@ -94,7 +95,6 @@ fn serve_crash_recover_serve() {
     assert_eq!(c.send("LEN"), format!("LEN {}", 3 * 150));
     assert_eq!(c.send("QUIT"), "BYE");
     drop(srv2);
-    pmem::set_mode(Mode::Perf);
 }
 
 #[test]

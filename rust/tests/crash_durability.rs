@@ -16,15 +16,13 @@
 //! This is Definition A.2 instantiated: acked ops happened-before the
 //! crash and must be reflected; the pending op may be linearized or not.
 
-use durasets::pmem::{self, CrashPolicy, Mode, POWER_LOSS};
+use durasets::pmem::{self, CrashPolicy, POWER_LOSS};
 use durasets::sets::{self, ConcurrentSet, Family};
 use durasets::util::rng::Xoshiro256;
 use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
-
-static LOCK: Mutex<()> = Mutex::new(());
+use std::sync::{Arc, Barrier};
 
 /// Last acked state of a key: Some(value) = inserted, None = removed.
 type StripeLog = HashMap<u64, Option<u64>>;
@@ -91,9 +89,8 @@ fn quiet_power_loss_panics() {
 }
 
 fn run_torture(family: Family, evict_prob: f64, seed: u64) {
-    let _g = LOCK.lock().unwrap();
+    let _sim = pmem::sim_session();
     quiet_power_loss_panics();
-    pmem::set_mode(Mode::Sim);
     pmem::set_psync_ns(0);
     let range = 4096u64;
     let nthreads = 4u64;
@@ -126,14 +123,16 @@ fn run_torture(family: Family, evict_prob: f64, seed: u64) {
     let victims = outcomes.iter().filter(|o| o.in_flight.is_some()).count();
     assert!(victims <= 1, "at most one thread dies per armed fault");
 
-    // Crash + recover.
+    // Crash + recover (scoped: other tests' pools stay untouched). The
+    // hash shards are resizable, so recovery goes through the resizable
+    // entry points (family list + bucket-count epoch).
     set.prepare_crash();
     drop(set);
-    pmem::crash(CrashPolicy::random(evict_prob, seed));
+    pmem::crash_pools(CrashPolicy::random(evict_prob, seed), &[pool]);
     let recovered: Box<dyn ConcurrentSet> = match family {
-        Family::LinkFree => Box::new(sets::linkfree::recover_hash(pool, 256).0),
-        Family::Soft => Box::new(sets::soft::recover_hash(pool, 256).0),
-        Family::LogFree => Box::new(sets::logfree::recover_hash(pool).0),
+        Family::LinkFree => Box::new(sets::resizable::recover_linkfree(pool, 256).0),
+        Family::Soft => Box::new(sets::resizable::recover_soft(pool, 256).0),
+        Family::LogFree => Box::new(sets::resizable::recover_logfree(pool, 256).0),
         Family::Volatile => unreachable!(),
     };
 
@@ -174,7 +173,6 @@ fn run_torture(family: Family, evict_prob: f64, seed: u64) {
         }
     }
     assert!(checked > 100, "{family}: torture too weak ({checked} checks)");
-    pmem::set_mode(Mode::Perf);
 }
 
 #[test]
@@ -212,8 +210,7 @@ fn logfree_torture_random_eviction() {
 /// explicit flush. Recovery must never see two members with one key.
 #[test]
 fn section_3_3_two_insert_race_no_duplicates() {
-    let _g = LOCK.lock().unwrap();
-    pmem::set_mode(Mode::Sim);
+    let _sim = pmem::sim_session();
     pmem::set_psync_ns(0);
     for round in 0..20u64 {
         let set = sets::linkfree::LfHash::new(8);
@@ -237,12 +234,77 @@ fn section_3_3_two_insert_race_no_duplicates() {
         }
         set.crash_preserve();
         drop(set);
-        pmem::crash(CrashPolicy::random(1.0, round)); // everything persists
+        pmem::crash_pools(CrashPolicy::random(1.0, round), &[pool]); // everything persists
         let (recovered, stats) = sets::linkfree::recover_hash(pool, 8);
         assert_eq!(stats.members, 64, "round {round}");
         for k in 0..64u64 {
             assert!(recovered.contains(k));
         }
     }
-    pmem::set_mode(Mode::Perf);
+}
+
+/// Crash while the resizable table is mid-migration. Migration is lazy
+/// hint population, so "mid-migration" is any instant after a doubling
+/// published: hints are part-filled, the epoch cell records the new size,
+/// and none of that is load-bearing for durability — the family list plus
+/// the epoch must reproduce the exact set and table size.
+#[test]
+fn resizable_crash_during_migration_recovers_exactly() {
+    let _sim = pmem::sim_session();
+    pmem::set_psync_ns(0);
+    for (name, mk, recover) in [
+        (
+            "link-free",
+            (|| sets::new_hash(Family::LinkFree, 2)) as fn() -> Box<dyn ConcurrentSet>,
+            (|p, n| {
+                Box::new(sets::resizable::recover_linkfree(p, n).0) as Box<dyn ConcurrentSet>
+            }) as fn(durasets::pmem::PoolId, usize) -> Box<dyn ConcurrentSet>,
+        ),
+        (
+            "soft",
+            || sets::new_hash(Family::Soft, 2),
+            |p, n| Box::new(sets::resizable::recover_soft(p, n).0) as Box<dyn ConcurrentSet>,
+        ),
+        (
+            "log-free",
+            || sets::new_hash(Family::LogFree, 2),
+            |p, n| Box::new(sets::resizable::recover_logfree(p, n).0) as Box<dyn ConcurrentSet>,
+        ),
+    ] {
+        let set = mk();
+        let pool = set.durable_pool().unwrap();
+        // Drive straight through several doublings from 4 concurrent
+        // threads, then crash with no quiesce point: whatever hint
+        // population was in flight is lost with the volatile heap.
+        let set: Arc<dyn ConcurrentSet> = Arc::from(set);
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let set = set.clone();
+                std::thread::spawn(move || {
+                    for i in 0..400u64 {
+                        let k = i * 4 + t; // disjoint stripes: exact model
+                        assert!(set.insert(k, k * 7), "{t}/{i}");
+                        if i % 3 == 0 {
+                            assert!(set.remove(k));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        set.prepare_crash();
+        drop(set);
+        pmem::crash_pools(CrashPolicy::random(0.3, 0xB00), &[pool]);
+        let recovered = recover(pool, 2);
+        for k in 0..1600u64 {
+            let expect = (k / 4) % 3 != 0;
+            assert_eq!(recovered.contains(k), expect, "{name} key {k}");
+        }
+        // Still fully operational, including further growth.
+        for k in 10_000..10_200u64 {
+            assert!(recovered.insert(k, k), "{name} post-recovery insert {k}");
+        }
+    }
 }

@@ -12,12 +12,10 @@
 
 use durasets::config::{Config, Structure};
 use durasets::coordinator::DuraKv;
-use durasets::pmem::{self, CrashPolicy, Mode};
+use durasets::pmem::{self, CrashPolicy};
 use durasets::sets::{self, ConcurrentSet, Family};
 use durasets::util::rng::Xoshiro256;
 use std::collections::BTreeMap;
-
-static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 const SEEDS: u64 = 12;
 
@@ -65,8 +63,7 @@ fn p1_model_equivalence_all_families() {
 
 #[test]
 fn p2_crash_idempotence() {
-    let _g = LOCK.lock().unwrap();
-    pmem::set_mode(Mode::Sim);
+    let _sim = pmem::sim_session();
     pmem::set_psync_ns(0);
     for family in [Family::LinkFree, Family::Soft, Family::LogFree] {
         for seed in 0..SEEDS {
@@ -87,13 +84,15 @@ fn p2_crash_idempotence() {
             }
             set.prepare_crash();
             drop(set);
-            pmem::crash(CrashPolicy::random((seed % 3) as f64 * 0.4, seed));
+            pmem::crash_pools(CrashPolicy::random((seed % 3) as f64 * 0.4, seed), &[pool]);
 
+            // Hash shards are resizable: recover through the resizable
+            // entry points (family list + bucket-count epoch).
             let recover = |pool| -> Box<dyn ConcurrentSet> {
                 match family {
-                    Family::LinkFree => Box::new(sets::linkfree::recover_hash(pool, 32).0),
-                    Family::Soft => Box::new(sets::soft::recover_hash(pool, 32).0),
-                    Family::LogFree => Box::new(sets::logfree::recover_hash(pool).0),
+                    Family::LinkFree => Box::new(sets::resizable::recover_linkfree(pool, 32).0),
+                    Family::Soft => Box::new(sets::resizable::recover_soft(pool, 32).0),
+                    Family::LogFree => Box::new(sets::resizable::recover_logfree(pool, 32).0),
                     Family::Volatile => unreachable!(),
                 }
             };
@@ -107,7 +106,7 @@ fn p2_crash_idempotence() {
             // idempotent.
             r1.prepare_crash();
             drop(r1);
-            pmem::crash(CrashPolicy::PESSIMISTIC);
+            pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[pool]);
             let r2 = recover(pool);
             assert_eq!(r2.len_approx(), model.len(), "{family:?} seed={seed} (2nd)");
             for (&k, &v) in &model {
@@ -115,7 +114,6 @@ fn p2_crash_idempotence() {
             }
         }
     }
-    pmem::set_mode(Mode::Perf);
 }
 
 #[test]

@@ -1,0 +1,82 @@
+//! Concurrency stress for the resizable durable hash sets: 8 threads on
+//! disjoint key stripes drive each table across several doublings while
+//! every op's result is checked against a per-stripe BTreeSet model
+//! (disjoint stripes make the models exact even under concurrency); the
+//! final snapshot must equal the union of the models, and reads must stay
+//! psync-free afterwards.
+
+use durasets::pmem::stats;
+use durasets::sets::resizable::{ResizableFamily, ResizableHash};
+use durasets::sets::ConcurrentSet;
+use durasets::util::rng::Xoshiro256;
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+const THREADS: u64 = 8;
+const OPS: u64 = 6_000;
+const STRIPE_KEYS: u64 = 256;
+
+fn stress<F: ResizableFamily>(h: ResizableHash<F>, seed: u64) {
+    let initial = h.nbuckets();
+    let h = Arc::new(h);
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(seed ^ (t * 0x9E37));
+                let mut model = BTreeSet::new();
+                for _ in 0..OPS {
+                    // Stripe-owned key: k ≡ t (mod THREADS).
+                    let k = rng.below(STRIPE_KEYS) * THREADS + t;
+                    match rng.below(4) {
+                        0 | 1 => assert_eq!(h.insert(k, k ^ t), model.insert(k), "insert {k}"),
+                        2 => assert_eq!(h.remove(k), model.remove(&k), "remove {k}"),
+                        _ => assert_eq!(h.contains(k), model.contains(&k), "contains {k}"),
+                    }
+                }
+                model
+            })
+        })
+        .collect();
+    let mut want = BTreeSet::new();
+    for hnd in handles {
+        want.extend(hnd.join().unwrap());
+    }
+
+    assert_eq!(h.len_approx(), want.len());
+    let mut snap: Vec<u64> = h.snapshot().iter().map(|kv| kv.0).collect();
+    snap.sort_unstable();
+    let want: Vec<u64> = want.into_iter().collect();
+    assert_eq!(snap, want, "snapshot must equal the union of stripe models");
+
+    assert!(
+        h.nbuckets() >= initial * 4,
+        "table must cross >= 2 doublings under load: {} -> {}",
+        initial,
+        h.nbuckets()
+    );
+
+    // Steady state reached: reads over the grown table stay psync-free.
+    let probe: Vec<u64> = want.iter().copied().take(64).collect();
+    let a = stats::thread_snapshot();
+    for &k in &probe {
+        assert!(h.contains(k));
+    }
+    let d = stats::thread_snapshot().since(&a);
+    assert_eq!(d.fences, 0, "reads must not psync after growth");
+}
+
+#[test]
+fn linkfree_concurrent_growth_matches_models() {
+    stress(ResizableHash::new_linkfree(2), 0xA11);
+}
+
+#[test]
+fn soft_concurrent_growth_matches_models() {
+    stress(ResizableHash::new_soft(2), 0xA22);
+}
+
+#[test]
+fn logfree_concurrent_growth_matches_models() {
+    stress(ResizableHash::new_logfree(2), 0xA33);
+}

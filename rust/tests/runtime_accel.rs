@@ -1,7 +1,7 @@
 //! Integration: XLA-accelerated recovery == pure-Rust recovery,
 //! bit-for-bit, through a real crash/recovery cycle.
 
-use durasets::pmem::{self, CrashPolicy, Mode};
+use durasets::pmem::{self, CrashPolicy};
 use durasets::runtime::recovery_accel::{
     recover_linkfree_hash_accel, recover_soft_hash_accel,
 };
@@ -23,7 +23,7 @@ fn soft_accel_recovery_matches_rust_recovery() {
         return;
     }
     let _g = LOCK.lock().unwrap();
-    pmem::set_mode(Mode::Sim);
+    let _sim = pmem::sim_session();
 
     // Two identical structures, driven by the same op sequence.
     let a = soft::SoftHash::new(64);
@@ -48,7 +48,7 @@ fn soft_accel_recovery_matches_rust_recovery() {
     b.crash_preserve();
     drop(a);
     drop(b);
-    pmem::crash(CrashPolicy::random(0.2, 3));
+    pmem::crash_pools(CrashPolicy::random(0.2, 3), &[ida, idb]);
 
     let planner = RecoveryPlanner::load().unwrap();
     let (ha, sa) = recover_soft_hash_accel(&planner, ida, 64).unwrap();
@@ -65,7 +65,6 @@ fn soft_accel_recovery_matches_rust_recovery() {
     for k in 0..100u64 {
         assert_eq!(ha.insert(10_000 + k, k), hb.insert(10_000 + k, k));
     }
-    pmem::set_mode(Mode::Perf);
 }
 
 #[test]
@@ -75,7 +74,7 @@ fn linkfree_accel_recovery_matches_rust_recovery() {
         return;
     }
     let _g = LOCK.lock().unwrap();
-    pmem::set_mode(Mode::Sim);
+    let _sim = pmem::sim_session();
 
     let a = linkfree::LfHash::new(32);
     let b = linkfree::LfHash::new(32);
@@ -99,7 +98,7 @@ fn linkfree_accel_recovery_matches_rust_recovery() {
     b.crash_preserve();
     drop(a);
     drop(b);
-    pmem::crash(CrashPolicy::PESSIMISTIC);
+    pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[ida, idb]);
 
     let planner = RecoveryPlanner::load().unwrap();
     let (ha, sa) = recover_linkfree_hash_accel(&planner, ida, 32).unwrap();
@@ -111,7 +110,6 @@ fn linkfree_accel_recovery_matches_rust_recovery() {
     snap_a.sort_unstable();
     snap_b.sort_unstable();
     assert_eq!(snap_a, snap_b);
-    pmem::set_mode(Mode::Perf);
 }
 
 #[test]

@@ -1,0 +1,149 @@
+//! Minimal, dependency-free shim for the subset of the `anyhow` API used
+//! by this workspace (`Result`, `Error`, `anyhow!`, `bail!`, `ensure!`,
+//! `Context`). The build environment has no network access to crates.io,
+//! so the real crate is replaced by this path dependency; swapping the
+//! manifest back to the registry version requires no source changes.
+//!
+//! Differences from the real crate: errors are flattened to a message
+//! string (no source chain, no backtrace), which is all the workspace
+//! observes (it only ever `Display`s or `Debug`s its errors).
+
+use std::fmt;
+
+/// A flattened error: the formatted message of whatever produced it.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow::Error, this type deliberately does NOT implement
+// std::error::Error — that is what makes the blanket conversion below
+// coherent (it would otherwise overlap with `From<T> for T`).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`: a result defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error (or a missing `Option` value).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u64> {
+        Ok(s.parse::<u64>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            Ok(())
+        }
+        assert!(f(true).is_ok());
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = anyhow!("v={}", 3);
+        assert_eq!(e.to_string(), "v=3");
+
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let bad: std::result::Result<u32, std::num::ParseIntError> = "x".parse::<u32>();
+        let msg = bad.context("parsing x").unwrap_err().to_string();
+        assert!(msg.starts_with("parsing x: "), "{msg}");
+    }
+}

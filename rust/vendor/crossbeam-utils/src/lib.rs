@@ -1,0 +1,67 @@
+//! Minimal, dependency-free shim for the one `crossbeam_utils` item this
+//! workspace uses: [`CachePadded`]. Vendored because the build environment
+//! has no crates.io access; the manifest can point back at the registry
+//! crate with no source changes.
+
+use core::ops::{Deref, DerefMut};
+
+/// Pads and aligns a value to (at least) the size of a cache line so
+/// neighbouring values in an array never share one — the false-sharing
+/// defence used by the per-thread slot arrays throughout the workspace.
+///
+/// 128-byte alignment matches the real crate's choice on x86_64 (two lines,
+/// covering the adjacent-line prefetcher).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap `value` in cache-line padding.
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded { value }
+    }
+
+    /// Unwrap the padded value.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> CachePadded<T> {
+        CachePadded::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_and_transparent() {
+        let v = CachePadded::new(7u64);
+        assert_eq!(*v, 7);
+        assert_eq!(core::mem::align_of::<CachePadded<u8>>(), 128);
+        assert_eq!(v.into_inner(), 7);
+        let arr: Vec<CachePadded<u64>> = (0..4).map(CachePadded::new).collect();
+        let a = &*arr[0] as *const u64 as usize;
+        let b = &*arr[1] as *const u64 as usize;
+        assert!(b - a >= 128, "neighbours must not share a line");
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal, dependency-free shim for the `once_cell` items this workspace
+//! uses (`sync::Lazy` for statics, `unsync::OnceCell` for thread-locals),
+//! built on `std::sync::OnceLock`. Vendored because the build environment
+//! has no crates.io access.
+
+pub mod sync {
+    use core::cell::Cell;
+    use core::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialised on first access, usable in `static`s.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: Cell<Option<F>>,
+    }
+
+    // Safety: same argument as the real crate — `init` is only taken by
+    // the single thread that wins the OnceLock initialisation race, so the
+    // Cell is never accessed concurrently.
+    unsafe impl<T: Send + Sync, F: Send> Sync for Lazy<T, F> {}
+
+    impl<T, F> Lazy<T, F> {
+        /// Create a lazy value with the given initialiser.
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init: Cell::new(Some(init)) }
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Lazy<T, F> {
+        /// Force initialisation and return the value.
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| match this.init.take() {
+                Some(f) => f(),
+                None => panic!("Lazy initialiser panicked previously"),
+            })
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+pub mod unsync {
+    use core::cell::UnsafeCell;
+
+    /// A single-threaded write-once cell (usable in `thread_local!` with a
+    /// `const` initialiser).
+    pub struct OnceCell<T> {
+        slot: UnsafeCell<Option<T>>,
+    }
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> OnceCell<T> {
+            OnceCell { slot: UnsafeCell::new(None) }
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            // Safety: !Sync type, single-thread access; no reference into
+            // the slot outlives a `set` because `set` refuses to overwrite.
+            unsafe { (*self.slot.get()).as_ref() }
+        }
+
+        pub fn set(&self, value: T) -> Result<(), T> {
+            if self.get().is_some() {
+                return Err(value);
+            }
+            // Safety: slot is empty, so no outstanding reference exists.
+            unsafe { *self.slot.get() = Some(value) };
+            Ok(())
+        }
+
+        pub fn get_or_init(&self, init: impl FnOnce() -> T) -> &T {
+            if self.get().is_none() {
+                let _ = self.set(init());
+            }
+            self.get().expect("OnceCell just initialised")
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn lazy_static_initialises_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        static V: super::sync::Lazy<u64> = super::sync::Lazy::new(|| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            42
+        });
+        let handles: Vec<_> = (0..4).map(|_| std::thread::spawn(|| *V)).collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 42);
+        }
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn unsync_once_cell() {
+        let c = super::unsync::OnceCell::new();
+        assert!(c.get().is_none());
+        assert!(c.set(5).is_ok());
+        assert!(c.set(6).is_err());
+        assert_eq!(c.get(), Some(&5));
+        assert_eq!(*c.get_or_init(|| 9), 5);
+    }
+}
