@@ -65,6 +65,32 @@ pub fn render(title: &str, x_label: &str, rows: &[Row]) -> String {
     out
 }
 
+/// One JSON object per (row, family) data point (hand-rolled: the offline
+/// crate set has no serde). Values contain no quotes, so no escaping is
+/// needed. The CI bench-smoke step concatenates these into
+/// `BENCH_smoke.json` so the perf trajectory has machine-readable points.
+pub fn to_json_points(fig: &str, x_label: &str, rows: &[Row]) -> Vec<String> {
+    let mut points = Vec::new();
+    for row in rows {
+        for (f, s) in &row.samples {
+            points.push(format!(
+                "{{\"fig\":\"{}\",\"x_label\":\"{}\",\"x\":\"{}\",\"family\":\"{}\",\"mops\":{:.4},\"psync_per_op\":{:.5},\"ops\":{},\"fences\":{},\"flushes\":{},\"elapsed_ms\":{}}}",
+                fig,
+                x_label,
+                row.x,
+                f,
+                s.mops(),
+                s.psync_per_op(),
+                s.ops,
+                s.fences,
+                s.flushes,
+                s.elapsed.as_millis(),
+            ));
+        }
+    }
+    points
+}
+
 /// Peak improvement over log-free across all rows (the paper's headline
 /// "up to 3.3x" style number).
 pub fn peak_improvement(rows: &[Row]) -> Option<(Family, String, f64)> {
@@ -122,6 +148,16 @@ mod tests {
         assert!(txt.contains("3.30x"), "{txt}");
         assert!(txt.contains("-- csv --"));
         assert!(txt.contains("soft_mops"));
+    }
+
+    #[test]
+    fn json_points_are_wellformed() {
+        let pts = to_json_points("1c", "threads", &rows());
+        assert_eq!(pts.len(), 3);
+        assert!(pts[0].starts_with("{\"fig\":\"1c\",\"x_label\":\"threads\",\"x\":\"8\""));
+        assert!(pts[0].contains("\"family\":\"soft\""));
+        assert!(pts[0].contains("\"mops\":3.3000"));
+        assert!(pts[0].ends_with('}'));
     }
 
     #[test]

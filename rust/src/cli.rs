@@ -63,20 +63,26 @@ USAGE:
 
 COMMANDS:
   serve         run the sharded durable KV service (TCP line protocol)
-  bench         regenerate a paper figure: --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|recovery|all
+  bench         regenerate a paper figure:
+                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|all
+                --json FILE writes machine-readable data points
   crash-test    run ops, crash (sim), recover, verify — end to end
   recover-demo  build a store, crash it, time rust vs XLA-accelerated recovery
   workload      print a sample of the deterministic op stream
   help          this text
 
+PROTOCOL (serve): PUT/GET/DEL/LEN/STATS/QUIT; pipelined lines are group-
+  committed per shard; MULTI <n> + n ops + EXEC frames an explicit batch.
+
 CONFIG KEYS (file or key=value):
   family=soft|link-free|log-free|volatile   structure=hash|list
   shards=N  key_range=N[K|M]  read_pct=0..100  threads=N
-  psync_ns=N  sim=true|false  seed=N  port=N  duration_ms=N  zipf_theta=F
+  psync_ns=N  sim=true|false  seed=N  port=N  max_conns=N  duration_ms=N
+  zipf_theta=F
 
 EXAMPLES:
-  durasets serve family=soft shards=4 key_range=1M port=7878
-  durasets bench --fig 1c
+  durasets serve family=soft shards=4 key_range=1M port=7878 max_conns=512
+  durasets bench --fig batch --json BENCH_smoke.json
   durasets crash-test family=link-free key_range=64K
 ";
 

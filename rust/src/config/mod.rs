@@ -54,6 +54,9 @@ pub struct Config {
     pub seed: u64,
     /// TCP port for `durasets serve`.
     pub port: u16,
+    /// Max concurrent TCP connections (thread-per-connection bound);
+    /// 0 = unlimited. Excess connections are refused with an ERR line.
+    pub max_conns: usize,
     /// Benchmark phase length (milliseconds).
     pub duration_ms: u64,
     /// Zipfian skew; 0 = uniform.
@@ -73,6 +76,7 @@ impl Default for Config {
             sim: false,
             seed: 0xD0_5E7,
             port: 7878,
+            max_conns: 1024,
             duration_ms: 1000,
             zipf_theta: 0.0,
         }
@@ -130,6 +134,7 @@ impl Config {
             "sim" => self.sim = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "port" => self.port = value.parse()?,
+            "max_conns" => self.max_conns = value.parse()?,
             "duration_ms" => self.duration_ms = value.parse()?,
             "zipf_theta" => self.zipf_theta = value.parse()?,
             _ => bail!("unknown config key '{key}'"),
@@ -232,6 +237,14 @@ mod tests {
         assert!(Config::load(None, &["read_pct=101".into()]).is_err());
         assert!(Config::load(None, &["no_such_key=1".into()]).is_err());
         assert!(Config::load(None, &["zipf_theta=1.5".into()]).is_err());
+    }
+
+    #[test]
+    fn max_conns_key_parses() {
+        let cfg = Config::load(None, &["max_conns=2".into()]).unwrap();
+        assert_eq!(cfg.max_conns, 2);
+        assert_eq!(Config::default().max_conns, 1024);
+        assert!(Config::load(None, &["max_conns=x".into()]).is_err());
     }
 
     #[test]

@@ -1,7 +1,9 @@
-//! Service metrics: op counters + log2 latency histogram, lock-free on the
-//! record path (per-thread slots would be overkill here — shard workers
-//! are few; plain relaxed atomics are uncontended in practice).
+//! Service metrics: op counters + log2 latency histogram + group-commit
+//! batch stats, lock-free on the record path (per-thread slots would be
+//! overkill here — shard workers are few; plain relaxed atomics are
+//! uncontended in practice).
 
+use crate::sets::{GrowthStats, OpResult, SetOp};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -14,6 +16,12 @@ pub struct Metrics {
     pub put_new: AtomicU64,
     pub dels: AtomicU64,
     pub del_hit: AtomicU64,
+    /// Group commits executed by shard workers.
+    pub batches: AtomicU64,
+    /// Ops served through group commits (avg batch = batch_ops/batches).
+    pub batch_ops: AtomicU64,
+    /// Largest group commit observed.
+    pub max_batch: AtomicU64,
     latency: [AtomicU64; BUCKETS],
 }
 
@@ -34,8 +42,44 @@ impl Metrics {
             put_new: Z,
             dels: Z,
             del_hit: Z,
+            batches: Z,
+            batch_ops: Z,
+            max_batch: Z,
             latency: [Z; BUCKETS],
         }
+    }
+
+    /// Count one batched op with its result (shard worker scatter path).
+    #[inline]
+    pub fn record_op(&self, op: SetOp, res: OpResult) {
+        match op {
+            SetOp::Get(_) | SetOp::Contains(_) => {
+                self.gets.fetch_add(1, Ordering::Relaxed);
+                if matches!(res, OpResult::Value(Some(_)) | OpResult::Found(true)) {
+                    self.get_hits.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            SetOp::Insert(..) => {
+                self.puts.fetch_add(1, Ordering::Relaxed);
+                if res == OpResult::Applied(true) {
+                    self.put_new.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            SetOp::Remove(_) => {
+                self.dels.fetch_add(1, Ordering::Relaxed);
+                if res == OpResult::Applied(true) {
+                    self.del_hit.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Count one group commit of `n` ops.
+    #[inline]
+    pub fn record_group(&self, n: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_ops.fetch_add(n, Ordering::Relaxed);
+        self.max_batch.fetch_max(n, Ordering::Relaxed);
     }
 
     #[inline]
@@ -69,8 +113,11 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batch_ops = self.batch_ops.load(Ordering::Relaxed);
+        let avg_batch = if batches > 0 { batch_ops as f64 / batches as f64 } else { 0.0 };
         format!(
-            "ops={} gets={} (hits {}) puts={} (new {}) dels={} (hit {}) p50<={:?} p99<={:?}",
+            "ops={} gets={} (hits {}) puts={} (new {}) dels={} (hit {}) p50<={:?} p99<={:?} batches={} avg_batch={:.1} max_batch={}",
             self.ops_total(),
             self.gets.load(Ordering::Relaxed),
             self.get_hits.load(Ordering::Relaxed),
@@ -80,7 +127,34 @@ impl Metrics {
             self.del_hit.load(Ordering::Relaxed),
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),
+            batches,
+            avg_batch,
+            self.max_batch.load(Ordering::Relaxed),
         )
+    }
+
+    /// [`Metrics::report`] plus per-shard resizable-hash growth stats
+    /// (`None` entries — volatile or list shards — are skipped).
+    pub fn report_with_growth(&self, growth: &[Option<GrowthStats>]) -> String {
+        let mut out = self.report();
+        let mut any = false;
+        for (i, g) in growth.iter().enumerate() {
+            if let Some(g) = g {
+                out.push_str(if any { "; " } else { " growth=[" });
+                any = true;
+                out.push_str(&format!(
+                    "s{}:buckets={} doublings={} load={:.2}",
+                    i,
+                    g.buckets,
+                    g.doublings,
+                    g.chain_load()
+                ));
+            }
+        }
+        if any {
+            out.push(']');
+        }
+        out
     }
 }
 
@@ -115,5 +189,40 @@ mod tests {
     fn empty_histogram_quantile_is_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn record_op_classifies_results() {
+        let m = Metrics::new();
+        m.record_op(SetOp::Insert(1, 1), OpResult::Applied(true));
+        m.record_op(SetOp::Insert(1, 1), OpResult::Applied(false));
+        m.record_op(SetOp::Get(1), OpResult::Value(Some(1)));
+        m.record_op(SetOp::Contains(2), OpResult::Found(false));
+        m.record_op(SetOp::Remove(1), OpResult::Applied(true));
+        assert_eq!(m.ops_total(), 5);
+        assert_eq!(m.puts.load(Ordering::Relaxed), 2);
+        assert_eq!(m.put_new.load(Ordering::Relaxed), 1);
+        assert_eq!(m.gets.load(Ordering::Relaxed), 2);
+        assert_eq!(m.get_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.del_hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn group_and_growth_reporting() {
+        let m = Metrics::new();
+        m.record_group(10);
+        m.record_group(30);
+        let r = m.report();
+        assert!(r.contains("batches=2"), "{r}");
+        assert!(r.contains("avg_batch=20.0"), "{r}");
+        assert!(r.contains("max_batch=30"), "{r}");
+        let growth = vec![
+            Some(GrowthStats { buckets: 64, doublings: 5, items: 128 }),
+            None,
+            Some(GrowthStats { buckets: 32, doublings: 4, items: 32 }),
+        ];
+        let rg = m.report_with_growth(&growth);
+        assert!(rg.contains("growth=[s0:buckets=64 doublings=5 load=2.00; s2:buckets=32"), "{rg}");
+        assert!(m.report_with_growth(&[None, None]).ends_with("max_batch=30"));
     }
 }

@@ -13,7 +13,10 @@
 //!
 //! The sets are lock-free and `Sync`, so the in-process data path routes
 //! and calls directly; the queued path (bounded per-shard queues + worker
-//! threads) serves the network front with backpressure and metrics.
+//! threads) serves the network front with backpressure and metrics, and
+//! group-commits each queue drain through `ConcurrentSet::apply_batch`
+//! so concurrent wire traffic shares trailing fences (DESIGN.md
+//! §Batching).
 
 pub mod metrics;
 pub mod recovery;
@@ -23,6 +26,7 @@ pub mod shard;
 
 use crate::config::Config;
 use crate::pmem::CrashPolicy;
+use crate::sets::{GrowthStats, OpResult, SetOp};
 use std::sync::Arc;
 
 pub use metrics::Metrics;
@@ -90,6 +94,35 @@ impl DuraKv {
         self.shards.iter().map(|s| s.set.len_approx()).sum()
     }
 
+    /// Apply a mixed batch in-process: ops are routed per shard, each
+    /// shard's sub-batch runs as one group commit (one trailing fence),
+    /// and the results are reassembled in op order. Every result is
+    /// durable when this returns.
+    pub fn apply_batch(&self, ops: &[SetOp]) -> Vec<OpResult> {
+        let mut per_shard: Vec<Vec<(usize, SetOp)>> = vec![Vec::new(); self.shards.len()];
+        for (i, &op) in ops.iter().enumerate() {
+            per_shard[self.router.shard_of(op.key())].push((i, op));
+        }
+        let mut out = vec![OpResult::Found(false); ops.len()];
+        for (si, sub) in per_shard.iter().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            let sub_ops: Vec<SetOp> = sub.iter().map(|&(_, op)| op).collect();
+            let results = self.shards[si].set.apply_batch(&sub_ops);
+            for (&(i, _), r) in sub.iter().zip(results) {
+                out[i] = r;
+            }
+        }
+        out
+    }
+
+    /// Per-shard resizable-hash growth stats (`None` for volatile or list
+    /// shards). Rendered by `Metrics::report_with_growth` / `STATS`.
+    pub fn growth_stats(&self) -> Vec<Option<GrowthStats>> {
+        self.shards.iter().map(|s| s.set.growth_stats()).collect()
+    }
+
     /// Borrow a shard's set (benchmark drivers pin threads to shards).
     pub fn shard_set(&self, i: usize) -> &dyn crate::sets::ConcurrentSet {
         self.shards[i].set.as_ref()
@@ -123,6 +156,30 @@ mod tests {
         assert!(kv.del(1));
         assert_eq!(kv.get(1), None);
         assert_eq!(kv.len_approx(), 0);
+    }
+
+    #[test]
+    fn apply_batch_routes_and_reassembles_in_order() {
+        let mut cfg = Config::default();
+        cfg.shards = 4;
+        cfg.key_range = 1 << 12;
+        let kv = DuraKv::create(cfg);
+        let mut ops: Vec<SetOp> = (0..200u64).map(|k| SetOp::Insert(k, k + 7)).collect();
+        ops.push(SetOp::Remove(13));
+        ops.push(SetOp::Get(13));
+        ops.push(SetOp::Get(14));
+        let res = kv.apply_batch(&ops);
+        for (i, r) in res.iter().take(200).enumerate() {
+            assert_eq!(*r, OpResult::Applied(true), "insert {i}");
+        }
+        assert_eq!(res[200], OpResult::Applied(true));
+        assert_eq!(res[201], OpResult::Value(None));
+        assert_eq!(res[202], OpResult::Value(Some(21)));
+        assert_eq!(kv.len_approx(), 199);
+        // Growth stats surface per shard for resizable hash shards.
+        let growth = kv.growth_stats();
+        assert_eq!(growth.len(), 4);
+        assert!(growth.iter().all(|g| g.is_some()));
     }
 
     #[test]

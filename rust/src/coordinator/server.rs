@@ -1,26 +1,49 @@
-//! TCP front: line protocol over the queued shard workers.
+//! TCP front: pipelined line protocol over the group-committing shard
+//! workers.
 //!
 //! ```text
 //! PUT <key> <value>   ->  OK NEW | OK EXISTS
 //! GET <key>           ->  FOUND <value> | MISSING
 //! DEL <key>           ->  OK DELETED | OK ABSENT
+//! MULTI <n>           ->  (no reply; the next n lines are queued ops)
+//! EXEC                ->  n reply lines, one per queued op, in order
 //! LEN                 ->  LEN <n>
-//! STATS               ->  STATS <metrics line>
+//! STATS               ->  STATS <metrics + growth line>
 //! QUIT                ->  BYE (closes connection)
 //! ```
 //!
+//! **Pipelining.** A connection handler does not process one line per
+//! socket read: after the first blocking read it also consumes every
+//! further complete line already buffered, parses the whole burst, routes
+//! all its data ops as **one [`Request::Batch`] per shard**, and writes
+//! all replies (in line order) with a single flush. Combined with the
+//! workers' own queue draining, a busy connection pays one queue hop and
+//! ~1/K of a fence per op instead of one each. Replies to a burst are
+//! written only after every op in it is durable. `LEN`/`STATS` inside a
+//! burst are resolved after the burst's data ops (both are approximate
+//! snapshots; see `ConcurrentSet::len_approx`).
+//!
+//! **Explicit batches.** `MULTI <n>` queues the next `n` PUT/GET/DEL
+//! lines without replying, `EXEC` routes them like a pipelined burst and
+//! emits the `n` replies. A malformed frame yields a single ERR line.
+//!
 //! Thread-per-connection (std::net; the offline crate set has no async
-//! runtime), routing each request onto the owning shard's bounded queue —
-//! the queue bound is the service's backpressure.
+//! runtime), bounded by `Config::max_conns`: excess connections get one
+//! ERR line and are closed. The per-shard queue bound remains the
+//! service's backpressure.
 
 use super::shard::{Request, Response, ShardWorker};
 use super::{DuraKv, Router};
+use crate::sets::SetOp;
 use anyhow::Result;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
+
+/// Largest accepted `MULTI <n>` frame.
+const MULTI_MAX: u64 = 4096;
 
 /// Adapter giving a shard's set a `'static` handle via the Arc'd store.
 struct ShardRef {
@@ -43,6 +66,11 @@ impl crate::sets::ConcurrentSet for ShardRef {
     }
     fn len_approx(&self) -> usize {
         self.kv.shard_set(self.index).len_approx()
+    }
+    fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
+        // Forward as a batch so the underlying durable set coalesces the
+        // fences (the default would loop over un-coalesced singles).
+        self.kv.shard_set(self.index).apply_batch(ops)
     }
 }
 
@@ -79,6 +107,8 @@ pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
     let senders: Arc<Vec<SyncSender<Request>>> =
         Arc::new(workers.iter().map(|w| w.tx.clone()).collect());
 
+    let max_conns = kv.config().max_conns;
+    let live_conns = Arc::new(AtomicUsize::new(0));
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
     let kv2 = kv.clone();
@@ -87,10 +117,20 @@ pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
         while !stop2.load(Ordering::SeqCst) {
             match listener.accept() {
                 Ok((stream, _)) => {
+                    if max_conns > 0 && live_conns.load(Ordering::SeqCst) >= max_conns {
+                        // Bounded fan-out: refuse instead of spawning an
+                        // unbounded thread per connection.
+                        let mut s = stream;
+                        let _ = writeln!(s, "ERR too many connections (max {max_conns})");
+                        continue;
+                    }
+                    live_conns.fetch_add(1, Ordering::SeqCst);
                     let senders = senders.clone();
                     let kv = kv2.clone();
+                    let live = live_conns.clone();
                     std::thread::spawn(move || {
                         let _ = handle_conn(stream, router, &senders, &kv);
+                        live.fetch_sub(1, Ordering::SeqCst);
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -104,62 +144,231 @@ pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
     Ok(Server { addr, stop, accept_join: Some(accept_join), _workers: workers })
 }
 
+/// A routed data command (needed again at reply-formatting time).
+#[derive(Clone, Copy)]
+enum DataCmd {
+    Put,
+    Get,
+    Del,
+}
+
+/// One reply slot of a burst, in line order.
+enum Slot {
+    /// Already-resolved reply line.
+    Text(String),
+    /// Data op `idx` of shard `shard`'s sub-batch.
+    Pending(DataCmd, usize, usize),
+    /// Resolved after the burst's data ops (approximate snapshots).
+    Len,
+    Stats,
+    Quit,
+}
+
+fn data_reply(cmd: DataCmd, resp: Response) -> String {
+    match (cmd, resp) {
+        (DataCmd::Put, Response::Ok(true)) => "OK NEW".to_string(),
+        (DataCmd::Put, _) => "OK EXISTS".to_string(),
+        (DataCmd::Get, Response::Found(v)) => format!("FOUND {v}"),
+        (DataCmd::Get, _) => "MISSING".to_string(),
+        (DataCmd::Del, Response::Ok(true)) => "OK DELETED".to_string(),
+        (DataCmd::Del, _) => "OK ABSENT".to_string(),
+    }
+}
+
+/// Parse a PUT/GET/DEL line. `Ok(None)` = not a data command;
+/// `Err(line)` = data command with bad arguments (the ERR reply).
+fn parse_data(line: &str) -> std::result::Result<Option<(DataCmd, SetOp)>, String> {
+    let mut parts = line.split_ascii_whitespace();
+    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+    match cmd.as_str() {
+        "PUT" => match (parse_u64(parts.next()), parse_u64(parts.next())) {
+            (Some(k), Some(v)) => Ok(Some((DataCmd::Put, SetOp::Insert(k, v)))),
+            _ => Err("ERR usage: PUT <key> <value>".to_string()),
+        },
+        "GET" => match parse_u64(parts.next()) {
+            Some(k) => Ok(Some((DataCmd::Get, SetOp::Get(k)))),
+            None => Err("ERR usage: GET <key>".to_string()),
+        },
+        "DEL" => match parse_u64(parts.next()) {
+            Some(k) => Ok(Some((DataCmd::Del, SetOp::Remove(k)))),
+            None => Err("ERR usage: DEL <key>".to_string()),
+        },
+        _ => Ok(None),
+    }
+}
+
+/// Read one line; `Ok(None)` on a clean EOF.
+fn read_line(reader: &mut BufReader<TcpStream>) -> Result<Option<String>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    Ok(Some(line.trim().to_string()))
+}
+
+/// Route a data op into the burst's per-shard sub-batches.
+fn route(
+    op: SetOp,
+    cmd: DataCmd,
+    router: Router,
+    slots: &mut Vec<Slot>,
+    per_shard: &mut [Vec<SetOp>],
+) {
+    let shard = router.shard_of(op.key());
+    slots.push(Slot::Pending(cmd, shard, per_shard[shard].len()));
+    per_shard[shard].push(op);
+}
+
+/// Dispatch a gathered burst (one `Request::Batch` per shard), then write
+/// every reply in line order with a single flush. Returns true on QUIT.
+fn flush_burst(
+    slots: &mut Vec<Slot>,
+    per_shard: &mut [Vec<SetOp>],
+    senders: &[SyncSender<Request>],
+    writer: &mut BufWriter<TcpStream>,
+    kv: &DuraKv,
+) -> Result<bool> {
+    let mut waiting: Vec<(usize, Receiver<Vec<Response>>)> = Vec::new();
+    for (shard, ops) in per_shard.iter_mut().enumerate() {
+        if ops.is_empty() {
+            continue;
+        }
+        let (btx, brx) = sync_channel(1);
+        senders[shard].send(Request::Batch(std::mem::take(ops), btx))?;
+        waiting.push((shard, brx));
+    }
+    let mut shard_results: Vec<Vec<Response>> = vec![Vec::new(); senders.len()];
+    for (shard, brx) in waiting {
+        shard_results[shard] = brx.recv()?;
+    }
+
+    let mut quit = false;
+    for slot in slots.drain(..) {
+        match slot {
+            Slot::Text(s) => writeln!(writer, "{s}")?,
+            Slot::Pending(cmd, shard, idx) => {
+                writeln!(writer, "{}", data_reply(cmd, shard_results[shard][idx]))?
+            }
+            Slot::Len => writeln!(writer, "LEN {}", kv.len_approx())?,
+            Slot::Stats => writeln!(
+                writer,
+                "STATS {}",
+                kv.metrics.report_with_growth(&kv.growth_stats())
+            )?,
+            Slot::Quit => {
+                writeln!(writer, "BYE")?;
+                quit = true;
+                break;
+            }
+        }
+    }
+    writer.flush()?;
+    Ok(quit)
+}
+
 fn handle_conn(
     stream: TcpStream,
     router: Router,
     senders: &[SyncSender<Request>],
     kv: &DuraKv,
 ) -> Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    let (rtx, rrx) = sync_channel::<Response>(1);
-    for line in reader.lines() {
-        let line = line?;
-        let mut parts = line.split_ascii_whitespace();
-        let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
-        let reply = match cmd.as_str() {
-            "PUT" => match (parse_u64(parts.next()), parse_u64(parts.next())) {
-                (Some(k), Some(v)) => {
-                    senders[router.shard_of(k)].send(Request::Put(k, v, rtx.clone()))?;
-                    match rrx.recv()? {
-                        Response::Ok(true) => "OK NEW".to_string(),
-                        _ => "OK EXISTS".to_string(),
-                    }
-                }
-                _ => "ERR usage: PUT <key> <value>".to_string(),
-            },
-            "GET" => match parse_u64(parts.next()) {
-                Some(k) => {
-                    senders[router.shard_of(k)].send(Request::Get(k, rtx.clone()))?;
-                    match rrx.recv()? {
-                        Response::Found(v) => format!("FOUND {v}"),
-                        _ => "MISSING".to_string(),
-                    }
-                }
-                None => "ERR usage: GET <key>".to_string(),
-            },
-            "DEL" => match parse_u64(parts.next()) {
-                Some(k) => {
-                    senders[router.shard_of(k)].send(Request::Del(k, rtx.clone()))?;
-                    match rrx.recv()? {
-                        Response::Ok(true) => "OK DELETED".to_string(),
-                        _ => "OK ABSENT".to_string(),
-                    }
-                }
-                None => "ERR usage: DEL <key>".to_string(),
-            },
-            "LEN" => format!("LEN {}", kv.len_approx()),
-            "STATS" => format!("STATS {}", kv.metrics.report()),
-            "QUIT" => {
-                writeln!(writer, "BYE")?;
-                break;
-            }
-            "" => continue,
-            other => format!("ERR unknown command '{other}'"),
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream);
+    loop {
+        // ---- gather one pipelined burst ----
+        let Some(first) = read_line(&mut reader)? else {
+            return Ok(()); // EOF
         };
-        writeln!(writer, "{reply}")?;
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut per_shard: Vec<Vec<SetOp>> = vec![Vec::new(); senders.len()];
+        let mut line = first;
+        let mut quit = false;
+        loop {
+            match parse_data(&line) {
+                Ok(Some((cmd, op))) => route(op, cmd, router, &mut slots, &mut per_shard),
+                Err(usage) => slots.push(Slot::Text(usage)),
+                Ok(None) => {
+                    let mut parts = line.split_ascii_whitespace();
+                    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+                    match cmd.as_str() {
+                        "MULTI" => match parse_u64(parts.next()).filter(|&n| n <= MULTI_MAX) {
+                            None => slots.push(Slot::Text(format!(
+                                "ERR usage: MULTI <n> (n <= {MULTI_MAX})"
+                            ))),
+                            Some(n) => {
+                                // Gather the next n op lines + EXEC. Reading
+                                // may block on the client, so first flush
+                                // what the burst already holds — earlier
+                                // commands must not have their replies (or
+                                // execution) held hostage by a slow frame.
+                                let buffered_lines =
+                                    reader.buffer().iter().filter(|&&b| b == b'\n').count() as u64;
+                                if buffered_lines < n + 1
+                                    && !slots.is_empty()
+                                    && flush_burst(
+                                        &mut slots,
+                                        &mut per_shard,
+                                        senders,
+                                        &mut writer,
+                                        kv,
+                                    )?
+                                {
+                                    return Ok(());
+                                }
+                                let mut frame = Vec::with_capacity(n as usize + 1);
+                                for _ in 0..=n {
+                                    match read_line(&mut reader)? {
+                                        Some(l) => frame.push(l),
+                                        None => return Ok(()), // EOF mid-frame
+                                    }
+                                }
+                                let exec = frame.pop().expect("n+1 lines read");
+                                if !exec.eq_ignore_ascii_case("EXEC") {
+                                    slots.push(Slot::Text(format!(
+                                        "ERR MULTI: expected EXEC after {n} ops, got '{exec}'"
+                                    )));
+                                } else {
+                                    for l in &frame {
+                                        match parse_data(l) {
+                                            Ok(Some((cmd, op))) => {
+                                                route(op, cmd, router, &mut slots, &mut per_shard)
+                                            }
+                                            Err(usage) => slots.push(Slot::Text(usage)),
+                                            Ok(None) => slots.push(Slot::Text(format!(
+                                                "ERR MULTI: not a data op: '{l}'"
+                                            ))),
+                                        }
+                                    }
+                                }
+                            }
+                        },
+                        "LEN" => slots.push(Slot::Len),
+                        "STATS" => slots.push(Slot::Stats),
+                        "QUIT" => {
+                            slots.push(Slot::Quit);
+                            quit = true;
+                        }
+                        "" => {}
+                        other => slots.push(Slot::Text(format!("ERR unknown command '{other}'"))),
+                    }
+                }
+            }
+            // Extend the burst with lines already buffered (never blocks).
+            if !quit && reader.buffer().contains(&b'\n') {
+                match read_line(&mut reader)? {
+                    Some(l) => {
+                        line = l;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            break;
+        }
+        if flush_burst(&mut slots, &mut per_shard, senders, &mut writer, kv)? {
+            return Ok(());
+        }
     }
-    Ok(())
 }
 
 fn parse_u64(s: Option<&str>) -> Option<u64> {
@@ -187,19 +396,27 @@ mod tests {
 
         fn send(&mut self, line: &str) -> String {
             writeln!(self.writer, "{line}").unwrap();
+            self.recv()
+        }
+
+        fn recv(&mut self) -> String {
             let mut out = String::new();
             self.reader.read_line(&mut out).unwrap();
             out.trim_end().to_string()
         }
     }
 
+    fn test_kv(shards: usize) -> Arc<DuraKv> {
+        let mut cfg = Config::default();
+        cfg.shards = shards;
+        cfg.key_range = 4096;
+        cfg.psync_ns = 0;
+        Arc::new(DuraKv::create(cfg))
+    }
+
     #[test]
     fn tcp_protocol_round_trip() {
-        let mut cfg = Config::default();
-        cfg.shards = 2;
-        cfg.key_range = 1024;
-        cfg.psync_ns = 0;
-        let kv = Arc::new(DuraKv::create(cfg));
+        let kv = test_kv(2);
         let server = serve(kv.clone(), 0).unwrap();
         let mut c = Client::connect(server.addr);
 
@@ -212,18 +429,94 @@ mod tests {
         assert_eq!(c.send("PUT 7 70"), "OK NEW");
         assert_eq!(c.send("LEN"), "LEN 1");
         assert!(c.send("STATS").starts_with("STATS ops="));
+        assert!(c.send("STATS").contains("growth=["), "growth stats on STATS");
         assert!(c.send("NOPE").starts_with("ERR"));
+        assert!(c.send("PUT x").starts_with("ERR usage"));
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    #[test]
+    fn multi_exec_batches() {
+        let kv = test_kv(2);
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+
+        // MULTI itself and the queued lines produce no replies; EXEC
+        // yields one reply per op, in order.
+        writeln!(c.writer, "MULTI 3").unwrap();
+        writeln!(c.writer, "PUT 1 10").unwrap();
+        writeln!(c.writer, "PUT 2 20").unwrap();
+        writeln!(c.writer, "GET 1").unwrap();
+        writeln!(c.writer, "EXEC").unwrap();
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "FOUND 10");
+        assert_eq!(kv.len_approx(), 2);
+
+        // Malformed frames: missing EXEC, non-data op inside the frame.
+        writeln!(c.writer, "MULTI 1").unwrap();
+        writeln!(c.writer, "PUT 3 30").unwrap();
+        writeln!(c.writer, "PUT 4 40").unwrap();
+        assert!(c.recv().starts_with("ERR MULTI: expected EXEC"));
+        writeln!(c.writer, "MULTI 1").unwrap();
+        writeln!(c.writer, "LEN").unwrap();
+        writeln!(c.writer, "EXEC").unwrap();
+        assert!(c.recv().starts_with("ERR MULTI: not a data op"));
+        assert!(c.send("MULTI zzz").starts_with("ERR usage: MULTI"));
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    #[test]
+    fn slow_multi_frame_does_not_withhold_earlier_replies() {
+        // A burst whose tail is an incomplete MULTI frame: the commands
+        // before it must be executed and answered before the server
+        // blocks waiting for the rest of the frame.
+        let kv = test_kv(2);
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+        c.writer.write_all(b"PUT 1 11\nMULTI 2\n").unwrap();
+        c.writer.flush().unwrap();
+        assert_eq!(c.recv(), "OK NEW", "pre-MULTI command must not be held hostage");
+        c.writer.write_all(b"PUT 2 22\nGET 1\nEXEC\n").unwrap();
+        c.writer.flush().unwrap();
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "FOUND 11");
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    #[test]
+    fn pipelined_burst_replies_in_order() {
+        let kv = test_kv(4);
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+        // Fire the whole burst as one write so it lands in the server's
+        // read buffer together: the server must parse it as one burst,
+        // batch per shard, and still reply strictly in line order.
+        let mut burst = String::new();
+        for k in 0..200u64 {
+            burst.push_str(&format!("PUT {k} {}\n", k * 2));
+        }
+        burst.push_str("LEN\n");
+        c.writer.write_all(burst.as_bytes()).unwrap();
+        c.writer.flush().unwrap();
+        for _ in 0..200 {
+            assert_eq!(c.recv(), "OK NEW");
+        }
+        assert_eq!(c.recv(), "LEN 200");
+        // Group commit actually engaged: far fewer commits than ops (one
+        // per shard per burst; TCP may split the burst a few times).
+        let batches = kv.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(batches * 4 <= 200, "200 pipelined puts took {batches} group commits");
         assert_eq!(c.send("QUIT"), "BYE");
         drop(server);
     }
 
     #[test]
     fn concurrent_tcp_clients() {
-        let mut cfg = Config::default();
-        cfg.shards = 2;
-        cfg.key_range = 4096;
-        cfg.psync_ns = 0;
-        let kv = Arc::new(DuraKv::create(cfg));
+        let kv = test_kv(2);
         let server = serve(kv.clone(), 0).unwrap();
         let addr = server.addr;
         let handles: Vec<_> = (0..4u64)
@@ -242,6 +535,47 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(kv.len_approx(), 400);
+        drop(server);
+    }
+
+    #[test]
+    fn max_conns_bounds_fanout() {
+        let mut cfg = Config::default();
+        cfg.shards = 1;
+        cfg.key_range = 1024;
+        cfg.psync_ns = 0;
+        cfg.max_conns = 2;
+        let kv = Arc::new(DuraKv::create(cfg));
+        let server = serve(kv, 0).unwrap();
+        let mut a = Client::connect(server.addr);
+        let mut b = Client::connect(server.addr);
+        // Establish both handlers before probing the limit.
+        assert_eq!(a.send("PUT 1 1"), "OK NEW");
+        assert_eq!(b.send("GET 1"), "FOUND 1");
+        let mut c = Client::connect(server.addr);
+        assert!(
+            c.recv().starts_with("ERR too many connections"),
+            "third connection must be refused"
+        );
+        // Closing one slot frees capacity for a new connection. The
+        // handler decrements its slot after QUIT, so poll briefly; a
+        // still-refused attempt may error on either side of the socket.
+        assert_eq!(a.send("QUIT"), "BYE");
+        drop(a);
+        let mut freed = None;
+        for _ in 0..200 {
+            let mut d = Client::connect(server.addr);
+            let ok = writeln!(d.writer, "GET 1").is_ok();
+            let mut reply = String::new();
+            if ok && d.reader.read_line(&mut reply).is_ok() && reply.trim_end() == "FOUND 1" {
+                freed = Some(d);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let mut d = freed.expect("a freed slot must admit a new connection");
+        assert_eq!(d.send("QUIT"), "BYE");
+        drop(b);
         drop(server);
     }
 }

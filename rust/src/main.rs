@@ -68,7 +68,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         cfg.duration.as_millis()
     );
 
-    let run_one = |id: &str| -> Result<()> {
+    let json_path = args.flag("json").map(|s| s.to_string());
+    let mut json_points: Vec<String> = Vec::new();
+    let run_one = |id: &str, json_points: &mut Vec<String>| -> Result<()> {
         let (title, x_label, rows) = match id {
             "1a" => (
                 "Fig 1a: list throughput vs #threads (range 256, 90% reads)",
@@ -115,25 +117,37 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 "mix",
                 bench::psync_table(cfg.duration, seed),
             ),
+            "batch" => (
+                "Fig B: batched updates vs batch size K (group commit; fences/op ~ 1/K)",
+                "K",
+                bench::batch_sweep(&cfg, scaled_hash_threads(&cfg), seed),
+            ),
             other => bail!("unknown figure '{other}'"),
         };
         print!("{}", report::render(title, x_label, &rows));
         if let Some((f, x, imp)) = report::peak_improvement(&rows) {
             println!("peak improvement vs log-free: {f} at {x_label}={x}: {imp:.2}x\n");
         }
+        json_points.extend(report::to_json_points(id, x_label, &rows));
         Ok(())
     };
 
     if fig == "all" {
-        for id in ["1a", "1b", "1c", "2a", "2b", "3a", "3b", "3c", "psync"] {
-            run_one(id)?;
+        for id in ["1a", "1b", "1c", "2a", "2b", "3a", "3b", "3c", "psync", "batch"] {
+            run_one(id, &mut json_points)?;
         }
-        Ok(())
     } else if fig == "recovery" {
-        cmd_recover_demo(args)
+        // The recovery demo prints its own report; it has no sweep rows,
+        // so a requested --json file is still written (empty point list).
+        cmd_recover_demo(args)?;
     } else {
-        run_one(&fig)
+        run_one(&fig, &mut json_points)?;
     }
+    if let Some(path) = json_path {
+        std::fs::write(&path, format!("[{}]\n", json_points.join(",\n")))?;
+        println!("# wrote {} data points to {path}", json_points.len());
+    }
+    Ok(())
 }
 
 /// Paper: lists evaluated at 64 threads, hash at 32 — scaled to the sweep

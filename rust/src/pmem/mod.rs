@@ -116,8 +116,83 @@ pub fn disarm_flush_fault() {
 /// Panic payload used for simulated power loss.
 pub const POWER_LOSS: &str = "durasets simulated power loss";
 
+// ---------------- group commit (fence coalescing) ----------------
+
+/// Modeled write-back parallelism inside a [`PsyncScope`]: flushes issued
+/// within a scope behave like `clflushopt` (asynchronous), and the scope's
+/// trailing fence drains them `WRITEBACK_PIPE` lines at a time (real
+/// memory subsystems retire on the order of 10 concurrent write-backs —
+/// the line fill buffers). Outside a scope every psync stays synchronous
+/// `clflush`, exactly as before.
+const WRITEBACK_PIPE: u64 = 8;
+
+thread_local! {
+    /// Nesting depth of [`PsyncScope`]s on this thread (0 = no scope).
+    static SCOPE_DEPTH: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+    /// Flushed lines whose latency/serialization is deferred to the
+    /// enclosing scope's trailing fence.
+    static SCOPE_PENDING: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+    /// Whether any fence was elided in the current scope (a trailing
+    /// fence is owed even if no lines were flushed).
+    static SCOPE_DIRTY: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+#[inline(always)]
+fn in_scope() -> bool {
+    SCOPE_DEPTH.with(|d| d.get()) > 0
+}
+
+/// RAII guard for **group commit**: while alive on the current thread,
+/// `psync`/`fence` still *flush* every line (shadow copies and fault
+/// injection are per-flush, so per-op durability in the crash simulator is
+/// untouched) but their serialization points are elided — counted in
+/// [`stats::PmemStats::elided`] — and replaced by one trailing fence when
+/// the outermost scope drops.
+///
+/// Soundness in this substrate's model (paper §2: stores are durable once
+/// they reach the memory controller; `psync`'s flush pushes them there):
+/// a flush is durable at issue, so eliding the *issuer's* fence defers
+/// only the issuer's own completion/ack point. Concurrent helpers that
+/// re-flush and fence outside the scope still pay (and get) their own
+/// serialization before acking, so individual-ack durable linearizability
+/// is preserved; only the batch issuer's acks wait for the trailing fence.
+///
+/// Scopes nest; only the outermost drop issues the trailing fence. The
+/// guard is `!Send` (thread-local state).
+pub struct PsyncScope {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+/// Enter a group-commit scope (see [`PsyncScope`]).
+pub fn psync_scope() -> PsyncScope {
+    SCOPE_DEPTH.with(|d| d.set(d.get() + 1));
+    PsyncScope { _not_send: std::marker::PhantomData }
+}
+
+impl Drop for PsyncScope {
+    fn drop(&mut self) {
+        let depth = SCOPE_DEPTH.with(|d| {
+            let v = d.get() - 1;
+            d.set(v);
+            v
+        });
+        if depth > 0 {
+            return;
+        }
+        let pending = SCOPE_PENDING.with(|p| p.replace(0));
+        let dirty = SCOPE_DIRTY.with(|f| f.replace(false));
+        if pending > 0 || dirty {
+            // The group-commit point: one real fence for the whole scope,
+            // draining the deferred write-backs WRITEBACK_PIPE at a time.
+            spin_ns(psync_ns() * pending.div_ceil(WRITEBACK_PIPE));
+            fence();
+        }
+    }
+}
+
 /// Write back one cache line (no fence). Counted, latency-injected, and in
-/// sim mode copied to the shadow image.
+/// sim mode copied to the shadow image. Inside a [`PsyncScope`] the flush
+/// is issued asynchronously: its latency is deferred to the trailing fence.
 #[inline]
 pub fn flush_line(ptr: *const u8) {
     if FLUSH_FAULT.load(Ordering::Relaxed) != i64::MAX
@@ -130,14 +205,25 @@ pub fn flush_line(ptr: *const u8) {
     if mode() == Mode::Sim {
         shadow::shadow_copy_line(ptr);
     }
-    spin_ns(psync_ns());
+    if in_scope() {
+        SCOPE_PENDING.with(|p| p.set(p.get() + 1));
+    } else {
+        spin_ns(psync_ns());
+    }
 }
 
 /// Ordering fence paired with flushes (the paper's clflush is ordered wrt
 /// stores, so psync == flush; we still count the logical fence the
-/// algorithms express). Compiles to an SeqCst fence.
+/// algorithms express). Compiles to an SeqCst fence. Inside a
+/// [`PsyncScope`] the fence is elided and deferred to the scope's single
+/// trailing fence (group commit).
 #[inline]
 pub fn fence() {
+    if in_scope() {
+        stats::count_elided_fence();
+        SCOPE_DIRTY.with(|f| f.set(true));
+        return;
+    }
     stats::count_fence();
     std::sync::atomic::fence(Ordering::SeqCst);
 }
@@ -166,6 +252,15 @@ pub fn psync(ptr: *const u8, len: usize) {
             shadow::shadow_copy_line(line as *const u8);
             line += CACHE_LINE;
         }
+    }
+    if in_scope() {
+        // Group commit: the lines are flushed (above — durability in the
+        // simulator is per-flush), but the serialization point is deferred
+        // to the enclosing scope's trailing fence.
+        stats::count_psync_elided(nlines as u64);
+        SCOPE_PENDING.with(|p| p.set(p.get() + nlines as u64));
+        SCOPE_DIRTY.with(|f| f.set(true));
+        return;
     }
     stats::count_psync(nlines as u64);
     spin_ns(psync_ns() * nlines as u64);
@@ -273,6 +368,53 @@ mod tests {
         let after = stats::thread_snapshot();
         assert_eq!(after.flushes - before.flushes, 3);
         assert_eq!(after.fences - before.fences, 1);
+    }
+
+    #[test]
+    fn psync_scope_coalesces_fences() {
+        let buf = vec![0u8; 256];
+        let base = crate::util::line_up(buf.as_ptr() as usize) as *const u8;
+        let a = stats::thread_snapshot();
+        {
+            let _scope = psync_scope();
+            psync(base, 8);
+            psync(base, 8);
+            fence();
+        }
+        let d = stats::thread_snapshot().since(&a);
+        assert_eq!(d.flushes, 2, "flushes still happen per-op inside a scope");
+        assert_eq!(d.elided, 3, "two psync fences + one bare fence elided");
+        assert_eq!(d.fences, 1, "exactly the trailing group-commit fence");
+    }
+
+    #[test]
+    fn nested_scopes_issue_one_trailing_fence() {
+        let buf = vec![0u8; 256];
+        let base = crate::util::line_up(buf.as_ptr() as usize) as *const u8;
+        let a = stats::thread_snapshot();
+        {
+            let _outer = psync_scope();
+            psync(base, 8);
+            {
+                let _inner = psync_scope();
+                psync(base, 8);
+            }
+            psync(base, 8);
+        }
+        let d = stats::thread_snapshot().since(&a);
+        assert_eq!(d.elided, 3);
+        assert_eq!(d.fences, 1, "only the outermost scope fences");
+    }
+
+    #[test]
+    fn empty_scope_is_free() {
+        let a = stats::thread_snapshot();
+        {
+            let _scope = psync_scope();
+        }
+        let d = stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "a scope with no persistence work owes no fence");
+        assert_eq!(d.elided, 0);
     }
 
     #[test]

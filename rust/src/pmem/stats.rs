@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 struct Slot {
     flushes: AtomicU64,
     fences: AtomicU64,
+    elided: AtomicU64,
 }
 
 static SLOTS: once_cell::sync::Lazy<Box<[CachePadded<Slot>]>> = once_cell::sync::Lazy::new(|| {
@@ -22,6 +23,7 @@ static SLOTS: once_cell::sync::Lazy<Box<[CachePadded<Slot>]>> = once_cell::sync:
             CachePadded::new(Slot {
                 flushes: AtomicU64::new(0),
                 fences: AtomicU64::new(0),
+                elided: AtomicU64::new(0),
             })
         })
         .collect()
@@ -37,6 +39,14 @@ pub(crate) fn count_fence() {
     SLOTS[tid()].fences.fetch_add(1, Ordering::Relaxed);
 }
 
+/// A fence elided by an enclosing [`crate::pmem::PsyncScope`] (group
+/// commit): the op expressed a serialization point that was deferred to
+/// the scope's single trailing fence.
+#[inline(always)]
+pub(crate) fn count_elided_fence() {
+    SLOTS[tid()].elided.fetch_add(1, Ordering::Relaxed);
+}
+
 /// One psync = `lines` flushes + one fence, with a single tid lookup (the
 /// hot-path accounting; two separate lookups showed up in profiles).
 #[inline(always)]
@@ -46,11 +56,22 @@ pub(crate) fn count_psync(lines: u64) {
     s.fences.fetch_add(1, Ordering::Relaxed);
 }
 
+/// An in-scope psync: `lines` flushes issued, the fence elided (single
+/// tid lookup, mirroring [`count_psync`]).
+#[inline(always)]
+pub(crate) fn count_psync_elided(lines: u64) {
+    let s = &SLOTS[tid()];
+    s.flushes.fetch_add(lines, Ordering::Relaxed);
+    s.elided.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Aggregated counter snapshot.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PmemStats {
     pub flushes: u64,
     pub fences: u64,
+    /// Fences elided by a [`crate::pmem::PsyncScope`] (group commit).
+    pub elided: u64,
 }
 
 impl PmemStats {
@@ -59,6 +80,7 @@ impl PmemStats {
         PmemStats {
             flushes: self.flushes - earlier.flushes,
             fences: self.fences - earlier.fences,
+            elided: self.elided - earlier.elided,
         }
     }
 }
@@ -77,6 +99,7 @@ pub fn thread_snapshot() -> PmemStats {
     PmemStats {
         flushes: s.flushes.load(Ordering::Relaxed),
         fences: s.fences.load(Ordering::Relaxed),
+        elided: s.elided.load(Ordering::Relaxed),
     }
 }
 
@@ -86,6 +109,7 @@ pub fn snapshot() -> PmemStats {
     for s in SLOTS.iter() {
         out.flushes += s.flushes.load(Ordering::Relaxed);
         out.fences += s.fences.load(Ordering::Relaxed);
+        out.elided += s.elided.load(Ordering::Relaxed);
     }
     out
 }

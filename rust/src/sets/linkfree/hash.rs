@@ -83,6 +83,9 @@ impl ConcurrentSet for LfHash {
     fn len_approx(&self) -> usize {
         self.buckets.iter().map(|b| self.core.count(b)).sum()
     }
+    fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
+        crate::sets::apply_batch_coalesced(self, ops)
+    }
     fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
         Some(self.pool_id())
     }

@@ -373,6 +373,11 @@ impl crate::sets::ConcurrentSet for LfList {
     fn len_approx(&self) -> usize {
         self.core.count(&self.head)
     }
+    fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
+        // Group commit: flush flags still elide redundant flushes per-op;
+        // the batch issuer's fences collapse into one trailing fence.
+        crate::sets::apply_batch_coalesced(self, ops)
+    }
     fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
         Some(self.pool_id())
     }

@@ -86,6 +86,9 @@ impl ConcurrentSet for LogFreeHash {
             .map(|i| self.core.count(unsafe { &*self.buckets.add(i) }))
             .sum()
     }
+    fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
+        crate::sets::apply_batch_coalesced(self, ops)
+    }
     fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
         Some(self.pool_id())
     }

@@ -321,6 +321,12 @@ impl crate::sets::ConcurrentSet for LogFreeList {
     fn len_approx(&self) -> usize {
         self.core.count(self.head.word())
     }
+    fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
+        // Group commit: the link-and-persist protocol keeps flushing (and
+        // clearing DIRTY) per link, so concurrent readers never depend on
+        // an unflushed link; only the issuer's fences are coalesced.
+        crate::sets::apply_batch_coalesced(self, ops)
+    }
     fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
         Some(self.pool_id())
     }

@@ -2,12 +2,12 @@
 //!
 //! Four families, one trait:
 //!
-//! | family | module | durability | psyncs/update | psyncs/read | hash growth |
-//! |---|---|---|---|---|---|
-//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | [`resizable`] |
-//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | [`resizable`] |
-//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | [`resizable`] |
-//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | fixed |
+//! | family | module | durability | psyncs/update | psyncs/read | fences/op, K-batch | hash growth |
+//! |---|---|---|---|---|---|---|
+//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | ~1/K | [`resizable`] |
+//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | 1/K | [`resizable`] |
+//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | ~1/K (flushes stay ~2/op) | [`resizable`] |
+//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | 0 | fixed |
 //!
 //! Each family provides a sorted linked list and a hash set built from the
 //! same core (a bucket is a bare link cell — see [`tagged`]), plus a
@@ -24,6 +24,27 @@
 //! ([`linkfree::LfHash`], [`soft::SoftHash`], [`logfree::LogFreeHash`])
 //! remain for the paper's load-factor-1 evaluation and the XLA-accelerated
 //! recovery path.
+//!
+//! # Batch semantics (group commit)
+//!
+//! [`ConcurrentSet::apply_batch`] applies a sequence of [`SetOp`]s and
+//! returns one [`OpResult`] per op. The durable families override it to
+//! run the ops under a [`crate::pmem::PsyncScope`]: every op still
+//! *flushes* its durable writes at the usual points (so the crash
+//! simulator's per-op durability, the helping rules, and the flush-flag /
+//! link-and-persist protocols are untouched — a concurrent reader that
+//! observes an unfenced write re-flushes and fences *outside* the scope
+//! before depending on it), but the batch issuer's per-op fences are
+//! elided and replaced by **one trailing fence** (DESIGN.md §Batching).
+//!
+//! What is deferred: only the *issuer's* serialization point, i.e. the
+//! instant its acks become claimable-durable. `apply_batch` returns after
+//! the trailing fence, so by the time any result is observable the whole
+//! batch is durable — per-ack durable linearizability is preserved, the
+//! psync cost drops from K fences to 1 for a K-op batch, and a crash
+//! before the trailing fence simply loses (a suffix of) the unacked
+//! batch, never an acked op. Fence accounting for batched updates is
+//! therefore `~1/K` psyncs/op (`bench --fig batch` measures it).
 
 pub mod linkfree;
 pub mod logfree;
@@ -33,6 +54,40 @@ pub mod tagged;
 pub mod volatile;
 
 pub use resizable::{ResizableHash, ResizableLfHash, ResizableLogFreeHash, ResizableSoftHash};
+
+/// One operation of a batch — the wire protocol's verbs over the set API.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SetOp {
+    Insert(u64, u64),
+    Remove(u64),
+    Contains(u64),
+    Get(u64),
+}
+
+impl SetOp {
+    /// The key the op addresses (shard routing).
+    pub fn key(&self) -> u64 {
+        match *self {
+            SetOp::Insert(k, _) | SetOp::Remove(k) | SetOp::Contains(k) | SetOp::Get(k) => k,
+        }
+    }
+
+    /// True for ops that may mutate (and therefore psync).
+    pub fn is_update(&self) -> bool {
+        matches!(self, SetOp::Insert(..) | SetOp::Remove(_))
+    }
+}
+
+/// Result of one batched op, by op kind.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OpResult {
+    /// `Insert` (true = newly inserted) / `Remove` (true = was present).
+    Applied(bool),
+    /// `Contains`.
+    Found(bool),
+    /// `Get`.
+    Value(Option<u64>),
+}
 
 /// The paper's set interface: unique `u64` keys with one word of data.
 ///
@@ -50,6 +105,25 @@ pub trait ConcurrentSet: Send + Sync {
     /// Non-linearizable size estimate (testing/metrics only).
     fn len_approx(&self) -> usize;
 
+    /// Apply one batch op (the shared dispatch used by `apply_batch`).
+    fn apply_one(&self, op: SetOp) -> OpResult {
+        match op {
+            SetOp::Insert(k, v) => OpResult::Applied(self.insert(k, v)),
+            SetOp::Remove(k) => OpResult::Applied(self.remove(k)),
+            SetOp::Contains(k) => OpResult::Found(self.contains(k)),
+            SetOp::Get(k) => OpResult::Value(self.get(k)),
+        }
+    }
+
+    /// Apply `ops` in order, returning one result per op. The default is a
+    /// plain loop (always correct); the durable families override it with
+    /// [`apply_batch_coalesced`] so the whole batch shares **one** trailing
+    /// fence (see the module docs' batch-semantics section). Results are
+    /// only returned after every op in the batch is durable.
+    fn apply_batch(&self, ops: &[SetOp]) -> Vec<OpResult> {
+        ops.iter().map(|&op| self.apply_one(op)).collect()
+    }
+
     /// Durable pool identity, if this set persists anything (used by the
     /// coordinator to recover shards after a crash).
     fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
@@ -59,6 +133,38 @@ pub trait ConcurrentSet: Send + Sync {
     /// Keep durable regions alive across a simulated crash (no-op for
     /// volatile sets).
     fn prepare_crash(&self) {}
+
+    /// Bucket-array growth statistics (resizable hash sets only).
+    fn growth_stats(&self) -> Option<GrowthStats> {
+        None
+    }
+}
+
+/// Apply a batch under one [`crate::pmem::PsyncScope`]: per-op fences are
+/// elided and one trailing fence commits the whole batch. This is the
+/// override body shared by all durable families.
+pub fn apply_batch_coalesced<S: ConcurrentSet + ?Sized>(set: &S, ops: &[SetOp]) -> Vec<OpResult> {
+    let _scope = crate::pmem::psync_scope();
+    ops.iter().map(|&op| set.apply_one(op)).collect()
+}
+
+/// Growth statistics of a resizable hash set (exposed per shard through
+/// `coordinator::Metrics` and the server's `STATS` line).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GrowthStats {
+    /// Current bucket-array size.
+    pub buckets: usize,
+    /// Doublings since construction/recovery.
+    pub doublings: u64,
+    /// Approximate live items (striped-counter sum).
+    pub items: usize,
+}
+
+impl GrowthStats {
+    /// Average chain length (items per bucket).
+    pub fn chain_load(&self) -> f64 {
+        self.items as f64 / self.buckets.max(1) as f64
+    }
 }
 
 /// Algorithm family selector used by benches, the coordinator and the CLI.
@@ -121,5 +227,76 @@ pub fn new_hash(family: Family, nbuckets: usize) -> Box<dyn ConcurrentSet> {
         Family::Soft => Box::new(ResizableHash::new_soft(nbuckets)),
         Family::LogFree => Box::new(ResizableHash::new_logfree(nbuckets)),
         Family::Volatile => Box::new(volatile::VolatileHash::new(nbuckets)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_batch_matches_single_op_semantics() {
+        for family in Family::ALL {
+            let set = new_hash(family, 16);
+            let ops = vec![
+                SetOp::Insert(1, 10),
+                SetOp::Insert(1, 11),
+                SetOp::Get(1),
+                SetOp::Contains(2),
+                SetOp::Remove(1),
+                SetOp::Remove(1),
+                SetOp::Get(1),
+            ];
+            let res = set.apply_batch(&ops);
+            assert_eq!(
+                res,
+                vec![
+                    OpResult::Applied(true),
+                    OpResult::Applied(false),
+                    OpResult::Value(Some(10)),
+                    OpResult::Found(false),
+                    OpResult::Applied(true),
+                    OpResult::Applied(false),
+                    OpResult::Value(None),
+                ],
+                "{family}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_updates_share_one_trailing_fence() {
+        // SOFT pays exactly 1 fence per successful update; a K-batch must
+        // pay exactly 1 trailing fence total (the 1/K headline). The other
+        // families elide *at least* their per-op fences the same way.
+        let set = new_hash(Family::Soft, 1 << 10);
+        for k in 0..32u64 {
+            assert!(set.insert(k, k)); // warm up allocator areas
+        }
+        let ops: Vec<SetOp> = (100..164u64).map(|k| SetOp::Insert(k, k * 3)).collect();
+        let a = crate::pmem::stats::thread_snapshot();
+        let res = set.apply_batch(&ops);
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert!(res.iter().all(|r| *r == OpResult::Applied(true)));
+        assert_eq!(d.fences, 1, "64 batched soft inserts = one trailing fence");
+        assert_eq!(d.elided, 64, "each op's own fence is elided");
+        assert_eq!(d.flushes, 64, "flushes still happen per-op");
+    }
+
+    #[test]
+    fn batched_reads_cost_nothing() {
+        let set = new_hash(Family::Soft, 64);
+        for k in 0..64u64 {
+            assert!(set.insert(k, k + 1));
+        }
+        let ops: Vec<SetOp> = (0..64u64).map(SetOp::Get).collect();
+        let a = crate::pmem::stats::thread_snapshot();
+        let res = set.apply_batch(&ops);
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        for (k, r) in res.iter().enumerate() {
+            assert_eq!(*r, OpResult::Value(Some(k as u64 + 1)));
+        }
+        assert_eq!(d.fences, 0, "a read-only batch owes no trailing fence");
+        assert_eq!(d.flushes, 0);
     }
 }

@@ -433,6 +433,11 @@ impl crate::sets::ConcurrentSet for SoftList {
     fn len_approx(&self) -> usize {
         self.core.count(&self.head)
     }
+    fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
+        // Group commit: one trailing fence for the batch instead of the
+        // one-psync-per-update (helpers outside the scope still fence).
+        crate::sets::apply_batch_coalesced(self, ops)
+    }
     fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
         Some(self.pool_id())
     }

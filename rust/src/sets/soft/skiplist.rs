@@ -220,6 +220,10 @@ impl crate::sets::ConcurrentSet for SoftSkipList {
         self.core.count(&self.head)
     }
 
+    fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
+        crate::sets::apply_batch_coalesced(self, ops)
+    }
+
     fn durable_pool(&self) -> Option<PoolId> {
         Some(self.pool_id())
     }

@@ -1,0 +1,198 @@
+//! Durability of batched (group-committed) operations.
+//!
+//! The batch contract (DESIGN.md §Batching): `apply_batch` returns — i.e.
+//! acks — only after its trailing fence, so
+//!
+//!   * a crash *after* the batch returned must preserve every op in it;
+//!   * a crash *mid-batch* means the batch was never acked; because
+//!     flushes still happen per-op in submission order, the recovered
+//!     state is a **prefix-closed** subset of the batch (if op i's effect
+//!     survived, so did every earlier op's) — never a torn ack.
+
+use durasets::pmem::{self, CrashPolicy, PoolId, POWER_LOSS};
+use durasets::sets::{self, ConcurrentSet, Family, OpResult, SetOp};
+use std::panic::AssertUnwindSafe;
+
+fn recover(family: Family, pool: PoolId) -> Box<dyn ConcurrentSet> {
+    match family {
+        Family::LinkFree => Box::new(sets::resizable::recover_linkfree(pool, 16).0),
+        Family::Soft => Box::new(sets::resizable::recover_soft(pool, 16).0),
+        Family::LogFree => Box::new(sets::resizable::recover_logfree(pool, 16).0),
+        Family::Volatile => unreachable!("volatile sets have no recovery"),
+    }
+}
+
+/// Silence the injected power-loss panics (keep real ones loud).
+fn quiet_power_loss_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<&str>() != Some(&POWER_LOSS) {
+                default_hook(info);
+            }
+        }));
+    });
+}
+
+#[test]
+fn acked_batch_survives_crash_for_every_family() {
+    let _sim = pmem::sim_session();
+    pmem::set_psync_ns(0);
+    for family in Family::DURABLE {
+        let set = sets::new_hash(family, 16);
+        let pool = set.durable_pool().unwrap();
+        let inserts: Vec<SetOp> = (0..300u64).map(|k| SetOp::Insert(k, k * 5)).collect();
+        let res = set.apply_batch(&inserts);
+        assert!(res.iter().all(|r| *r == OpResult::Applied(true)), "{family}");
+        // A second acked batch mixing kinds.
+        let mixed: Vec<SetOp> = (0..50u64)
+            .map(SetOp::Remove)
+            .chain((300..320u64).map(|k| SetOp::Insert(k, 1)))
+            .collect();
+        let res2 = set.apply_batch(&mixed);
+        assert!(res2.iter().all(|r| *r == OpResult::Applied(true)), "{family}");
+
+        // Both batches returned => both are acked => crash must keep them.
+        set.prepare_crash();
+        drop(set);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[pool]);
+        let rec = recover(family, pool);
+        for k in 0..300u64 {
+            let expect = if k < 50 { None } else { Some(k * 5) };
+            assert_eq!(rec.get(k), expect, "{family}: key {k} after acked batches");
+        }
+        for k in 300..320u64 {
+            assert_eq!(rec.get(k), Some(1), "{family}: key {k} from second batch");
+        }
+    }
+}
+
+#[test]
+fn mid_batch_crash_recovers_prefix_closed_state() {
+    let _sim = pmem::sim_session();
+    quiet_power_loss_panics();
+    pmem::set_psync_ns(0);
+    for family in Family::DURABLE {
+        let set = sets::new_hash(family, 16);
+        let pool = set.durable_pool().unwrap();
+        // Warm up allocator areas so the armed fault lands on op flushes,
+        // not on area initialisation.
+        for k in 10_000..10_064u64 {
+            assert!(set.insert(k, 1), "{family} warmup {k}");
+        }
+        let keys: Vec<u64> = (0..64u64).collect();
+        let ops: Vec<SetOp> = keys.iter().map(|&k| SetOp::Insert(k, k + 9)).collect();
+        // Die on the ~30th flush: mid-batch, before the trailing fence.
+        pmem::arm_flush_fault(30);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| set.apply_batch(&ops)));
+        pmem::disarm_flush_fault();
+        assert!(result.is_err(), "{family}: power loss must interrupt the batch");
+
+        // The batch never returned => nothing in it was acked. Crash.
+        set.prepare_crash();
+        drop(set);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[pool]);
+        let rec = recover(family, pool);
+
+        // No torn ack: survivors form a prefix of submission order (the
+        // op at the boundary may have gone either way on its own).
+        let present: Vec<bool> = keys.iter().map(|&k| rec.contains(k)).collect();
+        for w in present.windows(2) {
+            assert!(w[0] || !w[1], "{family}: non-prefix survival pattern {present:?}");
+        }
+        let survived = present.iter().filter(|&&p| p).count();
+        assert!(
+            survived >= 5 && survived < 64,
+            "{family}: fault must land mid-batch (survived {survived}/64)"
+        );
+        // Surviving ops carry their batch values; the warmup is intact.
+        for (i, &k) in keys.iter().enumerate() {
+            if present[i] {
+                assert_eq!(rec.get(k), Some(k + 9), "{family}: torn value for {k}");
+            }
+        }
+        for k in 10_000..10_064u64 {
+            assert_eq!(rec.get(k), Some(1), "{family}: pre-batch ack lost ({k})");
+        }
+        // The recovered structure stays fully operational.
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(rec.insert(k, 7), !present[i], "{family}: post-recovery insert {k}");
+        }
+    }
+}
+
+/// End-to-end: a served pipelined burst is acked only once durable — stop
+/// the server after the acks, crash, recover, and every acked PUT is
+/// there. (The wire-level complement of the in-process tests above.)
+#[test]
+fn served_batch_acks_are_durable() {
+    use durasets::config::Config;
+    use durasets::coordinator::{server, DuraKv};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    let _sim = pmem::sim_session();
+    let mut cfg = Config::default();
+    cfg.family = Family::LinkFree;
+    cfg.shards = 2;
+    cfg.key_range = 1 << 12;
+    cfg.sim = true;
+    cfg.psync_ns = 0;
+    let kv = Arc::new(DuraKv::create(cfg));
+    let srv = server::serve(kv.clone(), 0).unwrap();
+
+    let stream = TcpStream::connect(srv.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    // One pipelined burst of 120 PUTs plus a MULTI frame.
+    let mut burst = String::new();
+    for k in 0..120u64 {
+        burst.push_str(&format!("PUT {k} {}\n", k + 3));
+    }
+    burst.push_str("MULTI 2\nPUT 500 501\nDEL 0\nEXEC\n");
+    writer.write_all(burst.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    // 120 pipelined PUT replies + 2 MULTI-op replies (MULTI/EXEC lines
+    // themselves produce none).
+    let mut line = String::new();
+    for i in 0..122 {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let want = if i == 121 { "OK DELETED" } else { "OK NEW" };
+        assert_eq!(line.trim_end(), want, "reply {i}");
+    }
+
+    // Close the connection (handler exits on BYE/EOF and releases its kv
+    // Arc), stop the server, then wait for every Arc to come home.
+    writer.write_all(b"QUIT\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "BYE");
+    drop(reader);
+    drop(writer);
+    drop(srv);
+    let kv = {
+        let mut arc = kv;
+        let mut tries = 0;
+        loop {
+            match Arc::try_unwrap(arc) {
+                Ok(inner) => break inner,
+                Err(still_shared) => {
+                    arc = still_shared;
+                    tries += 1;
+                    assert!(tries < 1000, "connection handler never released the store");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+        }
+    };
+    let ticket = kv.crash(CrashPolicy::PESSIMISTIC);
+    let (kv2, _report) = ticket.recover().unwrap();
+    assert_eq!(kv2.get(0), None, "acked DEL survives");
+    for k in 1..120u64 {
+        assert_eq!(kv2.get(k), Some(k + 3), "acked PUT {k} survives");
+    }
+    assert_eq!(kv2.get(500), Some(501), "acked MULTI op survives");
+}

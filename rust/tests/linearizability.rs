@@ -13,7 +13,7 @@
 //! claims (paper Appendix B/C assume them); durable linearizability under
 //! crashes is covered by `crash_durability.rs`.
 
-use durasets::sets::{self, ConcurrentSet, Family};
+use durasets::sets::{self, ConcurrentSet, Family, OpResult, SetOp};
 use durasets::util::rng::Xoshiro256;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -38,12 +38,18 @@ struct Event {
 /// One thread's recorded (sequential) subhistory.
 type ThreadHistory = Vec<Event>;
 
-fn record(
+/// Record histories; with `batch_prob_pct > 0`, a slice of each thread's
+/// ops is issued as small `apply_batch` calls. A batch's constituent ops
+/// are recorded as individual events sharing the batch's inv/resp
+/// interval, in batch order (program order within the thread) — the batch
+/// is linearizable iff each op linearizes individually inside it.
+fn record_mixed(
     family: Family,
     threads: usize,
     ops_per_thread: usize,
     keys: u64,
     seed: u64,
+    batch_prob_pct: u64,
 ) -> Vec<ThreadHistory> {
     let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(family, 4));
     let clock = Arc::new(AtomicU64::new(0));
@@ -57,27 +63,71 @@ fn record(
                 let mut rng = Xoshiro256::new(seed ^ (t * 0x9E37));
                 let mut hist = Vec::with_capacity(ops_per_thread);
                 barrier.wait();
-                for _ in 0..ops_per_thread {
-                    let key = rng.below(keys);
-                    let kind = match rng.below(3) {
-                        0 => Kind::Insert,
-                        1 => Kind::Remove,
-                        _ => Kind::Contains,
-                    };
-                    let inv = clock.fetch_add(1, Ordering::SeqCst);
-                    let result = match kind {
-                        Kind::Insert => set.insert(key, key),
-                        Kind::Remove => set.remove(key),
-                        Kind::Contains => set.contains(key),
-                    };
-                    let resp = clock.fetch_add(1, Ordering::SeqCst);
-                    hist.push(Event { kind, key, result, inv, resp });
+                while hist.len() < ops_per_thread {
+                    if rng.below(100) < batch_prob_pct {
+                        // A small explicit batch (2-4 ops).
+                        let n = 2 + rng.below(3) as usize;
+                        let mut ops = Vec::with_capacity(n);
+                        let mut kinds = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            let key = rng.below(keys);
+                            match rng.below(3) {
+                                0 => {
+                                    ops.push(SetOp::Insert(key, key));
+                                    kinds.push((Kind::Insert, key));
+                                }
+                                1 => {
+                                    ops.push(SetOp::Remove(key));
+                                    kinds.push((Kind::Remove, key));
+                                }
+                                _ => {
+                                    ops.push(SetOp::Contains(key));
+                                    kinds.push((Kind::Contains, key));
+                                }
+                            }
+                        }
+                        let inv = clock.fetch_add(1, Ordering::SeqCst);
+                        let results = set.apply_batch(&ops);
+                        let resp = clock.fetch_add(1, Ordering::SeqCst);
+                        for ((kind, key), res) in kinds.into_iter().zip(results) {
+                            let result = match res {
+                                OpResult::Applied(b) | OpResult::Found(b) => b,
+                                OpResult::Value(v) => v.is_some(),
+                            };
+                            hist.push(Event { kind, key, result, inv, resp });
+                        }
+                    } else {
+                        let key = rng.below(keys);
+                        let kind = match rng.below(3) {
+                            0 => Kind::Insert,
+                            1 => Kind::Remove,
+                            _ => Kind::Contains,
+                        };
+                        let inv = clock.fetch_add(1, Ordering::SeqCst);
+                        let result = match kind {
+                            Kind::Insert => set.insert(key, key),
+                            Kind::Remove => set.remove(key),
+                            Kind::Contains => set.contains(key),
+                        };
+                        let resp = clock.fetch_add(1, Ordering::SeqCst);
+                        hist.push(Event { kind, key, result, inv, resp });
+                    }
                 }
                 hist
             })
         })
         .collect();
     handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn record(
+    family: Family,
+    threads: usize,
+    ops_per_thread: usize,
+    keys: u64,
+    seed: u64,
+) -> Vec<ThreadHistory> {
+    record_mixed(family, threads, ops_per_thread, keys, seed, 0)
 }
 
 /// Replay `e` against the abstract set state (bitmask over keys < 64).
@@ -185,6 +235,23 @@ fn logfree_hash_is_linearizable() {
 #[test]
 fn volatile_hash_is_linearizable() {
     check_family(Family::Volatile, 8);
+}
+
+/// Mixed batch/single-op histories: group-committed batches must
+/// linearize as their constituent ops (batching defers only the issuer's
+/// fence, never the linearization point).
+#[test]
+fn mixed_batch_histories_are_linearizable() {
+    for family in [Family::Soft, Family::LinkFree, Family::LogFree] {
+        for round in 0..4u64 {
+            let hist = record_mixed(family, 3, 60, 4, 0xBA7C4 ^ round, 35);
+            let total: usize = hist.iter().map(|h| h.len()).sum();
+            assert!(
+                linearizable(&hist),
+                "{family}: mixed batch history of {total} ops NOT linearizable (round {round}): {hist:#?}"
+            );
+        }
+    }
 }
 
 /// The checker itself must reject broken histories (meta-test).
