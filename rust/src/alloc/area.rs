@@ -15,6 +15,24 @@
 //! and an unmarked null next — i.e. "member with key 0"). The paper's flow
 //! implicitly relies on allocation returning nodes in a recoverable-as-free
 //! state; this is that requirement made explicit.
+//!
+//! **Generation tags.** The trailing 8 bytes of every slot are a
+//! monotonically increasing *generation word* owned by the allocator (node
+//! payloads must fit in `slot_size - 8` bytes; the durable node kinds use
+//! at most 32). [`DurablePool::free`] bumps it, so each free→alloc
+//! transition of a slot is observable: a published `(ptr, gen)` hint whose
+//! stored gen no longer matches the slot's current gen provably refers to
+//! a reclaimed incarnation and is rejected instead of "validated by
+//! luck" (see DESIGN.md §Reclamation). Because `free` only ever runs after
+//! an EBR grace period (retire defers it), a gen bump also certifies that
+//! the grace period of the previous incarnation elapsed. The word lives
+//! inside the slot's cache line, so it is *persisted with the slot*: every
+//! `psync` a family issues on the node (insert/delete flush, `create`/
+//! `destroy`, link-and-persist) carries the current gen to the shadow
+//! image, and recovery restores it with the rest of the area. A bump that
+//! crashes before any such psync merely rolls back with the slot — sound,
+//! because all hint words are volatile and die with the crash (tested by
+//! the crash-during-reclamation tests in the family recovery modules).
 
 use crate::pmem::region::{alloc_region, persist_region_bulk, regions_of, release_pool, RegionRef, RegionTag};
 use crate::pmem::PoolId;
@@ -24,6 +42,18 @@ use std::cell::UnsafeCell;
 
 /// Slots per durable area (256 KiB areas of 64-byte slots).
 pub const SLOTS_PER_AREA: usize = 4096;
+
+/// The generation word of a durable slot: the slot's trailing 8 bytes
+/// (see the module docs). `slot_size` must be the owning pool's slot size
+/// (the durable families all use [`CACHE_LINE`] = 64, putting the word at
+/// byte 56).
+///
+/// # Safety
+/// `slot` must point to a live slot of a pool with that `slot_size`.
+#[inline(always)]
+pub unsafe fn slot_gen<'a>(slot: *const u8, slot_size: usize) -> &'a std::sync::atomic::AtomicU64 {
+    &*(slot.add(slot_size - 8) as *const std::sync::atomic::AtomicU64)
+}
 
 /// Per-thread allocation state. Only ever touched by its owning thread.
 struct ThreadAlloc {
@@ -143,9 +173,20 @@ impl DurablePool {
     /// Return a slot to the calling thread's free-list. The caller must
     /// guarantee the slot is unreachable (EBR grace period elapsed) and
     /// already carries a recoverable-as-free pattern.
+    ///
+    /// Bumps the slot's generation word (Release, so any later state
+    /// publication of the next incarnation — always a Release CAS/store in
+    /// the families — carries the bump with it): stale `(ptr, gen)` hints
+    /// to the previous incarnation now fail their tag check. The bump is
+    /// not eagerly flushed; it becomes durable with the next psync of the
+    /// slot's line (at the latest, the reusing insert's), which keeps the
+    /// families' fence/flush budgets exactly unchanged — see module docs.
     pub fn free(&self, slot: *mut u8) {
         self.outstanding
             .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+        unsafe {
+            slot_gen(slot, self.slot_size).fetch_add(1, std::sync::atomic::Ordering::Release);
+        }
         self.local().free.push(slot);
     }
 
@@ -271,6 +312,28 @@ mod tests {
         all.sort_unstable();
         all.dedup();
         assert_eq!(all.len(), n, "two threads handed out the same slot");
+    }
+
+    #[test]
+    fn free_bumps_generation_and_init_preserves_it() {
+        use std::sync::atomic::Ordering;
+        let pool = DurablePool::new(64, init_marker);
+        let p = pool.alloc();
+        let g0 = unsafe { slot_gen(p, 64).load(Ordering::SeqCst) };
+        pool.free(p);
+        let p2 = pool.alloc();
+        assert_eq!(p, p2, "LIFO free-list must hand the slot back");
+        assert_eq!(
+            unsafe { slot_gen(p2, 64).load(Ordering::SeqCst) },
+            g0 + 1,
+            "each free→alloc transition bumps the generation"
+        );
+        // The canonical free pattern / recovery normalisation must never
+        // touch the allocator-owned trailing word.
+        unsafe { pool.normalize_slot(p2) };
+        assert_eq!(unsafe { slot_gen(p2, 64).load(Ordering::SeqCst) }, g0 + 1);
+        pool.free(p2);
+        assert_eq!(unsafe { slot_gen(p, 64).load(Ordering::SeqCst) }, g0 + 2);
     }
 
     #[test]

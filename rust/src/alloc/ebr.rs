@@ -9,6 +9,13 @@
 //! function. ABA and use-after-free on the lock-free lists are prevented
 //! exactly as in the paper.
 //!
+//! Retire also *defers the generation bump*: a slot's gen word (see
+//! [`crate::alloc::area`]) is bumped by the pool `free` that runs as the
+//! deferred callback, never at retire time. The grace period is therefore
+//! real — while any thread that could still hold a `(ptr, gen)` hint from
+//! the retire-time epoch is pinned, the gen stays put and the hint stays
+//! valid for exactly as long as the pointer itself is safe to chase.
+//!
 //! Not lock-free (a stalled pinned thread blocks advancement) — the same
 //! trade-off the paper makes for performance.
 

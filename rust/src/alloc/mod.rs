@@ -10,11 +10,18 @@
 //!   ("not lock-free but provides progress when threads are not stuck").
 //! * [`volatile`] — slab pool for SOFT's volatile nodes (lost on crash by
 //!   design, rebuilt by recovery).
+//!
+//! Both pools stamp every slot with a trailing **generation word** bumped
+//! on free (after the EBR grace period — `free` only runs from deferred
+//! retire callbacks or single-owner paths), which is what makes the hint
+//! and tower `(ptr, gen)` validation in `sets::resizable` and the skip
+//! lists sound by construction rather than probabilistic (DESIGN.md
+//! §Reclamation).
 
 pub mod area;
 pub mod ebr;
 pub mod volatile;
 
-pub use area::DurablePool;
+pub use area::{slot_gen, DurablePool};
 pub use ebr::{Ebr, Guard};
-pub use volatile::VolatilePool;
+pub use volatile::{vslot_gen, VolatilePool};

@@ -6,16 +6,39 @@
 //! never calls the system allocator and freeing via EBR is O(1).
 //!
 //! The paper points out that SOFT's volatile node (with its extra PNode
-//! pointer) is bigger than a link-free node — about 1.5 nodes per cache
-//! line — and pays for it in traversal cache misses. We deliberately keep
-//! that layout (no padding to a full line) to preserve the effect.
+//! pointer) is bigger than a link-free node and pays for it in traversal
+//! cache misses. We keep the node un-padded (no rounding to a full line)
+//! to preserve that effect qualitatively.
+//!
+//! **Generation tags.** Like the durable areas, every slab slot carries a
+//! trailing 8-byte *generation word* (the slab stride is `slot_size + 8`;
+//! the node layout itself is unchanged, but note the stride shift: a
+//! 40-byte SNode packs ~1.33 per cache line instead of the pre-tag ~1.5 —
+//! SOFT traversals still straddle lines, slightly more than before).
+//! [`VolatilePool::free`] bumps the word, so SOFT hint cells and
+//! skip-list towers publishing `(SNode ptr, gen)` can reject a slot that
+//! was reclaimed and reused since the hint was stored — the same
+//! free→alloc ABA fence as `alloc::area`, minus the persistence (this
+//! pool dies at a crash by design).
 
 use crate::util::{tid::tid, MAX_THREADS};
 use crossbeam_utils::CachePadded;
-use std::alloc::{alloc, dealloc, Layout};
+use std::alloc::{alloc_zeroed, dealloc, Layout};
 use std::cell::UnsafeCell;
+use std::sync::atomic::AtomicU64;
 
 const CHUNK_SLOTS: usize = 4096;
+
+/// The generation word of a volatile slab slot: the 8 bytes *after* the
+/// node payload (`slot_size` must be the owning pool's slot size, e.g.
+/// `SNODE_SIZE` for SOFT's SNodes).
+///
+/// # Safety
+/// `slot` must point to a live slot of a pool with that `slot_size`.
+#[inline(always)]
+pub unsafe fn vslot_gen<'a>(slot: *const u8, slot_size: usize) -> &'a AtomicU64 {
+    &*(slot.add(slot_size) as *const AtomicU64)
+}
 
 struct ThreadSlab {
     chunks: Vec<*mut u8>,
@@ -32,6 +55,8 @@ impl ThreadSlab {
 /// Fixed-size volatile slab allocator (per structure instance).
 pub struct VolatilePool {
     slot_size: usize,
+    /// Slot pitch in a chunk: payload + trailing generation word.
+    stride: usize,
     per_thread: Box<[CachePadded<UnsafeCell<ThreadSlab>>]>,
     /// Balance of `alloc()` minus `free()` calls (leak assertions).
     outstanding: std::sync::atomic::AtomicI64,
@@ -41,10 +66,24 @@ unsafe impl Send for VolatilePool {}
 unsafe impl Sync for VolatilePool {}
 
 impl VolatilePool {
+    /// A pool with per-slot generation words (stride `slot_size + 8`) —
+    /// for nodes that hint/tower validation may publish (SOFT SNodes).
     pub fn new(slot_size: usize) -> Self {
+        Self::with_stride(slot_size, slot_size + 8)
+    }
+
+    /// A pool without generation words (stride == `slot_size`) — for the
+    /// volatile ablation family, which publishes no hints and must keep
+    /// its exact paper-comparison node density.
+    pub fn new_untagged(slot_size: usize) -> Self {
+        Self::with_stride(slot_size, slot_size)
+    }
+
+    fn with_stride(slot_size: usize, stride: usize) -> Self {
         assert!(slot_size >= 8 && slot_size % 8 == 0);
         VolatilePool {
             slot_size,
+            stride,
             per_thread: (0..MAX_THREADS)
                 .map(|_| CachePadded::new(UnsafeCell::new(ThreadSlab::new())))
                 .collect(),
@@ -53,10 +92,11 @@ impl VolatilePool {
     }
 
     fn chunk_layout(&self) -> Layout {
-        Layout::from_size_align(self.slot_size * CHUNK_SLOTS, 64).unwrap()
+        Layout::from_size_align(self.stride * CHUNK_SLOTS, 64).unwrap()
     }
 
-    /// Allocate one uninitialised slot.
+    /// Allocate one uninitialised slot (its generation word, by contrast,
+    /// is always live: zeroed at chunk creation, bumped by `free`).
     pub fn alloc(&self) -> *mut u8 {
         self.outstanding
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -66,22 +106,30 @@ impl VolatilePool {
             return p;
         }
         if slab.bump_next == CHUNK_SLOTS {
-            let chunk = unsafe { alloc(self.chunk_layout()) };
+            // Zeroed so every slot's generation word starts at 0.
+            let chunk = unsafe { alloc_zeroed(self.chunk_layout()) };
             assert!(!chunk.is_null());
             slab.chunks.push(chunk);
             slab.bump_next = 0;
         }
         let chunk = *slab.chunks.last().unwrap();
-        let p = unsafe { chunk.add(slab.bump_next * self.slot_size) };
+        let p = unsafe { chunk.add(slab.bump_next * self.stride) };
         slab.bump_next += 1;
         p
     }
 
     /// Return a slot to the calling thread's free-list (caller guarantees
-    /// unreachability, i.e. EBR grace elapsed).
+    /// unreachability, i.e. EBR grace elapsed). In a gen-tagged pool,
+    /// bumps the slot's generation word (Release) so stale `(ptr, gen)`
+    /// hints to the reclaimed incarnation fail their tag check.
     pub fn free(&self, p: *mut u8) {
         self.outstanding
             .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+        if self.stride > self.slot_size {
+            unsafe {
+                vslot_gen(p, self.slot_size).fetch_add(1, std::sync::atomic::Ordering::Release);
+            }
+        }
         let slab = unsafe { &mut *self.per_thread[tid()].get() };
         slab.free.push(p);
     }
@@ -127,7 +175,20 @@ mod tests {
         }
         let v: Vec<usize> = ptrs.into_iter().collect();
         for w in v.windows(2) {
-            assert!(w[1] - w[0] >= 40);
+            // Payload + the trailing generation word never overlap.
+            assert!(w[1] - w[0] >= 48);
         }
+    }
+
+    #[test]
+    fn free_bumps_volatile_generation() {
+        use std::sync::atomic::Ordering;
+        let pool = VolatilePool::new(40);
+        let a = pool.alloc();
+        let g0 = unsafe { vslot_gen(a, 40).load(Ordering::SeqCst) };
+        assert_eq!(g0, 0, "fresh chunk slots start at generation 0");
+        pool.free(a);
+        assert_eq!(pool.alloc(), a);
+        assert_eq!(unsafe { vslot_gen(a, 40).load(Ordering::SeqCst) }, 1);
     }
 }

@@ -7,6 +7,7 @@
 //! DEL <key>           ->  OK DELETED | OK ABSENT
 //! MULTI <n>           ->  (no reply; the next n lines are queued ops)
 //! EXEC                ->  n reply lines, one per queued op, in order
+//!                         (n = 0: a single "OK EMPTY" ack)
 //! LEN                 ->  LEN <n>
 //! STATS               ->  STATS <metrics + growth line>
 //! QUIT                ->  BYE (closes connection)
@@ -120,8 +121,7 @@ pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
                     if max_conns > 0 && live_conns.load(Ordering::SeqCst) >= max_conns {
                         // Bounded fan-out: refuse instead of spawning an
                         // unbounded thread per connection.
-                        let mut s = stream;
-                        let _ = writeln!(s, "ERR too many connections (max {max_conns})");
+                        reject_conn(stream, max_conns);
                         continue;
                     }
                     live_conns.fetch_add(1, Ordering::SeqCst);
@@ -142,6 +142,49 @@ pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
     });
 
     Ok(Server { addr, stop, accept_join: Some(accept_join), _workers: workers })
+}
+
+/// Refuse a connection over the `max_conns` limit with one ERR line that
+/// actually reaches the client. A bare `write + drop` turns into a TCP
+/// RST whenever the client already sent bytes we never read (its first
+/// command raced our refusal), and an RST discards the in-flight reply —
+/// the client saw a naked reset instead of the ERR. So: write the line,
+/// half-close our sending side (FIN ⇒ the reply + EOF are delivered in
+/// order), then briefly drain the client's data so the final close finds
+/// an empty receive buffer. The whole exchange runs on a short-lived
+/// helper thread (bounded lifetime: ≤ ~20 ms of read timeouts) so a
+/// burst of rejections never serializes the accept loop. Deliberate
+/// trade-off: a sustained reject flood holds ~rate × 20 ms concurrent
+/// drain threads; if the OS refuses a thread we degrade to write+drop
+/// (the pre-PR behaviour) rather than killing the accept loop.
+fn reject_conn(stream: TcpStream, max_conns: usize) {
+    let spawned = std::thread::Builder::new()
+        .name("reject-drain".into())
+        .spawn(move || {
+            use std::io::Read;
+            let mut s = stream;
+            let _ = writeln!(s, "ERR too many connections (max {max_conns})");
+            let _ = s.flush();
+            let _ = s.shutdown(std::net::Shutdown::Write);
+            let _ = s.set_read_timeout(Some(std::time::Duration::from_millis(10)));
+            let mut sink = [0u8; 512];
+            // One read for whatever raced the refusal, one for the EOF of
+            // a well-behaved client; slower clients forfeit the clean
+            // close.
+            for _ in 0..2 {
+                match s.read(&mut sink) {
+                    // EOF: the client closed after reading the ERR — a
+                    // clean close on our side cannot RST anything now.
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+        });
+    // Out of threads (the overload this limit exists for): the stream was
+    // moved into the failed closure and is dropped with it — the client
+    // gets a reset, which is the pre-PR behaviour, and the accept loop
+    // stays alive (a bare `thread::spawn` would have panicked it dead).
+    let _ = spawned;
 }
 
 /// A routed data command (needed again at reply-formatting time).
@@ -327,6 +370,12 @@ fn handle_conn(
                                     slots.push(Slot::Text(format!(
                                         "ERR MULTI: expected EXEC after {n} ops, got '{exec}'"
                                     )));
+                                } else if frame.is_empty() {
+                                    // `MULTI 0` + EXEC: a valid empty batch.
+                                    // It queues no ops and would otherwise
+                                    // produce zero reply lines — the client,
+                                    // waiting for its EXEC ack, would hang.
+                                    slots.push(Slot::Text("OK EMPTY".to_string()));
                                 } else {
                                     for l in &frame {
                                         match parse_data(l) {
@@ -465,6 +514,57 @@ mod tests {
         assert!(c.recv().starts_with("ERR MULTI: not a data op"));
         assert!(c.send("MULTI zzz").starts_with("ERR usage: MULTI"));
         assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    #[test]
+    fn multi_zero_acks_empty_batch() {
+        let kv = test_kv(2);
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+        // `MULTI 0` + EXEC used to queue no ops and emit no reply — the
+        // client hung waiting for its EXEC ack.
+        writeln!(c.writer, "MULTI 0").unwrap();
+        writeln!(c.writer, "EXEC").unwrap();
+        assert_eq!(c.recv(), "OK EMPTY", "empty batch must ack, not stall");
+        // The connection stays fully usable afterwards.
+        assert_eq!(c.send("PUT 1 10"), "OK NEW");
+        // And an empty frame embedded in a pipelined burst keeps reply
+        // order for the surrounding commands.
+        c.writer.write_all(b"PUT 2 20\nMULTI 0\nEXEC\nGET 2\n").unwrap();
+        c.writer.flush().unwrap();
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "OK EMPTY");
+        assert_eq!(c.recv(), "FOUND 20");
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    #[test]
+    fn rejected_connection_gets_the_err_line_even_if_it_sent_first() {
+        let mut cfg = Config::default();
+        cfg.shards = 1;
+        cfg.key_range = 1024;
+        cfg.psync_ns = 0;
+        cfg.max_conns = 1;
+        let kv = Arc::new(DuraKv::create(cfg));
+        let server = serve(kv, 0).unwrap();
+        let mut a = Client::connect(server.addr);
+        assert_eq!(a.send("PUT 1 1"), "OK NEW"); // handler established
+        // Saturated listener: each refused client *sends before reading*
+        // — the schedule where a bare write+drop refusal turns into a TCP
+        // reset that discards the ERR line mid-flight.
+        for i in 0..5 {
+            let mut c = Client::connect(server.addr);
+            writeln!(c.writer, "GET 1").unwrap();
+            let reply = c.recv();
+            assert!(
+                reply.starts_with("ERR too many connections"),
+                "rejected client {i} must read the ERR line, got '{reply}'"
+            );
+        }
+        assert_eq!(a.send("QUIT"), "BYE");
+        drop(a);
         drop(server);
     }
 

@@ -5,6 +5,14 @@
 //! through the AOT `recovery_*` artifacts in fixed-size batches, and
 //! relinks members per the returned (member, bucket) planes. Tests
 //! cross-check the two paths bit-for-bit (`rust/tests/runtime_accel.rs`).
+//!
+//! Plane extraction reads *fields* (`raw_flags`/`raw_validity`/`key`),
+//! never whole slots: the slot's trailing generation word
+//! (`alloc::area::slot_gen`) is allocator metadata for hint/tower ABA
+//! validation — it must never leak into the classification planes as
+//! flag or key bits, and it needs no recovery treatment beyond surviving
+//! in place (hints die with the crash; `DurablePool::free` re-bumps it
+//! for every slot this path reclaims).
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -159,11 +159,24 @@ impl LfCore {
                     (*new_node).make_invalid();
                     std::sync::atomic::fence(Ordering::Release);
                     (*new_node).reset_flush_flags();
-                    (*new_node).key.store(key, Ordering::Relaxed);
+                    // Release: a hint validator that reads THIS incarnation's
+                    // key (Acquire) must also observe the allocator's gen
+                    // bump, which happened-before this store on the owning
+                    // thread (free and alloc share the per-thread free-list)
+                    // — closes the reincarnated-key seqlock gap, DESIGN.md
+                    // §Reclamation.
+                    (*new_node).key.store(key, Ordering::Release);
                     (*new_node).value.store(value, Ordering::Relaxed);
                 }
                 // Link (still invalid!), then validate, then persist.
-                (*new_node).next.store(curr as u64, Ordering::Relaxed);
+                // Release: in the same-key reincarnation schedule the only
+                // word that distinguishes the new incarnation to a hint
+                // validator is this unmarked `next` — reading it (Acquire)
+                // must carry the allocator's gen bump to the validator's
+                // closing gen check (DESIGN.md §Reclamation; the fence in
+                // the init block above serves crash-recovery of validity,
+                // not this ordering, so don't lean on it).
+                (*new_node).next.store(curr as u64, Ordering::Release);
                 if (*pred_link)
                     .compare_exchange(
                         curr as u64,

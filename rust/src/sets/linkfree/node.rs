@@ -29,6 +29,9 @@ pub struct LfNode {
 }
 
 const _: () = assert!(std::mem::size_of::<LfNode>() == 64);
+// Bytes 56..64 of the slot are the allocator's generation word (see
+// `alloc::area`): the node payload must stay clear of it.
+const _: () = assert!(std::mem::offset_of!(LfNode, next) + 8 <= 56);
 
 impl LfNode {
     /// Canonical *free* pattern: valid (bits equal) **and marked** — i.e.

@@ -10,17 +10,22 @@
 //! explicitly).
 //!
 //! Index design: towers are volatile hint records pointing at durable
-//! nodes. A search walks the tower levels to find the closest durable
-//! node with key < target, validates it *under the EBR pin* (unmarked ⇒
-//! reachable at that instant, and EBR guarantees the slot cannot be
-//! reused while we hold the guard), and starts the bottom-level Harris
-//! `find` from its link cell; any staleness detected by CAS failure falls
-//! back to the full head scan (`LfCore::*_from`). Stale towers (marked or
-//! recycled targets) are unlinked lazily during index traversal.
+//! nodes, published as a `(node, gen)` pair — `gen` is the slot's
+//! allocation generation at tower-build time (see `alloc::area`). A
+//! search walks the tower levels to find the closest durable node with
+//! key < target and validates it *under the EBR pin*: generation first
+//! (a mismatch proves the slot was reclaimed and possibly reused since
+//! the tower was built — the old key/mark heuristic only made that
+//! misread unlikely), then key + mark, then generation again (seqlock
+//! close; see DESIGN.md §Reclamation). A validated node is linked at its
+//! key's position, so the bottom-level Harris `find` starts from its
+//! link cell; any later staleness detected by CAS failure falls back to
+//! the full head scan (`LfCore::*_from`). Stale towers (reclaimed,
+//! marked or recycled targets) are unlinked lazily during traversal.
 
 use crate::alloc::Ebr;
 use crate::pmem::PoolId;
-use crate::sets::tagged::{is_marked, ptr_of};
+use crate::sets::tagged::{gen_validated, is_marked, ptr_of};
 use crate::util::rng::Xoshiro256;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,8 +46,38 @@ const BRANCHING: u64 = 4;
 struct Tower {
     key: u64,
     node: *mut LfNode,
+    /// `node`'s slot generation when the tower was built: the target was
+    /// linked then, so a later mismatch proves it was reclaimed.
+    gen: u64,
     /// nexts[l] = tagged pointer to the next Tower at level l.
     nexts: [AtomicU64; MAX_LEVEL],
+}
+
+/// Current allocation generation of a durable node's slot.
+#[inline(always)]
+unsafe fn node_gen(node: *const LfNode) -> u64 {
+    crate::alloc::slot_gen(node as *const u8, crate::util::CACHE_LINE).load(Ordering::Acquire)
+}
+
+/// Is the tower's `(node, gen)` target stale? The shared seqlock
+/// protocol [`gen_validated`] (gen, then key + mark, then gen again):
+/// with a stable matching gen the key/mark reads are certainly about the
+/// incarnation the tower indexed. The Acquire key load pairs with the
+/// Release key store at node init, so reading a reincarnation's key
+/// makes the allocator's gen bump visible to the closing gen check.
+#[inline]
+unsafe fn tower_stale(t: *const Tower) -> bool {
+    let node = (*t).node;
+    gen_validated(
+        || unsafe { node_gen(node) },
+        (*t).gen,
+        || unsafe {
+            ((*node).key.load(Ordering::Acquire) == (*t).key
+                && !is_marked((*node).next.load(Ordering::Acquire)))
+            .then_some(())
+        },
+    )
+    .is_none()
 }
 
 /// Durable lock-free skip list (link-free family).
@@ -110,11 +145,9 @@ impl LfSkipList {
                 if t.is_null() {
                     break;
                 }
-                // Validate the tower's target.
+                // Validate the tower's (node, gen) target.
                 let node = (*t).node;
-                let stale = (*node).key.load(Ordering::Relaxed) != (*t).key
-                    || is_marked((*node).next.load(Ordering::Acquire));
-                if stale {
+                if tower_stale(t) {
                     // Lazily unlink the dead tower at this level.
                     let succ = (*t).nexts[level].load(Ordering::Acquire) & !1;
                     let _ = pred_nexts[level].compare_exchange(
@@ -140,7 +173,9 @@ impl LfSkipList {
         best
     }
 
-    /// Link a new tower for (key, node) at a random height.
+    /// Link a new tower for (key, node) at a random height. `node` was
+    /// observed linked under the caller's pin, so its slot generation
+    /// read here names exactly that incarnation.
     unsafe fn index_insert(&self, key: u64, node: *mut LfNode) {
         let height = Self::random_height(key);
         if height <= 1 {
@@ -150,6 +185,7 @@ impl LfSkipList {
         let tower = Box::into_raw(Box::new(Tower {
             key,
             node,
+            gen: node_gen(node),
             nexts: [Z; MAX_LEVEL],
         }));
         {
@@ -339,6 +375,53 @@ mod tests {
             !std::ptr::eq(hint, &s.head),
             "hint for the largest key should come from the index"
         );
+    }
+
+    /// Deterministic tower-ABA replay: a tower whose target slot went
+    /// through free→alloc with the *same key* re-fabricated passes the
+    /// old key+mark heuristic (the classic ABA) but must be rejected by
+    /// the generation tag. `--features untagged-hints` demonstrably
+    /// accepts it.
+    #[test]
+    fn stale_tower_to_reallocated_slot_is_rejected_by_generation() {
+        // A key whose deterministic tower height is >= 2 (so the index
+        // actually holds a tower for it).
+        let key = (0..10_000u64)
+            .find(|&k| LfSkipList::random_height(k) >= 2)
+            .unwrap();
+        let s = LfSkipList::new();
+        assert!(s.insert(key, 1));
+        assert!(s.remove(key));
+        unsafe { s.core.ebr.drain_all() }; // slot freed, gen bumped
+
+        // Reincarnate the same slot with the same key, unmarked + valid —
+        // exactly what a concurrent re-insert mid-flight can present.
+        let slot = s.core.pool.alloc() as *mut LfNode;
+        unsafe {
+            (*slot).key.store(key, Ordering::Relaxed);
+            (*slot).value.store(2, Ordering::Relaxed);
+            (*slot).next.store(0, Ordering::Relaxed);
+            (*slot).make_valid();
+        }
+
+        {
+            let _g = s.core.ebr.pin();
+            let hint = unsafe { s.hint_link(key + 1) };
+            if cfg!(feature = "untagged-hints") {
+                assert!(
+                    std::ptr::eq(hint, unsafe { &(*slot).next } as *const AtomicU64),
+                    "untagged tower validation accepts the reincarnated slot (the ABA hazard)"
+                );
+            } else {
+                assert!(
+                    std::ptr::eq(hint, &s.head),
+                    "generation mismatch must make the tower stale"
+                );
+            }
+        }
+
+        unsafe { LfNode::init_free_pattern(slot as *mut u8) };
+        s.core.pool.free(slot as *mut u8);
     }
 
     #[test]

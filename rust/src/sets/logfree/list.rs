@@ -132,7 +132,11 @@ impl LogFreeCore {
                 }
                 if new_node.is_null() {
                     new_node = self.pool.alloc() as *mut LogFreeNode;
-                    (*new_node).key.store(key, Ordering::Relaxed);
+                    // Release: pairs with the Acquire key load in hint
+                    // validation so a reader observing this incarnation's
+                    // key also observes the allocator's gen bump (see
+                    // DESIGN.md §Reclamation).
+                    (*new_node).key.store(key, Ordering::Release);
                     (*new_node).value.store(value, Ordering::Relaxed);
                 }
                 // The unlinked node's own link keeps DIRTY until it is

@@ -14,6 +14,9 @@ pub struct LogFreeNode {
 }
 
 const _: () = assert!(std::mem::size_of::<LogFreeNode>() == 64);
+// Bytes 56..64 of the slot are the allocator's generation word (see
+// `alloc::area`): the node payload must stay clear of it.
+const _: () = assert!(std::mem::offset_of!(LogFreeNode, next) + 8 <= 56);
 
 impl LogFreeNode {
     /// Free pattern: marked null link — never a member on a recovery walk

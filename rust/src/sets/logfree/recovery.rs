@@ -164,6 +164,37 @@ mod tests {
     }
 
     #[test]
+    fn crash_during_reclamation_neither_leaks_nor_resurrects() {
+        let _sim = pmem::sim_session();
+        let l = LogFreeList::new();
+        let id = l.pool_id();
+        for k in 0..20u64 {
+            assert!(l.insert(k, k + 1));
+        }
+        assert!(l.remove(7)); // mark + unlink both persisted
+        // Complete reclamation: the slot is re-initialised to the free
+        // pattern and freed, its generation bumped — neither the volatile
+        // re-init nor the bump is persisted before the crash. The walk
+        // from the root never reaches it (the unlink was persisted), so
+        // recovery reclaims it regardless.
+        unsafe { l.core.ebr.drain_all() };
+        l.crash_preserve();
+        drop(l);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+
+        let (l2, stats) = recover_list(id);
+        assert!(!l2.contains(7), "freed slot re-linked as a member");
+        assert_eq!(stats.members, 19);
+        assert_eq!(
+            stats.reclaimed,
+            crate::alloc::area::SLOTS_PER_AREA - 19,
+            "the freed slot must be reclaimed again, not leaked"
+        );
+        assert!(l2.insert(7, 700), "reclaimed slots must be reusable");
+        assert_eq!(l2.get(7), Some(700));
+    }
+
+    #[test]
     fn leaked_node_is_reclaimed_not_resurrected() {
         let _sim = pmem::sim_session();
         let l = LogFreeList::new();

@@ -40,28 +40,42 @@
 //! updates keep their 1 (SOFT) / ~1 (link-free) / ~2 (log-free) psyncs and
 //! `contains`/`get` stay psync-free — asserted by tests below.
 //!
-//! ## Hint-validation hazard (shared with the skip lists)
+//! ## Hint validation is generation-checked (shared with the skip lists)
 //!
 //! A hint may point at a node that was unlinked, reclaimed and
-//! re-allocated after the hint was stored. Validation (state + okey check
-//! under the EBR pin) rejects free-pattern and mid-operation nodes — the
-//! families were hardened so an allocated-but-unlinked node is never in a
-//! "linked-looking" state (SOFT: pre-link `IntendToInsert`; link-free:
-//! pre-link invalid; log-free: pre-link `DIRTY`). A node that passes
-//! validation is either currently linked (a correct window start, as in
-//! Harris traversals) or a re-inserted slot that is linked at its key's
-//! sorted position — also correct, because there is only one list.
+//! re-allocated after the hint was stored. Hints are therefore published
+//! as a packed `(ptr, gen)` word ([`crate::sets::tagged::pack_hint`]):
+//! `gen` is the slot's allocation generation, bumped by the pool on every
+//! free (which, via EBR retire, only happens after a grace period).
+//! Validation under the EBR pin is a seqlock-shaped read — gen, then
+//! state + okey, then gen again. A gen mismatch means "the slot was
+//! reclaimed since publication": fall back to an ancestor bucket or the
+//! head instead of hoping the state check catches the reincarnation. A
+//! stable matching gen proves the state/okey reads saw a single slot
+//! incarnation — the one the publisher observed *linked* — so the state
+//! check's verdict is about the right node: free-pattern, deleted and
+//! mid-operation nodes are rejected (SOFT: pre-link `IntendToInsert`;
+//! link-free: pre-link invalid; log-free: pre-link `DIRTY`), and a node
+//! that passes is linked at its key's sorted position in the single
+//! family list — a correct window start, as in Harris traversals. The
+//! full argument (including why the closing gen read cannot miss a
+//! concurrent bump, and the truncation wraparound window) lives in
+//! DESIGN.md §Reclamation. Building with `--features untagged-hints`
+//! compiles the gen checks out — the configuration the reclamation-churn
+//! harness uses to demonstrate the pre-tag ABA misvalidation.
 
 use crate::alloc::Ebr;
 use crate::pmem::root::{root_cell, RootCell};
 use crate::pmem::PoolId;
 use crate::sets::linkfree::{LfList, LfNode, RecoveredStats};
 use crate::sets::logfree::{load_link_persisted, LogFreeList, LogFreeNode};
-use crate::sets::soft::{SNode, SoftList};
-use crate::sets::tagged::{is_marked, ptr_of, DIRTY, MARK};
+use crate::sets::soft::{snode_gen, SNode, SoftList};
+use crate::sets::tagged::{
+    gen_validated, hint_gen, hint_ptr, is_marked, pack_hint, ptr_of, DIRTY, HINT_GEN_MASK, MARK,
+};
 use crate::sets::{ConcurrentSet, GrowthStats};
 use crate::util::tid::tid;
-use crate::util::{mix64, mix64_inv};
+use crate::util::{mix64, mix64_inv, CACHE_LINE};
 use crossbeam_utils::CachePadded;
 use std::sync::atomic::{AtomicI64, AtomicPtr, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -159,6 +173,10 @@ pub trait ResizableFamily: sealed::Sealed + Send + Sync + 'static {
     /// The link cell owned by `node` (its `next` word).
     #[doc(hidden)]
     unsafe fn node_link(node: *mut Self::Node) -> *const AtomicU64;
+    /// Current allocation generation of `node`'s slot (Acquire; the
+    /// `(ptr, gen)` hint tag — see the module docs).
+    #[doc(hidden)]
+    unsafe fn node_gen(node: *mut Self::Node) -> u64;
     /// `Some(okey)` iff `node` currently looks linked-and-alive (rejects
     /// free-pattern, deleted and mid-operation nodes).
     #[doc(hidden)]
@@ -210,6 +228,10 @@ impl ResizableFamily for LfList {
 
     unsafe fn node_link(node: *mut LfNode) -> *const AtomicU64 {
         &(*node).next
+    }
+
+    unsafe fn node_gen(node: *mut LfNode) -> u64 {
+        crate::alloc::slot_gen(node as *const u8, CACHE_LINE).load(Ordering::Acquire)
     }
 
     unsafe fn node_key_if_linked(node: *mut LfNode) -> Option<u64> {
@@ -282,6 +304,10 @@ impl ResizableFamily for SoftList {
         &(*node).next
     }
 
+    unsafe fn node_gen(node: *mut SNode) -> u64 {
+        snode_gen(node)
+    }
+
     unsafe fn node_key_if_linked(node: *mut SNode) -> Option<u64> {
         // Reclaimed SNodes keep their Deleted state; allocated-but-unlinked
         // ones are written as IntendToInsert. Only in-set states pass.
@@ -348,6 +374,10 @@ impl ResizableFamily for LogFreeList {
 
     unsafe fn node_link(node: *mut LogFreeNode) -> *const AtomicU64 {
         &(*node).next
+    }
+
+    unsafe fn node_gen(node: *mut LogFreeNode) -> u64 {
+        crate::alloc::slot_gen(node as *const u8, CACHE_LINE).load(Ordering::Acquire)
     }
 
     unsafe fn node_key_if_linked(node: *mut LogFreeNode) -> Option<u64> {
@@ -560,6 +590,29 @@ impl<F: ResizableFamily> ResizableHash<F> {
             .collect()
     }
 
+    /// Gen-checked validation of a packed hint word: `Some((node, okey))`
+    /// iff the word still names the slot incarnation it was published
+    /// with *and* that node looks linked. The seqlock shape (gen, state +
+    /// key, gen again) is [`gen_validated`] — a free→alloc of the slot
+    /// anywhere in that window forces a mismatch (the bump is
+    /// Release-published before any passing state can be, see DESIGN.md
+    /// §Reclamation). Caller holds an EBR pin. With `--features
+    /// untagged-hints` the gen checks compile out, restoring the old
+    /// probabilistic state-only validation (the churn harness uses this
+    /// to demonstrate the ABA misvalidation).
+    unsafe fn validate_hint(word: u64) -> Option<(*mut F::Node, u64)> {
+        if word == 0 {
+            return None;
+        }
+        let node = hint_ptr::<F::Node>(word);
+        gen_validated(
+            || unsafe { F::node_gen(node) } & HINT_GEN_MASK,
+            hint_gen(word),
+            || unsafe { F::node_key_if_linked(node) },
+        )
+        .map(|k| (node, k))
+    }
+
     /// Entry point for `okey`: the best validated hint link of its bucket
     /// or an ancestor bucket, else the list head. Caller holds an EBR pin.
     fn entry(&self, okey: u64) -> (*const AtomicU64, *mut Table, usize) {
@@ -568,10 +621,9 @@ impl<F: ResizableFamily> ResizableHash<F> {
         let j = tr.bucket_of(okey);
         let mut b = j;
         loop {
-            let cell = tr.cells[b].load(Ordering::Acquire);
-            if cell != 0 {
-                let node = cell as *mut F::Node;
-                if let Some(k) = unsafe { F::node_key_if_linked(node) } {
+            let word = tr.cells[b].load(Ordering::Acquire);
+            match unsafe { Self::validate_hint(word) } {
+                Some((node, k)) => {
                     // Any linked node strictly below the search key is a
                     // correct window start (single list); the bucket walk
                     // only bounds how far the window search travels.
@@ -579,6 +631,21 @@ impl<F: ResizableFamily> ResizableHash<F> {
                         return (unsafe { F::node_link(node) }, t, j);
                     }
                 }
+                None if word != 0 => {
+                    // Lazy repair, mirroring the skip lists' stale-tower
+                    // unlink: a dead hint (reclaimed or unlinked target)
+                    // would otherwise force the ancestor/head fallback on
+                    // every read of this bucket until some insert happens
+                    // to republish it. Losing the CAS just means another
+                    // reader repaired it first.
+                    let _ = tr.cells[b].compare_exchange(
+                        word,
+                        0,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    );
+                }
+                None => {}
             }
             if b == 0 {
                 break;
@@ -595,30 +662,27 @@ impl<F: ResizableFamily> ResizableHash<F> {
     /// (`k < bucket_lo` — kept from a doubling; the bucket never truly
     /// splits until it is replaced), or points later than `okey`.
     unsafe fn hint_wants(cell: &AtomicU64, bucket_lo: u64, okey: u64) -> bool {
-        let cur = cell.load(Ordering::Acquire);
-        if cur == 0 {
-            return true;
-        }
-        match F::node_key_if_linked(cur as *mut F::Node) {
-            Some(k) => k < bucket_lo || k > okey,
+        match Self::validate_hint(cell.load(Ordering::Acquire)) {
+            Some((_, k)) => k < bucket_lo || k > okey,
             None => true,
         }
     }
 
-    /// Install `node` as bucket `cell`'s hint unless a hint that is inside
-    /// the bucket's own range and at-or-before `okey` is already present.
+    /// Install `node` (observed linked under the current pin, so its gen
+    /// names this incarnation) as bucket `cell`'s packed hint unless a
+    /// hint that is inside the bucket's own range and at-or-before `okey`
+    /// is already present.
     unsafe fn publish_hint(cell: &AtomicU64, node: *mut F::Node, bucket_lo: u64, okey: u64) {
+        let packed = pack_hint(node, F::node_gen(node));
         loop {
             let cur = cell.load(Ordering::Acquire);
-            if cur != 0 {
-                if let Some(k) = F::node_key_if_linked(cur as *mut F::Node) {
-                    if k >= bucket_lo && k <= okey {
-                        return;
-                    }
+            if let Some((_, k)) = Self::validate_hint(cur) {
+                if k >= bucket_lo && k <= okey {
+                    return;
                 }
             }
             if cell
-                .compare_exchange(cur, node as u64, Ordering::AcqRel, Ordering::Acquire)
+                .compare_exchange(cur, packed, Ordering::AcqRel, Ordering::Acquire)
                 .is_ok()
             {
                 return;
@@ -961,6 +1025,120 @@ mod tests {
         assert_eq!(g.items, 260, "striped counter must be exact at quiescence");
         assert_eq!(h.len_approx(), 260);
         assert!(g.chain_load() > 0.0);
+    }
+
+    /// Deterministic replay of the hint/slot ABA schedule the generation
+    /// tag closes: publish a hint, reclaim its target through a full EBR
+    /// grace period (gen bump), re-allocate the same slot and hand-craft
+    /// a "linked-looking" state in it (exactly what a concurrent
+    /// re-incarnation mid-insert can transiently present). The tagged
+    /// build must reject the stale hint *before* looking at the slot's
+    /// contents; an `--features untagged-hints` build demonstrably
+    /// accepts it — the old misvalidation.
+    #[test]
+    fn stale_hint_to_reallocated_slot_is_rejected_by_generation() {
+        let h = ResizableHash::new_linkfree(1);
+        let k1 = 42u64;
+        assert!(h.insert(k1, 7));
+        // The successful insert published bucket 0's hint -> k1's node.
+        let table = h.table.load(Ordering::Acquire);
+        let cell_word = unsafe { (*table).cells[0].load(Ordering::Acquire) };
+        assert_ne!(cell_word, 0, "insert must publish the first-touch hint");
+        let node = crate::sets::tagged::hint_ptr::<LfNode>(cell_word);
+
+        // Unlink + retire, then force reclamation: the slot returns to the
+        // free-list and its generation is bumped.
+        assert!(h.remove(k1));
+        unsafe { h.inner.ebr().drain_all() };
+
+        // Re-allocate the same slot (LIFO free-list, same thread) and
+        // fabricate a linked-looking incarnation: valid, unmarked next,
+        // small okey — everything the state-only validation trusts.
+        let slot = h.inner.core.pool.alloc() as *mut LfNode;
+        assert_eq!(slot, node, "the freed slot must be handed back");
+        unsafe {
+            (*slot).key.store(1, Ordering::Relaxed);
+            (*slot).value.store(99, Ordering::Relaxed);
+            (*slot).next.store(0, Ordering::Relaxed); // unmarked null
+            (*slot).make_valid();
+        }
+
+        // Probe through the stale hint.
+        {
+            let _g = h.inner.ebr().pin();
+            let (start, _, _) = h.entry(u64::MAX);
+            if cfg!(feature = "untagged-hints") {
+                assert!(
+                    std::ptr::eq(start, unsafe {
+                        <LfList as ResizableFamily>::node_link(slot)
+                    }),
+                    "untagged validation accepts the reincarnated slot (the ABA hazard)"
+                );
+            } else {
+                assert!(
+                    std::ptr::eq(start, h.inner.head_cell()),
+                    "generation mismatch must force the head fallback"
+                );
+            }
+        }
+
+        // Return the fabricated slot so teardown accounting stays clean.
+        unsafe {
+            LfNode::init_free_pattern(slot as *mut u8);
+        }
+        h.inner.core.pool.free(slot as *mut u8);
+    }
+
+    /// Regression: `len_approx` sums per-tid stripes while spills are in
+    /// flight — a transiently negative balance must clamp at 0, never
+    /// wrap into an astronomic usize.
+    #[test]
+    fn len_approx_clamps_under_concurrent_churn() {
+        use std::sync::atomic::{AtomicBool, AtomicU64};
+        use std::sync::Arc;
+        let h = Arc::new(ResizableHash::new_linkfree(2));
+        let stop = Arc::new(AtomicBool::new(false));
+        let progress = Arc::new(AtomicU64::new(0));
+        let workers: Vec<_> = (0..4u64)
+            .map(|t| {
+                let h = h.clone();
+                let stop = stop.clone();
+                let progress = progress.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::new(0xC1A_u64 + t);
+                    let mut net = 0i64;
+                    while !stop.load(Ordering::Relaxed) {
+                        // Thread-owned keys: k ≡ t (mod 4).
+                        let k = rng.below(128) * 4 + t;
+                        if rng.below(2) == 0 {
+                            if h.insert(k, t) {
+                                net += 1;
+                            }
+                        } else if h.remove(k) {
+                            net -= 1;
+                        }
+                        progress.fetch_add(1, Ordering::Relaxed);
+                    }
+                    net
+                })
+            })
+            .collect();
+        // Hammer the read while stripes spill: at most 4*128 keys can be
+        // live, so anything huge is a wrapped negative sum. Gate on the
+        // workers' op counter so the polls provably overlap live churn
+        // (spill windows included) instead of finishing before the
+        // workers even spin up.
+        while progress.load(Ordering::Relaxed) < 60_000 {
+            let n = h.len_approx();
+            assert!(n <= 10_000, "len_approx wrapped/overflowed: {n}");
+        }
+        stop.store(true, Ordering::Relaxed);
+        let net: i64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        assert_eq!(
+            h.len_approx() as i64,
+            net,
+            "striped counter must be exact at quiescence"
+        );
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub(crate) use list::SoftCore;
 
 pub use hash::SoftHash;
 pub use list::SoftList;
-pub use node::SNode;
+pub use node::{snode_gen, SNode, SNODE_SIZE};
 pub use pnode::PNode;
 pub use recovery::{recover_hash, recover_list, RecoveredStats};
 pub use skiplist::{recover_skiplist, SoftSkipList};

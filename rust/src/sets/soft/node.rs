@@ -23,11 +23,28 @@ pub struct SNode {
     pub next: AtomicU64,
 }
 
-/// Slab slot size for volatile nodes.
+/// Slab slot size for volatile nodes. (The slab's *stride* is
+/// `SNODE_SIZE + 8`: the pool appends a generation word per slot — see
+/// [`crate::alloc::volatile`]; the node layout itself is unchanged.)
 pub const SNODE_SIZE: usize = std::mem::size_of::<SNode>();
 
-const _: () = assert!(SNODE_SIZE == 40, "keep the paper's ~1.5-nodes-per-line layout");
+// Keep the node itself at 40 bytes (un-padded, bigger than a link-free
+// node — the paper's SOFT cache-miss effect). The slab stride adds the
+// 8-byte generation word, so density is ~1.33 nodes/line.
+const _: () = assert!(SNODE_SIZE == 40, "keep the paper's un-padded SNode layout");
 const _: () = assert!(std::mem::align_of::<SNode>() == 8);
+
+/// Current allocation generation of an SNode's slab slot (bumped by the
+/// volatile pool on each free — the `(ptr, gen)` hint/tower tag).
+///
+/// # Safety
+/// `node` must point into a live [`crate::alloc::VolatilePool`] slot of
+/// size `SNODE_SIZE`.
+#[inline(always)]
+pub unsafe fn snode_gen(node: *const SNode) -> u64 {
+    crate::alloc::vslot_gen(node as *const u8, SNODE_SIZE)
+        .load(std::sync::atomic::Ordering::Acquire)
+}
 
 #[cfg(test)]
 mod tests {

@@ -25,6 +25,9 @@ pub struct PNode {
 }
 
 const _: () = assert!(std::mem::size_of::<PNode>() == 64);
+// Bytes 56..64 of the slot are the allocator's generation word (see
+// `alloc::area`): the node payload must stay clear of it.
+const _: () = assert!(std::mem::offset_of!(PNode, value) + 8 <= 56);
 
 impl PNode {
     /// Canonical free pattern: all flags equal (valid & removed). A zeroed

@@ -164,6 +164,35 @@ mod tests {
     }
 
     #[test]
+    fn crash_during_reclamation_neither_leaks_nor_resurrects() {
+        let _sim = pmem::sim_session();
+        let l = SoftList::new();
+        let id = l.pool_id();
+        for k in 0..20u64 {
+            assert!(l.insert(k, k * 2));
+        }
+        assert!(l.remove(7)); // destroy() persisted; pair retired
+        // Complete reclamation: PNode freed, generation bumped — the bump
+        // is not yet persisted (no later psync touches the line before
+        // the crash). Recovery classifies purely by the three flags.
+        unsafe { l.core.ebr.drain_all() };
+        l.crash_preserve();
+        drop(l);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+
+        let (l2, stats) = recover_list(id);
+        assert!(!l2.contains(7), "freed slot re-linked as a member");
+        assert_eq!(stats.members, 19);
+        assert_eq!(
+            stats.reclaimed,
+            crate::alloc::area::SLOTS_PER_AREA - 19,
+            "the freed slot must be reclaimed again, not leaked"
+        );
+        assert!(l2.insert(7, 70), "reclaimed slots must be reusable");
+        assert_eq!(l2.get(7), Some(70));
+    }
+
+    #[test]
     fn interrupted_soft_insert_dies_interrupted_remove_survives() {
         let _sim = pmem::sim_session();
         let l = SoftList::new();

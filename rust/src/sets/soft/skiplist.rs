@@ -5,19 +5,21 @@
 //! Same shape as the link-free skip list: durable state is only the
 //! bottom-level PNodes (one psync per update, zero per read — unchanged);
 //! the tower index is a volatile hint structure over the volatile SNodes,
-//! validated under the EBR pin (an SNode observed in a non-deleted state
-//! cannot be unlinked-and-freed within our pin) and rebuilt at recovery.
+//! published as `(node, gen)` pairs (`gen` = the SNode's slab-slot
+//! allocation generation, `alloc::volatile`), validated under the EBR pin
+//! — generation, then key + state, then generation again (seqlock close;
+//! DESIGN.md §Reclamation) — and rebuilt at recovery.
 
 use crate::alloc::{Ebr, VolatilePool};
 use crate::pmem::PoolId;
-use crate::sets::tagged::{ptr_of, State};
+use crate::sets::tagged::{gen_validated, ptr_of, State};
 use crate::util::rng::Xoshiro256;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::list::SoftCore;
-use super::node::{SNode, SNODE_SIZE};
+use super::node::{snode_gen, SNode, SNODE_SIZE};
 use super::recovery::RecoveredStats;
 
 const MAX_LEVEL: usize = 16;
@@ -26,6 +28,9 @@ const BRANCHING: u64 = 4;
 struct Tower {
     key: u64,
     node: *mut SNode,
+    /// `node`'s slab-slot generation when the tower was built: the target
+    /// was linked then, so a later mismatch proves it was reclaimed.
+    gen: u64,
     nexts: [AtomicU64; MAX_LEVEL],
 }
 
@@ -74,12 +79,23 @@ impl SoftSkipList {
         h
     }
 
-    /// A tower target is stale when its SNode was recycled (key changed)
-    /// or its state is "deleted" (unlink pending/done).
+    /// A tower target is stale when its SNode's slab slot was reclaimed
+    /// since the tower was built (generation mismatch — the shared
+    /// seqlock protocol [`gen_validated`] brackets the key/state reads,
+    /// so they are certainly about the indexed incarnation) or its state
+    /// is "deleted" (unlink pending/done).
     unsafe fn stale(t: *const Tower) -> bool {
         let node = (*t).node;
-        (*node).key != (*t).key
-            || State::of((*node).next.load(Ordering::Acquire)) == State::Deleted
+        gen_validated(
+            || unsafe { snode_gen(node) },
+            (*t).gen,
+            || unsafe {
+                ((*node).key == (*t).key
+                    && State::of((*node).next.load(Ordering::Acquire)) != State::Deleted)
+                    .then_some(())
+            },
+        )
+        .is_none()
     }
 
     /// Best validated hint link for `key`, or the head. Under an EBR pin.
@@ -115,13 +131,20 @@ impl SoftSkipList {
         best
     }
 
+    /// `node` was observed linked under the caller's pin, so the slot
+    /// generation read here names exactly that incarnation.
     unsafe fn index_insert(&self, key: u64, node: *mut SNode) {
         let height = Self::random_height(key);
         if height <= 1 {
             return;
         }
         const Z: AtomicU64 = AtomicU64::new(0);
-        let tower = Box::into_raw(Box::new(Tower { key, node, nexts: [Z; MAX_LEVEL] }));
+        let tower = Box::into_raw(Box::new(Tower {
+            key,
+            node,
+            gen: snode_gen(node),
+            nexts: [Z; MAX_LEVEL],
+        }));
         {
             let _g = self.grave_lock.lock().unwrap();
             (*self.graveyard.get()).push(tower);

@@ -81,6 +81,92 @@ impl State {
     }
 }
 
+// ---------------- generation-tagged hint words ----------------
+//
+// Bucket entry hints (`sets::resizable`) publish a node pointer *and* the
+// slot's allocation generation in one 64-bit word so the pair is read and
+// CAS'd atomically: low `HINT_PTR_BITS` bits = ptr >> 3 (slots are at
+// least 8-byte aligned; 44 bits cover the 47-bit user address space),
+// high bits = the generation, truncated to `HINT_GEN_BITS`. A reader
+// re-derives the slot's current generation from the pointer and rejects
+// the hint on mismatch — the slot was freed (and possibly reused) since
+// publication. Truncation leaves a 2^20-reallocation wraparound window;
+// combined with the state check that still follows, a false match needs
+// the same slot to be recycled an exact multiple of 2^20 times between
+// publish and use while the cell is never refreshed — treated as
+// impossible in practice (DESIGN.md §Reclamation).
+
+/// Bits of `ptr >> 3` kept in a packed hint word.
+pub const HINT_PTR_BITS: u32 = 44;
+/// Bits of generation kept in a packed hint word.
+pub const HINT_GEN_BITS: u32 = 64 - HINT_PTR_BITS;
+const HINT_PTR_MASK: u64 = (1u64 << HINT_PTR_BITS) - 1;
+/// Mask a full generation down to its packed truncation.
+pub const HINT_GEN_MASK: u64 = (1u64 << HINT_GEN_BITS) - 1;
+
+/// Pack a node pointer and its slot generation into one hint word.
+/// Never 0 for a non-null pointer (0 stays the "empty cell" sentinel).
+///
+/// The address-range check is a hard assert (publish-time only, never on
+/// the validation hot path): silently truncating an address above 2^47 —
+/// possible under five-level paging — would unpack into unrelated memory.
+#[inline(always)]
+pub fn pack_hint<T>(p: *mut T, gen: u64) -> u64 {
+    debug_assert_eq!(p as u64 & 0b111, 0, "hint targets must be 8-byte aligned");
+    assert!(
+        (p as u64) >> (HINT_PTR_BITS + 3) == 0,
+        "address exceeds the packable 47-bit user address range"
+    );
+    ((p as u64) >> 3) | ((gen & HINT_GEN_MASK) << HINT_PTR_BITS)
+}
+
+/// The pointer half of a packed hint word.
+#[inline(always)]
+pub fn hint_ptr<T>(w: u64) -> *mut T {
+    ((w & HINT_PTR_MASK) << 3) as *mut T
+}
+
+/// The (truncated) generation half of a packed hint word.
+#[inline(always)]
+pub fn hint_gen(w: u64) -> u64 {
+    w >> HINT_PTR_BITS
+}
+
+/// Does the packed word's generation match the slot's current (full)
+/// generation?
+#[inline(always)]
+pub fn hint_gen_matches(w: u64, full_gen: u64) -> bool {
+    hint_gen(w) == (full_gen & HINT_GEN_MASK)
+}
+
+/// The one seqlock-shaped gen-validation protocol shared by every hint
+/// and tower validator (resizable hash cells, both skip lists): check the
+/// slot's current generation against the published `expected`, run the
+/// payload check (state/key reads), then re-check the generation. Either
+/// mismatch means the slot was reclaimed (and possibly reused) since
+/// publication → `None`. A stable match brackets the payload reads within
+/// one slot incarnation (DESIGN.md §Reclamation). With `--features
+/// untagged-hints` both gen checks compile out, restoring the pre-tag
+/// state-only heuristic — the churn harness's negative control. Keeping
+/// the protocol here, once, means an ordering fix cannot be applied to
+/// one family and silently missed in another.
+#[inline(always)]
+pub fn gen_validated<T>(
+    gen_of: impl Fn() -> u64,
+    expected: u64,
+    payload: impl FnOnce() -> Option<T>,
+) -> Option<T> {
+    let tagged = !cfg!(feature = "untagged-hints");
+    if tagged && gen_of() != expected {
+        return None; // slot reclaimed since publication
+    }
+    let v = payload()?;
+    if tagged && gen_of() != expected {
+        return None; // reclaimed under our feet mid-validation
+    }
+    Some(v)
+}
+
 /// CAS that swaps only the state bits, preserving the pointer — the
 /// paper's `stateCAS` (Listing 10). Returns true on success.
 #[inline]
@@ -122,6 +208,22 @@ mod tests {
         assert!(State::IntendToDelete.in_set());
         assert!(!State::IntendToInsert.in_set());
         assert!(!State::Deleted.in_set());
+    }
+
+    #[test]
+    fn hint_word_roundtrip_and_mismatch() {
+        let p = 0x7f12_3456_7f40 as *mut u8; // 8-aligned, 47-bit address
+        for gen in [0u64, 1, 7, HINT_GEN_MASK, HINT_GEN_MASK + 1] {
+            let w = pack_hint(p, gen);
+            assert_eq!(hint_ptr::<u8>(w), p, "pointer survives packing (gen {gen})");
+            assert!(hint_gen_matches(w, gen));
+            assert!(!hint_gen_matches(w, gen + 1), "a bumped gen must mismatch");
+        }
+        // Truncation wraps at 2^HINT_GEN_BITS (documented hazard window).
+        let w = pack_hint(p, 3);
+        assert!(hint_gen_matches(w, 3 + (1u64 << HINT_GEN_BITS)));
+        // Null pointer with gen 0 packs to the empty-cell sentinel.
+        assert_eq!(pack_hint::<u8>(std::ptr::null_mut(), 0), 0);
     }
 
     #[test]

@@ -29,7 +29,10 @@ unsafe fn free_vnode(ptr: *mut u8, ctx: usize) {
 impl VolatileCore {
     fn new() -> Self {
         VolatileCore {
-            pool: Arc::new(VolatilePool::new(VNODE_SIZE)),
+            // Untagged: this family publishes no hints/towers, so it
+            // skips the generation word and keeps the paper-comparison
+            // node density exactly.
+            pool: Arc::new(VolatilePool::new_untagged(VNODE_SIZE)),
             ebr: Arc::new(Ebr::new()),
         }
     }

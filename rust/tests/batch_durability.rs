@@ -9,7 +9,7 @@
 //!     state is a **prefix-closed** subset of the batch (if op i's effect
 //!     survived, so did every earlier op's) — never a torn ack.
 
-use durasets::pmem::{self, CrashPolicy, PoolId, POWER_LOSS};
+use durasets::pmem::{self, CrashPolicy, PoolId};
 use durasets::sets::{self, ConcurrentSet, Family, OpResult, SetOp};
 use std::panic::AssertUnwindSafe;
 
@@ -22,18 +22,8 @@ fn recover(family: Family, pool: PoolId) -> Box<dyn ConcurrentSet> {
     }
 }
 
-/// Silence the injected power-loss panics (keep real ones loud).
-fn quiet_power_loss_panics() {
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    ONCE.call_once(|| {
-        let default_hook = std::panic::take_hook();
-        std::panic::set_hook(Box::new(move |info| {
-            if info.payload().downcast_ref::<&str>() != Some(&POWER_LOSS) {
-                default_hook(info);
-            }
-        }));
-    });
-}
+mod common;
+use common::quiet_power_loss_panics;
 
 #[test]
 fn acked_batch_survives_crash_for_every_family() {

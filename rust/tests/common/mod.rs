@@ -1,0 +1,16 @@
+//! Helpers shared by the crash/fault-injection integration-test binaries.
+
+/// Silence the injected power-loss panics (keep real ones loud). Process-
+/// wide and idempotent; every binary that arms `pmem::arm_flush_fault`
+/// installs this hook before catching the unwind.
+pub fn quiet_power_loss_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<&str>() != Some(&durasets::pmem::POWER_LOSS) {
+                default_hook(info);
+            }
+        }));
+    });
+}

@@ -75,18 +75,8 @@ fn worker(
     Outcome { log, in_flight: None }
 }
 
-/// Silence the injected power-loss panics (keep real ones loud).
-fn quiet_power_loss_panics() {
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    ONCE.call_once(|| {
-        let default_hook = std::panic::take_hook();
-        std::panic::set_hook(Box::new(move |info| {
-            if info.payload().downcast_ref::<&str>() != Some(&POWER_LOSS) {
-                default_hook(info);
-            }
-        }));
-    });
-}
+mod common;
+use common::quiet_power_loss_panics;
 
 fn run_torture(family: Family, evict_prob: f64, seed: u64) {
     let _sim = pmem::sim_session();

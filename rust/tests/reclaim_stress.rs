@@ -1,0 +1,234 @@
+//! Reclamation-churn stress: hammer free→alloc slot turnover underneath
+//! live hints and towers, and prove the generation-tag validation never
+//! misreads a reincarnated slot.
+//!
+//! Every thread owns a key stripe (k ≡ t mod THREADS) and drives waves of
+//! insert → remove-most → mixed ops, model-checked per op against a
+//! per-stripe BTreeSet (disjoint stripes make the models exact even under
+//! concurrency). The remove waves push thousands of nodes through EBR
+//! retire into the per-thread free-lists; the next wave's inserts reuse
+//! exactly those slots while other threads still traverse through bucket
+//! hints (resizable hashes) or towers (skip lists) published against the
+//! previous incarnations. Any misvalidation — accepting a stale hint to a
+//! reincarnated slot as a window start — corrupts a traversal or an
+//! unlink and surfaces as a model mismatch, a lost key, or a broken sort
+//! order. The tables must also cross ≥ 2 doublings under the churn and
+//! keep reads psync-free afterwards.
+//!
+//! Negative control: `cargo test --features untagged-hints` compiles the
+//! generation checks out, restoring the old state-only heuristic. The
+//! deterministic ABA-replay unit tests
+//! (`sets::resizable::tests::stale_hint_to_reallocated_slot_is_rejected_by_generation`,
+//! `sets::linkfree::skiplist::tests::stale_tower_to_reallocated_slot_is_rejected_by_generation`)
+//! then demonstrably *accept* the reincarnated slot under the exact same
+//! schedule the tagged build rejects.
+
+use durasets::pmem::{self, stats, CrashPolicy};
+use durasets::sets::linkfree::LfSkipList;
+use durasets::sets::resizable::{recover_linkfree, ResizableFamily, ResizableHash};
+use durasets::sets::soft::SoftSkipList;
+use durasets::sets::ConcurrentSet;
+use durasets::util::rng::Xoshiro256;
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Serialize the tests of this binary: the fault-injection test arms the
+/// process-global flush countdown, which a concurrently running churn
+/// test would otherwise decrement (and catch the power loss meant for
+/// the armed test).
+fn exclusive() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+mod common;
+use common::quiet_power_loss_panics;
+
+const THREADS: u64 = 8;
+const STRIPE_KEYS: u64 = 512;
+const ROUNDS: u64 = 3;
+const MIXED_OPS: u64 = 600;
+
+/// One thread's churn over its own stripe, model-checked per op.
+fn churn_stripe<S: ConcurrentSet + ?Sized>(s: &S, t: u64, seed: u64) -> BTreeSet<u64> {
+    let mut rng = Xoshiro256::new(seed ^ (t.wrapping_mul(0x9E37_79B9)));
+    let mut model: BTreeSet<u64> = BTreeSet::new();
+    for round in 0..ROUNDS {
+        // Insert wave: reuses the slots the previous round freed, while
+        // other threads' hints/towers still reference old incarnations.
+        for i in 0..STRIPE_KEYS {
+            let k = i * THREADS + t;
+            assert_eq!(s.insert(k, k ^ round), model.insert(k), "insert {k} r{round}");
+        }
+        // Remove wave: retire most of the stripe through EBR so the
+        // free-lists are hot for the next wave.
+        for i in 0..STRIPE_KEYS {
+            let k = i * THREADS + t;
+            if rng.below(8) != 0 {
+                assert_eq!(s.remove(k), model.remove(&k), "remove {k} r{round}");
+            }
+        }
+        // Mixed tail: interleaved lookups catch a stale window start the
+        // moment it skips or resurrects a stripe key.
+        for _ in 0..MIXED_OPS {
+            let k = rng.below(STRIPE_KEYS) * THREADS + t;
+            match rng.below(4) {
+                0 => assert_eq!(s.insert(k, k), model.insert(k), "insert {k}"),
+                1 => assert_eq!(s.remove(k), model.remove(&k), "remove {k}"),
+                _ => assert_eq!(s.contains(k), model.contains(&k), "contains {k}"),
+            }
+        }
+    }
+    model
+}
+
+fn hash_churn<F: ResizableFamily>(h: ResizableHash<F>, seed: u64) {
+    let _x = exclusive();
+    let initial = h.nbuckets();
+    let h = Arc::new(h);
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || churn_stripe(&*h, t, seed))
+        })
+        .collect();
+    let mut want = BTreeSet::new();
+    for hnd in handles {
+        want.extend(hnd.join().unwrap());
+    }
+
+    // Zero misvalidations end-to-end: the table equals the stripe union.
+    let mut snap: Vec<u64> = h.snapshot().iter().map(|kv| kv.0).collect();
+    snap.sort_unstable();
+    let want: Vec<u64> = want.into_iter().collect();
+    assert_eq!(snap, want, "snapshot must equal the union of stripe models");
+
+    // The insert waves load the table far past the growth trigger.
+    assert!(
+        h.nbuckets() >= initial * 4,
+        "churn must cross >= 2 doublings: {} -> {}",
+        initial,
+        h.nbuckets()
+    );
+
+    // Gen checks ride the read path without adding any persistence cost.
+    let probe: Vec<u64> = want.iter().copied().take(64).collect();
+    let a = stats::thread_snapshot();
+    for &k in &probe {
+        assert!(h.contains(k));
+    }
+    let d = stats::thread_snapshot().since(&a);
+    assert_eq!(d.fences, 0, "contains must stay psync-free under churned hints");
+    assert_eq!(d.flushes, 0, "contains must stay flush-free under churned hints");
+}
+
+#[test]
+fn linkfree_hash_reclaim_churn() {
+    hash_churn(ResizableHash::new_linkfree(2), 0x4EC1);
+}
+
+#[test]
+fn soft_hash_reclaim_churn() {
+    hash_churn(ResizableHash::new_soft(2), 0x4EC2);
+}
+
+#[test]
+fn logfree_hash_reclaim_churn() {
+    hash_churn(ResizableHash::new_logfree(2), 0x4EC3);
+}
+
+fn skiplist_churn<S: ConcurrentSet + 'static>(
+    s: S,
+    seed: u64,
+    snapshot: fn(&S) -> Vec<(u64, u64)>,
+) {
+    let _x = exclusive();
+    let s = Arc::new(s);
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let s = s.clone();
+            std::thread::spawn(move || churn_stripe(&*s, t, seed))
+        })
+        .collect();
+    let mut want = BTreeSet::new();
+    for hnd in handles {
+        want.extend(hnd.join().unwrap());
+    }
+    let snap: Vec<u64> = snapshot(&s).iter().map(|kv| kv.0).collect();
+    let want: Vec<u64> = want.into_iter().collect();
+    assert_eq!(snap, want, "bottom level must equal the union of stripe models");
+    for w in snap.windows(2) {
+        assert!(w[0] < w[1], "bottom level must stay strictly sorted");
+    }
+}
+
+#[test]
+fn linkfree_skiplist_tower_reclaim_churn() {
+    skiplist_churn(LfSkipList::new(), 0x70E1, LfSkipList::snapshot);
+}
+
+#[test]
+fn soft_skiplist_tower_reclaim_churn() {
+    skiplist_churn(SoftSkipList::new(), 0x70E2, SoftSkipList::snapshot);
+}
+
+/// Fault injection over the churn: a simulated power loss lands mid-op
+/// (between flushes), the pool crashes pessimistically, and recovery must
+/// reproduce exactly the acked state — at most the single in-flight key
+/// may land either way. This is the crash-during-reclamation discipline
+/// end to end: frees and gen bumps that were not persisted simply roll
+/// back with the slots.
+#[test]
+fn fault_injected_crash_during_churn_recovers_acked_state() {
+    let _x = exclusive();
+    let _sim = pmem::sim_session();
+    quiet_power_loss_panics();
+    let h = ResizableHash::new_linkfree(2);
+    let id = h.pool_id();
+
+    let acked = std::cell::RefCell::new(BTreeSet::<u64>::new());
+    let in_flight = std::cell::Cell::new(u64::MAX);
+    pmem::arm_flush_fault(1500);
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut rng = Xoshiro256::new(0xFA17);
+        loop {
+            let k = rng.below(256);
+            in_flight.set(k);
+            if rng.below(3) > 0 {
+                let ok = h.insert(k, k + 1);
+                assert_eq!(ok, acked.borrow_mut().insert(k));
+            } else {
+                let ok = h.remove(k);
+                assert_eq!(ok, acked.borrow_mut().remove(&k));
+            }
+        }
+    }));
+    pmem::disarm_flush_fault();
+    let err = outcome.expect_err("the armed fault must fire");
+    assert_eq!(
+        err.downcast_ref::<&str>().copied(),
+        Some(pmem::POWER_LOSS),
+        "only the simulated power loss may abort the churn"
+    );
+
+    h.crash_preserve();
+    drop(h);
+    pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+
+    let (h2, _stats) = recover_linkfree(id, 2);
+    let acked = acked.into_inner();
+    let torn = in_flight.get();
+    for k in 0..256u64 {
+        if k == torn {
+            continue; // unacked in-flight op: either outcome is legal
+        }
+        assert_eq!(
+            h2.contains(k),
+            acked.contains(&k),
+            "acked state of key {k} must survive the mid-churn power loss"
+        );
+    }
+    // Fully operational post-recovery.
+    assert!(h2.insert(100_000, 1));
+    assert!(h2.remove(100_000));
+}
