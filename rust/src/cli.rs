@@ -66,6 +66,9 @@ COMMANDS:
   bench         regenerate a paper figure:
                 --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|all
                 --json FILE writes machine-readable data points
+                --fig recovery sweeps rebuild wall-clock over recovery
+                threads x pool sizes (--keys N, or DURASETS_RECOVERY_KEYS
+                as a comma list; DURASETS_FULL=1 adds a 1M-node pool)
   crash-test    run ops, crash (sim), recover, verify — end to end
   recover-demo  build a store, crash it, time rust vs XLA-accelerated recovery
   workload      print a sample of the deterministic op stream

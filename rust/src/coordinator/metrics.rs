@@ -23,6 +23,18 @@ pub struct Metrics {
     /// Largest group commit observed.
     pub max_batch: AtomicU64,
     latency: [AtomicU64; BUCKETS],
+    // Last recovery, as recorded by `CrashTicket` (0 shards = never
+    // recovered; see `record_recovery`). Durations in microseconds.
+    rec_shards: AtomicU64,
+    rec_members: AtomicU64,
+    rec_reclaimed: AtomicU64,
+    rec_wall_us: AtomicU64,
+    rec_scan_us: AtomicU64,
+    rec_sort_us: AtomicU64,
+    rec_relink_us: AtomicU64,
+    rec_threads: AtomicU64,
+    rec_accelerated: AtomicU64,
+    rec_evicted: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -46,7 +58,33 @@ impl Metrics {
             batch_ops: Z,
             max_batch: Z,
             latency: [Z; BUCKETS],
+            rec_shards: Z,
+            rec_members: Z,
+            rec_reclaimed: Z,
+            rec_wall_us: Z,
+            rec_scan_us: Z,
+            rec_sort_us: Z,
+            rec_relink_us: Z,
+            rec_threads: Z,
+            rec_accelerated: Z,
+            rec_evicted: Z,
         }
+    }
+
+    /// Record the last crash recovery so operators can read the measured
+    /// RTO (wall + per-phase breakdown) off the `STATS` wire line instead
+    /// of losing it with the recovery call's return value.
+    pub fn record_recovery(&self, r: &super::recovery::RecoveryReport) {
+        self.rec_shards.store(r.shards as u64, Ordering::Relaxed);
+        self.rec_members.store(r.members as u64, Ordering::Relaxed);
+        self.rec_reclaimed.store(r.reclaimed as u64, Ordering::Relaxed);
+        self.rec_wall_us.store(r.wall.as_micros() as u64, Ordering::Relaxed);
+        self.rec_scan_us.store(r.scan.as_micros() as u64, Ordering::Relaxed);
+        self.rec_sort_us.store(r.sort.as_micros() as u64, Ordering::Relaxed);
+        self.rec_relink_us.store(r.relink.as_micros() as u64, Ordering::Relaxed);
+        self.rec_threads.store(r.threads as u64, Ordering::Relaxed);
+        self.rec_accelerated.store(r.accelerated as u64, Ordering::Relaxed);
+        self.rec_evicted.store(r.evicted_lines as u64, Ordering::Relaxed);
     }
 
     /// Count one batched op with its result (shard worker scatter path).
@@ -116,7 +154,7 @@ impl Metrics {
         let batches = self.batches.load(Ordering::Relaxed);
         let batch_ops = self.batch_ops.load(Ordering::Relaxed);
         let avg_batch = if batches > 0 { batch_ops as f64 / batches as f64 } else { 0.0 };
-        format!(
+        let mut out = format!(
             "ops={} gets={} (hits {}) puts={} (new {}) dels={} (hit {}) p50<={:?} p99<={:?} batches={} avg_batch={:.1} max_batch={}",
             self.ops_total(),
             self.gets.load(Ordering::Relaxed),
@@ -130,7 +168,24 @@ impl Metrics {
             batches,
             avg_batch,
             self.max_batch.load(Ordering::Relaxed),
-        )
+        );
+        if self.rec_shards.load(Ordering::Relaxed) > 0 {
+            let ms = |c: &AtomicU64| c.load(Ordering::Relaxed) as f64 / 1000.0;
+            out.push_str(&format!(
+                " recovery=[shards={} members={} reclaimed={} wall={:.1}ms scan={:.1}ms sort={:.1}ms relink={:.1}ms threads={} accel={} evicted={}]",
+                self.rec_shards.load(Ordering::Relaxed),
+                self.rec_members.load(Ordering::Relaxed),
+                self.rec_reclaimed.load(Ordering::Relaxed),
+                ms(&self.rec_wall_us),
+                ms(&self.rec_scan_us),
+                ms(&self.rec_sort_us),
+                ms(&self.rec_relink_us),
+                self.rec_threads.load(Ordering::Relaxed),
+                self.rec_accelerated.load(Ordering::Relaxed) != 0,
+                self.rec_evicted.load(Ordering::Relaxed),
+            ));
+        }
+        out
     }
 
     /// [`Metrics::report`] plus per-shard resizable-hash growth stats
@@ -205,6 +260,28 @@ mod tests {
         assert_eq!(m.gets.load(Ordering::Relaxed), 2);
         assert_eq!(m.get_hits.load(Ordering::Relaxed), 1);
         assert_eq!(m.del_hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn recovery_report_renders_after_record() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("recovery=["), "no recovery recorded yet");
+        let r = crate::coordinator::recovery::RecoveryReport {
+            shards: 2,
+            members: 10,
+            reclaimed: 4,
+            wall: Duration::from_millis(5),
+            threads: 8,
+            scan: Duration::from_millis(3),
+            sort: Duration::from_millis(1),
+            relink: Duration::from_millis(1),
+            accelerated: false,
+            evicted_lines: 7,
+        };
+        m.record_recovery(&r);
+        let s = m.report();
+        assert!(s.contains("recovery=[shards=2 members=10 reclaimed=4 wall=5.0ms"), "{s}");
+        assert!(s.contains("threads=8 accel=false evicted=7]"), "{s}");
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use crate::config::{Config, Structure};
 use crate::pmem::PoolId;
+use crate::sets::recovery::{PhaseTimings, RecoveredStats};
 use crate::sets::{self, ConcurrentSet, Family, OpResult, SetOp};
 use anyhow::Result;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -62,42 +63,104 @@ impl Shard {
         Shard { set, meta }
     }
 
-    /// Rebuild this shard from its durable areas (post-crash). Volatile
-    /// shards come back empty.
+    /// Rebuild this shard from its durable areas (post-crash) with the
+    /// default recovery worker count. Volatile shards come back empty.
     pub fn recover(meta: ShardMeta) -> Result<Shard> {
+        Ok(Self::recover_timed(meta, crate::sets::recovery::default_threads())?.0)
+    }
+
+    /// [`Shard::recover`] with an explicit engine worker count, returning
+    /// the engine's stats + per-phase timings for `RecoveryReport`.
+    pub fn recover_timed(meta: ShardMeta, threads: usize) -> Result<(Shard, ShardRecovery)> {
+        let mut rec = ShardRecovery::default();
         let set: Box<dyn ConcurrentSet> = match (meta.family, meta.structure, meta.pool) {
             (Family::Volatile, Structure::Hash, _) => {
                 sets::new_hash(Family::Volatile, meta.nbuckets)
             }
             (Family::Volatile, Structure::List, _) => sets::new_list(Family::Volatile),
-            (family, structure, Some(pool)) => match (family, structure) {
-                // Hash shards are resizable: recover the family list and
-                // re-wrap it, restoring the persisted bucket-count epoch
-                // (meta.nbuckets is only the pre-epoch fallback).
-                (Family::LinkFree, Structure::Hash) => {
-                    Box::new(sets::resizable::recover_linkfree(pool, meta.nbuckets).0)
-                }
-                (Family::LinkFree, Structure::List) => {
-                    Box::new(sets::linkfree::recover_list(pool).0)
-                }
-                (Family::Soft, Structure::Hash) => {
-                    Box::new(sets::resizable::recover_soft(pool, meta.nbuckets).0)
-                }
-                (Family::Soft, Structure::List) => Box::new(sets::soft::recover_list(pool).0),
-                (Family::LogFree, Structure::Hash) => {
-                    Box::new(sets::resizable::recover_logfree(pool, meta.nbuckets).0)
-                }
-                (Family::LogFree, Structure::List) => {
-                    Box::new(sets::logfree::recover_list(pool).0)
-                }
-                (Family::Volatile, _) => unreachable!(),
-            },
+            (family, structure, Some(pool)) => {
+                let (set, stats, timings): (Box<dyn ConcurrentSet>, _, _) =
+                    match (family, structure) {
+                        // Hash shards are resizable: recover the family list
+                        // and re-wrap it, restoring the persisted bucket-count
+                        // epoch (meta.nbuckets is only the pre-epoch fallback).
+                        (Family::LinkFree, Structure::Hash) => {
+                            let (h, s, t) =
+                                sets::resizable::recover_linkfree_timed(pool, meta.nbuckets, threads);
+                            (Box::new(h), s, t)
+                        }
+                        (Family::LinkFree, Structure::List) => {
+                            let (l, s, t) = sets::linkfree::recover_list_timed(pool, threads);
+                            (Box::new(l), s, t)
+                        }
+                        (Family::Soft, Structure::Hash) => {
+                            let (h, s, t) =
+                                sets::resizable::recover_soft_timed(pool, meta.nbuckets, threads);
+                            (Box::new(h), s, t)
+                        }
+                        (Family::Soft, Structure::List) => {
+                            let (l, s, t) = sets::soft::recover_list_timed(pool, threads);
+                            (Box::new(l), s, t)
+                        }
+                        (Family::LogFree, Structure::Hash) => {
+                            let (h, s, t) =
+                                sets::resizable::recover_logfree_timed(pool, meta.nbuckets, threads);
+                            (Box::new(h), s, t)
+                        }
+                        (Family::LogFree, Structure::List) => {
+                            let (l, s, t) = sets::logfree::recover_list_timed(pool, threads);
+                            (Box::new(l), s, t)
+                        }
+                        (Family::Volatile, _) => unreachable!(),
+                    };
+                rec.stats = stats;
+                rec.timings = timings;
+                set
+            }
             (f, s, None) => anyhow::bail!("shard {:?}/{:?} has no durable pool", f, s),
         };
         // The recovered set has a fresh pool handle adopting the same id.
         let meta = ShardMeta { pool: set.durable_pool().or(meta.pool), ..meta };
-        Ok(Shard { set, meta })
+        Ok((Shard { set, meta }, rec))
     }
+
+    /// Recover this shard through the XLA classification artifacts where
+    /// the layout is modelled (resizable link-free / SOFT hash shards);
+    /// everything else — and any artifact failure *before the durable
+    /// image is touched* — falls back to the exact Rust path. Returns
+    /// whether the artifact path was actually used.
+    pub fn recover_accel(meta: ShardMeta, threads: usize) -> Result<(Shard, ShardRecovery, bool)> {
+        use crate::runtime::recovery_accel as accel;
+        use crate::runtime::RecoveryPlanner;
+        if let (Structure::Hash, Some(pool)) = (meta.structure, meta.pool) {
+            let planned = match meta.family {
+                Family::LinkFree => Some(RecoveryPlanner::with_cached(|p| {
+                    accel::recover_resizable_linkfree_accel(p, pool, meta.nbuckets, threads)
+                        .map(|(h, s, t)| (Box::new(h) as Box<dyn ConcurrentSet>, s, t))
+                })),
+                Family::Soft => Some(RecoveryPlanner::with_cached(|p| {
+                    accel::recover_resizable_soft_accel(p, pool, meta.nbuckets, threads)
+                        .map(|(h, s, t)| (Box::new(h) as Box<dyn ConcurrentSet>, s, t))
+                })),
+                // No classification kernel for log-free (its membership is
+                // reachability, not a per-slot rule) or volatile shards.
+                _ => None,
+            };
+            if let Some(Ok((set, stats, timings))) = planned {
+                let meta = ShardMeta { pool: set.durable_pool().or(meta.pool), ..meta };
+                return Ok((Shard { set, meta }, ShardRecovery { stats, timings }, true));
+            }
+        }
+        let (shard, rec) = Self::recover_timed(meta, threads)?;
+        Ok((shard, rec, false))
+    }
+}
+
+/// What recovering one shard found and cost (zeroed for volatile shards).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardRecovery {
+    pub stats: RecoveredStats,
+    pub timings: PhaseTimings,
 }
 
 /// A queued request (server path).

@@ -137,9 +137,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
             run_one(id, &mut json_points)?;
         }
     } else if fig == "recovery" {
-        // The recovery demo prints its own report; it has no sweep rows,
-        // so a requested --json file is still written (empty point list).
-        cmd_recover_demo(args)?;
+        // Measured RTO: rebuild wall-clock across recovery thread counts
+        // and pool sizes (sizes via DURASETS_RECOVERY_KEYS / DURASETS_FULL,
+        // or a single --keys override).
+        let sizes = match args.flag("keys") {
+            Some(v) => vec![v.parse::<u64>()?],
+            None => bench::recovery::sizes_from_env(cfg.full),
+        };
+        let points = bench::recovery::sweep(
+            &sizes,
+            &bench::recovery::THREAD_SWEEP,
+            &bench::FAMILIES,
+        );
+        print!("{}", bench::recovery::render(&points));
+        json_points.extend(bench::recovery::to_json_points(&points));
     } else {
         run_one(&fig, &mut json_points)?;
     }
@@ -194,8 +205,10 @@ fn cmd_crash_test(args: &Args) -> Result<()> {
         let (recovered, rep) = ticket.recover()?;
         kv = recovered;
         println!(
-            "round {round}: crash ok (evicted {} extra lines), recovered {} members ({} reclaimed) in {:?}",
-            0, rep.members, rep.reclaimed, rep.wall
+            "round {round}: crash ok (evicted {} extra lines), recovered {} members ({} reclaimed) in {:?} \
+             (scan {:?} sort {:?} relink {:?}, {} threads)",
+            rep.evicted_lines, rep.members, rep.reclaimed, rep.wall,
+            rep.scan, rep.sort, rep.relink, rep.threads
         );
         anyhow::ensure!(
             kv.len_approx() == model.len(),
@@ -234,8 +247,9 @@ fn cmd_recover_demo(args: &Args) -> Result<()> {
         rep.wall,
         (rep.members + rep.reclaimed) as f64 / rep.wall.as_secs_f64() / 1e6
     );
-    // Crash again and recover through the accel entry point (routes to the
-    // same exact Rust path for resizable hash shards; see recover_accel).
+    // Crash again and recover through the accel entry point: resizable
+    // link-free/SOFT hash shards classify on the XLA artifacts when they
+    // are present; otherwise this cleanly repeats the exact Rust path.
     let _ = metas;
     let ticket = kv2.crash(CrashPolicy::PESSIMISTIC);
     let (kv3, rep2) = ticket.recover_accel()?;

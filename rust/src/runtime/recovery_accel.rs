@@ -17,13 +17,18 @@
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::executable::{lit_i32, lit_i64, HloExecutable};
 use crate::alloc::{DurablePool, Ebr, VolatilePool};
+use crate::pmem::region::{regions_of, RegionTag};
 use crate::pmem::PoolId;
 use crate::sets::linkfree::{LfHash, LfNode, RecoveredStats};
+use crate::sets::recovery::{self as engine, PhaseTimings};
 use crate::sets::soft::{PNode, SNode, SoftHash};
 use crate::sets::tagged::{is_marked, State};
+use crate::sets::{ResizableHash, ResizableLfHash, ResizableSoftHash};
+use crate::util::CACHE_LINE;
 
 /// Loaded recovery artifacts + batch geometry.
 pub struct RecoveryPlanner {
@@ -139,6 +144,132 @@ impl RecoveryPlanner {
         }
         Ok(plan)
     }
+}
+
+/// Every slot address of `id`'s durable areas, read straight off the
+/// region registry — deliberately *before* adopting a pool handle, so an
+/// artifact failure during planning leaves the image untouched for the
+/// exact-Rust fallback (`Shard::recover_accel`).
+fn raw_slots(id: PoolId) -> Vec<usize> {
+    regions_of(id)
+        .into_iter()
+        .filter(|r| r.tag == RegionTag::Slots)
+        .flat_map(|r| {
+            let base = r.base as usize;
+            (0..r.len / CACHE_LINE).map(move |i| base + i * CACHE_LINE)
+        })
+        .collect()
+}
+
+/// XLA-accelerated recovery of a **resizable** link-free hash — the
+/// store path's actual layout. The whole durable image is one family
+/// list in `okey = mix64(key)` order, so the per-slot validity kernel
+/// applies unchanged with `bucket_mask = 0` (single chain; the bucket
+/// plane is unused); everything after the plan — reclamation, sort,
+/// set-uniqueness, segmented relink (honoring `threads`) — is the
+/// engine's own machinery via `scan_planned`, so the accel and exact
+/// paths cannot diverge. The bucket table restarts from the persisted
+/// epoch with empty hints, exactly like the exact-Rust path.
+pub fn recover_resizable_linkfree_accel(
+    planner: &RecoveryPlanner,
+    id: PoolId,
+    default_nbuckets: usize,
+    threads: usize,
+) -> Result<(ResizableLfHash, RecoveredStats, PhaseTimings)> {
+    let t0 = Instant::now();
+    let slots = raw_slots(id);
+    let mut validity = Vec::with_capacity(slots.len());
+    let mut marked = Vec::with_capacity(slots.len());
+    let mut keys = Vec::with_capacity(slots.len());
+    for &s in &slots {
+        let node = s as *const LfNode;
+        unsafe {
+            validity.push((*node).raw_validity() as i32);
+            marked.push(is_marked((*node).next.load(Ordering::Relaxed)) as i32);
+            keys.push((*node).key.load(Ordering::Relaxed) as i64);
+        }
+    }
+    let plan = planner.plan_linkfree(&validity, &marked, &keys, 0)?;
+    let planned = t0.elapsed();
+
+    // Nothing fallible below this point: adopt the image and rebuild.
+    let pool = Arc::new(DurablePool::adopt(id, 64, LfNode::init_free_pattern));
+    let mut rec = engine::scan_planned(
+        &pool,
+        &slots,
+        |i| plan.member[i] != 0,
+        |i, slot| (keys[i] as u64, slot as usize),
+        "link-free/accel",
+        threads,
+    );
+    rec.timings.scan += planned;
+    rec.sort_by_key();
+    let head = unsafe { rec.relink_chain(&crate::sets::linkfree::LfClassify) };
+    pool.persist_all_regions();
+    let core = crate::sets::linkfree::LfCore::from_parts(pool, Arc::new(Ebr::new()));
+    let list = crate::sets::linkfree::LfList::from_parts(head, core);
+    Ok((ResizableHash::adopt(list, default_nbuckets), rec.stats, rec.timings))
+}
+
+/// XLA-accelerated recovery of a **resizable** SOFT hash (single-list
+/// okey layout, `bucket_mask = 0`; see
+/// [`recover_resizable_linkfree_accel`]).
+pub fn recover_resizable_soft_accel(
+    planner: &RecoveryPlanner,
+    id: PoolId,
+    default_nbuckets: usize,
+    threads: usize,
+) -> Result<(ResizableSoftHash, RecoveredStats, PhaseTimings)> {
+    let t0 = Instant::now();
+    let slots = raw_slots(id);
+    let mut vs = Vec::with_capacity(slots.len());
+    let mut ve = Vec::with_capacity(slots.len());
+    let mut dl = Vec::with_capacity(slots.len());
+    let mut keys = Vec::with_capacity(slots.len());
+    for &s in &slots {
+        let pn = s as *const PNode;
+        let (a, b, c) = unsafe { (*pn).raw_flags() };
+        vs.push(a as i32);
+        ve.push(b as i32);
+        dl.push(c as i32);
+        keys.push(unsafe { (*pn).key.load(Ordering::Relaxed) } as i64);
+    }
+    let plan = planner.plan_soft(&vs, &ve, &dl, &keys, 0)?;
+    let planned = t0.elapsed();
+
+    // The exact-path core constructor, so the pool/slab setup (init
+    // pattern, slab stride) can never diverge between the two paths.
+    let core = crate::sets::soft::recovery_adopt_core(id);
+    let mut rec = engine::scan_planned(
+        &core.dpool,
+        &slots,
+        |i| plan.member[i] != 0,
+        |i, slot| {
+            let pn = slot as *mut PNode;
+            let vn = core.vpool.alloc() as *mut SNode;
+            unsafe {
+                std::ptr::write(
+                    vn,
+                    SNode {
+                        key: keys[i] as u64,
+                        value: (*pn).value.load(Ordering::Relaxed),
+                        pptr: pn,
+                        p_validity: (*pn).current_validity(),
+                        next: AtomicU64::new(State::Inserted as u64),
+                    },
+                );
+            }
+            (keys[i] as u64, vn as usize)
+        },
+        "soft/accel",
+        threads,
+    );
+    rec.timings.scan += planned;
+    rec.sort_by_key();
+    let head = unsafe { rec.relink_chain(&crate::sets::soft::SoftClassify { core: &core }) };
+    core.dpool.persist_all_regions();
+    let list = crate::sets::soft::SoftList::from_parts(head, core);
+    Ok((ResizableHash::adopt(list, default_nbuckets), rec.stats, rec.timings))
 }
 
 /// XLA-accelerated SOFT hash recovery (mirror of

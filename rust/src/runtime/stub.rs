@@ -7,7 +7,9 @@
 pub mod recovery_accel {
     use crate::pmem::PoolId;
     use crate::sets::linkfree::{LfHash, RecoveredStats};
+    use crate::sets::recovery::PhaseTimings;
     use crate::sets::soft::SoftHash;
+    use crate::sets::{ResizableLfHash, ResizableSoftHash};
     use anyhow::Result;
 
     fn disabled() -> anyhow::Error {
@@ -51,6 +53,27 @@ pub mod recovery_accel {
         _id: PoolId,
         _nbuckets: usize,
     ) -> Result<(LfHash, RecoveredStats)> {
+        Err(disabled())
+    }
+
+    /// Resizable (single-list/okey layout) accel recovery — disabled
+    /// offline; `Shard::recover_accel` falls back to the exact Rust path
+    /// before ever calling this (the planner load fails first).
+    pub fn recover_resizable_linkfree_accel(
+        _planner: &RecoveryPlanner,
+        _id: PoolId,
+        _default_nbuckets: usize,
+        _threads: usize,
+    ) -> Result<(ResizableLfHash, RecoveredStats, PhaseTimings)> {
+        Err(disabled())
+    }
+
+    pub fn recover_resizable_soft_accel(
+        _planner: &RecoveryPlanner,
+        _id: PoolId,
+        _default_nbuckets: usize,
+        _threads: usize,
+    ) -> Result<(ResizableSoftHash, RecoveredStats, PhaseTimings)> {
         Err(disabled())
     }
 }

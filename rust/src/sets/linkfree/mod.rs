@@ -18,5 +18,10 @@ pub(crate) use list::LfCore;
 pub use hash::LfHash;
 pub use list::LfList;
 pub use node::LfNode;
-pub use recovery::{recover_hash, recover_list, RecoveredStats};
-pub use skiplist::{recover_skiplist, LfSkipList};
+// The accelerated recovery path reuses the family's relink rule.
+#[cfg(feature = "accel")]
+pub(crate) use recovery::LfClassify;
+pub use recovery::{
+    recover_hash, recover_hash_timed, recover_list, recover_list_timed, RecoveredStats,
+};
+pub use skiplist::{recover_skiplist, recover_skiplist_timed, LfSkipList};

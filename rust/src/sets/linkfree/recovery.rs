@@ -1,22 +1,16 @@
-//! Link-free recovery (paper §3.5).
-//!
-//! After a crash the durable areas hold every slot the structure ever
-//! allocated. Classification is the validity scheme: **valid & unmarked ⇒
-//! member**; everything else (invalid = interrupted insert, valid+marked =
-//! deleted or never-used) is reclaimed. Members are relinked — reusing the
-//! very same durable slots — into a fresh volatile structure with **zero
-//! psyncs** (all member content is already durable). Reclaimed slots are
-//! normalised back to the canonical free pattern and the areas are
-//! persisted once in bulk, so a second crash cannot resurrect ghosts.
-//!
-//! The slot's trailing generation word (`alloc::area::slot_gen`) is
-//! allocator metadata for hint/tower ABA validation: classification never
-//! reads it (it is not validity or key bits), normalisation never writes
-//! it, and it needs no restoration step — it survives in the adopted
-//! regions and `free` re-bumps it for every reclaimed slot.
+//! Link-free recovery (paper §3.5) via the shared engine
+//! ([`crate::sets::recovery`]): this module is only the validity rule and
+//! link-word shape ([`LfClassify`]) — **valid & unmarked ⇒ member**,
+//! everything else (interrupted insert, deleted, never-used) is
+//! normalised to the free pattern and reclaimed; members are relinked in
+//! place with zero psyncs and the areas persisted once in bulk, so a
+//! second crash cannot resurrect ghosts. Generation words are allocator
+//! metadata: never read by classification, never written by
+//! normalisation, no restoration needed.
 
 use crate::alloc::{DurablePool, Ebr};
 use crate::pmem::PoolId;
+use crate::sets::recovery::{self as engine, Classify, PhaseTimings};
 use crate::sets::tagged::MARK;
 use crate::util::mix64;
 use std::sync::atomic::Ordering;
@@ -26,95 +20,82 @@ use super::list::{LfCore, LfList};
 use super::node::LfNode;
 use super::LfHash;
 
-/// What recovery found in the durable areas.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct RecoveredStats {
-    /// Slots relinked as set members.
-    pub members: usize,
-    /// Slots reclaimed to free-lists (never-used, deleted, or interrupted
-    /// inserts — the paper's "memory leaks fixed by the validity scheme").
-    pub reclaimed: usize,
-}
+pub use crate::sets::recovery::RecoveredStats;
 
-/// Scan the pool and classify every slot. Returns member pointers (with
-/// key) and frees/normalises the rest. Shared by list and hash recovery.
-fn scan(pool: &DurablePool) -> (Vec<(u64, *mut LfNode)>, RecoveredStats) {
-    let mut members: Vec<(u64, *mut LfNode)> = Vec::new();
-    let mut stats = RecoveredStats::default();
-    for slot in pool.iter_slots() {
+/// The link-free validity rule for the engine (also reused by the
+/// accelerated recovery path for relinking).
+pub(crate) struct LfClassify;
+
+impl Classify for LfClassify {
+    const FAMILY: &'static str = "link-free";
+    const NULL_LINK: u64 = 0; // null, unmarked
+
+    unsafe fn classify(&self, slot: *mut u8) -> Option<(u64, usize)> {
         let node = slot as *mut LfNode;
-        unsafe {
-            if (*node).is_member() {
-                members.push(((*node).key.load(Ordering::Relaxed), node));
-                stats.members += 1;
-            } else {
-                // Invalid or deleted: normalise to the free pattern so a
-                // later crash still classifies it as free, then reuse.
-                pool.normalize_slot(slot);
-                pool.free(slot);
-                stats.reclaimed += 1;
-            }
+        if (*node).is_member() {
+            Some(((*node).key.load(Ordering::Relaxed), node as usize))
+        } else {
+            None
         }
     }
-    // The persistent list must be a set (Claim B.12); a duplicate would
-    // mean a validity-scheme violation.
-    let mut keys: Vec<u64> = members.iter().map(|m| m.0).collect();
-    keys.sort_unstable();
-    keys.dedup();
-    assert_eq!(keys.len(), members.len(), "duplicate keys in durable image");
-    (members, stats)
-}
 
-/// Relink a sorted run of member nodes into a chain below `head_out`;
-/// returns the head link value. No psyncs: membership is already durable,
-/// and links are volatile by design.
-unsafe fn relink_chain(members: &[(u64, *mut LfNode)]) -> u64 {
-    let mut next_val = 0u64; // null, unmarked
-    for &(_, node) in members.iter().rev() {
-        (*node).next.store(next_val, Ordering::Relaxed);
+    unsafe fn link_word(&self, node: usize) -> u64 {
+        debug_assert_eq!(node as u64 & MARK, 0);
+        node as u64
+    }
+
+    unsafe fn link(&self, node: usize, next: u64) {
+        let n = node as *mut LfNode;
+        (*n).next.store(next, Ordering::Relaxed);
         // Content is durable: arm the insert-flush flag so post-recovery
         // reads don't re-psync, and clear the delete flag.
-        (*node).reset_flush_flags();
-        (*node).set_insert_flushed();
-        next_val = node as u64;
-        debug_assert_eq!(next_val & MARK, 0);
+        (*n).reset_flush_flags();
+        (*n).set_insert_flushed();
     }
-    next_val
 }
 
 /// Rebuild a link-free list from the durable areas of `id`.
 pub fn recover_list(id: PoolId) -> (LfList, RecoveredStats) {
+    let (l, s, _) = recover_list_timed(id, engine::default_threads());
+    (l, s)
+}
+
+/// [`recover_list`] with an explicit recovery worker count.
+pub fn recover_list_timed(id: PoolId, threads: usize) -> (LfList, RecoveredStats, PhaseTimings) {
     let pool = Arc::new(DurablePool::adopt(id, 64, LfNode::init_free_pattern));
-    let (mut members, stats) = scan(&pool);
-    members.sort_unstable_by_key(|m| m.0);
-    let head = unsafe { relink_chain(&members) };
+    let mut rec = engine::scan(&pool, &LfClassify, threads);
+    rec.sort_by_key();
+    let head = unsafe { rec.relink_chain(&LfClassify) };
     pool.persist_all_regions();
     let core = LfCore::from_parts(pool, Arc::new(Ebr::new()));
-    (LfList::from_parts(head, core), stats)
+    (LfList::from_parts(head, core), rec.stats, rec.timings)
 }
 
 /// Rebuild a link-free hash set from the durable areas of `id`.
 pub fn recover_hash(id: PoolId, nbuckets: usize) -> (LfHash, RecoveredStats) {
+    let (h, s, _) = recover_hash_timed(id, nbuckets, engine::default_threads());
+    (h, s)
+}
+
+/// [`recover_hash`] with an explicit recovery worker count (bucket-
+/// partitioned relink: no two workers touch the same chain).
+pub fn recover_hash_timed(
+    id: PoolId,
+    nbuckets: usize,
+    threads: usize,
+) -> (LfHash, RecoveredStats, PhaseTimings) {
     let pool = Arc::new(DurablePool::adopt(id, 64, LfNode::init_free_pattern));
-    let (mut members, stats) = scan(&pool);
+    let mut rec = engine::scan(&pool, &LfClassify, threads);
     let core = LfCore::from_parts(pool, Arc::new(Ebr::new()));
     let hash = LfHash::from_parts(nbuckets, core);
     let mask = (hash.nbuckets() - 1) as u64;
-    // Sort by (bucket, key) then relink one chain per bucket.
-    members.sort_unstable_by_key(|m| ((mix64(m.0) & mask), m.0));
-    let mut i = 0;
-    while i < members.len() {
-        let b = (mix64(members[i].0) & mask) as usize;
-        let mut j = i;
-        while j < members.len() && (mix64(members[j].0) & mask) as usize == b {
-            j += 1;
-        }
-        let head_val = unsafe { relink_chain(&members[i..j]) };
-        hash.buckets[b].store(head_val, Ordering::Relaxed);
-        i = j;
+    let bucket_of = |k: u64| (mix64(k) & mask) as usize;
+    rec.sort_by_bucket(bucket_of);
+    for (b, head) in unsafe { rec.relink_buckets(&LfClassify, &bucket_of) } {
+        hash.buckets[b].store(head, Ordering::Relaxed);
     }
     hash.core.pool.persist_all_regions();
-    (hash, stats)
+    (hash, rec.stats, rec.timings)
 }
 
 #[cfg(test)]
@@ -211,6 +192,15 @@ mod tests {
         assert_eq!(stats.reclaimed, crate::alloc::area::SLOTS_PER_AREA - 19);
         assert!(l2.insert(7, 77), "reclaimed slots must be reusable");
         assert_eq!(l2.get(7), Some(77));
+        // Reuse must come from the caller-side free-list the engine filled
+        // (parallel workers normalise but never free): if recovery had
+        // stranded the reclaimed slots in dead worker threads' per-tid
+        // lists, this insert would have grown a second area.
+        assert_eq!(
+            l2.core.pool.regions().len(),
+            1,
+            "post-recovery insert must reuse reclaimed slots, not grow a fresh area"
+        );
     }
 
     #[test]

@@ -312,7 +312,18 @@ impl crate::sets::ConcurrentSet for LfSkipList {
 /// from the recovered members — randomized afresh, exactly as §2.1
 /// anticipates for skip lists.
 pub fn recover_skiplist(id: PoolId) -> (LfSkipList, RecoveredStats) {
-    let (list, stats) = super::recover_list(id);
+    let (s, stats, _) = recover_skiplist_timed(id, crate::sets::recovery::default_threads());
+    (s, stats)
+}
+
+/// [`recover_skiplist`] with an explicit recovery worker count (the scan +
+/// chain relink parallelise through the engine; the index rebuild is a
+/// sequential walk over the members).
+pub fn recover_skiplist_timed(
+    id: PoolId,
+    threads: usize,
+) -> (LfSkipList, RecoveredStats, crate::sets::recovery::PhaseTimings) {
+    let (list, stats, timings) = super::recover_list_timed(id, threads);
     // Steal the recovered chain + core into a skip list shell.
     let head_val = list.head.load(Ordering::Relaxed);
     let core = LfCore::from_parts(list.core.pool.clone(), Arc::new(Ebr::new()));
@@ -330,7 +341,7 @@ pub fn recover_skiplist(id: PoolId) -> (LfSkipList, RecoveredStats) {
             curr = ptr_of::<LfNode>((*curr).next.load(Ordering::Relaxed));
         }
     }
-    (skip, stats)
+    (skip, stats, timings)
 }
 
 #[cfg(test)]

@@ -23,4 +23,6 @@ pub(crate) use node::load_link_persisted;
 pub use hash::LogFreeHash;
 pub use list::LogFreeList;
 pub use node::LogFreeNode;
-pub use recovery::{recover_hash, recover_list, RecoveredStats};
+pub use recovery::{
+    recover_hash, recover_hash_timed, recover_list, recover_list_timed, RecoveredStats,
+};

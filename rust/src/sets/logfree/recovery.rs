@@ -1,89 +1,122 @@
-//! Log-free recovery: walk the *persisted* links from the durable anchors
-//! (root cell / bucket array). Marked nodes are logically deleted; dirty
-//! bits are stripped (a dirty-but-present link was persisted by the psync
-//! that preceded the crash, or the value is the older clean one — either
-//! way the walk sees a consistent state). Area slots not reached as
-//! members (leaked by crashed inserts, or deleted) are reclaimed —
-//! leak-freedom without logging, same scan trick as link-free.
+//! Log-free recovery via the shared engine ([`crate::sets::recovery`]).
+//! Membership is not a per-slot rule (a crashed insert may psync content
+//! without installing the link), so a walk of the *persisted* links from
+//! the durable anchors (root cell / bucket array) discovers reachability
+//! first — marked nodes are deleted, dirty bits stripped — and the
+//! engine's parallel scan then classifies **member ⇔ reached**,
+//! reclaiming the rest (leak-freedom without logging) and rebuilding
+//! clean chains with the partitioned relink.
 
 use crate::alloc::{DurablePool, Ebr};
 use crate::pmem::region::{regions_of, RegionTag};
 use crate::pmem::root::root_cell;
 use crate::pmem::PoolId;
+use crate::sets::recovery::{self as engine, Classify, PhaseTimings};
 use crate::sets::tagged::{is_marked, ptr_of, PTR_MASK};
+use crate::util::mix64;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::list::{LogFreeCore, LogFreeList};
 use super::node::LogFreeNode;
 use super::LogFreeHash;
 
-pub use crate::sets::linkfree::RecoveredStats;
+pub use crate::sets::recovery::RecoveredStats;
 
-/// Walk one persisted chain; returns member node pointers in chain order.
-unsafe fn walk_chain(head_val: u64, members: &mut Vec<*mut LogFreeNode>) {
+/// Walk one persisted chain, adding member node addresses to `reached`.
+unsafe fn walk_chain(head_val: u64, reached: &mut HashSet<usize>) {
     let mut curr = ptr_of::<LogFreeNode>(head_val & PTR_MASK);
     while !curr.is_null() {
         let v = (*curr).next.load(Ordering::Relaxed);
         if !is_marked(v) {
-            members.push(curr);
+            reached.insert(curr as usize);
         }
         curr = ptr_of::<LogFreeNode>(v & PTR_MASK);
     }
 }
 
-/// Strip marks/dirt from the walked chains, reclaim unreached slots.
-fn rebuild(
-    pool: &DurablePool,
-    chains: &[(u64, Vec<*mut LogFreeNode>)],
-) -> RecoveredStats {
-    let mut stats = RecoveredStats::default();
-    let reached: HashSet<usize> = chains
-        .iter()
-        .flat_map(|(_, m)| m.iter().map(|&p| p as usize))
-        .collect();
-    stats.members = reached.len();
-    for slot in pool.iter_slots() {
-        if !reached.contains(&(slot as usize)) {
-            unsafe { pool.normalize_slot(slot) };
-            pool.free(slot);
-            stats.reclaimed += 1;
-        }
-    }
-    stats
+/// The log-free rule for the engine: member ⇔ reached from a durable
+/// anchor (the walk already excluded marked nodes).
+pub(crate) struct LogFreeClassify<'a> {
+    reached: &'a HashSet<usize>,
 }
 
-/// Rewrite one chain cleanly (member -> member links, no marks, no dirt).
-/// Persisted in bulk afterwards by `persist_all_regions`.
-unsafe fn relink(members: &[*mut LogFreeNode]) -> u64 {
-    let mut next = 0u64;
-    for &n in members.iter().rev() {
-        (*n).next.store(next, Ordering::Relaxed);
-        next = n as u64;
+impl Classify for LogFreeClassify<'_> {
+    const FAMILY: &'static str = "log-free";
+    const NULL_LINK: u64 = 0;
+
+    unsafe fn classify(&self, slot: *mut u8) -> Option<(u64, usize)> {
+        if self.reached.contains(&(slot as usize)) {
+            let node = slot as *mut LogFreeNode;
+            Some(((*node).key.load(Ordering::Relaxed), slot as usize))
+        } else {
+            None
+        }
     }
-    next
+
+    unsafe fn link_word(&self, node: usize) -> u64 {
+        node as u64
+    }
+
+    /// Rewrite the chain cleanly (member -> member links, no marks, no
+    /// dirt). Persisted in bulk afterwards by `persist_all_regions`.
+    unsafe fn link(&self, node: usize, next: u64) {
+        (*(node as *mut LogFreeNode)).next.store(next, Ordering::Relaxed);
+    }
 }
 
 /// Recover a log-free list from pool `id` (head = its named root cell).
 pub fn recover_list(id: PoolId) -> (LogFreeList, RecoveredStats) {
+    let (l, s, _) = recover_list_timed(id, engine::default_threads());
+    (l, s)
+}
+
+/// Anchor walk + engine scan (walk cost folds into the scan phase).
+fn walk_and_scan(
+    pool: &Arc<DurablePool>,
+    anchors: impl Iterator<Item = u64>,
+    threads: usize,
+) -> (HashSet<usize>, engine::Scan) {
+    let t0 = Instant::now();
+    let mut reached = HashSet::new();
+    for head in anchors {
+        unsafe { walk_chain(head, &mut reached) };
+    }
+    let walk = t0.elapsed();
+    let mut rec = engine::scan(pool, &LogFreeClassify { reached: &reached }, threads);
+    rec.timings.scan += walk;
+    (reached, rec)
+}
+
+/// [`recover_list`] with an explicit recovery worker count.
+pub fn recover_list_timed(
+    id: PoolId,
+    threads: usize,
+) -> (LogFreeList, RecoveredStats, PhaseTimings) {
     let pool = Arc::new(DurablePool::adopt(id, 64, LogFreeNode::init_free_pattern));
     let head = root_cell(&format!("logfree.list.{}", id.0));
-    let mut members = Vec::new();
-    unsafe { walk_chain(head.word().load(Ordering::Relaxed), &mut members) };
-    let chains = vec![(0u64, members)];
-    let stats = rebuild(&pool, &chains);
-    let head_val = unsafe { relink(&chains[0].1) };
+    let anchor = head.word().load(Ordering::Relaxed);
+    let (reached, mut rec) = walk_and_scan(&pool, std::iter::once(anchor), threads);
+    rec.sort_by_key();
+    let head_val = unsafe { rec.relink_chain(&LogFreeClassify { reached: &reached }) };
     head.word().store(head_val, Ordering::Relaxed);
     pool.persist_all_regions();
     head.persist();
     let core = LogFreeCore::from_parts(pool, Arc::new(Ebr::new()));
-    (LogFreeList::from_parts(head, core), stats)
+    (LogFreeList::from_parts(head, core), rec.stats, rec.timings)
 }
 
 /// Recover a log-free hash set from pool `id` (buckets = its persistent
 /// `Links` region).
 pub fn recover_hash(id: PoolId) -> (LogFreeHash, RecoveredStats) {
+    let (h, s, _) = recover_hash_timed(id, engine::default_threads());
+    (h, s)
+}
+
+/// [`recover_hash`] with an explicit recovery worker count.
+pub fn recover_hash_timed(id: PoolId, threads: usize) -> (LogFreeHash, RecoveredStats, PhaseTimings) {
     let pool = Arc::new(DurablePool::adopt(id, 64, LogFreeNode::init_free_pattern));
     let links = regions_of(id)
         .into_iter()
@@ -91,21 +124,24 @@ pub fn recover_hash(id: PoolId) -> (LogFreeHash, RecoveredStats) {
         .expect("log-free hash pool has no bucket region");
     let nbuckets = links.len / 8;
     let buckets = links.base as *const AtomicU64;
-    let mut chains = Vec::with_capacity(nbuckets);
+    let anchors = (0..nbuckets).map(|i| unsafe { (*buckets.add(i)).load(Ordering::Relaxed) });
+    let (reached, mut rec) = walk_and_scan(&pool, anchors, threads);
+    let mask = (nbuckets - 1) as u64;
+    let bucket_of = |k: u64| (mix64(k) & mask) as usize;
+    rec.sort_by_bucket(bucket_of);
+    // Start from empty cells: a bucket whose members all died must not
+    // keep its stale pre-crash chain.
     for i in 0..nbuckets {
-        let cell = unsafe { &*buckets.add(i) };
-        let mut members = Vec::new();
-        unsafe { walk_chain(cell.load(Ordering::Relaxed), &mut members) };
-        chains.push((i as u64, members));
+        unsafe { (*buckets.add(i)).store(0, Ordering::Relaxed) };
     }
-    let stats = rebuild(&pool, &chains);
-    for (i, members) in chains.iter() {
-        let head_val = unsafe { relink(members) };
-        unsafe { (*buckets.add(*i as usize)).store(head_val, Ordering::Relaxed) };
+    for (b, head) in
+        unsafe { rec.relink_buckets(&LogFreeClassify { reached: &reached }, &bucket_of) }
+    {
+        unsafe { (*buckets.add(b)).store(head, Ordering::Relaxed) };
     }
     pool.persist_all_regions();
     let core = LogFreeCore::from_parts(pool, Arc::new(Ebr::new()));
-    (LogFreeHash::from_parts(buckets, nbuckets, core), stats)
+    (LogFreeHash::from_parts(buckets, nbuckets, core), rec.stats, rec.timings)
 }
 
 #[cfg(test)]

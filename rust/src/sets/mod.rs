@@ -12,7 +12,10 @@
 //! Each family provides a sorted linked list and a hash set built from the
 //! same core (a bucket is a bare link cell — see [`tagged`]), plus a
 //! recovery procedure rebuilding the volatile structure from the durable
-//! areas after a crash.
+//! areas after a crash. Recovery routes through the shared parallel
+//! engine ([`recovery`]): a family contributes only its validity rule and
+//! link-word shape; area scanning, classification and chain relinking are
+//! engine-owned and multi-threaded (DESIGN.md §Recovery).
 //!
 //! Hash sets of the three durable families are **resizable**
 //! ([`ResizableHash`]): one family list in `mix64(key)` order plus a
@@ -48,11 +51,13 @@
 
 pub mod linkfree;
 pub mod logfree;
+pub mod recovery;
 pub mod resizable;
 pub mod soft;
 pub mod tagged;
 pub mod volatile;
 
+pub use recovery::{PhaseTimings, RecoveredStats};
 pub use resizable::{ResizableHash, ResizableLfHash, ResizableLogFreeHash, ResizableSoftHash};
 
 /// One operation of a batch — the wire protocol's verbs over the set API.

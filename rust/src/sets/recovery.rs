@@ -1,0 +1,485 @@
+//! The unified recovery engine: one area-scan framework for every durable
+//! family.
+//!
+//! The paper's recovery story — no log, no durable links, just scan the
+//! allocator areas and re-classify every slot by the family's validity
+//! scheme — is exactly what makes recovery *parallel* for free: areas are
+//! independent by construction (per-thread pools of fixed-size slots), so
+//! disjoint area ranges can be scanned, classified and normalised by a
+//! worker pool with no synchronisation beyond the final merge (the
+//! free-list pushes run centralised afterwards — see [`scan`]). Relinking
+//! partitions the same way: chains are rebuilt from one sorted member
+//! run, so workers own disjoint contiguous segments (single list) or
+//! disjoint bucket ranges (fixed hash) and never write the same link
+//! cell.
+//!
+//! The engine owns area iteration, parallel classification + reclamation,
+//! member sorting and parallel relink; a family contributes only its
+//! validity rule and link-word shape through [`Classify`]. The three
+//! durable families' recovery modules, both skip lists and the resizable
+//! hashes all route through here (DESIGN.md §Recovery).
+//!
+//! **Generation words** (`alloc::area::slot_gen`) are allocator metadata
+//! for hint/tower ABA validation: classification never reads them,
+//! normalisation never writes them, and they need no restoration — they
+//! survive in the adopted regions and `DurablePool::free` re-bumps them
+//! for every reclaimed slot.
+//!
+//! **Psync discipline.** Scanning, sorting and relinking issue *zero*
+//! psyncs — member content is already durable and links are volatile by
+//! design (log-free persists its relinked chains with the same single
+//! bulk persist it always paid). The only psyncs of a recovery are the
+//! final `persist_all_regions` + anchor persists that the sequential path
+//! always issued, all on the coordinating thread; the differential tests
+//! (`rust/tests/recovery_parallel.rs`) pin parallel == sequential fence
+//! and flush counts exactly.
+
+use crate::alloc::DurablePool;
+use crate::pmem::region::RegionTag;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// What recovery found in the durable areas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveredStats {
+    /// Slots relinked as set members.
+    pub members: usize,
+    /// Slots reclaimed to free-lists (never-used, deleted, or interrupted
+    /// inserts — the paper's "memory leaks fixed by the validity scheme").
+    pub reclaimed: usize,
+}
+
+/// Wall-clock cost of each recovery phase (per pool; the coordinator sums
+/// them across shards for `RecoveryReport`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimings {
+    /// Area scan: classification + reclamation (log-free: plus the anchor
+    /// walk that discovers reachability).
+    pub scan: Duration,
+    /// Sorting the member run (and the set-uniqueness check).
+    pub sort: Duration,
+    /// Rebuilding the volatile chains.
+    pub relink: Duration,
+}
+
+impl PhaseTimings {
+    pub fn total(&self) -> Duration {
+        self.scan + self.sort + self.relink
+    }
+}
+
+impl std::ops::AddAssign for PhaseTimings {
+    fn add_assign(&mut self, rhs: PhaseTimings) {
+        self.scan += rhs.scan;
+        self.sort += rhs.sort;
+        self.relink += rhs.relink;
+    }
+}
+
+/// A family's contribution to the engine: its validity rule and the shape
+/// of its link words. Member handles are `usize`-packed node pointers
+/// (durable nodes for link-free/log-free, fresh volatile SNodes for SOFT)
+/// so they can cross the worker-pool threads.
+///
+/// # Safety contract
+/// `classify` is called exactly once per slot of the adopted pool;
+/// `link`/`link_word` only on handles `classify` returned. `link_word`
+/// must be pure (workers call it for a segment boundary *before* the
+/// owning worker has linked that node).
+pub trait Classify: Sync {
+    /// Family tag for diagnostics/assertions.
+    const FAMILY: &'static str;
+
+    /// Chain-terminator link word (null pointer in the family's encoding).
+    const NULL_LINK: u64;
+
+    /// Classify one durable slot: `Some((sort key, member handle))` for a
+    /// member; `None` for a slot the engine must normalise and reclaim.
+    ///
+    /// # Safety
+    /// `slot` points at a live slot of the pool being scanned.
+    unsafe fn classify(&self, slot: *mut u8) -> Option<(u64, usize)>;
+
+    /// The word a predecessor (or a head/bucket cell) stores to reference
+    /// `node`. Must not read or write `node`'s link cell.
+    ///
+    /// # Safety
+    /// `node` is a member handle returned by [`Classify::classify`].
+    unsafe fn link_word(&self, node: usize) -> u64;
+
+    /// Store `next` as `node`'s successor, plus family fixups (flush
+    /// flags, state bits). Zero psyncs: membership is already durable.
+    ///
+    /// # Safety
+    /// `node` is a member handle returned by [`Classify::classify`];
+    /// called exactly once per member, by exactly one worker.
+    unsafe fn link(&self, node: usize, next: u64);
+}
+
+/// Upper bound on engine workers (scoped threads share the process tid
+/// table with EBR and the allocator; 32 is far past the scan's memory-
+/// bandwidth saturation point).
+pub const MAX_RECOVERY_THREADS: usize = 32;
+
+/// Below this many members a parallel relink is pure spawn overhead.
+const PAR_RELINK_MIN: usize = 4096;
+
+/// Recovery worker count: `DURASETS_RECOVERY_THREADS` if set, else the
+/// machine's available parallelism, clamped to [1, MAX_RECOVERY_THREADS].
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DURASETS_RECOVERY_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.clamp(1, MAX_RECOVERY_THREADS);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, MAX_RECOVERY_THREADS)
+}
+
+/// The classified image of one pool: the member run (key, handle) plus
+/// stats and per-phase timings. Produced by [`scan`]; consumed by the
+/// sort + relink methods.
+pub struct Scan {
+    /// `(sort key, member handle)` — unsorted until a sort method runs.
+    pub members: Vec<(u64, usize)>,
+    pub stats: RecoveredStats,
+    pub timings: PhaseTimings,
+    family: &'static str,
+    threads: usize,
+}
+
+/// Contiguous `parts`-way partition of `0..len` (bounds for segment and
+/// worker assignment; empty ranges are skipped by callers).
+fn segments(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, len.max(1));
+    let chunk = len.div_ceil(parts);
+    (0..parts)
+        .map(|w| (w * chunk, ((w + 1) * chunk).min(len)))
+        .filter(|(s, e)| s < e)
+        .collect()
+}
+
+/// Scan every slot of `pool`'s durable areas, classifying through `c`:
+/// members are collected, everything else is normalised to the family's
+/// free pattern and reclaimed. With `threads > 1` the areas — independent
+/// per-thread allocations — are distributed over a worker pool through an
+/// atomic area cursor; workers classify and normalise with no locking.
+/// The `free` calls themselves run on the *calling* thread after the
+/// join: the allocator's free-lists are per-tid, so a worker-side free
+/// would strand every reclaimed slot in a dead transient thread's list
+/// and a crash→recover→insert loop would grow fresh areas forever
+/// instead of reusing them (pinned by the reclamation tests).
+pub fn scan<C: Classify>(pool: &DurablePool, c: &C, threads: usize) -> Scan {
+    let t0 = Instant::now();
+    let slot_size = pool.slot_size();
+    let areas: Vec<(usize, usize)> = pool
+        .regions()
+        .into_iter()
+        .filter(|r| r.tag == RegionTag::Slots)
+        .map(|r| (r.base as usize, r.len / slot_size))
+        .collect();
+
+    // One worker's pass over one area: classify members, normalise and
+    // collect (not yet free) the rest.
+    let scan_area = |base: usize, n: usize, members: &mut Vec<(u64, usize)>, reclaim: &mut Vec<usize>| {
+        for i in 0..n {
+            let slot = (base + i * slot_size) as *mut u8;
+            unsafe {
+                match c.classify(slot) {
+                    Some(m) => members.push(m),
+                    None => {
+                        pool.normalize_slot(slot);
+                        reclaim.push(slot as usize);
+                    }
+                }
+            }
+        }
+    };
+
+    let threads = threads.clamp(1, MAX_RECOVERY_THREADS);
+    let mut members: Vec<(u64, usize)> = Vec::new();
+    let mut reclaim: Vec<usize> = Vec::new();
+    if threads <= 1 || areas.len() <= 1 {
+        for &(base, n) in &areas {
+            scan_area(base, n, &mut members, &mut reclaim);
+        }
+    } else {
+        let cursor = AtomicUsize::new(0);
+        let workers = threads.min(areas.len());
+        let outs: Vec<(Vec<(u64, usize)>, Vec<usize>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let cursor = &cursor;
+                    let areas = &areas;
+                    let scan_area = &scan_area;
+                    s.spawn(move || {
+                        let mut local = Vec::new();
+                        let mut rec = Vec::new();
+                        loop {
+                            let a = cursor.fetch_add(1, Ordering::Relaxed);
+                            if a >= areas.len() {
+                                break;
+                            }
+                            let (base, n) = areas[a];
+                            scan_area(base, n, &mut local, &mut rec);
+                        }
+                        (local, rec)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (local, rec) in outs {
+            members.extend(local);
+            reclaim.extend(rec);
+        }
+    }
+    // Centralised reclamation (see fn docs): gen bump + free-list push
+    // per slot, no psyncs, into *this* thread's list.
+    for &slot in &reclaim {
+        pool.free(slot as *mut u8);
+    }
+
+    let stats = RecoveredStats { members: members.len(), reclaimed: reclaim.len() };
+    Scan {
+        members,
+        stats,
+        timings: PhaseTimings { scan: t0.elapsed(), ..Default::default() },
+        family: C::FAMILY,
+        threads,
+    }
+}
+
+/// Build a [`Scan`] from a *precomputed* membership plan — the
+/// accelerated classification path, where an XLA artifact already decided
+/// `member[i]` per slot. `materialise` turns a member slot into its run
+/// entry (the slot itself for link-free; a fresh volatile node for SOFT);
+/// non-members are normalised and reclaimed exactly as in [`scan`], with
+/// frees on the calling thread. The returned [`Scan`] then shares the
+/// exact path's sort/relink machinery, so the two paths cannot diverge.
+pub fn scan_planned(
+    pool: &DurablePool,
+    slots: &[usize],
+    is_member: impl Fn(usize) -> bool,
+    materialise: impl FnMut(usize, *mut u8) -> (u64, usize),
+    family: &'static str,
+    threads: usize,
+) -> Scan {
+    let t0 = Instant::now();
+    let mut materialise = materialise;
+    let mut members = Vec::new();
+    let mut reclaimed = 0usize;
+    for (i, &s) in slots.iter().enumerate() {
+        let slot = s as *mut u8;
+        if is_member(i) {
+            members.push(materialise(i, slot));
+        } else {
+            unsafe { pool.normalize_slot(slot) };
+            pool.free(slot);
+            reclaimed += 1;
+        }
+    }
+    let stats = RecoveredStats { members: members.len(), reclaimed };
+    Scan {
+        members,
+        stats,
+        timings: PhaseTimings { scan: t0.elapsed(), ..Default::default() },
+        family,
+        threads: threads.clamp(1, MAX_RECOVERY_THREADS),
+    }
+}
+
+/// The durable image must be a *set* (paper Claim B.12 for link-free; the
+/// walk/flag schemes of the others give the same invariant). Run must be
+/// sorted so equal keys are adjacent — one pass suffices. Shared by
+/// [`Scan`] and the accelerated recovery paths.
+pub fn assert_unique_sorted(members: &[(u64, usize)], family: &str) {
+    for w in members.windows(2) {
+        assert_ne!(
+            w[0].0, w[1].0,
+            "{}: duplicate key {} in durable image",
+            family, w[0].0
+        );
+    }
+}
+
+impl Scan {
+    /// Sort the member run by key (single-chain shapes: lists, skip-list
+    /// bottom levels, the resizable families' okey order).
+    pub fn sort_by_key(&mut self) {
+        let t0 = Instant::now();
+        self.members.sort_unstable_by_key(|m| m.0);
+        assert_unique_sorted(&self.members, self.family);
+        self.timings.sort += t0.elapsed();
+    }
+
+    /// Sort the member run by `(bucket, key)` (fixed-bucket hash shapes).
+    /// Duplicate keys stay adjacent (same key ⇒ same bucket), so the
+    /// set-uniqueness check still holds.
+    pub fn sort_by_bucket(&mut self, bucket_of: impl Fn(u64) -> usize) {
+        let t0 = Instant::now();
+        self.members.sort_unstable_by_key(|m| (bucket_of(m.0), m.0));
+        assert_unique_sorted(&self.members, self.family);
+        self.timings.sort += t0.elapsed();
+    }
+
+    /// Relink the (key-sorted) member run into one chain; returns the head
+    /// link word. Parallel: workers own disjoint contiguous segments and
+    /// stitch at the boundaries — worker `w`'s tail links to the
+    /// `link_word` of segment `w+1`'s first member, which is pure, so no
+    /// worker ever writes another worker's link cells. Zero psyncs.
+    ///
+    /// # Safety
+    /// `c` must be the same classifier the scan ran with, and the run must
+    /// be sorted.
+    pub unsafe fn relink_chain<C: Classify>(&mut self, c: &C) -> u64 {
+        let t0 = Instant::now();
+        let head = relink_chain_run(c, &self.members, self.threads);
+        self.timings.relink += t0.elapsed();
+        head
+    }
+
+    /// Relink the (`(bucket, key)`-sorted) member run into one chain per
+    /// bucket; returns `(bucket, head word)` pairs in ascending bucket
+    /// order (buckets with no members are omitted — callers start from
+    /// empty tables). Parallel: whole bucket groups are assigned to
+    /// workers, so no two workers ever touch the same chain. Zero psyncs.
+    ///
+    /// # Safety
+    /// As [`Scan::relink_chain`]; `bucket_of` must match the sort.
+    pub unsafe fn relink_buckets<C: Classify>(
+        &mut self,
+        c: &C,
+        bucket_of: &(impl Fn(u64) -> usize + Sync),
+    ) -> Vec<(usize, u64)> {
+        let t0 = Instant::now();
+        // Bucket-group boundaries over the sorted run.
+        let mut groups: Vec<(usize, usize, usize)> = Vec::new(); // (bucket, start, end)
+        let mut i = 0;
+        while i < self.members.len() {
+            let b = bucket_of(self.members[i].0);
+            let mut j = i + 1;
+            while j < self.members.len() && bucket_of(self.members[j].0) == b {
+                j += 1;
+            }
+            groups.push((b, i, j));
+            i = j;
+        }
+
+        let relink_groups = |gs: &[(usize, usize, usize)]| -> Vec<(usize, u64)> {
+            gs.iter()
+                .map(|&(b, s, e)| (b, unsafe { relink_segment(c, &self.members[s..e], C::NULL_LINK) }))
+                .collect()
+        };
+
+        let heads = if self.threads <= 1 || self.members.len() < PAR_RELINK_MIN || groups.len() <= 1
+        {
+            relink_groups(&groups)
+        } else {
+            let bounds = segments(groups.len(), self.threads);
+            let outs: Vec<Vec<(usize, u64)>> = std::thread::scope(|s| {
+                let handles: Vec<_> = bounds
+                    .iter()
+                    .map(|&(gs, ge)| {
+                        let relink_groups = &relink_groups;
+                        let groups = &groups;
+                        s.spawn(move || relink_groups(&groups[gs..ge]))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            outs.into_iter().flatten().collect()
+        };
+        self.timings.relink += t0.elapsed();
+        heads
+    }
+}
+
+/// Relink one contiguous sorted segment, terminating at `tail_next`;
+/// returns the link word referencing the segment's first member (or
+/// `tail_next` when empty).
+///
+/// # Safety
+/// Handles in `seg` came from `c`'s classify; each is linked exactly once.
+unsafe fn relink_segment<C: Classify>(c: &C, seg: &[(u64, usize)], tail_next: u64) -> u64 {
+    let mut next = tail_next;
+    for &(_, node) in seg.iter().rev() {
+        c.link(node, next);
+        next = c.link_word(node);
+    }
+    next
+}
+
+/// Parallel single-chain relink over a sorted run (shared by [`Scan`] and
+/// the accelerated recovery paths).
+///
+/// # Safety
+/// As [`Scan::relink_chain`].
+pub unsafe fn relink_chain_run<C: Classify>(c: &C, members: &[(u64, usize)], threads: usize) -> u64 {
+    if members.is_empty() {
+        return C::NULL_LINK;
+    }
+    if threads <= 1 || members.len() < PAR_RELINK_MIN {
+        return relink_segment(c, members, C::NULL_LINK);
+    }
+    let bounds = segments(members.len(), threads);
+    std::thread::scope(|s| {
+        for &(start, end) in &bounds {
+            // The boundary word: the link_word of the next segment's first
+            // member (pure — that worker has not linked it yet).
+            let tail_next = if end == members.len() {
+                C::NULL_LINK
+            } else {
+                c.link_word(members[end].1)
+            };
+            let seg = &members[start..end];
+            s.spawn(move || unsafe {
+                relink_segment(c, seg, tail_next);
+            });
+        }
+    });
+    c.link_word(members[0].1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_cover_and_are_disjoint() {
+        for (len, parts) in [(0usize, 4usize), (1, 4), (7, 3), (4096, 8), (10, 64)] {
+            let segs = segments(len, parts);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for &(s, e) in &segs {
+                assert!(s < e, "empty segment ({s},{e}) for len={len} parts={parts}");
+                assert_eq!(s, prev_end, "gap/overlap at {s} for len={len} parts={parts}");
+                covered += e - s;
+                prev_end = e;
+            }
+            assert_eq!(covered, len);
+            assert!(segs.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
+    fn default_threads_honors_env_and_clamps() {
+        // Can't set env safely under parallel tests; just pin the range.
+        let t = default_threads();
+        assert!((1..=MAX_RECOVERY_THREADS).contains(&t));
+    }
+
+    #[test]
+    fn phase_timings_accumulate() {
+        let mut a = PhaseTimings {
+            scan: Duration::from_millis(2),
+            sort: Duration::from_millis(3),
+            relink: Duration::from_millis(5),
+        };
+        a += PhaseTimings { scan: Duration::from_millis(1), ..Default::default() };
+        assert_eq!(a.scan, Duration::from_millis(3));
+        assert_eq!(a.total(), Duration::from_millis(11));
+    }
+}

@@ -523,8 +523,10 @@ impl<F: ResizableFamily> ResizableHash<F> {
     /// Wrap a recovered list, restoring the persisted bucket-count epoch
     /// (falling back to `default_nbuckets` for pre-epoch images). The
     /// items balance is re-seeded from the recovered chain so the growth
-    /// trigger keeps working after recovery.
-    fn adopt(inner: F, default_nbuckets: usize) -> Self {
+    /// trigger keeps working after recovery. Crate-visible so the
+    /// accelerated recovery path (`runtime::recovery_accel`) can wrap the
+    /// list it classified and relinked through the XLA artifacts.
+    pub(crate) fn adopt(inner: F, default_nbuckets: usize) -> Self {
         let epoch = root_cell(&format!("resizable.{}.{}", F::FAMILY, inner.pool().0));
         let stored = epoch.word().load(Ordering::SeqCst);
         let log2n = if stored > 0 {
@@ -830,14 +832,36 @@ impl<F: ResizableFamily> Drop for ResizableHash<F> {
 
 /// Recover a resizable link-free hash from the durable areas of `id`.
 pub fn recover_linkfree(id: PoolId, default_nbuckets: usize) -> (ResizableLfHash, RecoveredStats) {
-    let (list, stats) = crate::sets::linkfree::recover_list(id);
-    (ResizableHash::adopt(list, default_nbuckets), stats)
+    let (h, s, _) = recover_linkfree_timed(id, default_nbuckets, crate::sets::recovery::default_threads());
+    (h, s)
+}
+
+/// [`recover_linkfree`] with an explicit recovery worker count: the whole
+/// durable image is the family list in okey order, so the engine's
+/// parallel scan + segmented chain relink apply directly.
+pub fn recover_linkfree_timed(
+    id: PoolId,
+    default_nbuckets: usize,
+    threads: usize,
+) -> (ResizableLfHash, RecoveredStats, crate::sets::recovery::PhaseTimings) {
+    let (list, stats, t) = crate::sets::linkfree::recover_list_timed(id, threads);
+    (ResizableHash::adopt(list, default_nbuckets), stats, t)
 }
 
 /// Recover a resizable SOFT hash from the durable areas of `id`.
 pub fn recover_soft(id: PoolId, default_nbuckets: usize) -> (ResizableSoftHash, RecoveredStats) {
-    let (list, stats) = crate::sets::soft::recover_list(id);
-    (ResizableHash::adopt(list, default_nbuckets), stats)
+    let (h, s, _) = recover_soft_timed(id, default_nbuckets, crate::sets::recovery::default_threads());
+    (h, s)
+}
+
+/// [`recover_soft`] with an explicit recovery worker count.
+pub fn recover_soft_timed(
+    id: PoolId,
+    default_nbuckets: usize,
+    threads: usize,
+) -> (ResizableSoftHash, RecoveredStats, crate::sets::recovery::PhaseTimings) {
+    let (list, stats, t) = crate::sets::soft::recover_list_timed(id, threads);
+    (ResizableHash::adopt(list, default_nbuckets), stats, t)
 }
 
 /// Recover a resizable log-free hash from pool `id` (durable anchor: the
@@ -846,8 +870,18 @@ pub fn recover_logfree(
     id: PoolId,
     default_nbuckets: usize,
 ) -> (ResizableLogFreeHash, RecoveredStats) {
-    let (list, stats) = crate::sets::logfree::recover_list(id);
-    (ResizableHash::adopt(list, default_nbuckets), stats)
+    let (h, s, _) = recover_logfree_timed(id, default_nbuckets, crate::sets::recovery::default_threads());
+    (h, s)
+}
+
+/// [`recover_logfree`] with an explicit recovery worker count.
+pub fn recover_logfree_timed(
+    id: PoolId,
+    default_nbuckets: usize,
+    threads: usize,
+) -> (ResizableLogFreeHash, RecoveredStats, crate::sets::recovery::PhaseTimings) {
+    let (list, stats, t) = crate::sets::logfree::recover_list_timed(id, threads);
+    (ResizableHash::adopt(list, default_nbuckets), stats, t)
 }
 
 #[cfg(test)]

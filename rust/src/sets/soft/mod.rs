@@ -21,5 +21,11 @@ pub use hash::SoftHash;
 pub use list::SoftList;
 pub use node::{snode_gen, SNode, SNODE_SIZE};
 pub use pnode::PNode;
-pub use recovery::{recover_hash, recover_list, RecoveredStats};
-pub use skiplist::{recover_skiplist, SoftSkipList};
+// The accelerated recovery path reuses the family's relink rule and
+// core constructor.
+#[cfg(feature = "accel")]
+pub(crate) use recovery::{adopt_core as recovery_adopt_core, SoftClassify};
+pub use recovery::{
+    recover_hash, recover_hash_timed, recover_list, recover_list_timed, RecoveredStats,
+};
+pub use skiplist::{recover_skiplist, recover_skiplist_timed, SoftSkipList};

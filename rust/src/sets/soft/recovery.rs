@@ -1,14 +1,16 @@
-//! SOFT recovery (paper §4.6).
-//!
-//! Only PNodes survive a crash — every intention state is lost with the
-//! volatile heap, so membership is decided purely by the three persistent
-//! flags: member ⇔ `validStart == validEnd != deleted`. For each member a
-//! fresh volatile node is built (pValidity := `validStart`, state :=
-//! "inserted") and linked — with zero psyncs — into a new structure.
-//! Invalid/deleted PNodes are normalised and reclaimed.
+//! SOFT recovery (paper §4.6) via the shared engine
+//! ([`crate::sets::recovery`]): only PNodes survive a crash, so
+//! membership is purely the three persistent flags — member ⇔
+//! `validStart == validEnd != deleted` — and each member gets a fresh
+//! volatile node (pValidity := `validStart`, state "inserted"), linked
+//! with zero psyncs; invalid/deleted PNodes are normalised and reclaimed.
+//! [`SoftClassify`] is the flag rule plus that SNode materialisation;
+//! scan workers allocate from their own thread's slab, so the parallel
+//! scan stays allocation-lock-free.
 
 use crate::alloc::{DurablePool, Ebr, VolatilePool};
 use crate::pmem::PoolId;
+use crate::sets::recovery::{self as engine, Classify, PhaseTimings};
 use crate::sets::tagged::State;
 use crate::util::mix64;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -19,91 +21,97 @@ use super::node::{SNode, SNODE_SIZE};
 use super::pnode::PNode;
 use super::SoftHash;
 
-pub use crate::sets::linkfree::RecoveredStats;
+pub use crate::sets::recovery::RecoveredStats;
 
-/// Scan PNode areas: rebuild volatile nodes for members, reclaim the rest.
-fn scan(core: &SoftCore) -> (Vec<(u64, *mut SNode)>, RecoveredStats) {
-    let mut members = Vec::new();
-    let mut stats = RecoveredStats::default();
-    for slot in core.dpool.iter_slots() {
-        let pn = slot as *mut PNode;
-        unsafe {
-            if (*pn).is_member() {
-                let vn = core.vpool.alloc() as *mut SNode;
-                std::ptr::write(
-                    vn,
-                    SNode {
-                        key: (*pn).key.load(Ordering::Relaxed),
-                        value: (*pn).value.load(Ordering::Relaxed),
-                        pptr: pn,
-                        p_validity: (*pn).current_validity(),
-                        next: AtomicU64::new(State::Inserted as u64),
-                    },
-                );
-                members.push(((*vn).key, vn));
-                stats.members += 1;
-            } else {
-                core.dpool.normalize_slot(slot);
-                core.dpool.free(slot);
-                stats.reclaimed += 1;
-            }
-        }
-    }
-    let mut keys: Vec<u64> = members.iter().map(|m| m.0).collect();
-    keys.sort_unstable();
-    keys.dedup();
-    assert_eq!(keys.len(), members.len(), "duplicate keys in durable image");
-    (members, stats)
+/// The SOFT flag rule for the engine. Member handles are the *fresh
+/// volatile* SNodes (built during classification), not the PNodes.
+pub(crate) struct SoftClassify<'a> {
+    pub core: &'a SoftCore,
 }
 
-unsafe fn relink_chain(members: &[(u64, *mut SNode)]) -> u64 {
-    let mut next_val = State::Inserted as u64; // null ptr, inserted state
-    for &(_, node) in members.iter().rev() {
-        // Each node: state "inserted", pointing at the previous chain head.
-        (*node).next.store(next_val, Ordering::Relaxed);
-        next_val = node as u64 | State::Inserted as u64;
+impl Classify for SoftClassify<'_> {
+    const FAMILY: &'static str = "soft";
+    const NULL_LINK: u64 = State::Inserted as u64; // null ptr, inserted state
+
+    unsafe fn classify(&self, slot: *mut u8) -> Option<(u64, usize)> {
+        let pn = slot as *mut PNode;
+        if (*pn).is_member() {
+            let vn = self.core.vpool.alloc() as *mut SNode;
+            std::ptr::write(
+                vn,
+                SNode {
+                    key: (*pn).key.load(Ordering::Relaxed),
+                    value: (*pn).value.load(Ordering::Relaxed),
+                    pptr: pn,
+                    p_validity: (*pn).current_validity(),
+                    next: AtomicU64::new(State::Inserted as u64),
+                },
+            );
+            Some(((*vn).key, vn as usize))
+        } else {
+            None
+        }
     }
-    next_val
+
+    unsafe fn link_word(&self, node: usize) -> u64 {
+        node as u64 | State::Inserted as u64
+    }
+
+    unsafe fn link(&self, node: usize, next: u64) {
+        (*(node as *mut SNode)).next.store(next, Ordering::Relaxed);
+    }
+}
+
+/// Adopt `id`'s durable areas into a fresh SoftCore (also used by the
+/// accelerated recovery path, so the pool/slab setup cannot diverge).
+pub(crate) fn adopt_core(id: PoolId) -> SoftCore {
+    SoftCore::from_parts(
+        Arc::new(DurablePool::adopt(id, 64, PNode::init_free_pattern)),
+        Arc::new(VolatilePool::new(SNODE_SIZE)),
+        Arc::new(Ebr::new()),
+    )
 }
 
 /// Rebuild a SOFT list from the durable areas of `id`.
 pub fn recover_list(id: PoolId) -> (SoftList, RecoveredStats) {
-    let core = SoftCore::from_parts(
-        Arc::new(DurablePool::adopt(id, 64, PNode::init_free_pattern)),
-        Arc::new(VolatilePool::new(SNODE_SIZE)),
-        Arc::new(Ebr::new()),
-    );
-    let (mut members, stats) = scan(&core);
-    members.sort_unstable_by_key(|m| m.0);
-    let head = unsafe { relink_chain(&members) };
+    let (l, s, _) = recover_list_timed(id, engine::default_threads());
+    (l, s)
+}
+
+/// [`recover_list`] with an explicit recovery worker count.
+pub fn recover_list_timed(id: PoolId, threads: usize) -> (SoftList, RecoveredStats, PhaseTimings) {
+    let core = adopt_core(id);
+    let mut rec = engine::scan(&core.dpool, &SoftClassify { core: &core }, threads);
+    rec.sort_by_key();
+    let head = unsafe { rec.relink_chain(&SoftClassify { core: &core }) };
     core.dpool.persist_all_regions();
-    (SoftList::from_parts(head, core), stats)
+    (SoftList::from_parts(head, core), rec.stats, rec.timings)
 }
 
 /// Rebuild a SOFT hash set from the durable areas of `id`.
 pub fn recover_hash(id: PoolId, nbuckets: usize) -> (SoftHash, RecoveredStats) {
-    let core = SoftCore::from_parts(
-        Arc::new(DurablePool::adopt(id, 64, PNode::init_free_pattern)),
-        Arc::new(VolatilePool::new(SNODE_SIZE)),
-        Arc::new(Ebr::new()),
-    );
-    let (mut members, stats) = scan(&core);
+    let (h, s, _) = recover_hash_timed(id, nbuckets, engine::default_threads());
+    (h, s)
+}
+
+/// [`recover_hash`] with an explicit recovery worker count (bucket-
+/// partitioned relink).
+pub fn recover_hash_timed(
+    id: PoolId,
+    nbuckets: usize,
+    threads: usize,
+) -> (SoftHash, RecoveredStats, PhaseTimings) {
+    let core = adopt_core(id);
+    let mut rec = engine::scan(&core.dpool, &SoftClassify { core: &core }, threads);
     let hash = SoftHash::from_parts(nbuckets, core);
     let mask = (hash.nbuckets() - 1) as u64;
-    members.sort_unstable_by_key(|m| ((mix64(m.0) & mask), m.0));
-    let mut i = 0;
-    while i < members.len() {
-        let b = (mix64(members[i].0) & mask) as usize;
-        let mut j = i;
-        while j < members.len() && (mix64(members[j].0) & mask) as usize == b {
-            j += 1;
-        }
-        let head_val = unsafe { relink_chain(&members[i..j]) };
-        hash.buckets[b].store(head_val, Ordering::Relaxed);
-        i = j;
+    let bucket_of = |k: u64| (mix64(k) & mask) as usize;
+    rec.sort_by_bucket(bucket_of);
+    for (b, head) in unsafe { rec.relink_buckets(&SoftClassify { core: &hash.core }, &bucket_of) } {
+        hash.buckets[b].store(head, Ordering::Relaxed);
     }
     hash.core.dpool.persist_all_regions();
-    (hash, stats)
+    (hash, rec.stats, rec.timings)
 }
 
 #[cfg(test)]

@@ -259,7 +259,18 @@ impl crate::sets::ConcurrentSet for SoftSkipList {
 /// Recover a SOFT skip list: bottom level via the standard PNode scan
 /// (fresh volatile nodes, zero psyncs), index rebuilt randomized.
 pub fn recover_skiplist(id: PoolId) -> (SoftSkipList, RecoveredStats) {
-    let (list, stats) = super::recover_list(id);
+    let (s, stats, _) = recover_skiplist_timed(id, crate::sets::recovery::default_threads());
+    (s, stats)
+}
+
+/// [`recover_skiplist`] with an explicit recovery worker count (the scan +
+/// chain relink parallelise through the engine; the index rebuild is a
+/// sequential walk over the members).
+pub fn recover_skiplist_timed(
+    id: PoolId,
+    threads: usize,
+) -> (SoftSkipList, RecoveredStats, crate::sets::recovery::PhaseTimings) {
+    let (list, stats, timings) = super::recover_list_timed(id, threads);
     // Adopt the recovered chain without dropping the list (its Drop would
     // free every linked node pair).
     let (head_val, core0) = list.into_parts();
@@ -273,7 +284,7 @@ pub fn recover_skiplist(id: PoolId) -> (SoftSkipList, RecoveredStats) {
             curr = ptr_of::<SNode>((*curr).next.load(Ordering::Relaxed));
         }
     }
-    (skip, stats)
+    (skip, stats, timings)
 }
 
 /// Keep the volatile pool type name referenced for docs symmetry.

@@ -1,0 +1,273 @@
+//! Differential recovery tests: for every durable shape (list, fixed
+//! hash, skip list, resizable hash) of every family, sequential
+//! (`threads = 1`) and parallel (`threads = 8`) recovery of identically
+//! crashed images must produce the same member set, the same
+//! `RecoveredStats`, and — pinned exactly — the same fence/flush counts:
+//! the engine's worker pool classifies and relinks without a single
+//! additional psync (all recovery psyncs are the final bulk persists on
+//! the coordinating thread). Both crash policies are exercised: the
+//! pessimistic one (only psync'd lines survive) and random eviction
+//! (extra unflushed lines may survive — acked state must be identical
+//! either way, since no completed op ever depends on eviction luck).
+
+use durasets::coordinator::DuraKv;
+use durasets::pmem::{self, stats, CrashPolicy, PoolId};
+use durasets::sets::recovery::PhaseTimings;
+use durasets::sets::{linkfree, logfree, resizable, soft, ConcurrentSet, RecoveredStats};
+use durasets::util::rng::Xoshiro256;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Exact global fence/flush deltas must be attributable to one recovery
+/// at a time: every test in this binary serialises on this lock (cargo
+/// runs test binaries one after another, so only this file's threads
+/// touch the counters meanwhile).
+static LOCK: Mutex<()> = Mutex::new(());
+
+const PAR_THREADS: usize = 8;
+const KEYSPACE: u64 = 500;
+
+/// Deterministic single-threaded churn; returns the exact model.
+fn churn<S: ConcurrentSet + ?Sized>(s: &S, seed: u64) -> BTreeMap<u64, u64> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut model = BTreeMap::new();
+    for _ in 0..4000 {
+        let k = rng.below(KEYSPACE);
+        match rng.below(3) {
+            0 | 1 => {
+                let v = k.wrapping_mul(0x9E37) ^ 0xBEEF;
+                assert_eq!(s.insert(k, v), model.insert(k, v).is_none(), "insert {k}");
+            }
+            _ => {
+                assert_eq!(s.remove(k), model.remove(&k).is_some(), "remove {k}");
+            }
+        }
+    }
+    model
+}
+
+/// Build two identical structures, crash both, recover one sequentially
+/// and one with the worker pool, and compare everything.
+fn diff_case<S, T, FB, FR>(name: &str, policy: CrashPolicy, build: FB, recover: FR)
+where
+    S: ConcurrentSet,
+    T: ConcurrentSet,
+    FB: Fn() -> S,
+    FR: Fn(PoolId, usize) -> (T, RecoveredStats, PhaseTimings),
+{
+    let _sim = pmem::sim_session();
+    let a = build();
+    let b = build();
+    let model = churn(&a, 0xD1FF);
+    let model_b = churn(&b, 0xD1FF);
+    assert_eq!(model, model_b, "{name}: identical op streams diverged");
+    let (ida, idb) = (a.durable_pool().unwrap(), b.durable_pool().unwrap());
+    a.prepare_crash();
+    b.prepare_crash();
+    drop(a);
+    drop(b);
+    pmem::crash_pools(policy, &[ida, idb]);
+
+    let f0 = stats::snapshot();
+    let (ra, sa, _) = recover(ida, 1);
+    let f1 = stats::snapshot();
+    let (rb, sb, _) = recover(idb, PAR_THREADS);
+    let f2 = stats::snapshot();
+
+    assert_eq!(sa, sb, "{name}: sequential vs parallel RecoveredStats");
+    assert_eq!(sa.members, model.len(), "{name}: member count vs model");
+    let (seq, par) = (f1.since(&f0), f2.since(&f1));
+    assert_eq!(seq.fences, par.fences, "{name}: parallel recovery must not add psyncs");
+    assert_eq!(seq.flushes, par.flushes, "{name}: parallel recovery must not add flushes");
+
+    for k in 0..KEYSPACE {
+        let want = model.get(&k).copied();
+        assert_eq!(ra.get(k), want, "{name}: sequential recovery, key {k}");
+        assert_eq!(rb.get(k), want, "{name}: parallel recovery, key {k}");
+    }
+    // Both recovered structures stay fully operational.
+    assert!(ra.insert(KEYSPACE + 1, 1), "{name}: seq insert after recovery");
+    assert!(rb.insert(KEYSPACE + 1, 1), "{name}: par insert after recovery");
+}
+
+/// Both crash policies per shape; random eviction may persist *extra*
+/// lines, never fewer, so all four recoveries agree on the acked state.
+fn diff_both<S, T>(
+    name: &str,
+    build: impl Fn() -> S,
+    recover: impl Fn(PoolId, usize) -> (T, RecoveredStats, PhaseTimings),
+) where
+    S: ConcurrentSet,
+    T: ConcurrentSet,
+{
+    let _g = LOCK.lock().unwrap();
+    diff_case(&format!("{name}/pessimistic"), CrashPolicy::PESSIMISTIC, &build, &recover);
+    diff_case(&format!("{name}/evict"), CrashPolicy::random(0.4, 0x5EED), &build, &recover);
+}
+
+#[test]
+fn lists_sequential_vs_parallel() {
+    diff_both("linkfree-list", linkfree::LfList::new, linkfree::recover_list_timed);
+    diff_both("soft-list", soft::SoftList::new, soft::recover_list_timed);
+    diff_both("logfree-list", logfree::LogFreeList::new, logfree::recover_list_timed);
+}
+
+#[test]
+fn fixed_hashes_sequential_vs_parallel() {
+    diff_both(
+        "linkfree-hash",
+        || linkfree::LfHash::new(32),
+        |id, t| linkfree::recover_hash_timed(id, 32, t),
+    );
+    diff_both(
+        "soft-hash",
+        || soft::SoftHash::new(16),
+        |id, t| soft::recover_hash_timed(id, 16, t),
+    );
+    diff_both(
+        "logfree-hash",
+        || logfree::LogFreeHash::new(16),
+        logfree::recover_hash_timed,
+    );
+}
+
+#[test]
+fn skiplists_sequential_vs_parallel() {
+    diff_both(
+        "linkfree-skiplist",
+        linkfree::LfSkipList::new,
+        linkfree::recover_skiplist_timed,
+    );
+    diff_both("soft-skiplist", soft::SoftSkipList::new, soft::recover_skiplist_timed);
+}
+
+#[test]
+fn resizable_hashes_sequential_vs_parallel() {
+    diff_both(
+        "resizable-linkfree",
+        || resizable::ResizableHash::new_linkfree(2),
+        |id, t| resizable::recover_linkfree_timed(id, 2, t),
+    );
+    diff_both(
+        "resizable-soft",
+        || resizable::ResizableHash::new_soft(2),
+        |id, t| resizable::recover_soft_timed(id, 2, t),
+    );
+    diff_both(
+        "resizable-logfree",
+        || resizable::ResizableHash::new_logfree(2),
+        |id, t| resizable::recover_logfree_timed(id, 2, t),
+    );
+}
+
+/// The small-keyspace cases above fit one allocator area, where the
+/// engine short-circuits to the sequential path by design — so this case
+/// makes the parallel machinery *actually* engage: >2 areas (multi-worker
+/// scan over the area cursor) and >4096 members (segmented chain relink
+/// with boundary stitching), then pins the same stats / contents / exact
+/// psync-count equalities.
+#[test]
+fn large_pool_parallel_engine_engages() {
+    let _g = LOCK.lock().unwrap();
+    let _sim = pmem::sim_session();
+    const N: u64 = 10_000;
+    let mk = || {
+        let h = resizable::ResizableHash::new_linkfree(2);
+        for k in 0..N {
+            assert!(h.insert(k, k ^ 0xABCD));
+        }
+        for k in 0..1000u64 {
+            assert!(h.remove(k * 7));
+        }
+        h
+    };
+    let (a, b) = (mk(), mk());
+    let (ida, idb) = (a.pool_id(), b.pool_id());
+    a.crash_preserve();
+    b.crash_preserve();
+    drop(a);
+    drop(b);
+    pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[ida, idb]);
+
+    let f0 = stats::snapshot();
+    let (ra, sa, _) = resizable::recover_linkfree_timed(ida, 2, 1);
+    let f1 = stats::snapshot();
+    let (rb, sb, _) = resizable::recover_linkfree_timed(idb, 2, 8);
+    let f2 = stats::snapshot();
+
+    assert_eq!(sa.members, (N - 1000) as usize, "9000 members survive");
+    assert!(sa.members > 4096, "must cross the parallel-relink threshold");
+    assert_eq!(sa, sb, "large pool: sequential vs parallel stats");
+    let (seq, par) = (f1.since(&f0), f2.since(&f1));
+    assert_eq!(seq.fences, par.fences, "large pool: parallel recovery added psyncs");
+    assert_eq!(seq.flushes, par.flushes, "large pool: parallel recovery added flushes");
+    for k in 0..N {
+        // Removed keys were exactly 7*i for i in 0..1000.
+        let removed = k % 7 == 0 && k / 7 < 1000;
+        let want = if removed { None } else { Some(k ^ 0xABCD) };
+        assert_eq!(ra.get(k), want, "seq key {k}");
+        assert_eq!(rb.get(k), want, "par key {k}");
+    }
+}
+
+/// The resizable differential must also preserve the bucket-count epoch
+/// identically on both paths (growth happened pre-crash).
+#[test]
+fn resizable_epoch_identical_on_both_paths() {
+    let _g = LOCK.lock().unwrap();
+    let _sim = pmem::sim_session();
+    let mk = || {
+        let h = resizable::ResizableHash::new_soft(2);
+        for k in 0..300u64 {
+            assert!(h.insert(k, k));
+        }
+        h
+    };
+    let (a, b) = (mk(), mk());
+    assert!(a.nbuckets() >= 8, "test must exercise growth");
+    let (ida, idb) = (a.pool_id(), b.pool_id());
+    let grown = a.nbuckets();
+    a.crash_preserve();
+    b.crash_preserve();
+    drop(a);
+    drop(b);
+    pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[ida, idb]);
+    let (ra, _, _) = resizable::recover_soft_timed(ida, 2, 1);
+    let (rb, _, _) = resizable::recover_soft_timed(idb, 2, PAR_THREADS);
+    assert_eq!(ra.nbuckets(), grown);
+    assert_eq!(rb.nbuckets(), grown);
+}
+
+/// Satellite: the measured RTO reaches operators — a recovered store's
+/// wire `STATS` line carries the recovery report (wall, phase breakdown,
+/// threads) instead of dropping it with the recover() return value.
+#[test]
+fn stats_wire_line_carries_recovery_report() {
+    use std::io::{BufRead, BufReader, Write};
+    let _g = LOCK.lock().unwrap();
+    let _sim = pmem::sim_session();
+    let mut cfg = durasets::config::Config::default();
+    cfg.shards = 2;
+    cfg.key_range = 4096;
+    cfg.sim = true;
+    cfg.psync_ns = 0;
+    let kv = DuraKv::create(cfg);
+    for k in 0..200u64 {
+        assert!(kv.put(k, k));
+    }
+    let (kv2, report) = kv.crash(CrashPolicy::PESSIMISTIC).recover().unwrap();
+    assert_eq!(report.members, 200);
+
+    let server = durasets::coordinator::server::serve(std::sync::Arc::new(kv2), 0).unwrap();
+    let stream = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "STATS").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("STATS ops="), "{line}");
+    assert!(line.contains("recovery=["), "STATS must carry the recovery report: {line}");
+    assert!(line.contains("members=200"), "{line}");
+    assert!(line.contains("wall="), "{line}");
+    drop(server);
+}

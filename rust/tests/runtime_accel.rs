@@ -3,10 +3,11 @@
 
 use durasets::pmem::{self, CrashPolicy};
 use durasets::runtime::recovery_accel::{
-    recover_linkfree_hash_accel, recover_soft_hash_accel,
+    recover_linkfree_hash_accel, recover_resizable_linkfree_accel, recover_resizable_soft_accel,
+    recover_soft_hash_accel,
 };
 use durasets::runtime::RecoveryPlanner;
-use durasets::sets::{linkfree, soft, ConcurrentSet};
+use durasets::sets::{linkfree, resizable, soft, ConcurrentSet};
 use durasets::util::rng::Xoshiro256;
 
 fn have_artifacts() -> bool {
@@ -110,6 +111,116 @@ fn linkfree_accel_recovery_matches_rust_recovery() {
     snap_a.sort_unstable();
     snap_b.sort_unstable();
     assert_eq!(snap_a, snap_b);
+}
+
+/// The store path's actual layout: resizable hashes persist one family
+/// list in okey order. The artifact path (classification kernel, mask 0)
+/// must match the exact Rust recovery bit-for-bit — members, stats, and
+/// the restored bucket-count epoch.
+#[test]
+fn resizable_accel_recovery_matches_rust_recovery() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let _g = LOCK.lock().unwrap();
+    let _sim = pmem::sim_session();
+
+    // Link-free pair.
+    let a = resizable::ResizableHash::new_linkfree(2);
+    let b = resizable::ResizableHash::new_linkfree(2);
+    // SOFT pair.
+    let c = resizable::ResizableHash::new_soft(2);
+    let d = resizable::ResizableHash::new_soft(2);
+    let mut rng = Xoshiro256::new(0xACCE3);
+    for _ in 0..5000 {
+        let k = rng.below(512);
+        match rng.below(3) {
+            0 => {
+                a.insert(k, k * 3);
+                b.insert(k, k * 3);
+                c.insert(k, k * 3);
+                d.insert(k, k * 3);
+            }
+            1 => {
+                a.remove(k);
+                b.remove(k);
+                c.remove(k);
+                d.remove(k);
+            }
+            _ => {}
+        }
+    }
+    let grown_lf = a.nbuckets();
+    let grown_soft = c.nbuckets();
+    assert!(grown_lf >= 8 && grown_soft >= 8, "must exercise growth");
+    let ids = [a.pool_id(), b.pool_id(), c.pool_id(), d.pool_id()];
+    a.crash_preserve();
+    b.crash_preserve();
+    c.crash_preserve();
+    d.crash_preserve();
+    drop((a, b, c, d));
+    pmem::crash_pools(CrashPolicy::random(0.2, 17), &ids);
+
+    let planner = RecoveryPlanner::load().unwrap();
+    let (ha, sa, _) = recover_resizable_linkfree_accel(&planner, ids[0], 2, 8).unwrap();
+    let (hb, sb) = resizable::recover_linkfree(ids[1], 2);
+    assert_eq!(sa.members, sb.members, "linkfree accel vs rust member count");
+    assert_eq!(sa.reclaimed, sb.reclaimed);
+    assert_eq!(ha.nbuckets(), grown_lf, "accel path must restore the epoch");
+    assert_eq!(hb.nbuckets(), grown_lf);
+    let (mut snap_a, mut snap_b) = (ha.snapshot(), hb.snapshot());
+    snap_a.sort_unstable();
+    snap_b.sort_unstable();
+    assert_eq!(snap_a, snap_b, "linkfree recovered contents differ");
+
+    let (hc, sc, _) = recover_resizable_soft_accel(&planner, ids[2], 2, 1).unwrap();
+    let (hd, sd) = resizable::recover_soft(ids[3], 2);
+    assert_eq!(sc.members, sd.members, "soft accel vs rust member count");
+    assert_eq!(hc.nbuckets(), grown_soft);
+    assert_eq!(hd.nbuckets(), grown_soft);
+    let (mut snap_c, mut snap_d) = (hc.snapshot(), hd.snapshot());
+    snap_c.sort_unstable();
+    snap_d.sort_unstable();
+    assert_eq!(snap_c, snap_d, "soft recovered contents differ");
+
+    // Both recovered tables stay fully operational (growth included).
+    for k in 10_000..10_200u64 {
+        assert_eq!(ha.insert(k, k), hb.insert(k, k));
+        assert_eq!(hc.insert(k, k), hd.insert(k, k));
+    }
+}
+
+/// Offline / artifact-less builds must fall back to the exact Rust path
+/// through the same entry point, without claiming acceleration. (This
+/// test runs in every configuration; with artifacts present it instead
+/// pins that the store path now *does* claim acceleration.)
+#[test]
+fn recover_accel_store_path_engages_or_falls_back() {
+    let _g = LOCK.lock().unwrap();
+    let _sim = pmem::sim_session();
+    let mut cfg = durasets::config::Config::default();
+    cfg.family = durasets::sets::Family::LinkFree;
+    cfg.shards = 2;
+    cfg.key_range = 4096;
+    cfg.sim = true;
+    cfg.psync_ns = 0;
+    let kv = durasets::coordinator::DuraKv::create(cfg);
+    for k in 0..400u64 {
+        assert!(kv.put(k, k + 3));
+    }
+    let ticket = kv.crash(CrashPolicy::PESSIMISTIC);
+    let (kv2, report) = ticket.recover_accel().unwrap();
+    assert_eq!(report.members, 400);
+    let planner_available = RecoveryPlanner::with_cached(|_| Ok(())).is_ok();
+    assert_eq!(
+        report.accelerated, planner_available,
+        "accelerated flag must reflect whether the artifact path actually ran"
+    );
+    for k in 0..400u64 {
+        assert_eq!(kv2.get(k), Some(k + 3), "key {k}");
+    }
+    assert!(kv2.put(9999, 1), "store writable after accel/fallback recovery");
 }
 
 #[test]
