@@ -13,6 +13,7 @@
 
 pub mod recovery;
 pub mod report;
+pub mod rwpath;
 
 use crate::config::Structure;
 use crate::pmem::stats;

@@ -1,0 +1,242 @@
+//! `bench --fig rwpath`: the served two-lane request path under read
+//! fraction × pipeline depth.
+//!
+//! Each point starts a fresh server (SOFT, 2 shards), prefills half the
+//! key range, and drives pipelined client connections: every client
+//! writes a burst of `depth` op lines (drawn from the deterministic
+//! workload stream), reads the `depth` replies, repeats until the phase
+//! deadline. Reported per point:
+//!
+//! * wire throughput (Kops/s) — the end-to-end number the two-lane
+//!   refactor moves;
+//! * read-lane ops and read-lane fences/flushes — the psync-free claim,
+//!   **pinned 0** for SOFT (CI fails the rwpath job otherwise);
+//! * the adaptive-K gauge (`last`/`lo`/`hi`) — depth 1 must converge the
+//!   drain bound down (latency mode), saturated depths must hold it up
+//!   (fence-amortization mode): the "K demonstrably moves" criterion.
+//!
+//! Read fractions {50, 90, 99}; the 99% row uses the contains-heavy
+//! Zipfian preset ([`WorkloadSpec::contains_heavy_zipf`]) — hot-key
+//! lookup traffic, the read fast path's target workload.
+
+use crate::config::Config;
+use crate::coordinator::{server, DuraKv};
+use crate::sets::Family;
+use crate::workload::{Op, WorkloadSpec};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Read fractions swept (percent). 99 uses the zipf preset.
+pub const READ_FRACS: [u32; 3] = [50, 90, 99];
+
+/// Pipeline depths swept (op lines per client burst).
+pub const DEPTHS: [usize; 3] = [1, 16, 128];
+
+/// Client connections per point.
+const CLIENTS: usize = 2;
+
+const KEY_RANGE: u64 = 1 << 14;
+
+/// One measured point of the sweep.
+pub struct RwPoint {
+    pub read_pct: u32,
+    pub depth: usize,
+    pub ops: u64,
+    pub elapsed: Duration,
+    pub rl_ops: u64,
+    pub rl_fences: u64,
+    pub rl_flushes: u64,
+    pub k_last: u64,
+    pub k_lo: u64,
+    pub k_hi: u64,
+    pub batches: u64,
+}
+
+impl RwPoint {
+    pub fn kops(&self) -> f64 {
+        self.ops as f64 / self.elapsed.as_secs_f64() / 1e3
+    }
+}
+
+fn op_line(op: Op) -> String {
+    match op {
+        Op::Contains(k) => format!("HAS {k}\n"),
+        Op::Insert(k) => format!("PUT {k} {k}\n"),
+        Op::Remove(k) => format!("DEL {k}\n"),
+    }
+}
+
+fn spec_for(read_pct: u32, seed: u64) -> WorkloadSpec {
+    if read_pct >= 99 {
+        WorkloadSpec::contains_heavy_zipf(KEY_RANGE, seed)
+    } else {
+        WorkloadSpec::uniform(KEY_RANGE, read_pct, seed)
+    }
+}
+
+fn run_point(read_pct: u32, depth: usize, duration: Duration, seed: u64) -> RwPoint {
+    let mut cfg = Config::default();
+    cfg.family = Family::Soft;
+    cfg.shards = 2;
+    cfg.key_range = KEY_RANGE;
+    cfg.psync_ns = 100;
+    let kv = Arc::new(DuraKv::create(cfg));
+    // Prefill half the range so reads hit ~50% (the paper's setup),
+    // through the batch path (fence-amortized, fast).
+    let fill: Vec<crate::sets::SetOp> = (0..KEY_RANGE)
+        .step_by(2)
+        .map(|k| crate::sets::SetOp::Insert(k, k))
+        .collect();
+    let _ = kv.apply_batch(&fill);
+    let srv = server::serve(kv.clone(), 0).expect("rwpath server");
+    let addr = srv.addr;
+    let spec = spec_for(read_pct, seed);
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..CLIENTS as u64)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("rwpath client connect");
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut stream_ops = spec.stream(t);
+                let mut line = String::new();
+                let mut ops = 0u64;
+                while t0.elapsed() < duration {
+                    let mut burst = String::new();
+                    for _ in 0..depth {
+                        burst.push_str(&op_line(stream_ops.next_op()));
+                    }
+                    writer.write_all(burst.as_bytes()).unwrap();
+                    writer.flush().unwrap();
+                    for _ in 0..depth {
+                        line.clear();
+                        reader.read_line(&mut line).unwrap();
+                    }
+                    ops += depth as u64;
+                }
+                let _ = writer.write_all(b"QUIT\n");
+                ops
+            })
+        })
+        .collect();
+    let ops: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let elapsed = t0.elapsed();
+    use std::sync::atomic::Ordering;
+    let m = &kv.metrics;
+    let point = RwPoint {
+        read_pct,
+        depth,
+        ops,
+        elapsed,
+        rl_ops: m.rl_ops.load(Ordering::Relaxed),
+        rl_fences: m.rl_fences.load(Ordering::Relaxed),
+        rl_flushes: m.rl_flushes.load(Ordering::Relaxed),
+        k_last: m.k_last(),
+        k_lo: m.k_lo(),
+        k_hi: m.k_hi(),
+        batches: m.batches.load(Ordering::Relaxed),
+    };
+    drop(srv);
+    point
+}
+
+/// Sweep read fraction × pipeline depth.
+pub fn sweep(duration: Duration, seed: u64) -> Vec<RwPoint> {
+    let mut points = Vec::new();
+    for &rf in &READ_FRACS {
+        for &d in &DEPTHS {
+            points.push(run_point(rf, d, duration, seed));
+        }
+    }
+    points
+}
+
+/// Text table (the adaptive-K movement and read-lane psyncs are the
+/// columns the acceptance criteria read).
+pub fn render(points: &[RwPoint]) -> String {
+    let mut out = String::new();
+    out.push_str("== rwpath: served two-lane path (soft, 2 shards; 99% row = zipf preset) ==\n");
+    out.push_str(&format!(
+        "{:>6} {:>6} | {:>9} | {:>9} {:>9} {:>9} | {:>6} {:>5} {:>5} | {:>8}\n",
+        "read%", "depth", "Kops/s", "rl_ops", "rl_fence", "rl_flush", "k_last", "k_lo", "k_hi",
+        "batches"
+    ));
+    for p in points {
+        out.push_str(&format!(
+            "{:>6} {:>6} | {:>9.1} | {:>9} {:>9} {:>9} | {:>6} {:>5} {:>5} | {:>8}\n",
+            p.read_pct,
+            p.depth,
+            p.kops(),
+            p.rl_ops,
+            p.rl_fences,
+            p.rl_flushes,
+            p.k_last,
+            p.k_lo,
+            p.k_hi,
+            p.batches,
+        ));
+    }
+    out
+}
+
+/// JSON points for `BENCH_rwpath.json` (CI fails the job on any
+/// `read_lane_fences`/`read_lane_flushes` > 0).
+pub fn to_json_points(points: &[RwPoint]) -> Vec<String> {
+    points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"fig\":\"rwpath\",\"x\":\"rf={},depth={}\",\"family\":\"soft\",\"kops\":{:.2},\"ops\":{},\"read_lane_ops\":{},\"read_lane_fences\":{},\"read_lane_flushes\":{},\"adaptive_k_last\":{},\"adaptive_k_lo\":{},\"adaptive_k_hi\":{},\"batches\":{},\"elapsed_ms\":{}}}",
+                p.read_pct,
+                p.depth,
+                p.kops(),
+                p.ops,
+                p.rl_ops,
+                p.rl_fences,
+                p.rl_flushes,
+                p.k_last,
+                p.k_lo,
+                p.k_hi,
+                p.batches,
+                p.elapsed.as_millis(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rwpath_point_reads_ride_the_lane_and_k_adapts() {
+        // One light point and one saturated point: the read lane must
+        // carry the reads psync-free, and the adaptive bound must walk
+        // down under depth-1 load while staying up under depth-64 load.
+        let light = run_point(50, 1, Duration::from_millis(200), 0xA11);
+        assert!(light.ops > 0);
+        assert!(light.rl_ops > 0, "reads must ride the read lane");
+        assert_eq!(light.rl_fences, 0, "soft read lane must not fence");
+        assert_eq!(light.rl_flushes, 0, "soft read lane must not flush");
+        assert!(
+            light.k_lo <= 4,
+            "single-op pipelining must walk K down from 512, k_lo={}",
+            light.k_lo
+        );
+        let heavy = run_point(50, 64, Duration::from_millis(200), 0xA12);
+        assert!(heavy.ops > 0);
+        assert_eq!(heavy.rl_fences, 0);
+        assert!(
+            heavy.k_last >= 8,
+            "K must hold up under saturated load, k_last={}",
+            heavy.k_last
+        );
+        assert!(heavy.k_last > light.k_lo, "the gauge must separate the two regimes");
+        let json = to_json_points(&[light, heavy]);
+        assert!(json[0].contains("\"read_lane_fences\":0"), "{}", json[0]);
+        assert!(json[0].contains("\"fig\":\"rwpath\""));
+    }
+}

@@ -64,28 +64,34 @@ USAGE:
 COMMANDS:
   serve         run the sharded durable KV service (TCP line protocol)
   bench         regenerate a paper figure:
-                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|all
+                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|rwpath|all
                 --json FILE writes machine-readable data points
                 --fig recovery sweeps rebuild wall-clock over recovery
                 threads x pool sizes (--keys N, or DURASETS_RECOVERY_KEYS
                 as a comma list; DURASETS_FULL=1 adds a 1M-node pool)
+                --fig rwpath sweeps the served two-lane path: read
+                fraction {50,90,99} x pipeline depth, reporting read-lane
+                psyncs (pinned 0) and the adaptive-K gauge per point
   crash-test    run ops, crash (sim), recover, verify — end to end
   recover-demo  build a store, crash it, time rust vs XLA-accelerated recovery
   workload      print a sample of the deterministic op stream
   help          this text
 
-PROTOCOL (serve): PUT/GET/DEL/LEN/STATS/QUIT; pipelined lines are group-
-  committed per shard; MULTI <n> + n ops + EXEC frames an explicit batch.
+PROTOCOL (serve): PUT/GET/HAS/DEL/LEN/STATS/QUIT. Updates are group-
+  committed per shard (adaptive K; see STATS adaptk=[..]); pipelined
+  pure reads (GET/HAS) run on a psync-free direct path. MULTI <n> + n
+  ops + EXEC frames an explicit batch; MULTI <n> ATOMIC makes the frame
+  an atomic cross-shard batch (all-or-nothing under crashes).
 
 CONFIG KEYS (file or key=value):
   family=soft|link-free|log-free|volatile   structure=hash|list
   shards=N  key_range=N[K|M]  read_pct=0..100  threads=N
   psync_ns=N  sim=true|false  seed=N  port=N  max_conns=N  duration_ms=N
-  zipf_theta=F
+  zipf_theta=F  group_k_min=N  group_k_max=N
 
 EXAMPLES:
   durasets serve family=soft shards=4 key_range=1M port=7878 max_conns=512
-  durasets bench --fig batch --json BENCH_smoke.json
+  durasets bench --fig rwpath --json BENCH_rwpath.json
   durasets crash-test family=link-free key_range=64K
 ";
 

@@ -57,6 +57,12 @@ pub struct Config {
     /// Max concurrent TCP connections (thread-per-connection bound);
     /// 0 = unlimited. Excess connections are refused with an ERR line.
     pub max_conns: usize,
+    /// Adaptive group commit: floor of a shard worker's drain bound
+    /// (light load converges here — lowest commit latency).
+    pub group_k_min: usize,
+    /// Adaptive group commit: ceiling of the drain bound (saturated load
+    /// converges here — widest fence amortization).
+    pub group_k_max: usize,
     /// Benchmark phase length (milliseconds).
     pub duration_ms: u64,
     /// Zipfian skew; 0 = uniform.
@@ -77,6 +83,8 @@ impl Default for Config {
             seed: 0xD0_5E7,
             port: 7878,
             max_conns: 1024,
+            group_k_min: 1,
+            group_k_max: 512,
             duration_ms: 1000,
             zipf_theta: 0.0,
         }
@@ -135,6 +143,8 @@ impl Config {
             "seed" => self.seed = value.parse()?,
             "port" => self.port = value.parse()?,
             "max_conns" => self.max_conns = value.parse()?,
+            "group_k_min" => self.group_k_min = value.parse()?,
+            "group_k_max" => self.group_k_max = value.parse()?,
             "duration_ms" => self.duration_ms = value.parse()?,
             "zipf_theta" => self.zipf_theta = value.parse()?,
             _ => bail!("unknown config key '{key}'"),
@@ -157,6 +167,12 @@ impl Config {
         }
         if !(0.0..1.0).contains(&self.zipf_theta) {
             bail!("zipf_theta must be in [0, 1)");
+        }
+        if self.group_k_min == 0 || self.group_k_min > self.group_k_max {
+            bail!("group_k_min must be in 1..=group_k_max");
+        }
+        if self.group_k_max > 4096 {
+            bail!("group_k_max must be <= 4096");
         }
         Ok(())
     }
@@ -245,6 +261,22 @@ mod tests {
         assert_eq!(cfg.max_conns, 2);
         assert_eq!(Config::default().max_conns, 1024);
         assert!(Config::load(None, &["max_conns=x".into()]).is_err());
+    }
+
+    #[test]
+    fn group_k_keys_parse_and_validate() {
+        let cfg =
+            Config::load(None, &["group_k_min=4".into(), "group_k_max=64".into()]).unwrap();
+        assert_eq!(cfg.group_k_min, 4);
+        assert_eq!(cfg.group_k_max, 64);
+        assert_eq!(Config::default().group_k_min, 1);
+        assert_eq!(Config::default().group_k_max, 512);
+        assert!(Config::load(None, &["group_k_min=0".into()]).is_err());
+        assert!(
+            Config::load(None, &["group_k_min=64".into(), "group_k_max=8".into()]).is_err(),
+            "min above max must be rejected"
+        );
+        assert!(Config::load(None, &["group_k_max=100000".into()]).is_err());
     }
 
     #[test]

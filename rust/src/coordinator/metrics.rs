@@ -22,6 +22,29 @@ pub struct Metrics {
     pub batch_ops: AtomicU64,
     /// Largest group commit observed.
     pub max_batch: AtomicU64,
+    /// Read-lane bursts executed (server fast path, one per burst with
+    /// reads).
+    pub rl_runs: AtomicU64,
+    /// Ops served through the read lane.
+    pub rl_ops: AtomicU64,
+    /// Fences the read lane issued (pinned 0 for SOFT; link-free/log-free
+    /// may pay read-side helping psyncs when racing updates).
+    pub rl_fences: AtomicU64,
+    /// Flushes the read lane issued (same pin as `rl_fences`).
+    pub rl_flushes: AtomicU64,
+    /// Atomic cross-shard batches executed.
+    pub atomics: AtomicU64,
+    /// Ops inside atomic batches.
+    pub atomic_ops: AtomicU64,
+    /// Committed-but-unretired atomic batches recovery rolled forward.
+    pub rolled_forward: AtomicU64,
+    // Adaptive-K gauge: `k_last` is the most recent bound any worker
+    // reported (plain store — a gauge); `k_lo`/`k_hi` are the cumulative
+    // envelope (fetch_min / fetch_max), so concurrent STATS readers see
+    // monotone values and the envelope proves K actually moved.
+    k_last: AtomicU64,
+    k_lo: AtomicU64,
+    k_hi: AtomicU64,
     latency: [AtomicU64; BUCKETS],
     // Last recovery, as recorded by `CrashTicket` (0 shards = never
     // recovered; see `record_recovery`). Durations in microseconds.
@@ -57,6 +80,16 @@ impl Metrics {
             batches: Z,
             batch_ops: Z,
             max_batch: Z,
+            rl_runs: Z,
+            rl_ops: Z,
+            rl_fences: Z,
+            rl_flushes: Z,
+            atomics: Z,
+            atomic_ops: Z,
+            rolled_forward: Z,
+            k_last: Z,
+            k_lo: AtomicU64::new(u64::MAX),
+            k_hi: Z,
             latency: [Z; BUCKETS],
             rec_shards: Z,
             rec_members: Z,
@@ -85,6 +118,7 @@ impl Metrics {
         self.rec_threads.store(r.threads as u64, Ordering::Relaxed);
         self.rec_accelerated.store(r.accelerated as u64, Ordering::Relaxed);
         self.rec_evicted.store(r.evicted_lines as u64, Ordering::Relaxed);
+        self.record_rolled_forward(r.txn_rolled_forward as u64);
     }
 
     /// Count one batched op with its result (shard worker scatter path).
@@ -112,12 +146,87 @@ impl Metrics {
         }
     }
 
-    /// Count one group commit of `n` ops.
+    /// Count one group commit of `n` ops. Ordering matters for concurrent
+    /// `STATS` readers: the writer goes `max_batch` → `batches` →
+    /// `batch_ops`, and a reader derives `avg_batch` by loading in the
+    /// *reverse* order (`batch_ops`, then `batches`, then `max_batch` —
+    /// see [`Metrics::batch_view`]). Any ops a reader sees were added by
+    /// a writer that had already counted its batch, so the read `batches`
+    /// covers every batch inside the read `batch_ops`; and every such
+    /// batch ran `fetch_max` before that, so the later-read max bounds
+    /// them all. Hence avg ≤ max always, with every counter a plain
+    /// cumulative monotone word.
     #[inline]
     pub fn record_group(&self, n: u64) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_ops.fetch_add(n, Ordering::Relaxed);
         self.max_batch.fetch_max(n, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        // Release: pairs with `batch_view`'s Acquire load, so a reader
+        // that observes these ops also observes the max/batches updates
+        // sequenced before them.
+        self.batch_ops.fetch_add(n, Ordering::Release);
+    }
+
+    /// Race-safe snapshot of `(batches, batch_ops, max_batch)` for
+    /// derived statistics: loads in the reverse of [`Metrics::record_group`]'s
+    /// write order (Acquire on the ops word), so `batch_ops / batches`
+    /// never exceeds `max_batch` (see the ordering argument there).
+    pub fn batch_view(&self) -> (u64, u64, u64) {
+        let batch_ops = self.batch_ops.load(Ordering::Acquire);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let max_batch = self.max_batch.load(Ordering::Relaxed);
+        (batches, batch_ops, max_batch)
+    }
+
+    /// Count one read-lane burst of `n` ops plus the fences/flushes its
+    /// sweep issued (the server meters its own thread around the sweep).
+    #[inline]
+    pub fn record_read_lane(&self, n: u64, fences: u64, flushes: u64) {
+        self.rl_ops.fetch_add(n, Ordering::Relaxed);
+        self.rl_fences.fetch_add(fences, Ordering::Relaxed);
+        self.rl_flushes.fetch_add(flushes, Ordering::Relaxed);
+        self.rl_runs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one atomic cross-shard batch of `n` ops.
+    #[inline]
+    pub fn record_atomic(&self, n: u64) {
+        self.atomic_ops.fetch_add(n, Ordering::Relaxed);
+        self.atomics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count atomic batches recovery rolled forward.
+    #[inline]
+    pub fn record_rolled_forward(&self, n: u64) {
+        self.rolled_forward.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A shard worker retuned its adaptive drain bound.
+    #[inline]
+    pub fn record_adaptive_k(&self, k: u64) {
+        self.k_last.store(k, Ordering::Relaxed);
+        self.k_lo.fetch_min(k, Ordering::Relaxed);
+        self.k_hi.fetch_max(k, Ordering::Relaxed);
+    }
+
+    /// Smallest adaptive drain bound any worker ever reported (0 before
+    /// the first report).
+    pub fn k_lo(&self) -> u64 {
+        let v = self.k_lo.load(Ordering::Relaxed);
+        if v == u64::MAX {
+            0
+        } else {
+            v
+        }
+    }
+
+    /// Largest adaptive drain bound any worker ever reported.
+    pub fn k_hi(&self) -> u64 {
+        self.k_hi.load(Ordering::Relaxed)
+    }
+
+    /// Most recent adaptive drain bound (gauge).
+    pub fn k_last(&self) -> u64 {
+        self.k_last.load(Ordering::Relaxed)
     }
 
     #[inline]
@@ -151,8 +260,7 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
-        let batches = self.batches.load(Ordering::Relaxed);
-        let batch_ops = self.batch_ops.load(Ordering::Relaxed);
+        let (batches, batch_ops, max_batch) = self.batch_view();
         let avg_batch = if batches > 0 { batch_ops as f64 / batches as f64 } else { 0.0 };
         let mut out = format!(
             "ops={} gets={} (hits {}) puts={} (new {}) dels={} (hit {}) p50<={:?} p99<={:?} batches={} avg_batch={:.1} max_batch={}",
@@ -167,8 +275,34 @@ impl Metrics {
             self.latency_quantile(0.99),
             batches,
             avg_batch,
-            self.max_batch.load(Ordering::Relaxed),
+            max_batch,
         );
+        if self.k_hi.load(Ordering::Relaxed) > 0 {
+            out.push_str(&format!(
+                " adaptk=[last={} lo={} hi={}]",
+                self.k_last(),
+                self.k_lo(),
+                self.k_hi()
+            ));
+        }
+        if self.rl_runs.load(Ordering::Relaxed) > 0 {
+            out.push_str(&format!(
+                " readlane=[runs={} ops={} fences={} flushes={}]",
+                self.rl_runs.load(Ordering::Relaxed),
+                self.rl_ops.load(Ordering::Relaxed),
+                self.rl_fences.load(Ordering::Relaxed),
+                self.rl_flushes.load(Ordering::Relaxed),
+            ));
+        }
+        let rolled = self.rolled_forward.load(Ordering::Relaxed);
+        if self.atomics.load(Ordering::Relaxed) > 0 || rolled > 0 {
+            out.push_str(&format!(
+                " txn=[atomics={} ops={} rolled_forward={}]",
+                self.atomics.load(Ordering::Relaxed),
+                self.atomic_ops.load(Ordering::Relaxed),
+                rolled,
+            ));
+        }
         if self.rec_shards.load(Ordering::Relaxed) > 0 {
             let ms = |c: &AtomicU64| c.load(Ordering::Relaxed) as f64 / 1000.0;
             out.push_str(&format!(
@@ -277,11 +411,100 @@ mod tests {
             relink: Duration::from_millis(1),
             accelerated: false,
             evicted_lines: 7,
+            txn_rolled_forward: 0,
         };
         m.record_recovery(&r);
         let s = m.report();
         assert!(s.contains("recovery=[shards=2 members=10 reclaimed=4 wall=5.0ms"), "{s}");
         assert!(s.contains("threads=8 accel=false evicted=7]"), "{s}");
+    }
+
+    /// Regression companion to the resizable `len_approx` churn test:
+    /// batch metrics and the adaptive-K gauge must stay cumulative and
+    /// race-free while `STATS` is polled concurrently — no torn averages,
+    /// no shrinking maxima, no envelope inversions.
+    #[test]
+    fn stats_counters_stay_cumulative_under_concurrent_polling() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        // 3 writers: group commits of growing size + adaptive-K walks.
+        let writers: Vec<_> = (0..3u64)
+            .map(|t| {
+                let m = m.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut n = 1 + t;
+                    let mut iters = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        m.record_group(n % 512 + 1);
+                        m.record_adaptive_k(((n % 9) + 1) * 8);
+                        m.record_op(SetOp::Insert(n, n), OpResult::Applied(true));
+                        m.record_read_lane(4, 0, 0);
+                        n = n.wrapping_mul(7).wrapping_add(3);
+                        iters += 1;
+                    }
+                    iters
+                })
+            })
+            .collect();
+        // 4 pollers: every sampled value must be monotone vs the previous
+        // sample of the same poller, and internally consistent.
+        let pollers: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let (mut last_batches, mut last_ops, mut last_max) = (0u64, 0u64, 0u64);
+                    let mut last_hi = 0u64;
+                    let mut last_lo = u64::MAX;
+                    while !stop.load(Ordering::Relaxed) {
+                        let (b, o, mx) = m.batch_view();
+                        assert!(b >= last_batches, "batches went backwards");
+                        assert!(o >= last_ops, "batch_ops went backwards");
+                        assert!(mx >= last_max, "max_batch went backwards");
+                        if b > 0 {
+                            // batch_view loads in the reverse of
+                            // record_group's write order, so the derived
+                            // average can never exceed the cumulative max.
+                            let avg = o as f64 / b as f64;
+                            assert!(
+                                avg <= mx as f64 + 1e-9,
+                                "torn avg {avg} > max {mx} (b={b} o={o})"
+                            );
+                        }
+                        let hi = m.k_hi();
+                        let lo = m.k_lo();
+                        assert!(hi >= last_hi, "k_hi went backwards");
+                        if lo > 0 {
+                            assert!(lo <= last_lo, "k_lo went forwards");
+                            // Envelope check once both ends exist (the very
+                            // first record's min can land before its max).
+                            if hi > 0 {
+                                assert!(lo <= hi, "gauge envelope inverted");
+                            }
+                            last_lo = lo;
+                        }
+                        last_hi = hi;
+                        (last_batches, last_ops, last_max) = (b, o, mx);
+                        // The rendered line must never panic or tear.
+                        let r = m.report();
+                        assert!(r.contains("adaptk=[") || hi == 0, "{r}");
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(120));
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = writers.into_iter().map(|w| w.join().unwrap()).sum();
+        for p in pollers {
+            p.join().unwrap();
+        }
+        assert!(total > 0);
+        assert_eq!(m.batches.load(Ordering::Relaxed), total);
+        assert_eq!(m.rl_runs.load(Ordering::Relaxed), total);
+        assert_eq!(m.rl_ops.load(Ordering::Relaxed), total * 4);
     }
 
     #[test]

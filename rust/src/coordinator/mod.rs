@@ -23,6 +23,7 @@ pub mod recovery;
 pub mod router;
 pub mod server;
 pub mod shard;
+pub mod txn;
 
 use crate::config::Config;
 use crate::pmem::CrashPolicy;
@@ -32,12 +33,15 @@ use std::sync::Arc;
 pub use metrics::Metrics;
 pub use router::Router;
 pub use shard::{Shard, ShardMeta};
+pub use txn::TxnLog;
 
 /// The sharded durable KV store.
 pub struct DuraKv {
     cfg: Config,
     router: Router,
     shards: Vec<Shard>,
+    /// Persisted commit record + lock for atomic cross-shard batches.
+    pub(crate) txn: TxnLog,
     pub metrics: Arc<Metrics>,
 }
 
@@ -51,6 +55,7 @@ impl DuraKv {
             router: Router::new(cfg.shards),
             shards,
             cfg,
+            txn: TxnLog::create(),
             metrics: Arc::new(Metrics::new()),
         }
     }
@@ -94,17 +99,16 @@ impl DuraKv {
         self.shards.iter().map(|s| s.set.len_approx()).sum()
     }
 
-    /// Apply a mixed batch in-process: ops are routed per shard, each
-    /// shard's sub-batch runs as one group commit (one trailing fence),
-    /// and the results are reassembled in op order. Every result is
-    /// durable when this returns.
+    /// Apply a mixed batch in-process: ops are routed per shard (via
+    /// [`Router::partition`]), each shard's sub-batch runs as one group
+    /// commit (one trailing fence), and the results are reassembled in op
+    /// order. Every result is durable when this returns — but a crash
+    /// mid-call keeps completed shards' sub-batches and loses the rest
+    /// (per-shard atomicity only). Use [`DuraKv::apply_batch_atomic`] for
+    /// all-or-nothing cross-shard semantics.
     pub fn apply_batch(&self, ops: &[SetOp]) -> Vec<OpResult> {
-        let mut per_shard: Vec<Vec<(usize, SetOp)>> = vec![Vec::new(); self.shards.len()];
-        for (i, &op) in ops.iter().enumerate() {
-            per_shard[self.router.shard_of(op.key())].push((i, op));
-        }
         let mut out = vec![OpResult::Found(false); ops.len()];
-        for (si, sub) in per_shard.iter().enumerate() {
+        for (si, sub) in self.router.partition(ops).iter().enumerate() {
             if sub.is_empty() {
                 continue;
             }
@@ -115,6 +119,21 @@ impl DuraKv {
             }
         }
         out
+    }
+
+    /// Apply a mixed batch **atomically across shards**: the full op list
+    /// is published to the store's persisted commit record before any
+    /// shard applies, so a crash anywhere in the call recovers
+    /// all-or-nothing (record committed → recovery rolls the batch
+    /// forward; record not committed → the batch happened-never). See
+    /// `coordinator::txn` / DESIGN.md §Transactions. Callers must not
+    /// race conflicting direct-path updates during the call; the wire
+    /// plane (`MULTI <n> ATOMIC`) additionally parks the participating
+    /// shard workers to enforce that exclusion.
+    pub fn apply_batch_atomic(&self, ops: &[SetOp]) -> Vec<OpResult> {
+        self.txn.execute_inproc(self.router, ops, &self.metrics, |si, sub| {
+            self.shards[si].set.apply_batch(sub)
+        })
     }
 
     /// Per-shard resizable-hash growth stats (`None` for volatile or list
@@ -180,6 +199,30 @@ mod tests {
         let growth = kv.growth_stats();
         assert_eq!(growth.len(), 4);
         assert!(growth.iter().all(|g| g.is_some()));
+    }
+
+    #[test]
+    fn apply_batch_atomic_matches_plain_semantics_and_counts() {
+        let mut cfg = Config::default();
+        cfg.shards = 4;
+        cfg.key_range = 1 << 12;
+        let kv = DuraKv::create(cfg);
+        let ops: Vec<SetOp> = (0..100u64)
+            .map(|k| SetOp::Insert(k, k * 2))
+            .chain([SetOp::Get(7), SetOp::Remove(8), SetOp::Contains(8)])
+            .collect();
+        let res = kv.apply_batch_atomic(&ops);
+        for (i, r) in res.iter().take(100).enumerate() {
+            assert_eq!(*r, OpResult::Applied(true), "insert {i}");
+        }
+        assert_eq!(res[100], OpResult::Value(Some(14)));
+        assert_eq!(res[101], OpResult::Applied(true));
+        assert_eq!(res[102], OpResult::Found(false));
+        assert_eq!(kv.len_approx(), 99);
+        use std::sync::atomic::Ordering;
+        assert_eq!(kv.metrics.atomics.load(Ordering::Relaxed), 1);
+        assert_eq!(kv.metrics.atomic_ops.load(Ordering::Relaxed), 103);
+        assert!(kv.metrics.report().contains("txn=[atomics=1 ops=103"));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! as the measured-RTO sweep.
 
 use super::shard::{Shard, ShardMeta, ShardRecovery};
+use super::txn::{TxnLog, TxnLogMeta};
 use super::{DuraKv, Metrics, Router};
 use crate::config::Config;
 use crate::pmem::{self, CrashPolicy};
@@ -25,12 +26,17 @@ use std::time::Instant;
 pub struct CrashTicket {
     cfg: Config,
     metas: Vec<ShardMeta>,
+    /// The store's atomic-batch commit record, carried over the crash
+    /// like the shard metas (its pool was reverted with the rest).
+    txn: TxnLogMeta,
     /// Lines that survived only via random eviction (diagnostics).
     pub evicted_lines: usize,
 }
 
 /// Crash the store: preserve durable pools, drop volatile handles, revert
-/// this store's durable regions to the persisted image. Scoped to the
+/// this store's durable regions to the persisted image — including the
+/// atomic-batch commit record's pool, so an unfenced record write dies
+/// with the crash exactly like any other durable write. Scoped to the
 /// store's own pools so concurrent structures (other tests, other stores
 /// in the process) are unaffected.
 pub(super) fn crash(kv: DuraKv, policy: CrashPolicy) -> CrashTicket {
@@ -39,10 +45,15 @@ pub(super) fn crash(kv: DuraKv, policy: CrashPolicy) -> CrashTicket {
     for s in &kv.shards {
         s.set.prepare_crash();
     }
-    let pools: Vec<_> = metas.iter().filter_map(|m| m.pool).collect();
+    let txn = kv.txn.meta();
+    // The ticket owns the record across the store's death: recovery must
+    // still be able to consult it, so don't let the drop recycle it.
+    kv.txn.detach();
+    let mut pools: Vec<_> = metas.iter().filter_map(|m| m.pool).collect();
+    pools.push(kv.txn.pool());
     drop(kv); // volatile handles die here (limbo lists are abandoned)
     let evicted_lines = pmem::crash_pools(policy, &pools);
-    CrashTicket { cfg, metas, evicted_lines }
+    CrashTicket { cfg, metas, txn, evicted_lines }
 }
 
 /// What recovery did, and what it cost per phase.
@@ -66,6 +77,9 @@ pub struct RecoveryReport {
     /// Non-zero means this drill recovered a *lucky* image, not a
     /// guaranteed one (acked durability never depends on these lines).
     pub evicted_lines: usize,
+    /// Committed-but-unretired atomic batches the rebuild rolled forward
+    /// from the commit record (0 or 1; DESIGN.md §Transactions).
+    pub txn_rolled_forward: usize,
 }
 
 impl RecoveryReport {
@@ -188,7 +202,11 @@ impl CrashTicket {
         self.finish(shards, report)
     }
 
-    fn finish(self, shards: Vec<Shard>, report: RecoveryReport) -> Result<(DuraKv, RecoveryReport)> {
+    fn finish(
+        self,
+        shards: Vec<Shard>,
+        mut report: RecoveryReport,
+    ) -> Result<(DuraKv, RecoveryReport)> {
         if report.evicted_lines > 0 {
             // Operator signal: this image survived partly by luck (random
             // cache write-back), not by the psync protocol alone — fine
@@ -200,17 +218,23 @@ impl CrashTicket {
                 report.evicted_lines
             );
         }
-        let metrics = Arc::new(Metrics::new());
-        metrics.record_recovery(&report);
-        Ok((
-            DuraKv {
-                router: Router::new(self.cfg.shards),
-                shards,
-                cfg: self.cfg,
-                metrics,
-            },
-            report,
-        ))
+        let kv = DuraKv {
+            router: Router::new(self.cfg.shards),
+            shards,
+            cfg: self.cfg,
+            txn: TxnLog::adopt(self.txn),
+            metrics: Arc::new(Metrics::new()),
+        };
+        // The rollback-vs-rollforward rule: a committed-but-unretired
+        // atomic batch is re-applied in full (idempotent — the parked
+        // workers excluded interleavers pre-crash, and nothing ran since);
+        // an uncommitted record is simply stale — nothing of its batch was
+        // ever applied, so dropping it IS the rollback.
+        report.txn_rolled_forward = kv
+            .txn
+            .roll_forward(kv.router, |si, sub| kv.shards[si].set.apply_batch(sub));
+        kv.metrics.record_recovery(&report);
+        Ok((kv, report))
     }
 }
 

@@ -5,6 +5,7 @@
 //! same bits would leave each shard's hash table with systematically
 //! empty buckets.
 
+use crate::sets::SetOp;
 use crate::util::mix64;
 
 /// Deterministic router over a fixed shard count.
@@ -28,6 +29,20 @@ impl Router {
     pub fn shard_of(&self, key: u64) -> usize {
         // Upper 32 bits of a salted mix: independent of the bucket hash.
         ((mix64(key ^ 0x5EED_0F12_0373_0AD5) >> 32) as usize) % self.shards
+    }
+
+    /// Partition a mixed batch into per-shard sub-batches, tagging each
+    /// op with its original index so callers can reassemble results in
+    /// op order. Relative order within a shard is preserved (the
+    /// per-shard sub-batch is the op sequence that shard observes). The
+    /// one routing plan shared by `DuraKv::apply_batch`, the server's
+    /// burst dispatch and the atomic-batch coordinator.
+    pub fn partition(&self, ops: &[SetOp]) -> Vec<Vec<(usize, SetOp)>> {
+        let mut per_shard: Vec<Vec<(usize, SetOp)>> = vec![Vec::new(); self.shards];
+        for (i, &op) in ops.iter().enumerate() {
+            per_shard[self.shard_of(op.key())].push((i, op));
+        }
+        per_shard
     }
 }
 
@@ -60,6 +75,26 @@ mod tests {
                 "imbalanced: {counts:?}"
             );
         }
+    }
+
+    #[test]
+    fn partition_covers_all_ops_in_shard_order() {
+        let r = Router::new(3);
+        let ops: Vec<SetOp> = (0..100u64).map(|k| SetOp::Insert(k, k)).collect();
+        let parts = r.partition(&ops);
+        assert_eq!(parts.len(), 3);
+        let mut seen = vec![false; ops.len()];
+        for (s, sub) in parts.iter().enumerate() {
+            let mut prev = None;
+            for &(i, op) in sub {
+                assert_eq!(r.shard_of(op.key()), s, "op {i} routed to wrong shard");
+                assert_eq!(op, ops[i]);
+                assert!(!std::mem::replace(&mut seen[i], true), "op {i} duplicated");
+                assert!(prev.map(|p| p < i).unwrap_or(true), "in-shard order broken");
+                prev = Some(i);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every op lands in exactly one shard");
     }
 
     #[test]

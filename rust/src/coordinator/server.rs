@@ -1,11 +1,12 @@
-//! TCP front: pipelined line protocol over the group-committing shard
-//! workers.
+//! TCP front: a typed **two-lane op plane** over the adaptive
+//! group-committing shard workers.
 //!
 //! ```text
 //! PUT <key> <value>   ->  OK NEW | OK EXISTS
 //! GET <key>           ->  FOUND <value> | MISSING
+//! HAS <key>           ->  YES | NO
 //! DEL <key>           ->  OK DELETED | OK ABSENT
-//! MULTI <n>           ->  (no reply; the next n lines are queued ops)
+//! MULTI <n> [ATOMIC]  ->  (no reply; the next n lines are queued ops)
 //! EXEC                ->  n reply lines, one per queued op, in order
 //!                         (n = 0: a single "OK EMPTY" ack)
 //! LEN                 ->  LEN <n>
@@ -15,27 +16,45 @@
 //!
 //! **Pipelining.** A connection handler does not process one line per
 //! socket read: after the first blocking read it also consumes every
-//! further complete line already buffered, parses the whole burst, routes
-//! all its data ops as **one [`Request::Batch`] per shard**, and writes
-//! all replies (in line order) with a single flush. Combined with the
-//! workers' own queue draining, a busy connection pays one queue hop and
-//! ~1/K of a fence per op instead of one each. Replies to a burst are
-//! written only after every op in it is durable. `LEN`/`STATS` inside a
-//! burst are resolved after the burst's data ops (both are approximate
-//! snapshots; see `ConcurrentSet::len_approx`).
+//! further complete line already buffered and parses the whole burst.
+//! Replies to a burst are written (in line order, one flush) only after
+//! every op in it resolved. `LEN`/`STATS` inside a burst are resolved
+//! after the burst's data ops (both are approximate snapshots).
 //!
-//! **Explicit batches.** `MULTI <n>` queues the next `n` PUT/GET/DEL
+//! **Write lane.** Updates (PUT/DEL) route as **one [`Request::Batch`]
+//! per shard** through the worker queues; combined with the workers' own
+//! adaptive draining, a busy connection pays one queue hop and ~1/K of a
+//! fence per op instead of one each.
+//!
+//! **Read lane (DESIGN.md §ReadPath).** Pure reads (GET/HAS) never touch
+//! a shard queue: after the burst's write batches have drained — which
+//! preserves per-connection read-your-writes — the handler executes the
+//! burst's reads *directly* on the shared set handles via the coalesced
+//! `contains_batch`/`get_batch` sweeps, one virtual call per shard per
+//! kind. Reads are lock-free and fence-free in every family, so the lane
+//! issues **zero psyncs** (metered per burst into `Metrics::rl_*` and
+//! pinned by tests; SOFT unconditionally, link-free/log-free may pay
+//! read-side helping psyncs only when racing in-flight updates). A
+//! burst with no writes therefore costs no queue hop at all.
+//!
+//! **Explicit batches.** `MULTI <n>` queues the next `n` PUT/GET/HAS/DEL
 //! lines without replying, `EXEC` routes them like a pipelined burst and
 //! emits the `n` replies. A malformed frame yields a single ERR line.
+//! `MULTI <n> ATOMIC` instead executes the frame as an **atomic
+//! cross-shard batch** (two-phase commit over the persisted commit
+//! record, `coordinator::txn`): a crash recovers all of its updates or
+//! none. A malformed atomic frame aborts whole (one ERR line, nothing
+//! executed).
 //!
 //! Thread-per-connection (std::net; the offline crate set has no async
 //! runtime), bounded by `Config::max_conns`: excess connections get one
 //! ERR line and are closed. The per-shard queue bound remains the
 //! service's backpressure.
 
-use super::shard::{Request, Response, ShardWorker};
+use super::shard::{GroupTuning, Request, Response, ShardWorker};
 use super::{DuraKv, Router};
-use crate::sets::SetOp;
+use crate::pmem::stats;
+use crate::sets::{ConcurrentSet, SetOp};
 use anyhow::Result;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -43,7 +62,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
-/// Largest accepted `MULTI <n>` frame.
+/// Largest accepted `MULTI <n>` frame (also the atomic-batch cap,
+/// `txn::TXN_OPS_MAX`).
 const MULTI_MAX: u64 = 4096;
 
 /// Adapter giving a shard's set a `'static` handle via the Arc'd store.
@@ -73,6 +93,13 @@ impl crate::sets::ConcurrentSet for ShardRef {
         // fences (the default would loop over un-coalesced singles).
         self.kv.shard_set(self.index).apply_batch(ops)
     }
+    fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
+        // Forward the sweep for the same reason as apply_batch.
+        self.kv.shard_set(self.index).contains_batch(keys)
+    }
+    fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
+        self.kv.shard_set(self.index).get_batch(keys)
+    }
 }
 
 /// A running server; dropping it stops the accept loop and the workers.
@@ -98,11 +125,15 @@ pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
     let addr = listener.local_addr()?;
     listener.set_nonblocking(true)?;
 
+    let tuning = GroupTuning {
+        k_min: kv.config().group_k_min,
+        k_max: kv.config().group_k_max,
+    };
     let workers: Vec<ShardWorker> = (0..kv.config().shards)
         .map(|i| {
             let set: Arc<dyn crate::sets::ConcurrentSet> =
                 Arc::new(ShardRef { kv: kv.clone(), index: i });
-            ShardWorker::spawn(set, kv.metrics.clone())
+            ShardWorker::spawn_with(set, kv.metrics.clone(), tuning)
         })
         .collect();
     let senders: Arc<Vec<SyncSender<Request>>> =
@@ -192,6 +223,7 @@ fn reject_conn(stream: TcpStream, max_conns: usize) {
 enum DataCmd {
     Put,
     Get,
+    Has,
     Del,
 }
 
@@ -199,8 +231,10 @@ enum DataCmd {
 enum Slot {
     /// Already-resolved reply line.
     Text(String),
-    /// Data op `idx` of shard `shard`'s sub-batch.
-    Pending(DataCmd, usize, usize),
+    /// Write-lane op `idx` of shard `shard`'s worker sub-batch.
+    Write(DataCmd, usize, usize),
+    /// Read-lane op `idx` of shard `shard`'s direct sweep.
+    Read(DataCmd, usize, usize),
     /// Resolved after the burst's data ops (approximate snapshots).
     Len,
     Stats,
@@ -213,12 +247,14 @@ fn data_reply(cmd: DataCmd, resp: Response) -> String {
         (DataCmd::Put, _) => "OK EXISTS".to_string(),
         (DataCmd::Get, Response::Found(v)) => format!("FOUND {v}"),
         (DataCmd::Get, _) => "MISSING".to_string(),
+        (DataCmd::Has, Response::Ok(true)) => "YES".to_string(),
+        (DataCmd::Has, _) => "NO".to_string(),
         (DataCmd::Del, Response::Ok(true)) => "OK DELETED".to_string(),
         (DataCmd::Del, _) => "OK ABSENT".to_string(),
     }
 }
 
-/// Parse a PUT/GET/DEL line. `Ok(None)` = not a data command;
+/// Parse a PUT/GET/HAS/DEL line. `Ok(None)` = not a data command;
 /// `Err(line)` = data command with bad arguments (the ERR reply).
 fn parse_data(line: &str) -> std::result::Result<Option<(DataCmd, SetOp)>, String> {
     let mut parts = line.split_ascii_whitespace();
@@ -231,6 +267,10 @@ fn parse_data(line: &str) -> std::result::Result<Option<(DataCmd, SetOp)>, Strin
         "GET" => match parse_u64(parts.next()) {
             Some(k) => Ok(Some((DataCmd::Get, SetOp::Get(k)))),
             None => Err("ERR usage: GET <key>".to_string()),
+        },
+        "HAS" => match parse_u64(parts.next()) {
+            Some(k) => Ok(Some((DataCmd::Has, SetOp::Contains(k)))),
+            None => Err("ERR usage: HAS <key>".to_string()),
         },
         "DEL" => match parse_u64(parts.next()) {
             Some(k) => Ok(Some((DataCmd::Del, SetOp::Remove(k)))),
@@ -249,24 +289,79 @@ fn read_line(reader: &mut BufReader<TcpStream>) -> Result<Option<String>> {
     Ok(Some(line.trim().to_string()))
 }
 
-/// Route a data op into the burst's per-shard sub-batches.
+/// Classify + route a data op into the burst's two lanes: updates join
+/// shard `Request::Batch`es (write lane), pure reads join the direct
+/// per-shard sweep (read lane).
 fn route(
     op: SetOp,
     cmd: DataCmd,
     router: Router,
     slots: &mut Vec<Slot>,
-    per_shard: &mut [Vec<SetOp>],
+    writes: &mut [Vec<SetOp>],
+    reads: &mut [Vec<SetOp>],
 ) {
     let shard = router.shard_of(op.key());
-    slots.push(Slot::Pending(cmd, shard, per_shard[shard].len()));
-    per_shard[shard].push(op);
+    if op.is_update() {
+        slots.push(Slot::Write(cmd, shard, writes[shard].len()));
+        writes[shard].push(op);
+    } else {
+        slots.push(Slot::Read(cmd, shard, reads[shard].len()));
+        reads[shard].push(op);
+    }
 }
 
-/// Dispatch a gathered burst (one `Request::Batch` per shard), then write
-/// every reply in line order with a single flush. Returns true on QUIT.
+/// Execute one shard's read-lane sweep directly on the shared set handle:
+/// one `contains_batch` + one `get_batch` virtual call regardless of run
+/// length, results in op order. Zero psyncs (the caller meters).
+fn run_read_lane(set: &dyn ConcurrentSet, ops: &[SetOp]) -> Vec<Response> {
+    let mut has_keys = Vec::new();
+    let mut get_keys = Vec::new();
+    for &op in ops {
+        match op {
+            SetOp::Contains(k) => has_keys.push(k),
+            SetOp::Get(k) => get_keys.push(k),
+            SetOp::Insert(..) | SetOp::Remove(_) => {
+                unreachable!("write routed into the read lane")
+            }
+        }
+    }
+    let has_res = set.contains_batch(&has_keys);
+    let get_res = set.get_batch(&get_keys);
+    let (mut hi, mut gi) = (0, 0);
+    ops.iter()
+        .map(|&op| match op {
+            SetOp::Contains(_) => {
+                let r = Response::Ok(has_res[hi]);
+                hi += 1;
+                r
+            }
+            _ => {
+                let r = match get_res[gi] {
+                    Some(v) => Response::Found(v),
+                    None => Response::Missing,
+                };
+                gi += 1;
+                r
+            }
+        })
+        .collect()
+}
+
+/// Dispatch a gathered burst: write lane first (one `Request::Batch` per
+/// shard, awaited — this *is* the connection's in-flight write drain),
+/// then the read lane directly on this thread, then every reply in line
+/// order with a single flush. Returns true on QUIT.
+///
+/// Ordering semantics: all reads of a burst execute after all of its
+/// writes. Within one pipelined burst every op is concurrent (the client
+/// sent them without awaiting replies), so this order is a legal
+/// linearization — and it is exactly what preserves read-your-writes
+/// per connection (a read never misses an earlier write of its own
+/// connection, in this burst or any previous one).
 fn flush_burst(
     slots: &mut Vec<Slot>,
     per_shard: &mut [Vec<SetOp>],
+    reads: &mut [Vec<SetOp>],
     senders: &[SyncSender<Request>],
     writer: &mut BufWriter<TcpStream>,
     kv: &DuraKv,
@@ -285,12 +380,38 @@ fn flush_burst(
         shard_results[shard] = brx.recv()?;
     }
 
+    // Read lane: the connection's writes are drained (durable + acked to
+    // us), so direct reads observe them. Metered around the whole sweep —
+    // the psync-free claim is pinned on these counters.
+    let mut read_results: Vec<Vec<Response>> = vec![Vec::new(); senders.len()];
+    if reads.iter().any(|r| !r.is_empty()) {
+        let before = stats::thread_snapshot();
+        let mut nops = 0u64;
+        for (shard, ops) in reads.iter_mut().enumerate() {
+            if ops.is_empty() {
+                continue;
+            }
+            nops += ops.len() as u64;
+            let results = run_read_lane(kv.shard_set(shard), ops);
+            for (&op, &res) in ops.iter().zip(results.iter()) {
+                kv.metrics.record_op(op, read_op_result(op, res));
+            }
+            read_results[shard] = results;
+            ops.clear();
+        }
+        let d = stats::thread_snapshot().since(&before);
+        kv.metrics.record_read_lane(nops, d.fences, d.flushes);
+    }
+
     let mut quit = false;
     for slot in slots.drain(..) {
         match slot {
             Slot::Text(s) => writeln!(writer, "{s}")?,
-            Slot::Pending(cmd, shard, idx) => {
+            Slot::Write(cmd, shard, idx) => {
                 writeln!(writer, "{}", data_reply(cmd, shard_results[shard][idx]))?
+            }
+            Slot::Read(cmd, shard, idx) => {
+                writeln!(writer, "{}", data_reply(cmd, read_results[shard][idx]))?
             }
             Slot::Len => writeln!(writer, "LEN {}", kv.len_approx())?,
             Slot::Stats => writeln!(
@@ -309,6 +430,67 @@ fn flush_burst(
     Ok(quit)
 }
 
+/// Map a read-lane wire `Response` back to the `OpResult` shape
+/// `Metrics::record_op` classifies on.
+fn read_op_result(op: SetOp, r: Response) -> crate::sets::OpResult {
+    use crate::sets::OpResult;
+    match (op, r) {
+        (SetOp::Contains(_), Response::Ok(b)) => OpResult::Found(b),
+        (_, Response::Found(v)) => OpResult::Value(Some(v)),
+        _ => OpResult::Value(None),
+    }
+}
+
+/// Execute an atomic `MULTI <n> ATOMIC` frame: parse strictly (any bad
+/// line aborts the whole frame — all-or-nothing starts at the parser),
+/// run the two-phase protocol over the shard workers, and write the
+/// replies. The caller has already flushed the surrounding burst, so the
+/// replies land in line order.
+fn exec_atomic_frame(
+    frame: &[String],
+    router: Router,
+    senders: &[SyncSender<Request>],
+    writer: &mut BufWriter<TcpStream>,
+    kv: &DuraKv,
+) -> Result<()> {
+    let mut cmds = Vec::with_capacity(frame.len());
+    let mut ops = Vec::with_capacity(frame.len());
+    for l in frame {
+        match parse_data(l) {
+            Ok(Some((cmd, op))) => {
+                cmds.push(cmd);
+                ops.push(op);
+            }
+            Err(usage) => {
+                writeln!(writer, "ERR ATOMIC aborted: {}", usage.trim_start_matches("ERR "))?;
+                writer.flush()?;
+                return Ok(());
+            }
+            Ok(None) => {
+                writeln!(writer, "ERR ATOMIC aborted: not a data op: '{l}'")?;
+                writer.flush()?;
+                return Ok(());
+            }
+        }
+    }
+    if ops.is_empty() {
+        writeln!(writer, "OK EMPTY")?;
+        writer.flush()?;
+        return Ok(());
+    }
+    let apply_direct = |si: usize, sub: &[SetOp]| kv.shard_set(si).apply_batch(sub);
+    match kv.txn.execute_via_workers(router, senders, &ops, &kv.metrics, apply_direct) {
+        Ok(results) => {
+            for (cmd, res) in cmds.into_iter().zip(results) {
+                writeln!(writer, "{}", data_reply(cmd, res))?;
+            }
+        }
+        Err(e) => writeln!(writer, "ERR ATOMIC failed: {e}")?,
+    }
+    writer.flush()?;
+    Ok(())
+}
+
 fn handle_conn(
     stream: TcpStream,
     router: Router,
@@ -324,33 +506,40 @@ fn handle_conn(
         };
         let mut slots: Vec<Slot> = Vec::new();
         let mut per_shard: Vec<Vec<SetOp>> = vec![Vec::new(); senders.len()];
+        let mut reads: Vec<Vec<SetOp>> = vec![Vec::new(); senders.len()];
         let mut line = first;
         let mut quit = false;
         loop {
             match parse_data(&line) {
-                Ok(Some((cmd, op))) => route(op, cmd, router, &mut slots, &mut per_shard),
+                Ok(Some((cmd, op))) => {
+                    route(op, cmd, router, &mut slots, &mut per_shard, &mut reads)
+                }
                 Err(usage) => slots.push(Slot::Text(usage)),
                 Ok(None) => {
                     let mut parts = line.split_ascii_whitespace();
                     let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
                     match cmd.as_str() {
-                        "MULTI" => match parse_u64(parts.next()).filter(|&n| n <= MULTI_MAX) {
+                        "MULTI" => match parse_multi_args(&mut parts) {
                             None => slots.push(Slot::Text(format!(
-                                "ERR usage: MULTI <n> (n <= {MULTI_MAX})"
+                                "ERR usage: MULTI <n> [ATOMIC] (n <= {MULTI_MAX})"
                             ))),
-                            Some(n) => {
+                            Some((n, atomic)) => {
                                 // Gather the next n op lines + EXEC. Reading
                                 // may block on the client, so first flush
                                 // what the burst already holds — earlier
                                 // commands must not have their replies (or
                                 // execution) held hostage by a slow frame.
+                                // Atomic frames always flush first: their
+                                // replies are written out of band by the txn
+                                // path, in line order because nothing pends.
                                 let buffered_lines =
                                     reader.buffer().iter().filter(|&&b| b == b'\n').count() as u64;
-                                if buffered_lines < n + 1
+                                if (atomic || buffered_lines < n + 1)
                                     && !slots.is_empty()
                                     && flush_burst(
                                         &mut slots,
                                         &mut per_shard,
+                                        &mut reads,
                                         senders,
                                         &mut writer,
                                         kv,
@@ -370,6 +559,8 @@ fn handle_conn(
                                     slots.push(Slot::Text(format!(
                                         "ERR MULTI: expected EXEC after {n} ops, got '{exec}'"
                                     )));
+                                } else if atomic {
+                                    exec_atomic_frame(&frame, router, senders, &mut writer, kv)?;
                                 } else if frame.is_empty() {
                                     // `MULTI 0` + EXEC: a valid empty batch.
                                     // It queues no ops and would otherwise
@@ -379,9 +570,14 @@ fn handle_conn(
                                 } else {
                                     for l in &frame {
                                         match parse_data(l) {
-                                            Ok(Some((cmd, op))) => {
-                                                route(op, cmd, router, &mut slots, &mut per_shard)
-                                            }
+                                            Ok(Some((cmd, op))) => route(
+                                                op,
+                                                cmd,
+                                                router,
+                                                &mut slots,
+                                                &mut per_shard,
+                                                &mut reads,
+                                            ),
                                             Err(usage) => slots.push(Slot::Text(usage)),
                                             Ok(None) => slots.push(Slot::Text(format!(
                                                 "ERR MULTI: not a data op: '{l}'"
@@ -414,7 +610,7 @@ fn handle_conn(
             }
             break;
         }
-        if flush_burst(&mut slots, &mut per_shard, senders, &mut writer, kv)? {
+        if flush_burst(&mut slots, &mut per_shard, &mut reads, senders, &mut writer, kv)? {
             return Ok(());
         }
     }
@@ -422,6 +618,21 @@ fn handle_conn(
 
 fn parse_u64(s: Option<&str>) -> Option<u64> {
     s.and_then(|x| x.parse().ok())
+}
+
+/// Parse the arguments of `MULTI <n> [ATOMIC]` (the command token is
+/// already consumed): `None` on any malformed tail.
+fn parse_multi_args<'a>(parts: &mut impl Iterator<Item = &'a str>) -> Option<(u64, bool)> {
+    let n = parse_u64(parts.next()).filter(|&n| n <= MULTI_MAX)?;
+    let atomic = match parts.next() {
+        None => false,
+        Some(t) if t.eq_ignore_ascii_case("ATOMIC") => true,
+        Some(_) => return None,
+    };
+    if parts.next().is_some() {
+        return None;
+    }
+    Some((n, atomic))
 }
 
 #[cfg(test)]
@@ -481,6 +692,168 @@ mod tests {
         assert!(c.send("STATS").contains("growth=["), "growth stats on STATS");
         assert!(c.send("NOPE").starts_with("ERR"));
         assert!(c.send("PUT x").starts_with("ERR usage"));
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    #[test]
+    fn has_verb_round_trip() {
+        let kv = test_kv(2);
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+        assert_eq!(c.send("PUT 9 90"), "OK NEW");
+        assert_eq!(c.send("HAS 9"), "YES");
+        assert_eq!(c.send("HAS 10"), "NO");
+        assert_eq!(c.send("DEL 9"), "OK DELETED");
+        assert_eq!(c.send("HAS 9"), "NO");
+        assert!(c.send("HAS x").starts_with("ERR usage: HAS"));
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    /// The tentpole pin: a pure-read burst must execute on the read lane
+    /// (no shard queue) and issue **zero** psyncs — asserted through the
+    /// wire on the `STATS` read-lane counters (SOFT: reads are
+    /// unconditionally fence-free).
+    #[test]
+    fn read_lane_burst_is_psync_free_and_bypasses_workers() {
+        let mut cfg = Config::default();
+        cfg.shards = 2;
+        cfg.key_range = 4096;
+        cfg.psync_ns = 0;
+        cfg.family = crate::sets::Family::Soft;
+        let kv = Arc::new(DuraKv::create(cfg));
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+        for k in 0..64u64 {
+            assert_eq!(c.send(&format!("PUT {k} {}", k + 1)), "OK NEW");
+        }
+        let batches_before = kv.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+        // One pure-read pipelined burst: GET + HAS interleaved.
+        let mut burst = String::new();
+        for k in 0..128u64 {
+            if k % 2 == 0 {
+                burst.push_str(&format!("GET {k}\n"));
+            } else {
+                burst.push_str(&format!("HAS {k}\n"));
+            }
+        }
+        c.writer.write_all(burst.as_bytes()).unwrap();
+        c.writer.flush().unwrap();
+        for k in 0..128u64 {
+            let want = match (k % 2 == 0, k < 64) {
+                (true, true) => format!("FOUND {}", k + 1),
+                (true, false) => "MISSING".to_string(),
+                (false, true) => "YES".to_string(),
+                (false, false) => "NO".to_string(),
+            };
+            assert_eq!(c.recv(), want, "reply {k}");
+        }
+        use std::sync::atomic::Ordering;
+        assert_eq!(
+            kv.metrics.batches.load(Ordering::Relaxed),
+            batches_before,
+            "a pure-read burst must not touch the shard workers"
+        );
+        assert!(kv.metrics.rl_runs.load(Ordering::Relaxed) >= 1, "read lane engaged");
+        assert_eq!(kv.metrics.rl_ops.load(Ordering::Relaxed), 128);
+        assert_eq!(kv.metrics.rl_fences.load(Ordering::Relaxed), 0, "read lane fenced!");
+        assert_eq!(kv.metrics.rl_flushes.load(Ordering::Relaxed), 0, "read lane flushed!");
+        let stats = c.send("STATS");
+        assert!(stats.contains("readlane=[runs="), "{stats}");
+        assert!(stats.contains("ops=") && stats.contains("fences=0 flushes=0]"), "{stats}");
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    /// Per-connection read-your-writes across pipelined bursts: reads
+    /// pipelined behind writes — in the same burst and across burst
+    /// boundaries — must observe those writes.
+    #[test]
+    fn read_your_writes_across_pipelined_bursts() {
+        let kv = test_kv(4);
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+        // Mixed burst: every read is pipelined behind the writes it must
+        // observe (no later same-key writes, so the expected replies are
+        // invariant under any TCP burst split).
+        c.writer
+            .write_all(b"PUT 1 11\nPUT 2 22\nDEL 2\nGET 1\nHAS 2\nHAS 1\n")
+            .unwrap();
+        c.writer.flush().unwrap();
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "OK DELETED");
+        assert_eq!(c.recv(), "FOUND 11", "read sees this connection's PUT");
+        assert_eq!(c.recv(), "NO", "read sees this connection's DEL");
+        assert_eq!(c.recv(), "YES");
+        // Across bursts: write burst fully acked before the read burst's
+        // replies, so the reads must see every write.
+        let mut writes = String::new();
+        for k in 100..200u64 {
+            writes.push_str(&format!("PUT {k} {}\n", k * 2));
+        }
+        c.writer.write_all(writes.as_bytes()).unwrap();
+        c.writer.flush().unwrap();
+        let mut reads = String::new();
+        for k in 100..200u64 {
+            reads.push_str(&format!("GET {k}\n"));
+        }
+        c.writer.write_all(reads.as_bytes()).unwrap();
+        c.writer.flush().unwrap();
+        for _ in 100..200 {
+            assert_eq!(c.recv(), "OK NEW");
+        }
+        for k in 100..200u64 {
+            assert_eq!(c.recv(), format!("FOUND {}", k * 2), "RYW for key {k}");
+        }
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    #[test]
+    fn multi_atomic_executes_and_replies_in_order() {
+        let kv = test_kv(4);
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+        writeln!(c.writer, "MULTI 4 ATOMIC").unwrap();
+        writeln!(c.writer, "PUT 10 100").unwrap();
+        writeln!(c.writer, "PUT 20 200").unwrap();
+        writeln!(c.writer, "GET 10").unwrap();
+        writeln!(c.writer, "DEL 99").unwrap();
+        writeln!(c.writer, "EXEC").unwrap();
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "FOUND 100");
+        assert_eq!(c.recv(), "OK ABSENT");
+        use std::sync::atomic::Ordering;
+        assert_eq!(kv.metrics.atomics.load(Ordering::Relaxed), 1);
+        assert_eq!(kv.metrics.atomic_ops.load(Ordering::Relaxed), 4);
+        // The record is retired; workers resumed: plain traffic flows.
+        assert_eq!(c.send("GET 20"), "FOUND 200");
+        // Atomic frames embedded in a pipelined burst keep line order.
+        c.writer
+            .write_all(b"PUT 30 300\nMULTI 2 ATOMIC\nPUT 40 400\nGET 30\nEXEC\nGET 40\n")
+            .unwrap();
+        c.writer.flush().unwrap();
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "OK NEW");
+        assert_eq!(c.recv(), "FOUND 300", "atomic frame reads see prior burst writes");
+        assert_eq!(c.recv(), "FOUND 400");
+        // Malformed atomic frames abort whole: one ERR, nothing applied.
+        writeln!(c.writer, "MULTI 2 ATOMIC").unwrap();
+        writeln!(c.writer, "PUT 50 500").unwrap();
+        writeln!(c.writer, "LEN").unwrap();
+        writeln!(c.writer, "EXEC").unwrap();
+        assert!(c.recv().starts_with("ERR ATOMIC aborted"));
+        assert_eq!(c.send("HAS 50"), "NO", "aborted frame must apply nothing");
+        // Empty atomic frame acks like MULTI 0.
+        writeln!(c.writer, "MULTI 0 ATOMIC").unwrap();
+        writeln!(c.writer, "EXEC").unwrap();
+        assert_eq!(c.recv(), "OK EMPTY");
+        assert!(c.send("MULTI 2 NOPE").starts_with("ERR usage: MULTI"));
+        let stats = c.send("STATS");
+        assert!(stats.contains("txn=[atomics=2"), "{stats}");
         assert_eq!(c.send("QUIT"), "BYE");
         drop(server);
     }

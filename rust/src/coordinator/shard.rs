@@ -8,14 +8,31 @@
 //! metrics, the vLLM-router-style shape without pretending the structures
 //! need serialisation.
 //!
-//! **Group commit.** A worker does not process one request per wakeup: it
-//! drains everything queued (up to [`ShardWorker::GROUP_MAX`] ops) into a
-//! single [`ConcurrentSet::apply_batch`] call, so all the drained updates
-//! share one trailing fence (pmem's `PsyncScope`), and only then fans the
-//! results back out to the per-request responders. Under load the fence
-//! cost per op approaches 1/K; an idle queue degenerates to the old
-//! one-op path with the identical per-op durability guarantee (every
-//! response is sent strictly after the batch's trailing fence).
+//! **Adaptive group commit.** A worker does not process one request per
+//! wakeup: it drains everything queued (up to its current drain bound
+//! `k`) into a single [`ConcurrentSet::apply_batch`] call, so all the
+//! drained updates share one trailing fence (pmem's `PsyncScope`), and
+//! only then fans the results back out to the per-request responders.
+//! The bound `k` is no longer static: each commit feeds EWMAs of the
+//! observed drain depth and the commit latency, and the controller moves
+//! `k` multiplicatively between [`GroupTuning::k_min`] and
+//! [`GroupTuning::k_max`] — saturation (the drain hit the bound) doubles
+//! it, persistently light queues halve it, and a commit-latency EWMA past
+//! the budget halves it regardless (slow fences must not buy throughput
+//! with unbounded tail latency). Once depth warrants it, the worker also
+//! *holds* briefly (bounded by the commit-latency EWMA) to fill a batch —
+//! the classic group-commit latency/throughput trade, now load-driven:
+//! light load commits immediately with the identical per-op durability
+//! guarantee, heavy load converges to the K≈64-style fence amortization
+//! (every response is still sent strictly after its batch's trailing
+//! fence). `k` movements surface as the `adaptk` gauge on `STATS`.
+//!
+//! **Atomic batches.** A [`Request::Prepare`] parks the worker for a
+//! two-phase cross-shard batch: it finishes the group it was draining,
+//! signals readiness, then obeys the coordinator — apply the sub-batch
+//! (one `PsyncScope`), report results, stay parked until released. See
+//! `coordinator::txn` for the protocol and DESIGN.md §Transactions for
+//! why the parking window is what makes recovery's roll-forward sound.
 
 use crate::config::{Config, Structure};
 use crate::pmem::PoolId;
@@ -24,7 +41,7 @@ use crate::sets::{self, ConcurrentSet, Family, OpResult, SetOp};
 use anyhow::Result;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 
@@ -170,7 +187,28 @@ pub enum Request {
     /// A pre-routed batch (pipelined connection / `MULTI`): one responder
     /// for the whole vector, results in op order.
     Batch(Vec<SetOp>, SyncSender<Vec<Response>>),
+    /// Park this worker for an atomic cross-shard batch (`coordinator::txn`).
+    Prepare(TxnHandle),
     Shutdown,
+}
+
+/// The coordinator ⇄ parked-worker channel bundle of one atomic batch.
+pub struct TxnHandle {
+    /// Worker → coordinator: "drained my group, now parked".
+    pub ready: SyncSender<()>,
+    /// Coordinator → worker: apply / release.
+    pub go: Receiver<TxnCmd>,
+    /// Worker → coordinator: the sub-batch's results.
+    pub done: SyncSender<Vec<Response>>,
+}
+
+/// Coordinator commands to a parked worker.
+pub enum TxnCmd {
+    /// Apply this sub-batch (one `PsyncScope`), report results, stay
+    /// parked.
+    Apply(Vec<SetOp>),
+    /// The record is retired: resume normal draining.
+    Release,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -196,8 +234,45 @@ enum Sink {
     Many(usize, SyncSender<Vec<Response>>),
 }
 
+/// Adaptive-K bounds for a shard worker's group commit (config keys
+/// `group_k_min` / `group_k_max`).
+#[derive(Clone, Copy, Debug)]
+pub struct GroupTuning {
+    /// Floor of the drain bound: light load converges here (commit
+    /// immediately, lowest latency).
+    pub k_min: usize,
+    /// Ceiling of the drain bound: saturated load converges here (widest
+    /// fence amortization). Also the starting value, so a cold worker
+    /// never splits an already-queued burst.
+    pub k_max: usize,
+}
+
+impl Default for GroupTuning {
+    fn default() -> Self {
+        GroupTuning { k_min: 1, k_max: 512 }
+    }
+}
+
+/// EWMA smoothing factor (new sample weight 1/4) for the controller's
+/// depth and commit-latency estimates.
+const EWMA_W: f64 = 0.25;
+
+/// Commit-latency budget: once the per-commit latency EWMA exceeds this,
+/// the controller halves `k` regardless of depth — fence amortization
+/// must not buy throughput with unbounded group-commit tails.
+const COMMIT_BUDGET_NS: f64 = 2_000_000.0;
+
+/// Ceiling on the fill-hold wait (the hold is otherwise bounded by the
+/// commit-latency EWMA: holding longer than one commit costs more
+/// latency than it amortizes).
+const HOLD_MAX: Duration = Duration::from_millis(1);
+
+/// Queue-depth EWMA above which the worker may hold to fill a batch;
+/// below it, commits go out immediately (single-client latency).
+const HOLD_DEPTH: f64 = 4.0;
+
 /// Worker-queue front over a shard set: bounded channel + one worker
-/// thread per shard, draining the queue into group commits.
+/// thread per shard, draining the queue into adaptive group commits.
 pub struct ShardWorker {
     pub tx: SyncSender<Request>,
     join: Option<std::thread::JoinHandle<()>>,
@@ -207,14 +282,19 @@ impl ShardWorker {
     /// Queue capacity per shard (backpressure bound for the TCP server).
     pub const QUEUE_CAP: usize = 1024;
 
-    /// Drain bound per group commit: once this many ops are gathered the
-    /// batch is applied even if the queue still has requests (latency
-    /// bound; a single oversized `Request::Batch` is never split).
-    pub const GROUP_MAX: usize = 512;
-
+    /// Spawn with default tuning (K adapts in [1, 512]).
     pub fn spawn(set: Arc<dyn ConcurrentSet>, metrics: Arc<Metrics>) -> ShardWorker {
+        Self::spawn_with(set, metrics, GroupTuning::default())
+    }
+
+    /// Spawn with explicit adaptive-K bounds.
+    pub fn spawn_with(
+        set: Arc<dyn ConcurrentSet>,
+        metrics: Arc<Metrics>,
+        tuning: GroupTuning,
+    ) -> ShardWorker {
         let (tx, rx): (SyncSender<Request>, Receiver<Request>) = sync_channel(Self::QUEUE_CAP);
-        let join = std::thread::spawn(move || worker_loop(rx, set, metrics));
+        let join = std::thread::spawn(move || worker_loop(rx, set, metrics, tuning));
         ShardWorker { tx, join: Some(join) }
     }
 
@@ -226,8 +306,16 @@ impl ShardWorker {
     }
 }
 
-/// Gather one request into the pending group.
-fn gather(req: Request, ops: &mut Vec<SetOp>, sinks: &mut Vec<Sink>, shutdown: &mut bool) {
+/// Gather one request into the pending group. `Prepare` and `Shutdown`
+/// end the gather: the current group must commit (and scatter) before the
+/// worker parks or exits.
+fn gather(
+    req: Request,
+    ops: &mut Vec<SetOp>,
+    sinks: &mut Vec<Sink>,
+    parked: &mut Option<TxnHandle>,
+    shutdown: &mut bool,
+) {
     match req {
         Request::Op(op, tx) => {
             ops.push(op);
@@ -237,60 +325,157 @@ fn gather(req: Request, ops: &mut Vec<SetOp>, sinks: &mut Vec<Sink>, shutdown: &
             sinks.push(Sink::Many(batch.len(), tx));
             ops.extend(batch);
         }
+        Request::Prepare(handle) => *parked = Some(handle),
         Request::Shutdown => *shutdown = true,
     }
 }
 
-/// The group-commit loop: block for one request, drain whatever else is
-/// already queued, apply everything as one batch (one trailing fence),
-/// then scatter results back to the responders.
-fn worker_loop(rx: Receiver<Request>, set: Arc<dyn ConcurrentSet>, metrics: Arc<Metrics>) {
+/// Commit one gathered group: apply as a batch (one trailing fence),
+/// record metrics, scatter results. Returns the commit wall time.
+fn commit_group(
+    set: &dyn ConcurrentSet,
+    metrics: &Metrics,
+    ops: &[SetOp],
+    sinks: &mut Vec<Sink>,
+) -> Duration {
+    let t0 = Instant::now();
+    // The group commit: results become claimable only after the batch's
+    // trailing fence, i.e. when apply_batch returns.
+    let results = set.apply_batch(ops);
+    let elapsed = t0.elapsed();
+    if !ops.is_empty() {
+        metrics.record_group(ops.len() as u64);
+        // One histogram entry per group commit: the histogram tracks
+        // commit latency (every request in the group waited this long),
+        // not per-op cost repeated N times.
+        metrics.record_latency(elapsed);
+    }
+    for (&op, &res) in ops.iter().zip(results.iter()) {
+        metrics.record_op(op, res);
+    }
+    let mut i = 0;
+    for sink in sinks.drain(..) {
+        match sink {
+            Sink::One(tx) => {
+                let _ = tx.send(Response::from_result(results[i]));
+                i += 1;
+            }
+            Sink::Many(n, tx) => {
+                let group: Vec<Response> =
+                    results[i..i + n].iter().map(|&r| Response::from_result(r)).collect();
+                let _ = tx.send(group);
+                i += n;
+            }
+        }
+    }
+    elapsed
+}
+
+/// Serve one atomic-batch parking window (see `coordinator::txn`): signal
+/// readiness, then apply-and-report under coordinator control until
+/// released. A dropped coordinator channel releases the worker without
+/// applying — the abort path, consistent with an uncommitted record.
+fn serve_txn(set: &dyn ConcurrentSet, metrics: &Metrics, handle: TxnHandle) {
+    if handle.ready.send(()).is_err() {
+        return;
+    }
+    loop {
+        match handle.go.recv() {
+            Ok(TxnCmd::Apply(ops)) => {
+                let t0 = Instant::now();
+                // One PsyncScope per participating shard: this is the
+                // "prepare-apply" of the two-phase protocol, running
+                // strictly after the coordinator's commit point.
+                let results = set.apply_batch(&ops);
+                metrics.record_group(ops.len() as u64);
+                metrics.record_latency(t0.elapsed());
+                for (&op, &res) in ops.iter().zip(results.iter()) {
+                    metrics.record_op(op, res);
+                }
+                let resp: Vec<Response> =
+                    results.into_iter().map(Response::from_result).collect();
+                if handle.done.send(resp).is_err() {
+                    return;
+                }
+            }
+            Ok(TxnCmd::Release) | Err(_) => return,
+        }
+    }
+}
+
+/// The adaptive group-commit loop: block for one request, drain up to the
+/// current bound `k` (holding briefly for stragglers when the depth EWMA
+/// says load is heavy), commit the group, retune `k`, park for atomic
+/// batches when asked.
+fn worker_loop(
+    rx: Receiver<Request>,
+    set: Arc<dyn ConcurrentSet>,
+    metrics: Arc<Metrics>,
+    tuning: GroupTuning,
+) {
+    let k_min = tuning.k_min.max(1);
+    let k_max = tuning.k_max.max(k_min);
+    // Start at the ceiling: a cold worker facing a pre-queued burst must
+    // drain it whole (the PR-2 behavior); light load shrinks from there.
+    let mut k = k_max;
+    let mut depth_ewma = 0.0f64;
+    let mut commit_ns_ewma = 0.0f64;
+    metrics.record_adaptive_k(k as u64);
     let mut ops: Vec<SetOp> = Vec::new();
     let mut sinks: Vec<Sink> = Vec::new();
     loop {
         ops.clear();
         sinks.clear();
+        let mut parked: Option<TxnHandle> = None;
         let mut shutdown = false;
         match rx.recv() {
-            Ok(req) => gather(req, &mut ops, &mut sinks, &mut shutdown),
+            Ok(req) => gather(req, &mut ops, &mut sinks, &mut parked, &mut shutdown),
             Err(_) => return,
         }
-        while !shutdown && ops.len() < ShardWorker::GROUP_MAX {
+        // Opportunistic drain up to k; when the depth EWMA says load is
+        // heavy, hold (bounded by the commit-latency EWMA) to fill the
+        // batch instead of fencing a fragment.
+        let hold_until = (depth_ewma >= HOLD_DEPTH && k > k_min).then(|| {
+            Instant::now()
+                + Duration::from_nanos(commit_ns_ewma as u64).min(HOLD_MAX)
+        });
+        while !shutdown && parked.is_none() && ops.len() < k {
             match rx.try_recv() {
-                Ok(req) => gather(req, &mut ops, &mut sinks, &mut shutdown),
-                Err(_) => break,
-            }
-        }
-        if !sinks.is_empty() {
-            let t0 = Instant::now();
-            // The group commit: results become claimable only after the
-            // batch's trailing fence, i.e. when apply_batch returns.
-            let results = set.apply_batch(&ops);
-            if !ops.is_empty() {
-                metrics.record_group(ops.len() as u64);
-                // One histogram entry per group commit: the histogram
-                // tracks commit latency (every request in the group
-                // waited this long), not per-op cost repeated N times.
-                metrics.record_latency(t0.elapsed());
-            }
-            for (&op, &res) in ops.iter().zip(results.iter()) {
-                metrics.record_op(op, res);
-            }
-            let mut i = 0;
-            for sink in sinks.drain(..) {
-                match sink {
-                    Sink::One(tx) => {
-                        let _ = tx.send(Response::from_result(results[i]));
-                        i += 1;
+                Ok(req) => gather(req, &mut ops, &mut sinks, &mut parked, &mut shutdown),
+                Err(_) => {
+                    let Some(deadline) = hold_until else { break };
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
                     }
-                    Sink::Many(n, tx) => {
-                        let group: Vec<Response> =
-                            results[i..i + n].iter().map(|&r| Response::from_result(r)).collect();
-                        let _ = tx.send(group);
-                        i += n;
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(req) => {
+                            gather(req, &mut ops, &mut sinks, &mut parked, &mut shutdown)
+                        }
+                        Err(_) => break,
                     }
                 }
             }
+        }
+        if !sinks.is_empty() {
+            let drained = ops.len();
+            let commit = commit_group(set.as_ref(), &metrics, &ops, &mut sinks);
+            // Controller: latency budget first, then saturation/lightness.
+            depth_ewma += (drained as f64 - depth_ewma) * EWMA_W;
+            commit_ns_ewma += (commit.as_nanos() as f64 - commit_ns_ewma) * EWMA_W;
+            k = if commit_ns_ewma > COMMIT_BUDGET_NS {
+                (k / 2).max(k_min)
+            } else if drained >= k {
+                (k * 2).min(k_max)
+            } else if drained * 2 <= k && depth_ewma * 2.0 <= k as f64 {
+                (k / 2).max(k_min)
+            } else {
+                k
+            };
+            metrics.record_adaptive_k(k as u64);
+        }
+        if let Some(handle) = parked {
+            serve_txn(set.as_ref(), &metrics, handle);
         }
         if shutdown {
             return;
@@ -370,7 +555,8 @@ mod tests {
             tx.send(Request::Op(SetOp::Insert(k, k), rtx.clone())).unwrap();
         }
         let m2 = metrics.clone();
-        let handle = std::thread::spawn(move || worker_loop(rx, set, m2));
+        let handle =
+            std::thread::spawn(move || worker_loop(rx, set, m2, GroupTuning::default()));
         for _ in 0..128 {
             assert_eq!(rrx.recv().unwrap(), Response::Ok(true));
         }
@@ -381,6 +567,97 @@ mod tests {
         assert_eq!(metrics.batch_ops.load(Ordering::Relaxed), 128);
         assert_eq!(metrics.max_batch.load(Ordering::Relaxed), 128);
         assert_eq!(metrics.ops_total(), 128);
+    }
+
+    #[test]
+    fn adaptive_k_shrinks_under_light_load_and_recovers_under_bursts() {
+        use std::sync::atomic::Ordering;
+        let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(Family::Volatile, 64));
+        let metrics = Arc::new(Metrics::new());
+        let w = ShardWorker::spawn_with(
+            set,
+            metrics.clone(),
+            GroupTuning { k_min: 1, k_max: 64 },
+        );
+        let (rtx, rrx) = sync_channel(4);
+        // Light load: strictly one op in flight at a time. The controller
+        // must walk k down to k_min (visible through the cumulative lo
+        // gauge).
+        for i in 0..64u64 {
+            w.tx.send(Request::Op(SetOp::Insert(i, i), rtx.clone())).unwrap();
+            assert_eq!(rrx.recv().unwrap(), Response::Ok(true));
+        }
+        assert_eq!(
+            metrics.k_lo(),
+            1,
+            "single-op load must shrink the drain bound to k_min"
+        );
+        // Saturated load: a pre-queued burst. k ramps back up (doubling on
+        // every saturated commit), so the cumulative hi gauge re-hits the
+        // ceiling it started at and the burst completes.
+        let (btx, brx) = sync_channel(64);
+        for i in 1000..1512u64 {
+            w.tx.send(Request::Op(SetOp::Insert(i, i), btx.clone())).unwrap();
+        }
+        for _ in 0..512 {
+            assert_eq!(brx.recv().unwrap(), Response::Ok(true));
+        }
+        assert_eq!(metrics.k_hi(), 64, "saturation must grow the bound back");
+        assert_eq!(metrics.ops_total(), 64 + 512);
+        assert!(metrics.max_batch.load(Ordering::Relaxed) <= 64, "bound respected");
+        w.shutdown();
+    }
+
+    #[test]
+    fn prepare_parks_worker_and_applies_under_coordinator_control() {
+        let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(Family::Volatile, 64));
+        let metrics = Arc::new(Metrics::new());
+        let w = ShardWorker::spawn(set, metrics.clone());
+        // Work queued before the Prepare must commit before the park.
+        let (rtx, rrx) = sync_channel(4);
+        w.tx.send(Request::Op(SetOp::Insert(1, 10), rtx.clone())).unwrap();
+        let (ready_tx, ready_rx) = sync_channel(1);
+        let (go_tx, go_rx) = sync_channel(2);
+        let (done_tx, done_rx) = sync_channel(1);
+        w.tx.send(Request::Prepare(TxnHandle { ready: ready_tx, go: go_rx, done: done_tx }))
+            .unwrap();
+        assert_eq!(rrx.recv().unwrap(), Response::Ok(true), "pre-park op committed");
+        ready_rx.recv().expect("worker parks");
+        // While parked, new requests queue but are NOT served.
+        let (xtx, xrx) = sync_channel(1);
+        w.tx.send(Request::Op(SetOp::Get(1), xtx)).unwrap();
+        assert!(
+            xrx.recv_timeout(std::time::Duration::from_millis(50)).is_err(),
+            "a parked worker must not serve foreign requests"
+        );
+        // Coordinator-driven apply, then release.
+        go_tx.send(TxnCmd::Apply(vec![SetOp::Insert(2, 20), SetOp::Get(1)])).unwrap();
+        assert_eq!(
+            done_rx.recv().unwrap(),
+            vec![Response::Ok(true), Response::Found(10)]
+        );
+        go_tx.send(TxnCmd::Release).unwrap();
+        // The queued request is served after release.
+        assert_eq!(xrx.recv().unwrap(), Response::Found(10));
+        w.shutdown();
+    }
+
+    #[test]
+    fn dropped_coordinator_releases_parked_worker() {
+        let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(Family::Volatile, 16));
+        let metrics = Arc::new(Metrics::new());
+        let w = ShardWorker::spawn(set, metrics.clone());
+        let (ready_tx, ready_rx) = sync_channel(1);
+        let (go_tx, go_rx) = sync_channel::<TxnCmd>(1);
+        let (done_tx, _done_rx) = sync_channel(1);
+        w.tx.send(Request::Prepare(TxnHandle { ready: ready_tx, go: go_rx, done: done_tx }))
+            .unwrap();
+        ready_rx.recv().unwrap();
+        drop(go_tx); // coordinator dies: abort path
+        let (rtx, rrx) = sync_channel(1);
+        w.tx.send(Request::Op(SetOp::Insert(5, 5), rtx)).unwrap();
+        assert_eq!(rrx.recv().unwrap(), Response::Ok(true), "worker resumes after abort");
+        w.shutdown();
     }
 
     #[test]

@@ -1,0 +1,506 @@
+//! Atomic cross-shard batches: two-phase group commit over a persisted
+//! commit record (DESIGN.md §Transactions).
+//!
+//! A plain `MULTI`/`EXEC` batch is only per-shard atomic: each shard's
+//! sub-batch is one group commit, but a crash can keep shard A's half and
+//! lose shard B's. `ATOMIC` batches close that gap with a redo-record
+//! protocol whose invariant is simple to state:
+//!
+//! > **No sub-batch effect may become durable before the commit record
+//! > does; no foreign update may interleave between the applies and the
+//! > record's retirement.**
+//!
+//! Protocol (wire path; phases named after the two-phase-commit roles):
+//!
+//! 1. **Prepare.** The coordinator (the connection thread) takes the
+//!    store-wide txn lock and sends `Request::Prepare` to every
+//!    participating shard worker. Each worker finishes the group it was
+//!    draining, signals readiness, and **parks** — the participating
+//!    shards are now *update*-quiescent for the whole window, because
+//!    all wire **updates** flow through their workers. (The read lane
+//!    deliberately does not: concurrent GET/HAS bursts may observe a
+//!    half-applied atomic batch mid-window, which is linearizable — the
+//!    batch's ops linearize individually; atomicity here is a *crash*
+//!    guarantee, not an isolation level. Only update exclusion is needed
+//!    for roll-forward idempotence.)
+//! 2. **Commit point.** The coordinator writes the full op list into the
+//!    persisted commit record ([`TxnLog`], a `pmem::root::root_array` in
+//!    its own crash-reverted pool), psyncs it, then flips the record's
+//!    state word to `COMMITTED` and psyncs that. Ops-before-state
+//!    ordering means a torn record can never read as committed.
+//! 3. **Apply.** Each parked worker applies its sub-batch inside one
+//!    `PsyncScope` (per-op flushes, one trailing fence) and reports its
+//!    results — but stays parked.
+//! 4. **Retire + release.** The coordinator flips the record back to
+//!    `FREE`, psyncs, releases the workers, and only then acks.
+//!
+//! Crash analysis (the rollback-vs-rollforward rule recovery applies):
+//! * record not `COMMITTED` → nothing was applied (applies only start
+//!   after the commit point) → **discard**: the batch happened-never.
+//! * record `COMMITTED` → applies may be partial → **roll forward**:
+//!   recovery re-applies the full op list from the record. Re-application
+//!   is idempotent here precisely because the parked workers excluded
+//!   every other wire update between the applies and retirement — no
+//!   acked foreign op can be undone by the redo.
+//!
+//! The in-process path ([`super::DuraKv::apply_batch_atomic`]) runs the
+//! same record protocol but applies sub-batches directly; callers must
+//! not race conflicting direct-path updates during the call (the wire
+//! plane enforces that exclusion via the parked workers).
+
+use super::metrics::Metrics;
+use super::shard::{Request, Response, TxnCmd, TxnHandle};
+use super::Router;
+use crate::pmem::root::{root_array, RootArray};
+use crate::pmem::PoolId;
+use crate::sets::{OpResult, SetOp};
+use anyhow::{anyhow, Result};
+use once_cell::sync::Lazy;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Mutex;
+
+/// Largest atomic batch (matches the server's `MULTI` bound).
+pub const TXN_OPS_MAX: usize = 4096;
+
+/// Record layout: `[state, nops, batch_id, reserved]` + 3 words per op.
+const HDR_WORDS: usize = 4;
+const WORDS_PER_OP: usize = 3;
+
+const STATE_FREE: u64 = 0;
+const STATE_COMMITTED: u64 = 2;
+
+/// Process-unique names for per-store commit records.
+static NEXT_LOG: AtomicU64 = AtomicU64::new(1);
+/// Process-unique atomic-batch ids (diagnostics).
+static NEXT_BATCH: AtomicU64 = AtomicU64::new(1);
+
+/// Everything recovery needs to find a store's commit record after a
+/// crash (carried by `CrashTicket` like the shard metas).
+#[derive(Clone, Copy, Debug)]
+pub struct TxnLogMeta {
+    arr: RootArray,
+}
+
+/// The store's persisted commit record + the store-wide atomic-batch
+/// lock. One in-flight atomic batch per store: cross-shard atomicity is
+/// the deliberate slow path (it update-quiesces its shards), so
+/// serialising the batches keeps the worker-parking protocol
+/// deadlock-free by construction.
+pub struct TxnLog {
+    arr: RootArray,
+    lock: Mutex<()>,
+    /// Return the record to the process-wide free pool on drop. Cleared
+    /// by `detach` when a crash ticket takes ownership of the record
+    /// across the store's death (recovery re-adopts it).
+    recycle: std::sync::atomic::AtomicBool,
+}
+
+/// Retired commit records available for reuse: a store's record is ~98 KB
+/// of (simulated) durable memory, and the global region registry never
+/// frees — without recycling every `DuraKv::create` (tests, bench points)
+/// would leak one. Only records whose state word reads `FREE` are pooled;
+/// anything else (a fault-injection panic left mid-protocol bytes) is
+/// deliberately leaked rather than handed to a new store.
+static FREE_LOGS: Lazy<Mutex<Vec<RootArray>>> = Lazy::new(|| Mutex::new(Vec::new()));
+
+impl Drop for TxnLog {
+    fn drop(&mut self) {
+        if self.recycle.load(Ordering::Relaxed)
+            && self.arr.word(0).load(Ordering::Acquire) == STATE_FREE
+        {
+            FREE_LOGS.lock().unwrap_or_else(|e| e.into_inner()).push(self.arr);
+        }
+    }
+}
+
+fn encode(op: SetOp) -> (u64, u64, u64) {
+    match op {
+        SetOp::Insert(k, v) => (0, k, v),
+        SetOp::Remove(k) => (1, k, 0),
+        SetOp::Contains(k) => (2, k, 0),
+        SetOp::Get(k) => (3, k, 0),
+    }
+}
+
+fn decode(kind: u64, key: u64, value: u64) -> SetOp {
+    match kind {
+        0 => SetOp::Insert(key, value),
+        1 => SetOp::Remove(key),
+        2 => SetOp::Contains(key),
+        _ => SetOp::Get(key),
+    }
+}
+
+impl TxnLog {
+    /// A commit record in its own durable pool: recycled from the free
+    /// pool when available, freshly allocated otherwise.
+    pub fn create() -> TxnLog {
+        let pooled = FREE_LOGS.lock().unwrap_or_else(|e| e.into_inner()).pop();
+        let arr = pooled.unwrap_or_else(|| {
+            let name = format!("txn.log.{}", NEXT_LOG.fetch_add(1, Ordering::Relaxed));
+            root_array(&name, HDR_WORDS + WORDS_PER_OP * TXN_OPS_MAX)
+        });
+        TxnLog { arr, lock: Mutex::new(()), recycle: std::sync::atomic::AtomicBool::new(true) }
+    }
+
+    /// Re-attach to a record carried over a crash.
+    pub fn adopt(meta: TxnLogMeta) -> TxnLog {
+        TxnLog {
+            arr: meta.arr,
+            lock: Mutex::new(()),
+            recycle: std::sync::atomic::AtomicBool::new(true),
+        }
+    }
+
+    /// Hand record ownership to a crash ticket: the store is about to
+    /// drop, but the record must survive for recovery to consult.
+    pub(crate) fn detach(&self) {
+        self.recycle.store(false, Ordering::Relaxed);
+    }
+
+    pub fn meta(&self) -> TxnLogMeta {
+        TxnLogMeta { arr: self.arr }
+    }
+
+    /// The record's pool — must be part of the store's crash set so the
+    /// simulator reverts unfenced record writes.
+    pub fn pool(&self) -> PoolId {
+        self.arr.pool()
+    }
+
+    /// Take the store-wide atomic-batch lock (poison carries no state
+    /// worth propagating: a poisoned lock means a fault-injection test
+    /// unwound mid-batch, which is exactly what recovery handles).
+    fn lock(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.lock.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Publish the redo record and commit. Ops (and the header) are
+    /// durable strictly before the state word flips to `COMMITTED`: a
+    /// crash between the two psyncs reads as an uncommitted record.
+    /// Deliberately *not* under a `PsyncScope` — the state psync is the
+    /// batch's commit point and must be a real fence.
+    fn publish(&self, ops: &[SetOp], batch_id: u64) {
+        assert!(ops.len() <= TXN_OPS_MAX, "atomic batch exceeds TXN_OPS_MAX");
+        debug_assert_eq!(self.arr.word(0).load(Ordering::Relaxed), STATE_FREE);
+        for (i, &op) in ops.iter().enumerate() {
+            let (kind, key, value) = encode(op);
+            let base = HDR_WORDS + i * WORDS_PER_OP;
+            self.arr.word(base).store(kind, Ordering::Relaxed);
+            self.arr.word(base + 1).store(key, Ordering::Relaxed);
+            self.arr.word(base + 2).store(value, Ordering::Relaxed);
+        }
+        self.arr.word(1).store(ops.len() as u64, Ordering::Relaxed);
+        self.arr.word(2).store(batch_id, Ordering::Relaxed);
+        // Header (minus state) + ops in one bulk psync, then the state.
+        self.arr.persist_range(1, HDR_WORDS - 1 + ops.len() * WORDS_PER_OP);
+        self.arr.word(0).store(STATE_COMMITTED, Ordering::Release);
+        self.arr.persist_range(0, 1);
+    }
+
+    /// Retire the record (the batch is fully applied and fenced).
+    fn retire(&self) {
+        self.arr.word(0).store(STATE_FREE, Ordering::Release);
+        self.arr.persist_range(0, 1);
+    }
+
+    /// Recovery's view: the committed-but-unretired batch, if any.
+    pub fn pending(&self) -> Option<(u64, Vec<SetOp>)> {
+        if self.arr.word(0).load(Ordering::Acquire) != STATE_COMMITTED {
+            return None;
+        }
+        let nops = (self.arr.word(1).load(Ordering::Relaxed) as usize).min(TXN_OPS_MAX);
+        let batch_id = self.arr.word(2).load(Ordering::Relaxed);
+        let ops = (0..nops)
+            .map(|i| {
+                let base = HDR_WORDS + i * WORDS_PER_OP;
+                decode(
+                    self.arr.word(base).load(Ordering::Relaxed),
+                    self.arr.word(base + 1).load(Ordering::Relaxed),
+                    self.arr.word(base + 2).load(Ordering::Relaxed),
+                )
+            })
+            .collect();
+        Some((batch_id, ops))
+    }
+
+    /// Roll a committed-but-unretired batch forward through `apply`
+    /// (recovery path: re-apply the full op list per shard, then retire).
+    /// Returns the number of batches rolled forward (0 or 1).
+    pub fn roll_forward(
+        &self,
+        router: Router,
+        mut apply: impl FnMut(usize, &[SetOp]) -> Vec<OpResult>,
+    ) -> usize {
+        let Some((_, ops)) = self.pending() else {
+            return 0;
+        };
+        for (shard, sub) in router.partition(&ops).into_iter().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            let sub_ops: Vec<SetOp> = sub.iter().map(|&(_, op)| op).collect();
+            let _ = apply(shard, &sub_ops);
+        }
+        self.retire();
+        1
+    }
+
+    /// In-process atomic batch: publish → apply per shard → retire.
+    /// All-or-nothing versus crashes at any flush (see the module docs'
+    /// crash analysis); `apply` must group-commit durably per shard
+    /// (`ConcurrentSet::apply_batch` does). Concurrent conflicting
+    /// updates outside this lock void the roll-forward idempotence — the
+    /// wire path parks the shard workers instead.
+    pub fn execute_inproc(
+        &self,
+        router: Router,
+        ops: &[SetOp],
+        metrics: &Metrics,
+        mut apply: impl FnMut(usize, &[SetOp]) -> Vec<OpResult>,
+    ) -> Vec<OpResult> {
+        let _g = self.lock();
+        let batch_id = NEXT_BATCH.fetch_add(1, Ordering::Relaxed);
+        let per_shard = router.partition(ops);
+        self.publish(ops, batch_id);
+        let mut out = vec![OpResult::Found(false); ops.len()];
+        for (shard, sub) in per_shard.iter().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            let sub_ops: Vec<SetOp> = sub.iter().map(|&(_, op)| op).collect();
+            let results = apply(shard, &sub_ops);
+            for (&(i, _), r) in sub.iter().zip(results) {
+                out[i] = r;
+            }
+        }
+        self.retire();
+        metrics.record_atomic(ops.len() as u64);
+        out
+    }
+
+    /// Wire-path atomic batch over parked shard workers (the full
+    /// four-step protocol in the module docs). Returns responses in op
+    /// order. `apply_direct` is the degraded-mode escape hatch: if a
+    /// participating worker dies after the commit point (only reachable
+    /// when its thread panicked or was shut down), the batch is completed
+    /// *directly* on this thread and the record retired before the error
+    /// is returned — the store must never resume service with a stale
+    /// `COMMITTED` record, or a later crash would roll the old batch
+    /// forward over subsequently-acked ops. Completing (rather than
+    /// undoing) is sound: re-applying is idempotent inside the window
+    /// (surviving workers stay parked, the dead one serves no one), and
+    /// "fully applied but unacked" is an allowed outcome for an errored
+    /// frame.
+    pub fn execute_via_workers(
+        &self,
+        router: Router,
+        senders: &[SyncSender<Request>],
+        ops: &[SetOp],
+        metrics: &Metrics,
+        apply_direct: impl Fn(usize, &[SetOp]) -> Vec<OpResult>,
+    ) -> Result<Vec<Response>> {
+        let _g = self.lock();
+        let batch_id = NEXT_BATCH.fetch_add(1, Ordering::Relaxed);
+        let per_shard = router.partition(ops);
+
+        // Phase 1: park every participating worker. Errors here abort
+        // cleanly: nothing is published, dropping the handles releases
+        // any already-parked workers without applying.
+        struct Participant {
+            shard: usize,
+            go: SyncSender<TxnCmd>,
+            ready: std::sync::mpsc::Receiver<()>,
+            done: std::sync::mpsc::Receiver<Vec<Response>>,
+        }
+        let mut parts: Vec<Participant> = Vec::new();
+        for (shard, sub) in per_shard.iter().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            let (ready_tx, ready_rx) = sync_channel(1);
+            let (go_tx, go_rx) = sync_channel(2);
+            let (done_tx, done_rx) = sync_channel(1);
+            senders[shard]
+                .send(Request::Prepare(TxnHandle {
+                    ready: ready_tx,
+                    go: go_rx,
+                    done: done_tx,
+                }))
+                .map_err(|_| anyhow!("shard {shard} worker is gone"))?;
+            parts.push(Participant { shard, go: go_tx, ready: ready_rx, done: done_rx });
+        }
+        for p in &parts {
+            p.ready
+                .recv()
+                .map_err(|_| anyhow!("shard {} never parked", p.shard))?;
+        }
+
+        // Phase 2: the commit point. Every participating shard's *update*
+        // traffic is excluded (reads never mutate); nothing of the batch
+        // is durable yet. From here on the record MUST reach `retire`
+        // before this function returns on every path.
+        self.publish(ops, batch_id);
+
+        // Phase 3: apply on the parked workers (one PsyncScope each).
+        let mut failed: Option<anyhow::Error> = None;
+        let mut out = vec![Response::Missing; ops.len()];
+        for p in &parts {
+            let sub_ops: Vec<SetOp> =
+                per_shard[p.shard].iter().map(|&(_, op)| op).collect();
+            if p.go.send(TxnCmd::Apply(sub_ops)).is_err() {
+                failed = Some(anyhow!("shard {} worker died pre-apply", p.shard));
+                break;
+            }
+        }
+        if failed.is_none() {
+            for p in &parts {
+                match p.done.recv() {
+                    Ok(results) => {
+                        for (&(i, _), r) in per_shard[p.shard].iter().zip(results) {
+                            out[i] = r;
+                        }
+                    }
+                    Err(_) => {
+                        failed = Some(anyhow!("shard {} worker died mid-apply", p.shard));
+                        break;
+                    }
+                }
+            }
+        }
+        if failed.is_some() {
+            // Degraded completion: re-apply every sub-batch directly
+            // (idempotent; partial worker applies are completed, finished
+            // ones are no-ops), so the committed record can be retired.
+            for (shard, sub) in per_shard.iter().enumerate() {
+                if sub.is_empty() {
+                    continue;
+                }
+                let sub_ops: Vec<SetOp> = sub.iter().map(|&(_, op)| op).collect();
+                let _ = apply_direct(shard, &sub_ops);
+            }
+        }
+
+        // Phase 4: retire, then release the workers, then (caller) ack.
+        self.retire();
+        for p in &parts {
+            let _ = p.go.send(TxnCmd::Release);
+        }
+        if let Some(e) = failed {
+            return Err(e);
+        }
+        metrics.record_atomic(ops.len() as u64);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sets::{self, ConcurrentSet, Family};
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for op in [
+            SetOp::Insert(7, 9),
+            SetOp::Remove(3),
+            SetOp::Contains(11),
+            SetOp::Get(u64::MAX),
+        ] {
+            let (k, a, b) = encode(op);
+            assert_eq!(decode(k, a, b), op);
+        }
+    }
+
+    #[test]
+    fn retired_records_are_recycled_not_leaked() {
+        // 50 create→drop cycles must not allocate 50 fresh records: the
+        // free pool is shared with concurrent tests, so assert reuse via
+        // the fresh-allocation counter instead of record identity.
+        let before = NEXT_LOG.load(Ordering::Relaxed);
+        for _ in 0..50 {
+            let log = TxnLog::create();
+            drop(log); // state FREE -> pooled
+        }
+        let fresh = NEXT_LOG.load(Ordering::Relaxed) - before;
+        assert!(fresh < 50, "recycling never engaged ({fresh} fresh allocations in 50 cycles)");
+
+        // A record left mid-protocol (COMMITTED) must never reach the
+        // pool: nothing but its own drop could add it, so this check is
+        // race-free.
+        let b = TxnLog::create();
+        b.publish(&[SetOp::Insert(1, 1)], 9);
+        let base_b = b.arr.word(0) as *const AtomicU64 as usize;
+        drop(b); // deliberately leaked
+        let pooled = FREE_LOGS.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(
+            !pooled.iter().any(|a| a.word(0) as *const AtomicU64 as usize == base_b),
+            "a committed (mid-protocol) record must never be recycled"
+        );
+    }
+
+    #[test]
+    fn publish_pending_retire_cycle() {
+        let log = TxnLog::create();
+        assert!(log.pending().is_none(), "fresh record is free");
+        let ops = vec![SetOp::Insert(1, 10), SetOp::Remove(2), SetOp::Get(3)];
+        log.publish(&ops, 42);
+        let (id, got) = log.pending().expect("committed record is pending");
+        assert_eq!(id, 42);
+        assert_eq!(got, ops);
+        log.retire();
+        assert!(log.pending().is_none(), "retired record is free again");
+    }
+
+    #[test]
+    fn execute_inproc_applies_and_retires() {
+        let router = Router::new(2);
+        let sets: Vec<Box<dyn ConcurrentSet>> =
+            (0..2).map(|_| sets::new_hash(Family::Soft, 64)).collect();
+        let log = TxnLog::create();
+        let metrics = Metrics::new();
+        let ops: Vec<SetOp> = (0..40u64)
+            .map(|k| SetOp::Insert(k, k + 1))
+            .chain([SetOp::Get(5), SetOp::Remove(6), SetOp::Contains(6)])
+            .collect();
+        let res = log.execute_inproc(router, &ops, &metrics, |s, sub| sets[s].apply_batch(sub));
+        for r in res.iter().take(40) {
+            assert_eq!(*r, OpResult::Applied(true));
+        }
+        assert_eq!(res[40], OpResult::Value(Some(6)));
+        assert_eq!(res[41], OpResult::Applied(true));
+        assert_eq!(res[42], OpResult::Found(false));
+        assert!(log.pending().is_none(), "record retired after a clean batch");
+        assert_eq!(
+            metrics.atomics.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "atomic batch counted"
+        );
+        let total: usize = sets.iter().map(|s| s.len_approx()).sum();
+        assert_eq!(total, 39);
+    }
+
+    #[test]
+    fn roll_forward_reapplies_then_retires() {
+        let router = Router::new(2);
+        let sets: Vec<Box<dyn ConcurrentSet>> =
+            (0..2).map(|_| sets::new_hash(Family::LinkFree, 64)).collect();
+        let log = TxnLog::create();
+        let ops: Vec<SetOp> = (100..140u64).map(|k| SetOp::Insert(k, k)).collect();
+        log.publish(&ops, 7);
+        // Simulate a partial pre-crash apply: only shard 0's sub-batch ran.
+        let per_shard = router.partition(&ops);
+        let sub0: Vec<SetOp> = per_shard[0].iter().map(|&(_, op)| op).collect();
+        let _ = sets[0].apply_batch(&sub0);
+        // Roll forward must complete the batch idempotently.
+        let rolled = log.roll_forward(router, |s, sub| sets[s].apply_batch(sub));
+        assert_eq!(rolled, 1);
+        assert!(log.pending().is_none());
+        for k in 100..140u64 {
+            let s = router.shard_of(k);
+            assert_eq!(sets[s].get(k), Some(k), "key {k} after roll-forward");
+        }
+        assert_eq!(log.roll_forward(router, |s, sub| sets[s].apply_batch(sub)), 0);
+    }
+}

@@ -136,6 +136,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         for id in ["1a", "1b", "1c", "2a", "2b", "3a", "3b", "3c", "psync", "batch"] {
             run_one(id, &mut json_points)?;
         }
+    } else if fig == "rwpath" {
+        // The served two-lane path: read fraction x pipeline depth, with
+        // read-lane psync counters (pinned 0 in CI) and the adaptive-K
+        // gauge per point.
+        let points = bench::rwpath::sweep(cfg.duration, seed);
+        print!("{}", bench::rwpath::render(&points));
+        json_points.extend(bench::rwpath::to_json_points(&points));
     } else if fig == "recovery" {
         // Measured RTO: rebuild wall-clock across recovery thread counts
         // and pool sizes (sizes via DURASETS_RECOVERY_KEYS / DURASETS_FULL,

@@ -1,4 +1,4 @@
-//! Named persistent root cells.
+//! Named persistent root cells and root arrays.
 //!
 //! The log-free baseline persists its structure (list heads, bucket
 //! arrays), so it needs durable anchor words a recovery can find — the
@@ -6,6 +6,15 @@
 //! list heads. A root cell is one durable 8-byte word addressed by name;
 //! the name → address map itself is process metadata (it stands in for a
 //! fixed, well-known NVRAM layout).
+//!
+//! **Root arrays** extend the idea to multi-word records (the atomic-batch
+//! commit record of `coordinator::txn`). Unlike plain cells — which share
+//! the registry pool that `crash_pools` never reverts, because every cell
+//! update is write-through — a root array lives in its **own pool**,
+//! exposed via [`RootArray::pool`], so its owner can include it in the
+//! crash set. That matters for records whose multi-word content is only
+//! crash-consistent when the psync protocol around them is honored: the
+//! simulator must be allowed to revert half-written, unfenced words.
 
 use super::region::{alloc_region, RegionTag};
 use super::PoolId;
@@ -71,6 +80,63 @@ pub fn root_cell(name: &str) -> RootCell {
     RootCell(addr as *const AtomicU64)
 }
 
+/// Handle to a named persistent array of 8-byte words in its own pool.
+/// `Copy`, shareable, and stable across simulated crashes (the owner
+/// carries it over a crash the same way shard metas are carried).
+#[derive(Clone, Copy, Debug)]
+pub struct RootArray {
+    base: *const AtomicU64,
+    words: usize,
+    pool: PoolId,
+}
+
+unsafe impl Send for RootArray {}
+unsafe impl Sync for RootArray {}
+
+impl RootArray {
+    /// Word `i` of the array (durable memory).
+    #[inline]
+    pub fn word(&self, i: usize) -> &AtomicU64 {
+        assert!(i < self.words, "root array index {i} out of {}", self.words);
+        unsafe { &*self.base.add(i) }
+    }
+
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// The array's dedicated pool — include it in `crash_pools` so the
+    /// simulator reverts unfenced writes like any other durable region.
+    pub fn pool(&self) -> PoolId {
+        self.pool
+    }
+
+    /// psync words `[start, start + n)`.
+    pub fn persist_range(&self, start: usize, n: usize) {
+        assert!(start + n <= self.words);
+        super::psync(unsafe { self.base.add(start) } as *const u8, n * 8);
+    }
+}
+
+static ARRAYS: Lazy<Mutex<HashMap<String, (usize, usize, PoolId)>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Get (or create zero-initialised) the named root array of `words`
+/// 8-byte words. Re-requesting a name returns the same array; the word
+/// count must match.
+pub fn root_array(name: &str, words: usize) -> RootArray {
+    assert!(words > 0);
+    let mut map = ARRAYS.lock().unwrap();
+    if let Some(&(base, w, pool)) = map.get(name) {
+        assert_eq!(w, words, "root array '{name}' re-requested with a different size");
+        return RootArray { base: base as *const AtomicU64, words, pool };
+    }
+    let pool = PoolId::fresh();
+    let base = alloc_region(pool, words * 8, RegionTag::Root, 0) as usize;
+    map.insert(name.to_string(), (base, words, pool));
+    RootArray { base: base as *const AtomicU64, words, pool }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +157,31 @@ mod tests {
         a.word().store(77, Ordering::SeqCst);
         a.persist();
         assert_eq!(a.word().load(Ordering::SeqCst), 77);
+    }
+
+    #[test]
+    fn root_array_roundtrip_and_identity() {
+        let a = root_array("test.arr.a", 16);
+        let b = root_array("test.arr.a", 16);
+        assert_eq!(a.base as usize, b.base as usize);
+        assert_ne!(a.pool(), PoolId(0));
+        for i in 0..16 {
+            a.word(i).store(i as u64 * 3, Ordering::Relaxed);
+        }
+        a.persist_range(0, 16);
+        for i in 0..16 {
+            assert_eq!(b.word(i).load(Ordering::Relaxed), i as u64 * 3);
+        }
+        // Distinct names get distinct pools (crash isolation).
+        let c = root_array("test.arr.c", 4);
+        assert_ne!(a.pool(), c.pool());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn root_array_bounds_checked() {
+        let a = root_array("test.arr.bounds", 2);
+        a.word(2);
     }
 
     #[test]

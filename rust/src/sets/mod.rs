@@ -2,12 +2,12 @@
 //!
 //! Four families, one trait:
 //!
-//! | family | module | durability | psyncs/update | psyncs/read | fences/op, K-batch | hash growth |
-//! |---|---|---|---|---|---|---|
-//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | ~1/K | [`resizable`] |
-//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | 1/K | [`resizable`] |
-//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | ~1/K (flushes stay ~2/op) | [`resizable`] |
-//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | 0 | fixed |
+//! | family | module | durability | psyncs/update | psyncs/read | fences/op, K-batch | hash growth | `contains_batch` |
+//! |---|---|---|---|---|---|---|---|
+//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | ~1/K | [`resizable`] | coalesced ([`ResizableHash`]: one pin, okey-sorted probes) |
+//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | 1/K | [`resizable`] | coalesced ([`ResizableHash`]) |
+//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | ~1/K (flushes stay ~2/op) | [`resizable`] | coalesced ([`ResizableHash`]) |
+//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | 0 | fixed | default loop |
 //!
 //! Each family provides a sorted linked list and a hash set built from the
 //! same core (a bucket is a bare link cell — see [`tagged`]), plus a
@@ -109,6 +109,24 @@ pub trait ConcurrentSet: Send + Sync {
 
     /// Non-linearizable size estimate (testing/metrics only).
     fn len_approx(&self) -> usize;
+
+    /// Membership of every key in `keys`, in input order, as **one**
+    /// virtual-call sweep — the server's read lane issues a whole
+    /// contains run through a single dispatch instead of one per line.
+    /// The default loops over [`ConcurrentSet::contains`]; families whose
+    /// reads share per-call overhead (EBR pin, entry lookup) override it
+    /// with a coalesced sweep. Reads never psync, so no scope is taken:
+    /// a batch of reads costs zero fences and zero flushes in every
+    /// family (SOFT unconditionally; link-free/log-free at quiescence).
+    fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
+        keys.iter().map(|&k| self.contains(k)).collect()
+    }
+
+    /// Value lookup for every key in `keys`, in input order — the read
+    /// lane's `GET` sweep, same contract as [`ConcurrentSet::contains_batch`].
+    fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
+        keys.iter().map(|&k| self.get(k)).collect()
+    }
 
     /// Apply one batch op (the shared dispatch used by `apply_batch`).
     fn apply_one(&self, op: SetOp) -> OpResult {
@@ -286,6 +304,31 @@ mod tests {
         assert_eq!(d.fences, 1, "64 batched soft inserts = one trailing fence");
         assert_eq!(d.elided, 64, "each op's own fence is elided");
         assert_eq!(d.flushes, 64, "flushes still happen per-op");
+    }
+
+    #[test]
+    fn contains_and_get_batch_match_singles_and_stay_psync_free() {
+        for family in Family::ALL {
+            let set = new_hash(family, 16);
+            for k in (0..200u64).step_by(2) {
+                assert!(set.insert(k, k + 1));
+            }
+            let keys: Vec<u64> = (0..200u64).collect();
+            let a = crate::pmem::stats::thread_snapshot();
+            let present = set.contains_batch(&keys);
+            let values = set.get_batch(&keys);
+            let d = crate::pmem::stats::thread_snapshot().since(&a);
+            for (i, &k) in keys.iter().enumerate() {
+                assert_eq!(present[i], k % 2 == 0, "{family}: contains_batch key {k}");
+                assert_eq!(
+                    values[i],
+                    if k % 2 == 0 { Some(k + 1) } else { None },
+                    "{family}: get_batch key {k}"
+                );
+            }
+            assert_eq!(d.fences, 0, "{family}: batched reads must not fence");
+            assert_eq!(d.flushes, 0, "{family}: batched reads must not flush");
+        }
     }
 
     #[test]

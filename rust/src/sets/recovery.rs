@@ -124,6 +124,12 @@ pub const MAX_RECOVERY_THREADS: usize = 32;
 /// Below this many members a parallel relink is pure spawn overhead.
 const PAR_RELINK_MIN: usize = 4096;
 
+/// Below this many members the member-run sort stays single-threaded
+/// (aligned with [`PAR_RELINK_MIN`] so one scale threshold governs both
+/// post-scan phases; the single-threaded sort only *shows* at millions of
+/// slots, but engaging the parallel path at test scale keeps it honest).
+const PAR_SORT_MIN: usize = 4096;
+
 /// Recovery worker count: `DURASETS_RECOVERY_THREADS` if set, else the
 /// machine's available parallelism, clamped to [1, MAX_RECOVERY_THREADS].
 pub fn default_threads() -> usize {
@@ -305,22 +311,102 @@ pub fn assert_unique_sorted(members: &[(u64, usize)], family: &str) {
     }
 }
 
+/// Merge two sorted runs into `out` (`out.len() == a.len() + b.len()`),
+/// comparing by `key`. Ties prefer `a` (stability across runs; keys are
+/// unique in valid images anyway — `assert_unique_sorted` enforces it).
+fn merge_into<K: Ord>(
+    a: &[(u64, usize)],
+    b: &[(u64, usize)],
+    out: &mut [(u64, usize)],
+    key: &impl Fn(u64) -> K,
+) {
+    debug_assert_eq!(out.len(), a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    for slot in out.iter_mut() {
+        *slot = if j >= b.len() || (i < a.len() && key(a[i].0) <= key(b[j].0)) {
+            let x = a[i];
+            i += 1;
+            x
+        } else {
+            let x = b[j];
+            j += 1;
+            x
+        };
+    }
+}
+
+/// Parallel merge sort over the member run: contiguous chunks are sorted
+/// on a scoped worker pool, then log₂(chunks) rounds of pairwise merges —
+/// each round's merges are independent (disjoint output ranges carved
+/// with `split_at_mut`) and also run on scoped workers. Falls back to
+/// `sort_unstable_by_key` below [`PAR_SORT_MIN`] or with one thread.
+/// Zero psyncs by construction: this is pure volatile compute over the
+/// already-durable member run, so the engine's fence/flush pins
+/// (`rust/tests/recovery_parallel.rs`) hold bit-identically.
+fn par_sort_by<K, F>(v: &mut Vec<(u64, usize)>, threads: usize, key: F)
+where
+    K: Ord,
+    F: Fn(u64) -> K + Sync,
+{
+    let len = v.len();
+    let threads = threads.clamp(1, MAX_RECOVERY_THREADS);
+    if threads <= 1 || len < PAR_SORT_MIN {
+        v.sort_unstable_by_key(|m| key(m.0));
+        return;
+    }
+    let chunk = len.div_ceil(threads.min(len));
+    std::thread::scope(|s| {
+        for c in v.chunks_mut(chunk) {
+            let key = &key;
+            s.spawn(move || c.sort_unstable_by_key(|m| key(m.0)));
+        }
+    });
+    let mut runs: Vec<(usize, usize)> =
+        (0..len).step_by(chunk).map(|s| (s, (s + chunk).min(len))).collect();
+    let mut src = std::mem::take(v);
+    let mut dst = vec![(0u64, 0usize); len];
+    while runs.len() > 1 {
+        let mut next: Vec<(usize, usize)> = Vec::with_capacity(runs.len().div_ceil(2));
+        std::thread::scope(|s| {
+            // Carve disjoint output windows off the scratch buffer; runs
+            // are contiguous from 0, so windows line up with run bounds.
+            let mut out_rest: &mut [(u64, usize)] = &mut dst;
+            let mut i = 0;
+            while i < runs.len() {
+                let (s0, e0) = runs[i];
+                let (s1, e1) = if i + 1 < runs.len() { runs[i + 1] } else { (e0, e0) };
+                let (out, rest) = std::mem::take(&mut out_rest).split_at_mut(e1 - s0);
+                out_rest = rest;
+                next.push((s0, e1));
+                let src = &src;
+                let key = &key;
+                s.spawn(move || merge_into(&src[s0..e0], &src[s1..e1], out, key));
+                i += 2;
+            }
+        });
+        std::mem::swap(&mut src, &mut dst);
+        runs = next;
+    }
+    *v = src;
+}
+
 impl Scan {
     /// Sort the member run by key (single-chain shapes: lists, skip-list
-    /// bottom levels, the resizable families' okey order).
+    /// bottom levels, the resizable families' okey order). Parallel merge
+    /// sort on the engine's worker budget past [`PAR_SORT_MIN`].
     pub fn sort_by_key(&mut self) {
         let t0 = Instant::now();
-        self.members.sort_unstable_by_key(|m| m.0);
+        par_sort_by(&mut self.members, self.threads, |k| k);
         assert_unique_sorted(&self.members, self.family);
         self.timings.sort += t0.elapsed();
     }
 
     /// Sort the member run by `(bucket, key)` (fixed-bucket hash shapes).
     /// Duplicate keys stay adjacent (same key ⇒ same bucket), so the
-    /// set-uniqueness check still holds.
-    pub fn sort_by_bucket(&mut self, bucket_of: impl Fn(u64) -> usize) {
+    /// set-uniqueness check still holds. Parallel past [`PAR_SORT_MIN`].
+    pub fn sort_by_bucket(&mut self, bucket_of: impl Fn(u64) -> usize + Sync) {
         let t0 = Instant::now();
-        self.members.sort_unstable_by_key(|m| (bucket_of(m.0), m.0));
+        par_sort_by(&mut self.members, self.threads, |k| (bucket_of(k), k));
         assert_unique_sorted(&self.members, self.family);
         self.timings.sort += t0.elapsed();
     }
@@ -461,6 +547,47 @@ mod tests {
             }
             assert_eq!(covered, len);
             assert!(segs.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
+    fn par_sort_matches_sequential_sort() {
+        let mut rng = crate::util::rng::Xoshiro256::new(0x50_B7);
+        for &(n, threads) in
+            &[(0usize, 8usize), (1, 8), (100, 8), (PAR_SORT_MIN - 1, 8), (20_000, 8), (20_000, 3)]
+        {
+            let mut a: Vec<(u64, usize)> =
+                (0..n).map(|i| (rng.next_u64() % 50_000, i)).collect();
+            let mut b = a.clone();
+            par_sort_by(&mut a, threads, |k| k);
+            b.sort_unstable_by_key(|m| m.0);
+            // Duplicate keys allowed here (sort only; uniqueness is the
+            // caller's assert): compare the key sequence, and the handle
+            // multiset via length + per-key membership.
+            assert_eq!(
+                a.iter().map(|m| m.0).collect::<Vec<_>>(),
+                b.iter().map(|m| m.0).collect::<Vec<_>>(),
+                "n={n} threads={threads}"
+            );
+            let mut ah: Vec<usize> = a.iter().map(|m| m.1).collect();
+            let mut bh: Vec<usize> = b.iter().map(|m| m.1).collect();
+            ah.sort_unstable();
+            bh.sort_unstable();
+            assert_eq!(ah, bh, "n={n} threads={threads}: handles lost/duplicated");
+        }
+    }
+
+    #[test]
+    fn par_sort_composite_key_orders_by_bucket_then_key() {
+        let mut v: Vec<(u64, usize)> = (0..10_000u64).rev().map(|k| (k, k as usize)).collect();
+        let bucket_of = |k: u64| (k % 7) as usize;
+        par_sort_by(&mut v, 8, |k| (bucket_of(k), k));
+        for w in v.windows(2) {
+            let (a, b) = (w[0].0, w[1].0);
+            assert!(
+                (bucket_of(a), a) < (bucket_of(b), b),
+                "composite order violated: {a} !< {b}"
+            );
         }
     }
 

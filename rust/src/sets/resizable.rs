@@ -692,6 +692,24 @@ impl<F: ResizableFamily> ResizableHash<F> {
         }
     }
 
+    /// The coalesced read sweep behind `contains_batch`/`get_batch`: one
+    /// EBR pin for the whole run (instead of one per key) and probes in
+    /// okey order, so consecutive lookups walk cache-adjacent windows of
+    /// the single family list and revisit the same bucket hints. Zero
+    /// psyncs — this is the plain read path, batched. Holding one pin
+    /// across the run delays reclamation by at most one sweep, the same
+    /// order as any long traversal.
+    fn read_sweep(&self, keys: &[u64], mut sink: impl FnMut(usize, Option<u64>)) {
+        let mut probes: Vec<(u64, usize)> =
+            keys.iter().enumerate().map(|(i, &k)| (mix64(k), i)).collect();
+        probes.sort_unstable();
+        let _g = self.inner.ebr().pin();
+        for &(okey, i) in &probes {
+            let (start, _, _) = self.entry(okey);
+            sink(i, self.inner.get_from(start, okey));
+        }
+    }
+
     /// Double the bucket array while `items` is past the load trigger.
     /// Lock-free: losers of the publish CAS free their candidate and
     /// re-check; the winner persists the new epoch (one psync per
@@ -794,6 +812,18 @@ impl<F: ResizableFamily> ConcurrentSet for ResizableHash<F> {
         // Striped-counter sum: O(stripes) instead of the old O(n) chain
         // walk, and exact at quiescence (see StripedItems).
         self.items.sum().max(0) as usize
+    }
+
+    fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
+        let mut out = vec![false; keys.len()];
+        self.read_sweep(keys, |i, v| out[i] = v.is_some());
+        out
+    }
+
+    fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
+        let mut out = vec![None; keys.len()];
+        self.read_sweep(keys, |i, v| out[i] = v);
+        out
     }
 
     fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
@@ -1121,6 +1151,30 @@ mod tests {
             LfNode::init_free_pattern(slot as *mut u8);
         }
         h.inner.core.pool.free(slot as *mut u8);
+    }
+
+    /// The coalesced read sweep: input-order results, correctness across
+    /// growth (probes through hints of a multiply-doubled table), and the
+    /// psync-free pin.
+    #[test]
+    fn read_sweep_matches_singles_across_growth() {
+        let h = ResizableHash::new_soft(2);
+        for k in 0..600u64 {
+            assert!(h.insert(k * 3, k));
+        }
+        assert!(h.nbuckets() > 2, "sweep must probe a grown table");
+        let keys: Vec<u64> = (0..1000u64).collect();
+        let a = crate::pmem::stats::thread_snapshot();
+        let present = h.contains_batch(&keys);
+        let values = h.get_batch(&keys);
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "read sweep must not fence");
+        assert_eq!(d.flushes, 0, "read sweep must not flush");
+        for (i, &k) in keys.iter().enumerate() {
+            let want = (k % 3 == 0 && k / 3 < 600).then_some(k / 3);
+            assert_eq!(values[i], want, "get_batch key {k}");
+            assert_eq!(present[i], want.is_some(), "contains_batch key {k}");
+        }
     }
 
     /// Regression: `len_approx` sums per-tid stripes while spills are in

@@ -62,6 +62,20 @@ impl WorkloadSpec {
         }
     }
 
+    /// The contains-heavy skewed preset: 99% reads over a Zipfian(0.99)
+    /// key distribution — the serving pattern the read fast path targets
+    /// (hot-key lookups dominating wire traffic; YCSB-C-shaped with
+    /// YCSB's default skew). Used by `bench --fig rwpath`'s highest read
+    /// fraction.
+    pub fn contains_heavy_zipf(key_range: u64, seed: u64) -> Self {
+        WorkloadSpec {
+            key_range,
+            read_micros: 990_000,
+            dist: KeyDist::Zipfian(0.99),
+            seed,
+        }
+    }
+
     /// Stream for one thread. Matches `kernels/workload.py` exactly in the
     /// uniform case (same mix64 chain, same op thresholds).
     pub fn stream(&self, thread: u64) -> OpStream {
@@ -180,6 +194,29 @@ mod tests {
         }
         let ratio = ins as f64 / (ins + rem) as f64;
         assert!((0.48..0.52).contains(&ratio), "insert/remove ratio {ratio}");
+    }
+
+    #[test]
+    fn contains_heavy_zipf_preset_is_read_heavy_and_skewed() {
+        let spec = WorkloadSpec::contains_heavy_zipf(10_000, 17);
+        let mut s = spec.stream(0);
+        let n = 40_000u64;
+        let mut reads = 0usize;
+        let mut counts = std::collections::HashMap::new();
+        for i in 0..n {
+            let op = s.op_at(i);
+            if op.is_read() {
+                reads += 1;
+            }
+            *counts.entry(op.key()).or_insert(0usize) += 1;
+        }
+        let frac = reads as f64 / n as f64;
+        assert!((frac - 0.99).abs() < 0.005, "read fraction {frac}");
+        // Zipf(0.99): the hottest key must dwarf the uniform expectation
+        // (n / range = 4 hits).
+        let hottest = counts.values().copied().max().unwrap();
+        assert!(hottest > 200, "skew missing: hottest key seen {hottest} times");
+        assert!(counts.len() < 9_000, "skew must concentrate the key mass");
     }
 
     #[test]

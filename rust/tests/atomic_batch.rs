@@ -1,0 +1,196 @@
+//! All-or-nothing recovery of atomic cross-shard batches (DESIGN.md
+//! §Transactions).
+//!
+//! The protocol's durable footprint is a fixed psync sequence: publish
+//! the op list (bulk psync), flip the commit record's state word
+//! (psync), apply per-shard sub-batches (per-op flushes + trailing
+//! fences), retire the record (psync). The sweep below arms the
+//! simulated power loss at flush 1, 2, 3, … of that sequence until a run
+//! completes unfaulted — every boundary, and therefore every
+//! prepare/commit interleaving a crash can produce, is hit for all three
+//! families. (The wire path adds worker parking around the identical
+//! record psyncs, so the record-state coverage is the same; its
+//! acked-durability is checked end-to-end below.)
+//!
+//! Expected recovery outcome at every fault point:
+//! * record not committed at the crash → **nothing** of the batch
+//!   (rollback = discard);
+//! * record committed → **everything** (roll-forward re-applies the op
+//!   list);
+//! and never anything in between — that's the claim `MULTI <n> ATOMIC`
+//! acks are durable under.
+
+use durasets::config::Config;
+use durasets::coordinator::DuraKv;
+use durasets::pmem::{self, CrashPolicy};
+use durasets::sets::{Family, OpResult, SetOp};
+use std::panic::AssertUnwindSafe;
+
+mod common;
+use common::quiet_power_loss_panics;
+
+fn crash_cfg(family: Family) -> Config {
+    let mut cfg = Config::default();
+    cfg.family = family;
+    cfg.shards = 3;
+    cfg.key_range = 1 << 12;
+    cfg.sim = true;
+    cfg.psync_ns = 0;
+    cfg
+}
+
+/// Keys of round `r`: 20 inserts + 10 removes, spread across shards.
+fn round_ops(r: u64) -> (Vec<u64>, Vec<u64>, Vec<SetOp>) {
+    let inserts: Vec<u64> = (0..20u64).map(|i| 10_000 + r * 100 + i).collect();
+    let victims: Vec<u64> = (0..10u64).map(|i| 500 + i).collect();
+    let ops: Vec<SetOp> = inserts
+        .iter()
+        .map(|&k| SetOp::Insert(k, k * 2))
+        .chain(victims.iter().map(|&k| SetOp::Remove(k)))
+        .collect();
+    (inserts, victims, ops)
+}
+
+#[test]
+fn crash_at_every_flush_of_an_atomic_batch_recovers_all_or_nothing() {
+    let _sim = pmem::sim_session();
+    quiet_power_loss_panics();
+    pmem::set_psync_ns(0);
+    for family in Family::DURABLE {
+        let mut kv = DuraKv::create(crash_cfg(family));
+        // Stable pre-state the batch never touches.
+        for k in 0..50u64 {
+            assert!(kv.put(k, k + 1), "{family}: pre-state {k}");
+        }
+        let (mut saw_none, mut saw_all, mut rolled_total) = (false, false, 0usize);
+        let mut fault = 1u64;
+        let mut round = 0u64;
+        loop {
+            let (inserts, victims, ops) = round_ops(round);
+            // (Re-)install the victims; acked before the fault arms.
+            for &k in &victims {
+                kv.put(k, k + 7);
+            }
+            pmem::arm_flush_fault(fault);
+            let outcome =
+                std::panic::catch_unwind(AssertUnwindSafe(|| kv.apply_batch_atomic(&ops)));
+            pmem::disarm_flush_fault();
+            let completed = outcome.is_ok();
+            if let Ok(results) = &outcome {
+                for (i, r) in results.iter().enumerate().take(20) {
+                    assert_eq!(*r, OpResult::Applied(true), "{family}: insert {i}");
+                }
+            }
+            let ticket = kv.crash(CrashPolicy::PESSIMISTIC);
+            let (kv2, report) = ticket.recover().unwrap();
+            kv = kv2;
+            let applied = kv.get(inserts[0]) == Some(inserts[0] * 2);
+            if applied {
+                for &k in &inserts {
+                    assert_eq!(kv.get(k), Some(k * 2), "{family}: torn batch (insert {k})");
+                }
+                for &k in &victims {
+                    assert_eq!(kv.get(k), None, "{family}: torn batch (victim {k})");
+                }
+                saw_all = true;
+            } else {
+                for &k in &inserts {
+                    assert_eq!(kv.get(k), None, "{family}: torn batch (ghost insert {k})");
+                }
+                for &k in &victims {
+                    assert_eq!(kv.get(k), Some(k + 7), "{family}: torn batch (lost victim {k})");
+                }
+                saw_none = true;
+            }
+            // An acked (completed) batch must have survived in full.
+            if completed {
+                assert!(applied, "{family}: acked atomic batch lost");
+            }
+            // Pre-state is never collateral damage.
+            for k in 0..50u64 {
+                assert_eq!(kv.get(k), Some(k + 1), "{family}: pre-state {k} damaged");
+            }
+            if report.txn_rolled_forward > 0 {
+                rolled_total += report.txn_rolled_forward;
+                assert!(applied, "{family}: roll-forward must yield the full batch");
+                assert!(
+                    kv.metrics.report().contains("rolled_forward=1"),
+                    "roll-forward must surface on STATS"
+                );
+            }
+            // Clean up applied rounds so each round starts from a known
+            // state (removes are plain acked ops).
+            if applied {
+                for &k in &inserts {
+                    assert!(kv.del(k), "{family}: cleanup {k}");
+                }
+            }
+            if completed {
+                break;
+            }
+            fault += 1;
+            round += 1;
+        }
+        assert!(
+            saw_none && saw_all && rolled_total > 0,
+            "{family}: the fault sweep must hit discard ({saw_none}), roll-forward \
+             ({rolled_total}) and full-apply ({saw_all}) outcomes"
+        );
+    }
+}
+
+/// Wire-level complement: `MULTI <n> ATOMIC` acks are durable — stop the
+/// server after the replies, crash, recover, and the whole batch (and
+/// nothing torn) is there.
+#[test]
+fn served_atomic_batch_acks_are_durable() {
+    use durasets::coordinator::server;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    let _sim = pmem::sim_session();
+    let mut cfg = crash_cfg(Family::LinkFree);
+    cfg.shards = 2;
+    let kv = Arc::new(DuraKv::create(cfg));
+    let srv = server::serve(kv.clone(), 0).unwrap();
+
+    let stream = TcpStream::connect(srv.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer.write_all(b"PUT 7 70\nMULTI 4 ATOMIC\nPUT 1 11\nPUT 2 22\nDEL 7\nGET 1\nEXEC\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    let want = ["OK NEW", "OK NEW", "OK NEW", "OK DELETED", "FOUND 11"];
+    for (i, w) in want.iter().enumerate() {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), *w, "reply {i}");
+    }
+    writer.write_all(b"QUIT\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "BYE");
+    drop(reader);
+    drop(writer);
+    drop(srv);
+    let kv = {
+        let mut arc = kv;
+        let mut tries = 0;
+        loop {
+            match Arc::try_unwrap(arc) {
+                Ok(inner) => break inner,
+                Err(still_shared) => {
+                    arc = still_shared;
+                    tries += 1;
+                    assert!(tries < 1000, "connection handler never released the store");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+        }
+    };
+    let (kv2, _) = kv.crash(CrashPolicy::PESSIMISTIC).recover().unwrap();
+    assert_eq!(kv2.get(1), Some(11), "acked atomic insert survives");
+    assert_eq!(kv2.get(2), Some(22), "acked atomic insert survives");
+    assert_eq!(kv2.get(7), None, "acked atomic delete survives");
+}

@@ -254,6 +254,125 @@ fn mixed_batch_histories_are_linearizable() {
     }
 }
 
+/// Record histories against a sharded `DuraKv`, mixing three issue paths
+/// per thread: plain single ops, plain (per-shard-atomic) batches, and
+/// **atomic cross-shard batches** (`apply_batch_atomic`). Batch
+/// constituents are recorded as individual events sharing the batch's
+/// inv/resp interval — an atomic batch serializes against the store-wide
+/// txn lock, but its ops must still linearize individually like any
+/// other batch (atomicity is a *crash* guarantee; the volatile
+/// linearization contract is unchanged).
+fn record_kv_mixed(
+    family: Family,
+    threads: usize,
+    ops_per_thread: usize,
+    keys: u64,
+    seed: u64,
+) -> Vec<ThreadHistory> {
+    use durasets::config::Config;
+    use durasets::coordinator::DuraKv;
+    let mut cfg = Config::default();
+    cfg.family = family;
+    cfg.shards = 3;
+    cfg.key_range = 1 << 10;
+    cfg.psync_ns = 0;
+    let kv = Arc::new(DuraKv::create(cfg));
+    let clock = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(threads));
+    let handles: Vec<_> = (0..threads as u64)
+        .map(|t| {
+            let kv = kv.clone();
+            let clock = clock.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(seed ^ (t * 0xA7C));
+                let mut hist = Vec::with_capacity(ops_per_thread);
+                barrier.wait();
+                while hist.len() < ops_per_thread {
+                    let style = rng.below(100);
+                    if style < 40 {
+                        // Plain single op.
+                        let key = rng.below(keys);
+                        let kind = match rng.below(3) {
+                            0 => Kind::Insert,
+                            1 => Kind::Remove,
+                            _ => Kind::Contains,
+                        };
+                        let inv = clock.fetch_add(1, Ordering::SeqCst);
+                        let result = match kind {
+                            Kind::Insert => kv.put(key, key),
+                            Kind::Remove => kv.del(key),
+                            Kind::Contains => kv.contains(key),
+                        };
+                        let resp = clock.fetch_add(1, Ordering::SeqCst);
+                        hist.push(Event { kind, key, result, inv, resp });
+                    } else {
+                        // A small batch, plain or atomic (cross-shard:
+                        // with 3 shards and 2-4 ops it regularly spans
+                        // several shards).
+                        let atomic = style >= 70;
+                        let n = 2 + rng.below(3) as usize;
+                        let mut ops = Vec::with_capacity(n);
+                        let mut kinds = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            let key = rng.below(keys);
+                            match rng.below(3) {
+                                0 => {
+                                    ops.push(SetOp::Insert(key, key));
+                                    kinds.push((Kind::Insert, key));
+                                }
+                                1 => {
+                                    ops.push(SetOp::Remove(key));
+                                    kinds.push((Kind::Remove, key));
+                                }
+                                _ => {
+                                    ops.push(SetOp::Contains(key));
+                                    kinds.push((Kind::Contains, key));
+                                }
+                            }
+                        }
+                        let inv = clock.fetch_add(1, Ordering::SeqCst);
+                        let results = if atomic {
+                            kv.apply_batch_atomic(&ops)
+                        } else {
+                            kv.apply_batch(&ops)
+                        };
+                        let resp = clock.fetch_add(1, Ordering::SeqCst);
+                        for ((kind, key), res) in kinds.into_iter().zip(results) {
+                            let result = match res {
+                                OpResult::Applied(b) | OpResult::Found(b) => b,
+                                OpResult::Value(v) => v.is_some(),
+                            };
+                            hist.push(Event { kind, key, result, inv, resp });
+                        }
+                    }
+                }
+                hist
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Mixed atomic/plain batch histories over the sharded store: atomic
+/// batches must linearize exactly like plain ones (the txn machinery —
+/// record publish, worker exclusion on the wire path, roll-forward —
+/// must never change what concurrent readers can observe).
+#[test]
+fn mixed_atomic_and_plain_batches_are_linearizable() {
+    for family in [Family::Soft, Family::LinkFree, Family::LogFree] {
+        for round in 0..3u64 {
+            let hist = record_kv_mixed(family, 3, 48, 4, 0xA70_71C ^ round);
+            let total: usize = hist.iter().map(|h| h.len()).sum();
+            assert!(
+                linearizable(&hist),
+                "{family}: atomic/plain history of {total} ops NOT linearizable \
+                 (round {round}): {hist:#?}"
+            );
+        }
+    }
+}
+
 /// The checker itself must reject broken histories (meta-test).
 #[test]
 fn checker_rejects_impossible_history() {

@@ -210,6 +210,60 @@ fn large_pool_parallel_engine_engages() {
     }
 }
 
+/// The member-run sort is now a parallel merge sort past its engagement
+/// threshold (PAR_SORT_MIN = 4096, same scale as the relink threshold).
+/// Differential pin: a >4096-member SOFT image — SOFT exercises the
+/// sort's handle side hardest, every member handle is a freshly
+/// materialised volatile SNode — recovered sequentially vs with 8
+/// workers must agree on members, stats, contents, order (every key
+/// readable ⇒ the relinked chain is correctly sorted) and, exactly, on
+/// fence/flush counts: sorting is pure volatile compute and owes zero
+/// psyncs no matter how many threads it fans out to.
+#[test]
+fn parallel_member_sort_engages_and_adds_no_psyncs() {
+    let _g = LOCK.lock().unwrap();
+    let _sim = pmem::sim_session();
+    const N: u64 = 9_000;
+    let mk = || {
+        let h = resizable::ResizableHash::new_soft(2);
+        for k in 0..N {
+            assert!(h.insert(k, k.wrapping_mul(31) + 1));
+        }
+        for k in 0..800u64 {
+            assert!(h.remove(k * 11));
+        }
+        h
+    };
+    let (a, b) = (mk(), mk());
+    let (ida, idb) = (a.pool_id(), b.pool_id());
+    a.crash_preserve();
+    b.crash_preserve();
+    drop(a);
+    drop(b);
+    pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[ida, idb]);
+
+    let f0 = stats::snapshot();
+    let (ra, sa, ta) = resizable::recover_soft_timed(ida, 2, 1);
+    let f1 = stats::snapshot();
+    let (rb, sb, tb) = resizable::recover_soft_timed(idb, 2, 8);
+    let f2 = stats::snapshot();
+
+    assert_eq!(sa.members, (N - 800) as usize);
+    assert!(sa.members > 4096, "must cross the parallel-sort threshold");
+    assert_eq!(sa, sb, "parallel sort changed what recovery found");
+    let (seq, par) = (f1.since(&f0), f2.since(&f1));
+    assert_eq!(seq.fences, par.fences, "parallel sort added psyncs");
+    assert_eq!(seq.flushes, par.flushes, "parallel sort added flushes");
+    assert!(ta.sort > std::time::Duration::ZERO, "sort phase must be timed");
+    assert!(tb.sort > std::time::Duration::ZERO);
+    for k in 0..N {
+        let removed = k % 11 == 0 && k / 11 < 800;
+        let want = if removed { None } else { Some(k.wrapping_mul(31) + 1) };
+        assert_eq!(ra.get(k), want, "seq key {k}");
+        assert_eq!(rb.get(k), want, "par key {k}");
+    }
+}
+
 /// The resizable differential must also preserve the bucket-count epoch
 /// identically on both paths (growth happened pre-crash).
 #[test]
