@@ -1,0 +1,313 @@
+//! `bench --fig connscale`: event-plane connection scaling — live
+//! connections × active fraction.
+//!
+//! Each point starts a fresh server on the event plane (2 reactor
+//! workers), opens `conns` connections in two phases (connect all, then
+//! one verifying round-trip each so every socket is registered with a
+//! reactor), then drives the active fraction with pipelined read bursts
+//! until the phase deadline while the rest sit idle. Reported per point:
+//!
+//! * RSS before/after the connection pile (`/proc/self/status` VmRSS,
+//!   linux; 0 elsewhere) — the C10K flat-memory claim;
+//! * OS thread count at peak — the ≤ `event_workers`+2 claim, in gauge
+//!   form (the bench process also owns shard workers and drivers);
+//! * wire throughput of the active set, so idle-conn cost can't hide
+//!   behind a stalled data path.
+//!
+//! The sweep's verdict — `rss_superlinear` in `BENCH_connscale.json` —
+//! compares per-connection RSS slope across the point sizes: a plane
+//! whose idle connections cost buffers only stays near-constant; the CI
+//! `connscale-bench` job fails on `true`. Smoke sizes {64, 128, 256} keep
+//! under default fd limits; `DURASETS_FULL=1` goes to {64, 1k, 10k}
+//! (CI raises `ulimit -n` for that job). Connect failures degrade the
+//! point gracefully (the opened count is reported) rather than aborting
+//! the sweep.
+
+use crate::config::Config;
+use crate::coordinator::{server, DuraKv};
+use crate::sets::Family;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const KEY_RANGE: u64 = 1 << 12;
+
+/// Ops per pipelined burst on each active connection.
+const BURST: usize = 16;
+
+/// Driver threads sharing the active set.
+const DRIVERS: usize = 2;
+
+/// One measured point.
+pub struct ConnPoint {
+    /// Connections requested for this point.
+    pub conns: usize,
+    /// Connections actually opened + verified (fd limits degrade here).
+    pub opened: usize,
+    pub active_pct: u32,
+    pub ops: u64,
+    pub elapsed: Duration,
+    /// VmRSS (kB) after the server started, before connections.
+    pub rss_kb_before: u64,
+    /// VmRSS (kB) at the deadline, connections still held.
+    pub rss_kb: u64,
+    /// OS threads at the deadline (0 off-linux).
+    pub threads: u64,
+}
+
+impl ConnPoint {
+    pub fn kops(&self) -> f64 {
+        self.ops as f64 / self.elapsed.as_secs_f64().max(1e-9) / 1e3
+    }
+
+    /// Per-held-connection RSS growth (kB/conn), floored so tiny
+    /// absolute deltas on small points can't explode the ratio test.
+    pub fn rss_slope(&self) -> f64 {
+        let grown = self.rss_kb.saturating_sub(self.rss_kb_before) as f64;
+        (grown / self.opened.max(1) as f64).max(0.25)
+    }
+}
+
+/// (VmRSS kB, Threads) from `/proc/self/status`; (0, 0) off-linux.
+fn proc_status() -> (u64, u64) {
+    #[cfg(target_os = "linux")]
+    {
+        let s = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+        let field = |name: &str| -> u64 {
+            s.lines()
+                .find_map(|l| l.strip_prefix(name))
+                .and_then(|v| v.trim().trim_end_matches(" kB").trim().parse().ok())
+                .unwrap_or(0)
+        };
+        (field("VmRSS:"), field("Threads:"))
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        (0, 0)
+    }
+}
+
+fn run_point(conns: usize, active_pct: u32, duration: Duration) -> ConnPoint {
+    let mut cfg = Config::default();
+    cfg.family = Family::Soft;
+    cfg.shards = 2;
+    cfg.key_range = KEY_RANGE;
+    cfg.psync_ns = 100;
+    cfg.event_workers = 2;
+    cfg.max_conns = 0; // the point *is* the pile; don't refuse it
+    let kv = Arc::new(DuraKv::create(cfg));
+    assert!(kv.put(1, 1));
+    let srv = server::serve(kv, 0).expect("connscale server");
+    let addr = srv.addr;
+    let (rss_kb_before, _) = proc_status();
+
+    // Phase 1: connect everything (accepts drain in batches, so serial
+    // round-trips here would serialize on accept latency instead).
+    let mut streams = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        match TcpStream::connect(addr) {
+            Ok(s) => streams.push(s),
+            Err(_) => break, // fd limit — degrade, report `opened`
+        }
+    }
+    // Phase 2: one verifying round-trip per connection — after this every
+    // socket is registered with a reactor and provably served.
+    let mut held = Vec::with_capacity(streams.len());
+    for s in streams {
+        let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+        let mut reader = BufReader::new(match s.try_clone() {
+            Ok(c) => c,
+            Err(_) => continue,
+        });
+        let mut w = s;
+        let mut line = String::new();
+        if writeln!(w, "HAS 1").is_ok()
+            && reader.read_line(&mut line).is_ok()
+            && line.trim_end() == "YES"
+        {
+            held.push((w, reader));
+        }
+    }
+    let opened = held.len();
+
+    // Split off the active fraction and drive it; the rest stay idle in
+    // `held` until the deadline so the RSS snapshot sees them all.
+    let active = ((opened as u64 * active_pct as u64) / 100).max(1).min(opened as u64) as usize;
+    let mut drivers: Vec<Vec<(TcpStream, BufReader<TcpStream>)>> =
+        (0..DRIVERS).map(|_| Vec::new()).collect();
+    for (i, conn) in held.drain(..active).enumerate() {
+        drivers[i % DRIVERS].push(conn);
+    }
+    let t0 = Instant::now();
+    let handles: Vec<_> = drivers
+        .into_iter()
+        .map(|mut set| {
+            std::thread::spawn(move || {
+                let mut ops = 0u64;
+                let mut line = String::new();
+                let mut burst = String::new();
+                for _ in 0..BURST {
+                    burst.push_str("HAS 1\n");
+                }
+                while t0.elapsed() < duration && !set.is_empty() {
+                    for (w, reader) in &mut set {
+                        if w.write_all(burst.as_bytes()).is_err() {
+                            return (ops, set);
+                        }
+                        for _ in 0..BURST {
+                            line.clear();
+                            if reader.read_line(&mut line).is_err() {
+                                return (ops, set);
+                            }
+                        }
+                        ops += BURST as u64;
+                    }
+                }
+                (ops, set)
+            })
+        })
+        .collect();
+    let mut ops = 0u64;
+    let mut active_held = Vec::new();
+    for h in handles {
+        let (n, set) = h.join().unwrap();
+        ops += n;
+        active_held.extend(set);
+    }
+    let elapsed = t0.elapsed();
+    // Snapshot with every connection still alive.
+    let (rss_kb, threads) = proc_status();
+    drop(active_held);
+    drop(held);
+    drop(srv);
+    ConnPoint { conns, opened, active_pct, ops, elapsed, rss_kb_before, rss_kb, threads }
+}
+
+/// Point sizes: smoke stays under default fd limits; `DURASETS_FULL=1`
+/// is the C10K sweep (CI raises the fd limit for it).
+pub fn sizes_from_env() -> (Vec<usize>, Vec<u32>) {
+    if std::env::var("DURASETS_FULL").is_ok() {
+        (vec![64, 1024, 10_240], vec![1, 25])
+    } else {
+        (vec![64, 128, 256], vec![2, 25])
+    }
+}
+
+pub fn sweep(duration: Duration) -> Result<Vec<ConnPoint>> {
+    let (sizes, fracs) = sizes_from_env();
+    let mut points = Vec::new();
+    for &n in &sizes {
+        for &f in &fracs {
+            points.push(run_point(n, f, duration));
+        }
+    }
+    Ok(points)
+}
+
+/// The CI gate: per-connection RSS slope across point sizes. Linear
+/// idle-conn cost keeps the slope flat; superlinear growth makes the
+/// biggest point's slope outrun the smallest's. The `+ 8.0` kB absolute
+/// grace absorbs allocator noise on small points.
+pub fn rss_superlinear(points: &[ConnPoint]) -> bool {
+    let slopes: Vec<f64> = points.iter().filter(|p| p.opened > 0).map(|p| p.rss_slope()).collect();
+    match slopes.iter().cloned().reduce(f64::min).zip(slopes.iter().cloned().reduce(f64::max)) {
+        Some((lo, hi)) => hi > 3.0 * lo + 8.0,
+        None => false,
+    }
+}
+
+pub fn render(points: &[ConnPoint]) -> String {
+    let mut out = String::new();
+    out.push_str("== connscale: event plane, conns x active fraction (soft, 2 reactors) ==\n");
+    out.push_str(&format!(
+        "{:>7} {:>7} {:>8} | {:>9} | {:>10} {:>10} {:>9} | {:>8}\n",
+        "conns", "opened", "active%", "Kops/s", "rss_kb_0", "rss_kb", "kB/conn", "threads"
+    ));
+    for p in points {
+        out.push_str(&format!(
+            "{:>7} {:>7} {:>8} | {:>9.1} | {:>10} {:>10} {:>9.2} | {:>8}\n",
+            p.conns,
+            p.opened,
+            p.active_pct,
+            p.kops(),
+            p.rss_kb_before,
+            p.rss_kb,
+            p.rss_slope(),
+            p.threads,
+        ));
+    }
+    out.push_str(&format!("rss_superlinear: {}\n", rss_superlinear(points)));
+    out
+}
+
+/// JSON points for `BENCH_connscale.json`; the final summary point
+/// carries the `rss_superlinear` verdict the CI job greps.
+pub fn to_json_points(points: &[ConnPoint]) -> Vec<String> {
+    let mut out: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"fig\":\"connscale\",\"x\":\"conns={},active={}\",\"conns\":{},\"opened\":{},\"active_pct\":{},\"kops\":{:.2},\"rss_kb_before\":{},\"rss_kb\":{},\"rss_kb_per_conn\":{:.2},\"threads\":{},\"elapsed_ms\":{}}}",
+                p.conns,
+                p.active_pct,
+                p.conns,
+                p.opened,
+                p.active_pct,
+                p.kops(),
+                p.rss_kb_before,
+                p.rss_kb,
+                p.rss_slope(),
+                p.threads,
+                p.elapsed.as_millis(),
+            )
+        })
+        .collect();
+    out.push(format!(
+        "{{\"fig\":\"connscale\",\"x\":\"verdict\",\"rss_superlinear\":{}}}",
+        rss_superlinear(points)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connscale_point_serves_and_reports() {
+        let p = run_point(16, 25, Duration::from_millis(100));
+        assert_eq!(p.opened, 16, "all 16 smoke connections must be served");
+        assert!(p.ops >= BURST as u64, "the active set must make progress");
+        #[cfg(target_os = "linux")]
+        {
+            assert!(p.rss_kb >= p.rss_kb_before, "RSS snapshot ordering");
+            assert!(p.threads > 0, "thread gauge must read");
+        }
+        let json = to_json_points(&[p]);
+        assert!(json[0].contains("\"fig\":\"connscale\""), "{}", json[0]);
+        assert!(json.last().unwrap().contains("\"rss_superlinear\":"), "verdict point present");
+    }
+
+    #[test]
+    fn superlinear_verdict_separates_flat_from_blowup() {
+        let mk = |opened: usize, grown: u64| ConnPoint {
+            conns: opened,
+            opened,
+            active_pct: 1,
+            ops: 1,
+            elapsed: Duration::from_millis(1),
+            rss_kb_before: 10_000,
+            rss_kb: 10_000 + grown,
+            threads: 4,
+        };
+        // Flat: ~8 kB per connection at every size.
+        let flat = vec![mk(64, 512), mk(1024, 8192), mk(10_240, 81_920)];
+        assert!(!rss_superlinear(&flat), "linear growth must pass");
+        // Blowup: per-conn cost multiplies with the pile size.
+        let blow = vec![mk(64, 512), mk(1024, 40_960), mk(10_240, 4_000_000)];
+        assert!(rss_superlinear(&blow), "superlinear growth must flag");
+        assert!(!rss_superlinear(&[]), "empty sweep is not a failure");
+    }
+}

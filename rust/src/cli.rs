@@ -64,7 +64,7 @@ USAGE:
 COMMANDS:
   serve         run the sharded durable KV service (TCP line protocol)
   bench         regenerate a paper figure:
-                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|rwpath|all
+                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|rwpath|connscale|all
                 --json FILE writes machine-readable data points
                 --fig recovery sweeps rebuild wall-clock over recovery
                 threads x pool sizes (--keys N, or DURASETS_RECOVERY_KEYS
@@ -72,6 +72,9 @@ COMMANDS:
                 --fig rwpath sweeps the served two-lane path: read
                 fraction {50,90,99} x pipeline depth, reporting read-lane
                 psyncs (pinned 0) and the adaptive-K gauge per point
+                --fig connscale sweeps live connections x active fraction
+                over the event plane, reporting RSS/threads per point
+                (smoke sizes by default; DURASETS_FULL=1 goes to 10k)
   crash-test    run ops, crash (sim), recover, verify — end to end
   recover-demo  build a store, crash it, time rust vs XLA-accelerated recovery
   workload      print a sample of the deterministic op stream
@@ -87,7 +90,8 @@ CONFIG KEYS (file or key=value):
   family=soft|link-free|log-free|volatile   structure=hash|list
   shards=N  key_range=N[K|M]  read_pct=0..100  threads=N
   psync_ns=N  sim=true|false  seed=N  port=N  max_conns=N  duration_ms=N
-  zipf_theta=F  group_k_min=N  group_k_max=N
+  zipf_theta=F  group_k_min=N  group_k_max=N  event_workers=N
+  (event_workers: reactor pool size; 0 = legacy thread-per-connection)
 
 EXAMPLES:
   durasets serve family=soft shards=4 key_range=1M port=7878 max_conns=512

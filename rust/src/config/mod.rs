@@ -54,9 +54,16 @@ pub struct Config {
     pub seed: u64,
     /// TCP port for `durasets serve`.
     pub port: u16,
-    /// Max concurrent TCP connections (thread-per-connection bound);
+    /// Max concurrent TCP connections, enforced by the acceptor across
+    /// the whole serving plane (reactor pool or legacy fan-out);
     /// 0 = unlimited. Excess connections are refused with an ERR line.
     pub max_conns: usize,
+    /// Event-plane reactor workers serving all connections
+    /// (DESIGN.md §ConnectionPlane). 0 = legacy thread-per-connection
+    /// (deprecated fallback, kept for one release). The default honors
+    /// `DURASETS_EVENT_WORKERS` so CI can run the whole suite on either
+    /// plane; unset, it is 2.
+    pub event_workers: usize,
     /// Adaptive group commit: floor of a shard worker's drain bound
     /// (light load converges here — lowest commit latency).
     pub group_k_min: usize,
@@ -83,6 +90,10 @@ impl Default for Config {
             seed: 0xD0_5E7,
             port: 7878,
             max_conns: 1024,
+            event_workers: std::env::var("DURASETS_EVENT_WORKERS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(2),
             group_k_min: 1,
             group_k_max: 512,
             duration_ms: 1000,
@@ -143,6 +154,7 @@ impl Config {
             "seed" => self.seed = value.parse()?,
             "port" => self.port = value.parse()?,
             "max_conns" => self.max_conns = value.parse()?,
+            "event_workers" => self.event_workers = value.parse()?,
             "group_k_min" => self.group_k_min = value.parse()?,
             "group_k_max" => self.group_k_max = value.parse()?,
             "duration_ms" => self.duration_ms = value.parse()?,
@@ -173,6 +185,9 @@ impl Config {
         }
         if self.group_k_max > 4096 {
             bail!("group_k_max must be <= 4096");
+        }
+        if self.event_workers > 64 {
+            bail!("event_workers must be <= 64 (0 = legacy thread-per-conn)");
         }
         Ok(())
     }
@@ -261,6 +276,19 @@ mod tests {
         assert_eq!(cfg.max_conns, 2);
         assert_eq!(Config::default().max_conns, 1024);
         assert!(Config::load(None, &["max_conns=x".into()]).is_err());
+    }
+
+    #[test]
+    fn event_workers_key_parses_and_validates() {
+        let cfg = Config::load(None, &["event_workers=4".into()]).unwrap();
+        assert_eq!(cfg.event_workers, 4);
+        let legacy = Config::load(None, &["event_workers=0".into()]).unwrap();
+        assert_eq!(legacy.event_workers, 0, "0 keeps the legacy plane");
+        assert!(Config::load(None, &["event_workers=65".into()]).is_err());
+        assert!(Config::load(None, &["event_workers=x".into()]).is_err());
+        // The default is env-driven (CI runs the suite on both planes),
+        // so assert only that it is valid — not a specific number.
+        assert!(Config::default().event_workers <= 64);
     }
 
     #[test]

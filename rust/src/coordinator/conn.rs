@@ -1,0 +1,972 @@
+//! Per-connection state machine for the event-driven connection plane
+//! (DESIGN.md §ConnectionPlane), plus the wire-protocol helpers shared
+//! with the legacy thread-per-connection path.
+//!
+//! One [`Conn`] is: read buffer → burst parser → lane classification →
+//! pending-responder set → write buffer. A reactor drives it with
+//! [`Conn::step`]; everything inside is try-only (nonblocking socket
+//! I/O, `try_send` into shard queues, `try_recv` from completion
+//! channels), so a step never blocks the reactor no matter what one
+//! connection is doing.
+//!
+//! The wire semantics are byte-identical to the legacy path: same burst
+//! gathering, same two-lane routing (updates as per-shard
+//! [`Request::Batch`]es, pure reads swept psync-free after the burst's
+//! writes drain — which is exactly what preserves per-connection
+//! read-your-writes), same `MULTI`/`ATOMIC` framing and error lines. The
+//! differences are mechanical: replies accumulate in `wbuf` and drain as
+//! the socket accepts them (partial writes re-arm write interest), and
+//! an atomic frame — whose two-phase commit blocks on the shard workers
+//! by design — runs on a short-lived helper thread that wakes the
+//! reactor with the reply lines instead of blocking it.
+
+use super::reactor::{Interest, Waker};
+use super::shard::{BatchSink, Request, Response};
+use super::{DuraKv, Router};
+use crate::pmem::stats;
+use crate::sets::{ConcurrentSet, SetOp};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::Arc;
+
+/// Largest accepted `MULTI <n>` frame (also the atomic-batch cap,
+/// `txn::TXN_OPS_MAX`).
+pub(crate) const MULTI_MAX: u64 = 4096;
+
+/// Socket read granularity.
+const READ_CHUNK: usize = 64 * 1024;
+/// Backpressure: stop reading new commands from a connection whose
+/// un-drained reply bytes exceed this (a slow consumer pipelining fast
+/// would otherwise grow `wbuf` without bound).
+const WBUF_HIGH_WATER: usize = 256 * 1024;
+/// Largest buffer capacity an idle (fully quiescent) connection may keep
+/// pinned; above it the Vecs are dropped so 10k idle connections cost
+/// roughly their sockets, not their historical burst sizes.
+const IDLE_BUF_CAP: usize = 4 * 1024;
+
+// ---------------------------------------------------------------------
+// Wire-protocol pieces (shared by the reactor and legacy paths)
+// ---------------------------------------------------------------------
+
+/// A routed data command (needed again at reply-formatting time).
+#[derive(Clone, Copy)]
+pub(crate) enum DataCmd {
+    Put,
+    Get,
+    Has,
+    Del,
+}
+
+/// One reply slot of a burst, in line order.
+pub(crate) enum Slot {
+    /// Already-resolved reply line.
+    Text(String),
+    /// Write-lane op `idx` of shard `shard`'s worker sub-batch.
+    Write(DataCmd, usize, usize),
+    /// Read-lane op `idx` of shard `shard`'s direct sweep.
+    Read(DataCmd, usize, usize),
+    /// Resolved after the burst's data ops (approximate snapshots).
+    Len,
+    Stats,
+    Quit,
+}
+
+pub(crate) fn data_reply(cmd: DataCmd, resp: Response) -> String {
+    match (cmd, resp) {
+        (DataCmd::Put, Response::Ok(true)) => "OK NEW".to_string(),
+        (DataCmd::Put, _) => "OK EXISTS".to_string(),
+        (DataCmd::Get, Response::Found(v)) => format!("FOUND {v}"),
+        (DataCmd::Get, _) => "MISSING".to_string(),
+        (DataCmd::Has, Response::Ok(true)) => "YES".to_string(),
+        (DataCmd::Has, _) => "NO".to_string(),
+        (DataCmd::Del, Response::Ok(true)) => "OK DELETED".to_string(),
+        (DataCmd::Del, _) => "OK ABSENT".to_string(),
+    }
+}
+
+/// Parse a PUT/GET/HAS/DEL line. `Ok(None)` = not a data command;
+/// `Err(line)` = data command with bad arguments (the ERR reply).
+pub(crate) fn parse_data(line: &str) -> Result<Option<(DataCmd, SetOp)>, String> {
+    let mut parts = line.split_ascii_whitespace();
+    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+    match cmd.as_str() {
+        "PUT" => match (parse_u64(parts.next()), parse_u64(parts.next())) {
+            (Some(k), Some(v)) => Ok(Some((DataCmd::Put, SetOp::Insert(k, v)))),
+            _ => Err("ERR usage: PUT <key> <value>".to_string()),
+        },
+        "GET" => match parse_u64(parts.next()) {
+            Some(k) => Ok(Some((DataCmd::Get, SetOp::Get(k)))),
+            None => Err("ERR usage: GET <key>".to_string()),
+        },
+        "HAS" => match parse_u64(parts.next()) {
+            Some(k) => Ok(Some((DataCmd::Has, SetOp::Contains(k)))),
+            None => Err("ERR usage: HAS <key>".to_string()),
+        },
+        "DEL" => match parse_u64(parts.next()) {
+            Some(k) => Ok(Some((DataCmd::Del, SetOp::Remove(k)))),
+            None => Err("ERR usage: DEL <key>".to_string()),
+        },
+        _ => Ok(None),
+    }
+}
+
+pub(crate) fn parse_u64(s: Option<&str>) -> Option<u64> {
+    s.and_then(|x| x.parse().ok())
+}
+
+/// Parse the arguments of `MULTI <n> [ATOMIC]` (the command token is
+/// already consumed): `None` on any malformed tail.
+pub(crate) fn parse_multi_args<'a>(
+    parts: &mut impl Iterator<Item = &'a str>,
+) -> Option<(u64, bool)> {
+    let n = parse_u64(parts.next()).filter(|&n| n <= MULTI_MAX)?;
+    let atomic = match parts.next() {
+        None => false,
+        Some(t) if t.eq_ignore_ascii_case("ATOMIC") => true,
+        Some(_) => return None,
+    };
+    if parts.next().is_some() {
+        return None;
+    }
+    Some((n, atomic))
+}
+
+/// Classify + route a data op into the burst's two lanes: updates join
+/// shard `Request::Batch`es (write lane), pure reads join the direct
+/// per-shard sweep (read lane).
+pub(crate) fn route(
+    op: SetOp,
+    cmd: DataCmd,
+    router: Router,
+    slots: &mut Vec<Slot>,
+    writes: &mut [Vec<SetOp>],
+    reads: &mut [Vec<SetOp>],
+) {
+    let shard = router.shard_of(op.key());
+    if op.is_update() {
+        slots.push(Slot::Write(cmd, shard, writes[shard].len()));
+        writes[shard].push(op);
+    } else {
+        slots.push(Slot::Read(cmd, shard, reads[shard].len()));
+        reads[shard].push(op);
+    }
+}
+
+/// Execute one shard's read-lane sweep directly on the shared set handle:
+/// one `contains_batch` + one `get_batch` virtual call regardless of run
+/// length, results in op order. Zero psyncs (the caller meters).
+pub(crate) fn run_read_lane(set: &dyn ConcurrentSet, ops: &[SetOp]) -> Vec<Response> {
+    let mut has_keys = Vec::new();
+    let mut get_keys = Vec::new();
+    for &op in ops {
+        match op {
+            SetOp::Contains(k) => has_keys.push(k),
+            SetOp::Get(k) => get_keys.push(k),
+            SetOp::Insert(..) | SetOp::Remove(_) => {
+                unreachable!("write routed into the read lane")
+            }
+        }
+    }
+    let has_res = set.contains_batch(&has_keys);
+    let get_res = set.get_batch(&get_keys);
+    let (mut hi, mut gi) = (0, 0);
+    ops.iter()
+        .map(|&op| match op {
+            SetOp::Contains(_) => {
+                let r = Response::Ok(has_res[hi]);
+                hi += 1;
+                r
+            }
+            _ => {
+                let r = match get_res[gi] {
+                    Some(v) => Response::Found(v),
+                    None => Response::Missing,
+                };
+                gi += 1;
+                r
+            }
+        })
+        .collect()
+}
+
+/// Map a read-lane wire `Response` back to the `OpResult` shape
+/// `Metrics::record_op` classifies on.
+pub(crate) fn read_op_result(op: SetOp, r: Response) -> crate::sets::OpResult {
+    use crate::sets::OpResult;
+    match (op, r) {
+        (SetOp::Contains(_), Response::Ok(b)) => OpResult::Found(b),
+        (_, Response::Found(v)) => OpResult::Value(Some(v)),
+        _ => OpResult::Value(None),
+    }
+}
+
+/// Execute an atomic `MULTI <n> ATOMIC` frame and return its reply lines:
+/// parse strictly (any bad line aborts the whole frame — all-or-nothing
+/// starts at the parser), then run the two-phase protocol over the shard
+/// workers. Blocks on the workers' Prepare/done handshake by design, so
+/// the reactor path calls this from a helper thread; the legacy path
+/// calls it inline.
+pub(crate) fn atomic_frame_lines(
+    frame: &[String],
+    router: Router,
+    senders: &[SyncSender<Request>],
+    kv: &DuraKv,
+) -> Vec<String> {
+    let mut cmds = Vec::with_capacity(frame.len());
+    let mut ops = Vec::with_capacity(frame.len());
+    for l in frame {
+        match parse_data(l) {
+            Ok(Some((cmd, op))) => {
+                cmds.push(cmd);
+                ops.push(op);
+            }
+            Err(usage) => {
+                return vec![format!(
+                    "ERR ATOMIC aborted: {}",
+                    usage.trim_start_matches("ERR ")
+                )];
+            }
+            Ok(None) => return vec![format!("ERR ATOMIC aborted: not a data op: '{l}'")],
+        }
+    }
+    if ops.is_empty() {
+        return vec!["OK EMPTY".to_string()];
+    }
+    let apply_direct = |si: usize, sub: &[SetOp]| kv.shard_set(si).apply_batch(sub);
+    match kv.txn.execute_via_workers(router, senders, &ops, &kv.metrics, apply_direct) {
+        Ok(results) => cmds
+            .into_iter()
+            .zip(results)
+            .map(|(cmd, res)| data_reply(cmd, res))
+            .collect(),
+        Err(e) => vec![format!("ERR ATOMIC failed: {e}")],
+    }
+}
+
+// ---------------------------------------------------------------------
+// The reactor-driven connection state machine
+// ---------------------------------------------------------------------
+
+/// Everything a connection needs from its owning reactor's world.
+pub(crate) struct ConnCtx {
+    pub kv: Arc<DuraKv>,
+    pub router: Router,
+    pub senders: Arc<Vec<SyncSender<Request>>>,
+    /// The owning reactor's waker: handed to shard workers (via
+    /// [`BatchSink`]) and atomic helper threads so completions wake the
+    /// reactor instead of unparking a per-connection thread.
+    pub waker: Arc<Waker>,
+}
+
+/// Where a connection is in its burst cycle.
+enum Phase {
+    /// Reading + parsing; the burst accumulates.
+    Gather,
+    /// Burst dispatched; waiting for the shard write batches to complete.
+    AwaitWrites,
+    /// Waiting for an atomic frame's helper thread.
+    AwaitAtomic,
+}
+
+/// An in-progress `MULTI` frame: the header is parsed, `lines` fills
+/// until `n + 1` (ops + EXEC) have arrived.
+struct Frame {
+    n: u64,
+    atomic: bool,
+    lines: Vec<String>,
+}
+
+/// What one `step` tells the reactor.
+pub(crate) enum StepOutcome {
+    Open {
+        interest: Interest,
+        /// Whether anything advanced (resets the poller's idle backoff).
+        progressed: bool,
+        /// Waiting on completions (not the socket): step it every round
+        /// even with empty interest.
+        waiting: bool,
+    },
+    Closed,
+}
+
+pub(crate) struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    rstart: usize,
+    wbuf: Vec<u8>,
+    wstart: usize,
+    phase: Phase,
+    // ---- the gathered burst (same shapes as the legacy flush_burst) ----
+    slots: Vec<Slot>,
+    writes: Vec<Vec<SetOp>>,
+    reads: Vec<Vec<SetOp>>,
+    /// Shards whose write sub-batch hit a full queue on `try_send`;
+    /// retried each step (this is the queue-bound backpressure, made
+    /// non-blocking).
+    unsent: Vec<usize>,
+    /// The pending-responder set: one completion channel per dispatched
+    /// shard sub-batch.
+    pending: Vec<(usize, Receiver<Vec<Response>>)>,
+    write_results: Vec<Vec<Response>>,
+    frame: Option<Frame>,
+    /// A completed atomic frame, run after the current burst resolves.
+    deferred_atomic: Option<Vec<String>>,
+    atomic_rx: Option<Receiver<Vec<String>>>,
+    closing: bool,
+    peer_eof: bool,
+    failed: bool,
+    /// Suppresses double-counting `partial_writes` while one stall lasts.
+    stalled: bool,
+}
+
+impl Conn {
+    pub(crate) fn new(stream: TcpStream, nshards: usize) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        Ok(Conn {
+            stream,
+            rbuf: Vec::new(),
+            rstart: 0,
+            wbuf: Vec::new(),
+            wstart: 0,
+            phase: Phase::Gather,
+            slots: Vec::new(),
+            writes: vec![Vec::new(); nshards],
+            reads: vec![Vec::new(); nshards],
+            unsent: Vec::new(),
+            pending: Vec::new(),
+            write_results: vec![Vec::new(); nshards],
+            frame: None,
+            deferred_atomic: None,
+            atomic_rx: None,
+            closing: false,
+            peer_eof: false,
+            failed: false,
+            stalled: false,
+        })
+    }
+
+    /// Drive the connection as far as it can go without blocking.
+    pub(crate) fn step(&mut self, ctx: &ConnCtx) -> StepOutcome {
+        let metrics = &ctx.kv.metrics;
+        if self.failed || self.flush_wbuf(metrics).is_err() {
+            return StepOutcome::Closed;
+        }
+        let mut progressed = false;
+        loop {
+            let did = match self.phase {
+                Phase::Gather => self.pump_gather(ctx),
+                Phase::AwaitWrites => self.pump_awaiting(ctx),
+                Phase::AwaitAtomic => self.pump_atomic(),
+            };
+            if self.failed {
+                return StepOutcome::Closed;
+            }
+            if did {
+                progressed = true;
+            } else {
+                break;
+            }
+        }
+        if self.flush_wbuf(metrics).is_err() {
+            return StepOutcome::Closed;
+        }
+        let drained = self.wstart >= self.wbuf.len();
+        if drained && self.closing {
+            let _ = self.stream.shutdown(std::net::Shutdown::Both);
+            return StepOutcome::Closed;
+        }
+        let gathering = matches!(self.phase, Phase::Gather);
+        if drained
+            && self.peer_eof
+            && gathering
+            && self.slots.is_empty()
+            && self.rstart >= self.rbuf.len()
+        {
+            // Clean EOF: input consumed, every reply delivered.
+            return StepOutcome::Closed;
+        }
+        // Going quiescent (nothing buffered either way): give the burst
+        // buffers back. `truncate` keeps capacity, so without this every
+        // idle connection would pin the 64 KiB read chunk it once grew to
+        // — the C10K flat-RSS claim dies by a thousand Vecs. Busy
+        // connections re-grow in one realloc per burst, which the
+        // allocator absorbs.
+        if drained && self.rstart >= self.rbuf.len() {
+            if self.rbuf.capacity() > IDLE_BUF_CAP {
+                self.rbuf = Vec::new();
+                self.rstart = 0;
+            }
+            if self.wbuf.capacity() > IDLE_BUF_CAP {
+                self.wbuf = Vec::new();
+                self.wstart = 0;
+            }
+        }
+        let interest = Interest {
+            readable: gathering
+                && !self.closing
+                && !self.peer_eof
+                && self.wbuf.len() - self.wstart < WBUF_HIGH_WATER,
+            writable: !drained,
+        };
+        StepOutcome::Open { interest, progressed, waiting: !gathering }
+    }
+
+    // ---- socket I/O ----
+
+    /// Nonblocking read into `rbuf`. `Ok(0)` = no bytes (WouldBlock or
+    /// EOF; EOF additionally sets `peer_eof`).
+    fn fill_rbuf(&mut self) -> std::io::Result<usize> {
+        if self.rstart > 0 {
+            self.rbuf.drain(..self.rstart);
+            self.rstart = 0;
+        }
+        let old = self.rbuf.len();
+        self.rbuf.resize(old + READ_CHUNK, 0);
+        match self.stream.read(&mut self.rbuf[old..]) {
+            Ok(0) => {
+                self.rbuf.truncate(old);
+                self.peer_eof = true;
+                Ok(0)
+            }
+            Ok(n) => {
+                self.rbuf.truncate(old + n);
+                Ok(n)
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::Interrupted =>
+            {
+                self.rbuf.truncate(old);
+                Ok(0)
+            }
+            Err(e) => {
+                self.rbuf.truncate(old);
+                Err(e)
+            }
+        }
+    }
+
+    /// Drain `wbuf` as far as the socket accepts; a `WouldBlock` with
+    /// bytes remaining is the partial-write case that re-arms write
+    /// interest (metered once per stall).
+    fn flush_wbuf(&mut self, metrics: &super::Metrics) -> std::io::Result<()> {
+        while self.wstart < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wstart..]) {
+                Ok(0) => return Err(ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    self.wstart += n;
+                    self.stalled = false;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if !self.stalled {
+                        metrics.record_partial_write();
+                        self.stalled = true;
+                    }
+                    break;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if self.wstart >= self.wbuf.len() {
+            self.wbuf.clear();
+            self.wstart = 0;
+            self.stalled = false;
+        } else if self.wstart > READ_CHUNK {
+            // Bound the dead prefix a long stall accumulates.
+            self.wbuf.drain(..self.wstart);
+            self.wstart = 0;
+        }
+        Ok(())
+    }
+
+    fn push_line(&mut self, s: &str) {
+        self.wbuf.extend_from_slice(s.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    // ---- parsing ----
+
+    /// Next complete line out of `rbuf` (trimmed). At peer EOF a trailing
+    /// unterminated line still counts as a line (`BufRead::read_line`
+    /// parity with the legacy path).
+    fn take_line(&mut self) -> Option<String> {
+        let buf = &self.rbuf[self.rstart..];
+        if let Some(i) = buf.iter().position(|&b| b == b'\n') {
+            let line = String::from_utf8_lossy(&buf[..i]).trim().to_string();
+            self.rstart += i + 1;
+            Some(line)
+        } else if self.peer_eof && !buf.is_empty() {
+            let line = String::from_utf8_lossy(buf).trim().to_string();
+            self.rstart = self.rbuf.len();
+            Some(line)
+        } else {
+            None
+        }
+    }
+
+    fn complete_lines_buffered(&self) -> usize {
+        self.rbuf[self.rstart..].iter().filter(|&&b| b == b'\n').count()
+    }
+
+    // ---- phase pumps ----
+
+    fn pump_gather(&mut self, ctx: &ConnCtx) -> bool {
+        let mut progress = false;
+        if !self.peer_eof && self.wbuf.len() - self.wstart < WBUF_HIGH_WATER {
+            let was_eof = self.peer_eof;
+            match self.fill_rbuf() {
+                Ok(n) if n > 0 => progress = true,
+                Ok(_) => {
+                    if self.peer_eof && !was_eof {
+                        progress = true;
+                    }
+                }
+                Err(_) => {
+                    self.failed = true;
+                    return true;
+                }
+            }
+        }
+        let (consumed, dispatch) = self.gather_lines(ctx);
+        if consumed {
+            progress = true;
+        }
+        if dispatch {
+            self.dispatch(ctx);
+            progress = true;
+        }
+        progress
+    }
+
+    /// Consume complete lines into the burst. Returns (consumed anything,
+    /// dispatch the burst now). Dispatch points mirror the legacy burst
+    /// loop exactly: QUIT, an atomic/starved `MULTI` header with earlier
+    /// commands pending (a slow frame must not withhold their replies),
+    /// a completed atomic frame, or input exhausted with a non-empty
+    /// burst.
+    fn gather_lines(&mut self, ctx: &ConnCtx) -> (bool, bool) {
+        let mut consumed = false;
+        loop {
+            if self.frame.is_some() {
+                let Some(line) = self.take_line() else { break };
+                consumed = true;
+                let fr = self.frame.as_mut().expect("checked above");
+                fr.lines.push(line);
+                if fr.lines.len() as u64 == fr.n + 1 {
+                    let fr = self.frame.take().expect("checked above");
+                    self.finish_frame(fr, ctx);
+                    if self.deferred_atomic.is_some() {
+                        // Run the frame; lines pipelined behind it stay
+                        // buffered until its replies are formatted.
+                        return (consumed, true);
+                    }
+                }
+                continue;
+            }
+            let Some(line) = self.take_line() else { break };
+            consumed = true;
+            match parse_data(&line) {
+                Ok(Some((cmd, op))) => route(
+                    op,
+                    cmd,
+                    ctx.router,
+                    &mut self.slots,
+                    &mut self.writes,
+                    &mut self.reads,
+                ),
+                Err(usage) => self.slots.push(Slot::Text(usage)),
+                Ok(None) => {
+                    let mut parts = line.split_ascii_whitespace();
+                    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+                    match cmd.as_str() {
+                        "MULTI" => match parse_multi_args(&mut parts) {
+                            None => self.slots.push(Slot::Text(format!(
+                                "ERR usage: MULTI <n> [ATOMIC] (n <= {MULTI_MAX})"
+                            ))),
+                            Some((n, atomic)) => {
+                                let buffered = self.complete_lines_buffered() as u64;
+                                self.frame = Some(Frame {
+                                    n,
+                                    atomic,
+                                    lines: Vec::with_capacity(n as usize + 1),
+                                });
+                                if (atomic || buffered < n + 1) && !self.slots.is_empty() {
+                                    // Earlier commands must not have their
+                                    // replies held hostage by a slow (or
+                                    // out-of-band atomic) frame.
+                                    return (consumed, true);
+                                }
+                            }
+                        },
+                        "LEN" => self.slots.push(Slot::Len),
+                        "STATS" => self.slots.push(Slot::Stats),
+                        "QUIT" => {
+                            self.slots.push(Slot::Quit);
+                            return (consumed, true);
+                        }
+                        "" => {}
+                        other => self
+                            .slots
+                            .push(Slot::Text(format!("ERR unknown command '{other}'"))),
+                    }
+                }
+            }
+        }
+        let dispatch = !self.slots.is_empty();
+        (consumed, dispatch)
+    }
+
+    /// A `MULTI` frame has all `n + 1` lines: validate EXEC, then either
+    /// defer the atomic execution or splice the ops into the burst.
+    fn finish_frame(&mut self, mut fr: Frame, ctx: &ConnCtx) {
+        let exec = fr.lines.pop().expect("n+1 lines gathered");
+        if !exec.eq_ignore_ascii_case("EXEC") {
+            self.slots.push(Slot::Text(format!(
+                "ERR MULTI: expected EXEC after {} ops, got '{exec}'",
+                fr.n
+            )));
+        } else if fr.atomic {
+            self.deferred_atomic = Some(fr.lines);
+        } else if fr.lines.is_empty() {
+            // `MULTI 0` + EXEC: a valid empty batch. It queues no ops and
+            // would otherwise produce zero reply lines — the client,
+            // waiting for its EXEC ack, would hang.
+            self.slots.push(Slot::Text("OK EMPTY".to_string()));
+        } else {
+            for l in &fr.lines {
+                match parse_data(l) {
+                    Ok(Some((cmd, op))) => route(
+                        op,
+                        cmd,
+                        ctx.router,
+                        &mut self.slots,
+                        &mut self.writes,
+                        &mut self.reads,
+                    ),
+                    Err(usage) => self.slots.push(Slot::Text(usage)),
+                    Ok(None) => self
+                        .slots
+                        .push(Slot::Text(format!("ERR MULTI: not a data op: '{l}'"))),
+                }
+            }
+        }
+    }
+
+    /// Hand the burst's write sub-batches to the shard workers and move
+    /// to `AwaitWrites`.
+    fn dispatch(&mut self, ctx: &ConnCtx) {
+        self.phase = Phase::AwaitWrites;
+        for shard in 0..self.writes.len() {
+            if !self.writes[shard].is_empty() {
+                self.unsent.push(shard);
+            }
+        }
+        self.pump_sends(ctx);
+    }
+
+    /// `try_send` each not-yet-queued sub-batch; a full queue keeps the
+    /// shard in `unsent` for the next step.
+    fn pump_sends(&mut self, ctx: &ConnCtx) -> bool {
+        let mut progress = false;
+        let unsent = std::mem::take(&mut self.unsent);
+        for shard in unsent {
+            let ops = std::mem::take(&mut self.writes[shard]);
+            let (btx, brx) = sync_channel(1);
+            let sink = BatchSink::waking(btx, ctx.waker.clone());
+            match ctx.senders[shard].try_send(Request::Batch(ops, sink)) {
+                Ok(()) => {
+                    self.pending.push((shard, brx));
+                    progress = true;
+                }
+                Err(TrySendError::Full(req)) => {
+                    if let Request::Batch(ops, _) = req {
+                        self.writes[shard] = ops;
+                    }
+                    self.unsent.push(shard);
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.failed = true;
+                    return true;
+                }
+            }
+        }
+        progress
+    }
+
+    fn pump_awaiting(&mut self, ctx: &ConnCtx) -> bool {
+        let mut progress = self.pump_sends(ctx);
+        if self.failed {
+            return true;
+        }
+        let mut i = 0;
+        while i < self.pending.len() {
+            match self.pending[i].1.try_recv() {
+                Ok(res) => {
+                    let (shard, _) = self.pending.swap_remove(i);
+                    self.write_results[shard] = res;
+                    progress = true;
+                }
+                Err(TryRecvError::Empty) => i += 1,
+                Err(TryRecvError::Disconnected) => {
+                    self.failed = true;
+                    return true;
+                }
+            }
+        }
+        if self.unsent.is_empty() && self.pending.is_empty() {
+            self.resolve_burst(ctx);
+            if self.closing {
+                self.deferred_atomic = None;
+            }
+            if let Some(lines) = self.deferred_atomic.take() {
+                if self.spawn_atomic(ctx, lines) {
+                    self.phase = Phase::AwaitAtomic;
+                } else {
+                    self.phase = Phase::Gather;
+                }
+            } else {
+                self.phase = Phase::Gather;
+            }
+            progress = true;
+        }
+        progress
+    }
+
+    /// Every sub-batch completed: run the read lane, then format every
+    /// reply into `wbuf` in line order. Identical ordering semantics to
+    /// the legacy `flush_burst` — all reads of a burst execute after all
+    /// of its writes, which is what preserves per-connection
+    /// read-your-writes no matter which reactor rounds (or wakeups) the
+    /// burst's lifetime spans.
+    fn resolve_burst(&mut self, ctx: &ConnCtx) {
+        let kv = &ctx.kv;
+        let nshards = ctx.senders.len();
+        let mut read_results: Vec<Vec<Response>> = vec![Vec::new(); nshards];
+        if self.reads.iter().any(|r| !r.is_empty()) {
+            // Read lane: the burst's writes are drained (durable + acked
+            // to us), so direct reads observe them. Metered around the
+            // whole sweep — the psync-free claim is pinned on these
+            // counters, reactor path included.
+            let before = stats::thread_snapshot();
+            let mut nops = 0u64;
+            for (shard, ops) in self.reads.iter_mut().enumerate() {
+                if ops.is_empty() {
+                    continue;
+                }
+                nops += ops.len() as u64;
+                let results = run_read_lane(kv.shard_set(shard), ops);
+                for (&op, &res) in ops.iter().zip(results.iter()) {
+                    kv.metrics.record_op(op, read_op_result(op, res));
+                }
+                read_results[shard] = results;
+                ops.clear();
+            }
+            let d = stats::thread_snapshot().since(&before);
+            kv.metrics.record_read_lane(nops, d.fences, d.flushes);
+        }
+        let slots = std::mem::take(&mut self.slots);
+        for slot in slots {
+            match slot {
+                Slot::Text(s) => self.push_line(&s),
+                Slot::Write(cmd, shard, idx) => {
+                    let r = self.write_results[shard][idx];
+                    self.push_line(&data_reply(cmd, r));
+                }
+                Slot::Read(cmd, shard, idx) => {
+                    let r = read_results[shard][idx];
+                    self.push_line(&data_reply(cmd, r));
+                }
+                Slot::Len => self.push_line(&format!("LEN {}", kv.len_approx())),
+                Slot::Stats => self.push_line(&format!(
+                    "STATS {}",
+                    kv.metrics.report_with_growth(&kv.growth_stats())
+                )),
+                Slot::Quit => {
+                    self.push_line("BYE");
+                    self.closing = true;
+                    // Anything pipelined after QUIT is discarded.
+                    self.rstart = self.rbuf.len();
+                    self.frame = None;
+                    break;
+                }
+            }
+        }
+        for r in self.write_results.iter_mut() {
+            r.clear();
+        }
+    }
+
+    /// Run an atomic frame on a helper thread (its 2PC blocks on the
+    /// shard workers); the result returns over a channel + reactor wake.
+    /// Returns false if the frame was resolved inline instead.
+    fn spawn_atomic(&mut self, ctx: &ConnCtx, lines: Vec<String>) -> bool {
+        let (tx, rx) = sync_channel(1);
+        let kv = ctx.kv.clone();
+        let senders = ctx.senders.clone();
+        let router = ctx.router;
+        let waker = ctx.waker.clone();
+        let moved = lines.clone();
+        let spawned = std::thread::Builder::new().name("conn-atomic".into()).spawn(move || {
+            let out = atomic_frame_lines(&moved, router, &senders, &kv);
+            let _ = tx.send(out);
+            waker.wake();
+        });
+        match spawned {
+            Ok(_) => {
+                self.atomic_rx = Some(rx);
+                true
+            }
+            Err(_) => {
+                // Out of threads: run the frame inline. Blocks this
+                // reactor for one frame — the overload path, still
+                // correct.
+                let out = atomic_frame_lines(&lines, router, &ctx.senders, &ctx.kv);
+                for l in &out {
+                    self.push_line(l);
+                }
+                false
+            }
+        }
+    }
+
+    fn pump_atomic(&mut self) -> bool {
+        let r = match &self.atomic_rx {
+            None => {
+                self.phase = Phase::Gather;
+                return true;
+            }
+            Some(rx) => rx.try_recv(),
+        };
+        match r {
+            Ok(out) => {
+                self.atomic_rx = None;
+                for l in &out {
+                    self.push_line(l);
+                }
+                self.phase = Phase::Gather;
+                true
+            }
+            Err(TryRecvError::Empty) => false,
+            Err(TryRecvError::Disconnected) => {
+                self.failed = true;
+                true
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use std::net::TcpListener;
+
+    fn ctx_without_workers() -> (ConnCtx, Arc<DuraKv>) {
+        let mut cfg = Config::default();
+        cfg.shards = 1;
+        cfg.key_range = 1024;
+        cfg.psync_ns = 0;
+        let kv = Arc::new(DuraKv::create(cfg));
+        let ctx = ConnCtx {
+            kv: kv.clone(),
+            router: kv.router(),
+            senders: Arc::new(Vec::new()),
+            waker: Arc::new(Waker::new()),
+        };
+        (ctx, kv)
+    }
+
+    fn socket_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (server, client)
+    }
+
+    /// The partial-write path: a reply burst far beyond the socket
+    /// buffers must stall with write interest re-armed (and the stall
+    /// metered once), then drain to completion as the client reads.
+    #[test]
+    fn partial_write_rearms_interest_and_drains() {
+        let (server, mut client) = socket_pair();
+        let (ctx, kv) = ctx_without_workers();
+        let mut conn = Conn::new(server, ctx.senders.len()).unwrap();
+        conn.wbuf = vec![b'x'; 8 << 20];
+
+        match conn.step(&ctx) {
+            StepOutcome::Open { interest, .. } => {
+                assert!(interest.writable, "stalled write must re-arm write interest");
+            }
+            StepOutcome::Closed => panic!("connection closed on a full socket"),
+        }
+        use std::sync::atomic::Ordering;
+        assert!(
+            kv.metrics.cp_partial_writes.load(Ordering::Relaxed) >= 1,
+            "partial write must be metered"
+        );
+
+        // Drain from the client side while stepping: the machine must
+        // push the remaining bytes out and disarm write interest.
+        client.set_nonblocking(true).unwrap();
+        let mut got = 0usize;
+        let mut sink = vec![0u8; 1 << 20];
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        loop {
+            match client.read(&mut sink) {
+                Ok(0) => panic!("server closed early"),
+                Ok(n) => got += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(e) => panic!("client read: {e}"),
+            }
+            match conn.step(&ctx) {
+                StepOutcome::Open { interest, .. } => {
+                    if got == 8 << 20 && !interest.writable {
+                        break;
+                    }
+                }
+                StepOutcome::Closed => panic!("connection closed mid-drain"),
+            }
+            assert!(std::time::Instant::now() < deadline, "drain stalled: {got} bytes");
+        }
+        assert_eq!(got, 8 << 20, "every buffered byte must reach the client");
+    }
+
+    /// A fragmented burst — bytes arriving in arbitrary splits, including
+    /// mid-line — must parse into the same burst once the newlines land.
+    #[test]
+    fn partial_line_fragments_reassemble() {
+        let (server, mut client) = socket_pair();
+        let (ctx, _kv) = ctx_without_workers();
+        let mut conn = Conn::new(server, ctx.senders.len()).unwrap();
+
+        client.write_all(b"LE").unwrap();
+        client.flush().unwrap();
+        // Give the bytes time to land, then step: no complete line yet —
+        // nothing may be dispatched or replied.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        match conn.step(&ctx) {
+            StepOutcome::Open { interest, .. } => {
+                assert!(interest.readable, "mid-line: stay read-armed");
+            }
+            StepOutcome::Closed => panic!("closed on a partial line"),
+        }
+        assert!(conn.slots.is_empty(), "half a line must not become a slot");
+
+        client.write_all(b"N\nLEN").unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        conn.step(&ctx);
+        let mut reply = [0u8; 64];
+        client.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        let n = client.read(&mut reply).unwrap();
+        assert_eq!(&reply[..n], b"LEN 0\n", "first LEN resolves, second still mid-line");
+
+        client.write_all(b"\n").unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        conn.step(&ctx);
+        let n = client.read(&mut reply).unwrap();
+        assert_eq!(&reply[..n], b"LEN 0\n", "second LEN resolves once terminated");
+    }
+}

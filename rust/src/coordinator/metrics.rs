@@ -38,6 +38,17 @@ pub struct Metrics {
     pub atomic_ops: AtomicU64,
     /// Committed-but-unretired atomic batches recovery rolled forward.
     pub rolled_forward: AtomicU64,
+    // Connection-plane gauges (DESIGN.md §ConnectionPlane). `cp_workers`
+    // doubles as the "event plane is on" flag for STATS rendering;
+    // `cp_conns` is a live gauge (opened − closed), the rest cumulative.
+    pub cp_workers: AtomicU64,
+    pub cp_conns: AtomicU64,
+    /// Reactor wakeups delivered (batch completions, injected accepts,
+    /// atomic-helper results — anything that unparked a reactor).
+    pub cp_wakeups: AtomicU64,
+    /// Write stalls: a connection's flush hit `WouldBlock` and re-armed
+    /// write interest (counted once per stall, not per retry).
+    pub cp_partial_writes: AtomicU64,
     // Adaptive-K gauge: `k_last` is the most recent bound any worker
     // reported (plain store — a gauge); `k_lo`/`k_hi` are the cumulative
     // envelope (fetch_min / fetch_max), so concurrent STATS readers see
@@ -87,6 +98,10 @@ impl Metrics {
             atomics: Z,
             atomic_ops: Z,
             rolled_forward: Z,
+            cp_workers: Z,
+            cp_conns: Z,
+            cp_wakeups: Z,
+            cp_partial_writes: Z,
             k_last: Z,
             k_lo: AtomicU64::new(u64::MAX),
             k_hi: Z,
@@ -200,6 +215,37 @@ impl Metrics {
         self.rolled_forward.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// The server started an event plane with `n` reactor workers (also
+    /// switches the `connplane=` STATS section on).
+    pub fn set_conn_workers(&self, n: u64) {
+        self.cp_workers.store(n, Ordering::Relaxed);
+    }
+
+    /// A reactor registered a new connection.
+    #[inline]
+    pub fn conn_opened(&self) {
+        self.cp_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A reactor retired a connection.
+    #[inline]
+    pub fn conn_closed(&self) {
+        self.cp_conns.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// A reactor was unparked by `n` wakeup deliveries.
+    #[inline]
+    pub fn record_wakeups(&self, n: u64) {
+        self.cp_wakeups.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A connection's write buffer hit `WouldBlock` and re-armed write
+    /// interest (one count per stall).
+    #[inline]
+    pub fn record_partial_write(&self) {
+        self.cp_partial_writes.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A shard worker retuned its adaptive drain bound.
     #[inline]
     pub fn record_adaptive_k(&self, k: u64) {
@@ -292,6 +338,15 @@ impl Metrics {
                 self.rl_ops.load(Ordering::Relaxed),
                 self.rl_fences.load(Ordering::Relaxed),
                 self.rl_flushes.load(Ordering::Relaxed),
+            ));
+        }
+        if self.cp_workers.load(Ordering::Relaxed) > 0 {
+            out.push_str(&format!(
+                " connplane=[workers={} conns={} wakeups={} partial_writes={}]",
+                self.cp_workers.load(Ordering::Relaxed),
+                self.cp_conns.load(Ordering::Relaxed),
+                self.cp_wakeups.load(Ordering::Relaxed),
+                self.cp_partial_writes.load(Ordering::Relaxed),
             ));
         }
         let rolled = self.rolled_forward.load(Ordering::Relaxed);
@@ -505,6 +560,21 @@ mod tests {
         assert_eq!(m.batches.load(Ordering::Relaxed), total);
         assert_eq!(m.rl_runs.load(Ordering::Relaxed), total);
         assert_eq!(m.rl_ops.load(Ordering::Relaxed), total * 4);
+    }
+
+    #[test]
+    fn connplane_gauge_renders_only_when_event_plane_is_on() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("connplane=["), "off by default");
+        m.conn_opened();
+        m.record_wakeups(3);
+        m.record_partial_write();
+        assert!(!m.report().contains("connplane=["), "gated on workers, not traffic");
+        m.set_conn_workers(4);
+        m.conn_opened();
+        m.conn_closed();
+        let r = m.report();
+        assert!(r.contains("connplane=[workers=4 conns=1 wakeups=3 partial_writes=1]"), "{r}");
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //! so concurrent wire traffic shares trailing fences (DESIGN.md
 //! §Batching).
 
+pub mod conn;
 pub mod metrics;
+pub mod reactor;
 pub mod recovery;
 pub mod router;
 pub mod server;

@@ -1,0 +1,409 @@
+//! Event-plane core: a std-only readiness multiplexer plus the reactor
+//! worker pool that replaced thread-per-connection serving (DESIGN.md
+//! §ConnectionPlane).
+//!
+//! The data plane underneath scales by design — psync-free reads, one
+//! trailing fence per write group — but a thread per socket caps the
+//! front end at `max_conns` OS threads. Here a fixed pool of
+//! `event_workers` reactor threads each owns a set of nonblocking
+//! connections and drives their state machines ([`super::conn::Conn`])
+//! from readiness + completion wakeups, so 10k idle connections cost
+//! buffers, not stacks.
+//!
+//! ## The std-only poller contract
+//!
+//! Without `libc`/`mio` (the offline crate set has neither) there is no
+//! portable way to ask the kernel which sockets are ready. [`Poller`] is
+//! therefore *level-triggered with spurious readiness allowed*: `poll`
+//! reports every armed token, and the connection's `step` discovers the
+//! truth with try-I/O (`WouldBlock` ⇒ not actually ready). That is a
+//! legal behaviour under the mio contract too ("readiness operations may
+//! produce spurious events"), so the API — `register`/`reregister`/
+//! `deregister`/`poll` + a cloneable [`Waker`] — is exactly the shape a
+//! later mio or io_uring backend slots into; only `poll`'s body changes.
+//!
+//! The cost of the std backend is one cheap `WouldBlock` syscall per
+//! armed idle connection per wakeup. The adaptive backoff below bounds
+//! the wakeup rate when nothing is happening (a few yield spins, then
+//! parking with a timeout that doubles 50µs → 10ms), so an idle reactor
+//! converges to ~100 scans/second regardless of connection count, and a
+//! busy one never sleeps. RSS and thread count — the scaling claims —
+//! are independent of this choice.
+
+use super::conn::{Conn, ConnCtx, StepOutcome};
+use super::shard::Request;
+use super::DuraKv;
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Identifies one registered connection within one reactor.
+pub type Token = usize;
+
+/// What a connection wants to hear about. Empty interest (`!armed()`)
+/// means the connection is parked waiting on completions, not the
+/// socket — the reactor steps it on wakeups instead of readiness.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const NONE: Interest = Interest { readable: false, writable: false };
+    pub const READ: Interest = Interest { readable: true, writable: false };
+
+    pub fn armed(self) -> bool {
+        self.readable || self.writable
+    }
+}
+
+/// Cross-thread wakeup for one reactor: shard workers call [`Waker::wake`]
+/// after sending a completed batch, the acceptor calls it after injecting
+/// a connection, and the reactor parks on it when idle. The pending flag
+/// makes wakeups level-triggered — a wake that lands between `poll` and
+/// `park` is consumed immediately, never lost.
+pub struct Waker {
+    pending: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Waker {
+    pub fn new() -> Waker {
+        Waker { pending: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    pub fn wake(&self) {
+        let mut p = self.pending.lock().unwrap();
+        if !*p {
+            *p = true;
+            self.cv.notify_one();
+        }
+    }
+
+    /// Consume a pending wake without blocking.
+    pub fn consume(&self) -> bool {
+        std::mem::take(&mut *self.pending.lock().unwrap())
+    }
+
+    /// Park until a wake arrives or `timeout` passes; consumes the wake.
+    /// Returns whether a wake was pending.
+    pub fn park(&self, timeout: Duration) -> bool {
+        let mut p = self.pending.lock().unwrap();
+        if !*p {
+            let (g, _) = self.cv.wait_timeout(p, timeout).unwrap();
+            p = g;
+        }
+        std::mem::take(&mut *p)
+    }
+}
+
+impl Default for Waker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Yield-spin rounds before the poller starts parking.
+const SPIN_ROUNDS: u32 = 8;
+/// First park timeout once spinning gives up.
+const PARK_MIN: Duration = Duration::from_micros(50);
+/// Park timeout ceiling — also the worst-case idle scan period.
+const PARK_MAX: Duration = Duration::from_millis(10);
+
+/// The std-only readiness multiplexer. See the module docs for the
+/// spurious-readiness contract and the backoff policy.
+pub struct Poller {
+    interests: BTreeMap<Token, Interest>,
+    waker: Arc<Waker>,
+    idle_rounds: u32,
+}
+
+impl Poller {
+    pub fn new() -> Poller {
+        Poller::with_waker(Arc::new(Waker::new()))
+    }
+
+    /// Build around an existing waker (the reactor shares its injector's).
+    pub fn with_waker(waker: Arc<Waker>) -> Poller {
+        Poller { interests: BTreeMap::new(), waker, idle_rounds: 0 }
+    }
+
+    pub fn waker(&self) -> Arc<Waker> {
+        self.waker.clone()
+    }
+
+    pub fn register(&mut self, tok: Token, interest: Interest) {
+        self.interests.insert(tok, interest);
+    }
+
+    pub fn reregister(&mut self, tok: Token, interest: Interest) {
+        self.interests.insert(tok, interest);
+    }
+
+    pub fn deregister(&mut self, tok: Token) {
+        self.interests.remove(&tok);
+    }
+
+    pub fn interest(&self, tok: Token) -> Interest {
+        self.interests.get(&tok).copied().unwrap_or(Interest::NONE)
+    }
+
+    /// Fill `out` with every armed token (spurious readiness allowed —
+    /// callers discover the truth via try-I/O). Returns whether a wakeup
+    /// was consumed this round. `made_progress` is the caller's report on
+    /// the previous round: progress resets the backoff, idleness walks it
+    /// from yield-spins toward [`PARK_MAX`] parking.
+    pub fn poll(&mut self, out: &mut Vec<Token>, made_progress: bool) -> bool {
+        out.clear();
+        let mut woke = false;
+        if made_progress {
+            self.idle_rounds = 0;
+            woke = self.waker.consume();
+        } else if self.idle_rounds < SPIN_ROUNDS {
+            self.idle_rounds += 1;
+            std::thread::yield_now();
+            woke = self.waker.consume();
+        } else {
+            let exp = (self.idle_rounds - SPIN_ROUNDS).min(16);
+            let timeout = PARK_MIN.saturating_mul(1 << exp).min(PARK_MAX);
+            woke = self.waker.park(timeout);
+            if woke {
+                self.idle_rounds = 0;
+            } else {
+                self.idle_rounds += 1;
+            }
+        }
+        out.extend(self.interests.iter().filter(|(_, i)| i.armed()).map(|(&t, _)| t));
+        woke
+    }
+}
+
+impl Default for Poller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Hand-off queue from the acceptor to one reactor: push + wake.
+pub(crate) struct Injector {
+    queue: Mutex<Vec<TcpStream>>,
+    pub(crate) waker: Arc<Waker>,
+}
+
+impl Injector {
+    pub(crate) fn push(&self, stream: TcpStream) {
+        self.queue.lock().unwrap().push(stream);
+        self.waker.wake();
+    }
+
+    pub(crate) fn drain(&self) -> Vec<TcpStream> {
+        std::mem::take(&mut *self.queue.lock().unwrap())
+    }
+}
+
+/// Cloneable front half of the pool: the acceptor round-robins accepted
+/// sockets over the reactors through this.
+#[derive(Clone)]
+pub(crate) struct PoolHandle {
+    injectors: Vec<Arc<Injector>>,
+    next: Arc<AtomicUsize>,
+}
+
+impl PoolHandle {
+    pub(crate) fn dispatch(&self, stream: TcpStream) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.injectors.len();
+        self.injectors[i].push(stream);
+    }
+}
+
+/// The reactor worker pool. Owns the threads; `shutdown` (driven by
+/// `Server::drop` after the shared stop flag is raised) wakes and joins
+/// them, dropping any still-open connections.
+pub(crate) struct ReactorPool {
+    injectors: Vec<Arc<Injector>>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    next: Arc<AtomicUsize>,
+}
+
+impl ReactorPool {
+    pub(crate) fn spawn(
+        workers: usize,
+        kv: Arc<DuraKv>,
+        senders: Arc<Vec<SyncSender<Request>>>,
+        live: Arc<AtomicUsize>,
+        stop: Arc<AtomicBool>,
+    ) -> ReactorPool {
+        let router = kv.router();
+        let mut injectors = Vec::with_capacity(workers);
+        let mut joins = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let inj = Arc::new(Injector {
+                queue: Mutex::new(Vec::new()),
+                waker: Arc::new(Waker::new()),
+            });
+            injectors.push(inj.clone());
+            let ctx = ConnCtx {
+                kv: kv.clone(),
+                router,
+                senders: senders.clone(),
+                waker: inj.waker.clone(),
+            };
+            let (live, stop) = (live.clone(), stop.clone());
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("reactor-{i}"))
+                    .spawn(move || reactor_loop(inj, ctx, live, stop))
+                    .expect("spawn reactor worker"),
+            );
+        }
+        ReactorPool { injectors, joins, next: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    pub(crate) fn handle(&self) -> PoolHandle {
+        PoolHandle { injectors: self.injectors.clone(), next: self.next.clone() }
+    }
+
+    /// Wake every reactor (they observe the shared stop flag) and join.
+    pub(crate) fn shutdown(mut self) {
+        for inj in &self.injectors {
+            inj.waker.wake();
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One reactor worker: poll → absorb injected connections → step every
+/// token that is armed or parked-on-completions, retiring closed ones.
+fn reactor_loop(
+    inj: Arc<Injector>,
+    ctx: ConnCtx,
+    live: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+) {
+    let metrics = ctx.kv.metrics.clone();
+    let mut poller = Poller::with_waker(inj.waker.clone());
+    let mut conns: HashMap<Token, Conn> = HashMap::new();
+    // Connections whose progress comes from shard/atomic completions, not
+    // the socket; stepped every round even with empty interest.
+    let mut waiting: HashSet<Token> = HashSet::new();
+    let mut ready: Vec<Token> = Vec::new();
+    let mut next_tok: Token = 0;
+    let mut made_progress = true;
+    while !stop.load(Ordering::SeqCst) {
+        let woke = poller.poll(&mut ready, made_progress);
+        if woke {
+            metrics.record_wakeups(1);
+        }
+        for stream in inj.drain() {
+            let tok = next_tok;
+            next_tok += 1;
+            match Conn::new(stream, ctx.senders.len()) {
+                Ok(c) => {
+                    poller.register(tok, Interest::READ);
+                    conns.insert(tok, c);
+                    metrics.conn_opened();
+                    ready.push(tok);
+                }
+                // set_nonblocking failed — the acceptor already counted it.
+                Err(_) => {
+                    live.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+        }
+        made_progress = false;
+        let parked: Vec<Token> =
+            waiting.iter().copied().filter(|&t| !poller.interest(t).armed()).collect();
+        for tok in ready.drain(..).chain(parked) {
+            let Some(conn) = conns.get_mut(&tok) else { continue };
+            match conn.step(&ctx) {
+                StepOutcome::Open { interest, progressed, waiting: w } => {
+                    poller.reregister(tok, interest);
+                    if progressed {
+                        made_progress = true;
+                    }
+                    if w {
+                        waiting.insert(tok);
+                    } else {
+                        waiting.remove(&tok);
+                    }
+                }
+                StepOutcome::Closed => {
+                    conns.remove(&tok);
+                    poller.deregister(tok);
+                    waiting.remove(&tok);
+                    live.fetch_sub(1, Ordering::SeqCst);
+                    metrics.conn_closed();
+                    made_progress = true;
+                }
+            }
+        }
+    }
+    let n = conns.len();
+    drop(conns);
+    for _ in 0..n {
+        live.fetch_sub(1, Ordering::SeqCst);
+        metrics.conn_closed();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waker_wake_before_park_is_not_lost() {
+        let w = Waker::new();
+        w.wake();
+        assert!(w.park(Duration::from_millis(100)), "pending wake must be consumed");
+        assert!(!w.consume(), "park consumed the wake");
+    }
+
+    #[test]
+    fn waker_unblocks_parked_thread() {
+        let w = Arc::new(Waker::new());
+        let w2 = w.clone();
+        let t = std::thread::spawn(move || w2.park(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        w.wake();
+        assert!(t.join().unwrap(), "park must observe the wake");
+    }
+
+    #[test]
+    fn poller_reports_armed_tokens_only() {
+        let mut p = Poller::new();
+        p.register(1, Interest::READ);
+        p.register(2, Interest::NONE);
+        p.register(3, Interest { readable: true, writable: true });
+        let mut out = Vec::new();
+        p.poll(&mut out, true);
+        assert_eq!(out, vec![1, 3]);
+        p.reregister(1, Interest::NONE);
+        p.deregister(3);
+        p.poll(&mut out, true);
+        assert!(out.is_empty());
+        assert_eq!(p.interest(2), Interest::NONE);
+        assert_eq!(p.interest(99), Interest::NONE, "unknown token is unarmed");
+    }
+
+    #[test]
+    fn idle_poller_parks_instead_of_spinning() {
+        let mut p = Poller::new();
+        p.register(1, Interest::READ);
+        let mut out = Vec::new();
+        // Burn the yield-spin budget, then time one idle round: it must
+        // park (≥ PARK_MIN) rather than spin hot.
+        for _ in 0..=SPIN_ROUNDS {
+            p.poll(&mut out, false);
+        }
+        let t0 = std::time::Instant::now();
+        p.poll(&mut out, false);
+        assert!(t0.elapsed() >= PARK_MIN, "idle poll must park");
+        assert_eq!(out, vec![1], "armed tokens still reported after parking");
+    }
+}

@@ -186,10 +186,33 @@ pub enum Request {
     Op(SetOp, SyncSender<Response>),
     /// A pre-routed batch (pipelined connection / `MULTI`): one responder
     /// for the whole vector, results in op order.
-    Batch(Vec<SetOp>, SyncSender<Vec<Response>>),
+    Batch(Vec<SetOp>, BatchSink),
     /// Park this worker for an atomic cross-shard batch (`coordinator::txn`).
     Prepare(TxnHandle),
     Shutdown,
+}
+
+/// Where a completed batch's results go, plus (on the event plane) the
+/// reactor to wake. The channel holds one slot, so the worker's `send`
+/// after the trailing fence never blocks: a legacy connection thread is
+/// parked in `recv`, an event-plane connection picks the results up on
+/// its reactor's next wakeup — which `wake` delivers.
+pub struct BatchSink {
+    pub tx: SyncSender<Vec<Response>>,
+    pub wake: Option<Arc<super::reactor::Waker>>,
+}
+
+impl BatchSink {
+    /// Legacy thread-per-connection responder: the sender blocks in
+    /// `recv`, no wakeup needed.
+    pub fn blocking(tx: SyncSender<Vec<Response>>) -> BatchSink {
+        BatchSink { tx, wake: None }
+    }
+
+    /// Event-plane responder: completions wake the owning reactor.
+    pub fn waking(tx: SyncSender<Vec<Response>>, waker: Arc<super::reactor::Waker>) -> BatchSink {
+        BatchSink { tx, wake: Some(waker) }
+    }
 }
 
 /// The coordinator ⇄ parked-worker channel bundle of one atomic batch.
@@ -231,7 +254,7 @@ impl Response {
 /// Where one drained request's results go back to.
 enum Sink {
     One(SyncSender<Response>),
-    Many(usize, SyncSender<Vec<Response>>),
+    Many(usize, BatchSink),
 }
 
 /// Adaptive-K bounds for a shard worker's group commit (config keys
@@ -360,10 +383,17 @@ fn commit_group(
                 let _ = tx.send(Response::from_result(results[i]));
                 i += 1;
             }
-            Sink::Many(n, tx) => {
+            Sink::Many(n, sink) => {
                 let group: Vec<Response> =
                     results[i..i + n].iter().map(|&r| Response::from_result(r)).collect();
-                let _ = tx.send(group);
+                // Results land in the one-slot channel strictly after the
+                // trailing fence, then the owning reactor (if any) is
+                // woken — same ack-after-durability point as the legacy
+                // blocking recv.
+                let _ = sink.tx.send(group);
+                if let Some(w) = &sink.wake {
+                    w.wake();
+                }
                 i += n;
             }
         }
@@ -527,7 +557,7 @@ mod tests {
             SetOp::Remove(2),
             SetOp::Get(2),
         ];
-        w.tx.send(Request::Batch(batch, btx)).unwrap();
+        w.tx.send(Request::Batch(batch, BatchSink::blocking(btx))).unwrap();
         assert_eq!(
             brx.recv().unwrap(),
             vec![

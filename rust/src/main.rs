@@ -41,8 +41,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let port = cfg.port;
     println!(
-        "durasets serve: family={} shards={} key_range={} psync_ns={} port={}",
-        cfg.family, cfg.shards, cfg.key_range, cfg.psync_ns, port
+        "durasets serve: family={} shards={} key_range={} psync_ns={} port={} event_workers={}{}",
+        cfg.family,
+        cfg.shards,
+        cfg.key_range,
+        cfg.psync_ns,
+        port,
+        cfg.event_workers,
+        if cfg.event_workers == 0 { " (legacy thread-per-conn)" } else { "" }
     );
     let kv = Arc::new(DuraKv::create(cfg));
     let srv = server::serve(kv.clone(), port)?;
@@ -143,6 +149,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let points = bench::rwpath::sweep(cfg.duration, seed);
         print!("{}", bench::rwpath::render(&points));
         json_points.extend(bench::rwpath::to_json_points(&points));
+    } else if fig == "connscale" {
+        // Event-plane scaling: live connections x active fraction, with
+        // RSS/thread gauges per point and a superlinear-RSS verdict the
+        // CI connscale-bench job gates on.
+        let points = bench::connscale::sweep(cfg.duration)?;
+        print!("{}", bench::connscale::render(&points));
+        json_points.extend(bench::connscale::to_json_points(&points));
     } else if fig == "recovery" {
         // Measured RTO: rebuild wall-clock across recovery thread counts
         // and pool sizes (sizes via DURASETS_RECOVERY_KEYS / DURASETS_FULL,

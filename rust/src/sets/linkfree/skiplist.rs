@@ -316,9 +316,12 @@ pub fn recover_skiplist(id: PoolId) -> (LfSkipList, RecoveredStats) {
     (s, stats)
 }
 
-/// [`recover_skiplist`] with an explicit recovery worker count (the scan +
-/// chain relink parallelise through the engine; the index rebuild is a
-/// sequential walk over the members).
+/// [`recover_skiplist`] with an explicit recovery worker count: the scan +
+/// chain relink parallelise through the engine, and the tower index is
+/// rebuilt across the same worker budget
+/// ([`crate::sets::recovery::par_index_rebuild`] — CAS-based
+/// `index_insert` with key-deterministic heights, so any interleaving
+/// yields the same towers, with zero psyncs).
 pub fn recover_skiplist_timed(
     id: PoolId,
     threads: usize,
@@ -332,15 +335,19 @@ pub fn recover_skiplist_timed(
     drop(list);
     let skip = LfSkipList::from_core(core);
     skip.head.store(head_val, Ordering::Relaxed);
-    // Rebuild the index from the sorted chain.
+    // One cheap sequential pass collects (key, node) off the sorted
+    // chain; the tower CASes — the actual O(n log n) work — fan out.
+    let mut pairs: Vec<(u64, usize)> = Vec::new();
     unsafe {
         let mut curr = ptr_of::<LfNode>(head_val);
         while !curr.is_null() {
-            let key = (*curr).key.load(Ordering::Relaxed);
-            skip.index_insert(key, curr);
+            pairs.push(((*curr).key.load(Ordering::Relaxed), curr as usize));
             curr = ptr_of::<LfNode>((*curr).next.load(Ordering::Relaxed));
         }
     }
+    crate::sets::recovery::par_index_rebuild(&pairs, threads, |key, node| unsafe {
+        skip.index_insert(key, node as *mut LfNode)
+    });
     (skip, stats, timings)
 }
 

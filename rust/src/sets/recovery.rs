@@ -390,6 +390,46 @@ where
     *v = src;
 }
 
+/// Below this many members the skip-list index rebuild stays
+/// single-threaded (aligned with the other post-scan thresholds).
+const PAR_INDEX_MIN: usize = 4096;
+
+/// Rebuild a skip list's volatile tower index from recovered `(key,
+/// node-ptr)` pairs across `threads` scoped workers. Both families'
+/// `index_insert` is a CAS-based bottom-up insertion over the volatile
+/// towers, safe under concurrent calls, and `random_height` is
+/// deterministic in the key — so a parallel rebuild produces the *same
+/// tower set* as the old sequential walk, in whatever interleaving. Zero
+/// psyncs by construction: towers are pure volatile compute, so the
+/// engine's fence/flush pins (`rust/tests/recovery_parallel.rs`) hold
+/// bit-identically at any thread count. Node pointers travel as `usize`
+/// (raw pointers aren't `Send`; the nodes themselves are shared-readable
+/// during rebuild).
+pub fn par_index_rebuild(
+    pairs: &[(u64, usize)],
+    threads: usize,
+    insert: impl Fn(u64, usize) + Sync,
+) {
+    let threads = threads.clamp(1, MAX_RECOVERY_THREADS);
+    if threads <= 1 || pairs.len() < PAR_INDEX_MIN {
+        for &(key, node) in pairs {
+            insert(key, node);
+        }
+        return;
+    }
+    let chunk = pairs.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for c in pairs.chunks(chunk) {
+            let insert = &insert;
+            s.spawn(move || {
+                for &(key, node) in c {
+                    insert(key, node);
+                }
+            });
+        }
+    });
+}
+
 impl Scan {
     /// Sort the member run by key (single-chain shapes: lists, skip-list
     /// bottom levels, the resizable families' okey order). Parallel merge

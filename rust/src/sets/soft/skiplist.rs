@@ -263,9 +263,12 @@ pub fn recover_skiplist(id: PoolId) -> (SoftSkipList, RecoveredStats) {
     (s, stats)
 }
 
-/// [`recover_skiplist`] with an explicit recovery worker count (the scan +
-/// chain relink parallelise through the engine; the index rebuild is a
-/// sequential walk over the members).
+/// [`recover_skiplist`] with an explicit recovery worker count: the scan +
+/// chain relink parallelise through the engine, and the tower index is
+/// rebuilt across the same worker budget
+/// ([`crate::sets::recovery::par_index_rebuild`] — CAS-based
+/// `index_insert` with key-deterministic heights, so any interleaving
+/// yields the same towers, with zero psyncs).
 pub fn recover_skiplist_timed(
     id: PoolId,
     threads: usize,
@@ -277,13 +280,19 @@ pub fn recover_skiplist_timed(
     let core = SoftCore::from_parts(core0.dpool, core0.vpool, Arc::new(Ebr::new()));
     let skip = SoftSkipList::from_core(core);
     skip.head.store(head_val, Ordering::Relaxed);
+    // One cheap sequential pass collects (key, node) off the chain; the
+    // tower CASes — the actual O(n log n) work — fan out over workers.
+    let mut pairs: Vec<(u64, usize)> = Vec::new();
     unsafe {
         let mut curr = ptr_of::<SNode>(head_val);
         while !curr.is_null() {
-            skip.index_insert((*curr).key, curr);
+            pairs.push(((*curr).key, curr as usize));
             curr = ptr_of::<SNode>((*curr).next.load(Ordering::Relaxed));
         }
     }
+    crate::sets::recovery::par_index_rebuild(&pairs, threads, |key, node| unsafe {
+        skip.index_insert(key, node as *mut SNode)
+    });
     (skip, stats, timings)
 }
 

@@ -264,6 +264,67 @@ fn parallel_member_sort_engages_and_adds_no_psyncs() {
     }
 }
 
+/// The skip-list tower rebuild is now parallel past its engagement
+/// threshold (PAR_INDEX_MIN = 4096). Differential pin for both skip
+/// families: a >4096-member image recovered sequentially vs with 8
+/// workers must agree on members, stats, contents (every key readable
+/// through the rebuilt towers) and, exactly, on fence/flush counts —
+/// towers are pure volatile compute (CAS-built, key-deterministic
+/// heights), so the rebuild owes zero psyncs at any thread count.
+#[test]
+fn parallel_skiplist_index_rebuild_engages_and_adds_no_psyncs() {
+    fn case<S: ConcurrentSet>(
+        name: &str,
+        mk: impl Fn() -> S,
+        recover: impl Fn(PoolId, usize) -> (S, RecoveredStats, PhaseTimings),
+    ) {
+        let _sim = pmem::sim_session();
+        const N: u64 = 9_000;
+        let build = || {
+            let s = mk();
+            for k in 0..N {
+                assert!(s.insert(k, k.wrapping_mul(13) ^ 0x51C));
+            }
+            for k in 0..700u64 {
+                assert!(s.remove(k * 9));
+            }
+            s
+        };
+        let (a, b) = (build(), build());
+        let (ida, idb) = (a.durable_pool().unwrap(), b.durable_pool().unwrap());
+        a.prepare_crash();
+        b.prepare_crash();
+        drop(a);
+        drop(b);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[ida, idb]);
+
+        let f0 = stats::snapshot();
+        let (ra, sa, _) = recover(ida, 1);
+        let f1 = stats::snapshot();
+        let (rb, sb, _) = recover(idb, PAR_THREADS);
+        let f2 = stats::snapshot();
+
+        assert_eq!(sa.members, (N - 700) as usize, "{name}: members");
+        assert!(sa.members > 4096, "{name}: must cross the parallel-rebuild threshold");
+        assert_eq!(sa, sb, "{name}: sequential vs parallel stats");
+        let (seq, par) = (f1.since(&f0), f2.since(&f1));
+        assert_eq!(seq.fences, par.fences, "{name}: parallel tower rebuild added psyncs");
+        assert_eq!(seq.flushes, par.flushes, "{name}: parallel tower rebuild added flushes");
+        for k in 0..N {
+            let removed = k % 9 == 0 && k / 9 < 700;
+            let want = if removed { None } else { Some(k.wrapping_mul(13) ^ 0x51C) };
+            assert_eq!(ra.get(k), want, "{name}: seq key {k}");
+            assert_eq!(rb.get(k), want, "{name}: par key {k}");
+        }
+        // The rebuilt towers must keep the lists fully operational.
+        assert!(ra.insert(N + 1, 1), "{name}: seq insert after rebuild");
+        assert!(rb.insert(N + 1, 1), "{name}: par insert after rebuild");
+    }
+    let _g = LOCK.lock().unwrap();
+    case("linkfree-skiplist", linkfree::LfSkipList::new, linkfree::recover_skiplist_timed);
+    case("soft-skiplist", soft::SoftSkipList::new, soft::recover_skiplist_timed);
+}
+
 /// The resizable differential must also preserve the bucket-count epoch
 /// identically on both paths (growth happened pre-crash).
 #[test]
