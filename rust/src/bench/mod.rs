@@ -15,6 +15,7 @@ pub mod connscale;
 pub mod recovery;
 pub mod report;
 pub mod rwpath;
+pub mod scan;
 
 use crate::config::Structure;
 use crate::pmem::stats;
@@ -115,6 +116,7 @@ pub fn build_set(family: Family, structure: Structure, key_range: u64) -> Box<dy
     let set = match structure {
         Structure::Hash => sets::new_hash(family, key_range as usize), // load factor 1
         Structure::List => sets::new_list(family),
+        Structure::SkipList => sets::new_skiplist(family),
     };
     prefill(set.as_ref(), key_range);
     set

@@ -64,7 +64,7 @@ USAGE:
 COMMANDS:
   serve         run the sharded durable KV service (TCP line protocol)
   bench         regenerate a paper figure:
-                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|rwpath|connscale|all
+                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|rwpath|scan|connscale|all
                 --json FILE writes machine-readable data points
                 --fig recovery sweeps rebuild wall-clock over recovery
                 threads x pool sizes (--keys N, or DURASETS_RECOVERY_KEYS
@@ -72,6 +72,10 @@ COMMANDS:
                 --fig rwpath sweeps the served two-lane path: read
                 fraction {50,90,99} x pipeline depth, reporting read-lane
                 psyncs (pinned 0) and the adaptive-K gauge per point
+                --fig scan sweeps the ordered tier: scan length {1,16,100}
+                x burst depth {1,16,128} per skip-list family, reporting
+                merge-walk vs N-probe speedup and scan-lane psyncs
+                (pinned 0)
                 --fig connscale sweeps live connections x active fraction
                 over the event plane, reporting RSS/threads per point
                 (smoke sizes by default; DURASETS_FULL=1 goes to 10k)
@@ -80,22 +84,30 @@ COMMANDS:
   workload      print a sample of the deterministic op stream
   help          this text
 
-PROTOCOL (serve): PUT/GET/HAS/DEL/LEN/STATS/QUIT. Updates are group-
-  committed per shard (adaptive K; see STATS adaptk=[..]); pipelined
-  pure reads (GET/HAS) run on a psync-free direct path. MULTI <n> + n
-  ops + EXEC frames an explicit batch; MULTI <n> ATOMIC makes the frame
-  an atomic cross-shard batch (all-or-nothing under crashes).
+PROTOCOL (serve): PUT/GET/HAS/DEL/RANGE/SCAN/LEN/STATS/QUIT. Updates
+  are group-committed per shard (adaptive K; see STATS adaptk=[..]);
+  pipelined pure reads (GET/HAS) run on a psync-free direct path.
+  RANGE <lo> <hi> and SCAN <cursor> <n> (skiplist stores only) return a
+  count header then <key> <value> lines in key order; SCAN is cursor-
+  exclusive — page by passing the last key of the previous page (key 0
+  is reachable via RANGE). A burst of ordered reads resolves as one
+  merge-walk per shard, after the connection's writes drain (read-your-
+  writes). MULTI <n> + n ops + EXEC frames an explicit batch;
+  MULTI <n> ATOMIC makes the frame an atomic cross-shard batch
+  (all-or-nothing under crashes).
 
 CONFIG KEYS (file or key=value):
-  family=soft|link-free|log-free|volatile   structure=hash|list
+  family=soft|link-free|log-free|volatile   structure=hash|list|skiplist
+  (skiplist requires family soft or link-free; serves RANGE/SCAN)
   shards=N  key_range=N[K|M]  read_pct=0..100  threads=N
   psync_ns=N  sim=true|false  seed=N  port=N  max_conns=N  duration_ms=N
-  zipf_theta=F  group_k_min=N  group_k_max=N  event_workers=N
-  (event_workers: reactor pool size; 0 = legacy thread-per-connection)
+  zipf_theta=F  group_k_min=N  group_k_max=N  event_workers=N (1..=64)
 
 EXAMPLES:
   durasets serve family=soft shards=4 key_range=1M port=7878 max_conns=512
+  durasets serve family=link-free structure=skiplist shards=2 port=7878
   durasets bench --fig rwpath --json BENCH_rwpath.json
+  durasets bench --fig scan --json BENCH_scan.json
   durasets crash-test family=link-free key_range=64K
 ";
 

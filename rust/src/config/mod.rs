@@ -5,7 +5,7 @@
 //! ```text
 //! # durasets.conf
 //! family      = soft        # link-free | soft | log-free | volatile
-//! structure   = hash        # hash | list
+//! structure   = hash        # hash | list | skiplist
 //! shards      = 4
 //! key_range   = 1048576
 //! read_pct    = 90
@@ -22,6 +22,8 @@ use std::collections::BTreeMap;
 pub enum Structure {
     Hash,
     List,
+    /// Key-ordered skip list: the only structure serving `RANGE`/`SCAN`.
+    SkipList,
 }
 
 impl Structure {
@@ -29,6 +31,7 @@ impl Structure {
         match s.to_ascii_lowercase().as_str() {
             "hash" | "hashmap" | "hashset" => Some(Structure::Hash),
             "list" | "linkedlist" => Some(Structure::List),
+            "skiplist" | "skip-list" | "skip_list" => Some(Structure::SkipList),
             _ => None,
         }
     }
@@ -55,14 +58,12 @@ pub struct Config {
     /// TCP port for `durasets serve`.
     pub port: u16,
     /// Max concurrent TCP connections, enforced by the acceptor across
-    /// the whole serving plane (reactor pool or legacy fan-out);
-    /// 0 = unlimited. Excess connections are refused with an ERR line.
+    /// the reactor pool; 0 = unlimited. Excess connections are refused
+    /// with an ERR line.
     pub max_conns: usize,
     /// Event-plane reactor workers serving all connections
-    /// (DESIGN.md §ConnectionPlane). 0 = legacy thread-per-connection
-    /// (deprecated fallback, kept for one release). The default honors
-    /// `DURASETS_EVENT_WORKERS` so CI can run the whole suite on either
-    /// plane; unset, it is 2.
+    /// (DESIGN.md §ConnectionPlane), 1..=64. The default honors
+    /// `DURASETS_EVENT_WORKERS` so CI can size the pool; unset, it is 2.
     pub event_workers: usize,
     /// Adaptive group commit: floor of a shard worker's drain bound
     /// (light load converges here — lowest commit latency).
@@ -93,6 +94,7 @@ impl Default for Config {
             event_workers: std::env::var("DURASETS_EVENT_WORKERS")
                 .ok()
                 .and_then(|v| v.parse().ok())
+                .filter(|n: &usize| (1..=64).contains(n))
                 .unwrap_or(2),
             group_k_min: 1,
             group_k_max: 512,
@@ -186,8 +188,13 @@ impl Config {
         if self.group_k_max > 4096 {
             bail!("group_k_max must be <= 4096");
         }
-        if self.event_workers > 64 {
-            bail!("event_workers must be <= 64 (0 = legacy thread-per-conn)");
+        if self.event_workers == 0 || self.event_workers > 64 {
+            bail!("event_workers must be in 1..=64 (the legacy thread-per-connection plane is gone)");
+        }
+        if self.structure == Structure::SkipList
+            && !matches!(self.family, Family::LinkFree | Family::Soft)
+        {
+            bail!("structure=skiplist requires family link-free or soft (no durable skip list for {})", self.family);
         }
         Ok(())
     }
@@ -282,13 +289,39 @@ mod tests {
     fn event_workers_key_parses_and_validates() {
         let cfg = Config::load(None, &["event_workers=4".into()]).unwrap();
         assert_eq!(cfg.event_workers, 4);
-        let legacy = Config::load(None, &["event_workers=0".into()]).unwrap();
-        assert_eq!(legacy.event_workers, 0, "0 keeps the legacy plane");
+        assert!(
+            Config::load(None, &["event_workers=0".into()]).is_err(),
+            "the legacy thread-per-connection plane was removed; 0 is no longer a plane selector"
+        );
         assert!(Config::load(None, &["event_workers=65".into()]).is_err());
         assert!(Config::load(None, &["event_workers=x".into()]).is_err());
-        // The default is env-driven (CI runs the suite on both planes),
-        // so assert only that it is valid — not a specific number.
-        assert!(Config::default().event_workers <= 64);
+        // The default is env-driven (CI can size the pool), so assert
+        // only that it is valid — not a specific number.
+        let dflt = Config::default().event_workers;
+        assert!((1..=64).contains(&dflt));
+    }
+
+    #[test]
+    fn skiplist_structure_parses_and_gates_families() {
+        for alias in ["skiplist", "skip-list", "skip_list", "SKIPLIST"] {
+            assert_eq!(Structure::parse(alias), Some(Structure::SkipList));
+        }
+        let cfg = Config::load(None, &["structure=skiplist".into()]).unwrap();
+        assert_eq!(cfg.structure, Structure::SkipList); // soft default: ok
+        let cfg =
+            Config::load(None, &["structure=skiplist".into(), "family=link-free".into()])
+                .unwrap();
+        assert_eq!(cfg.family, Family::LinkFree);
+        for fam in ["log-free", "volatile"] {
+            assert!(
+                Config::load(
+                    None,
+                    &["structure=skiplist".into(), format!("family={fam}")],
+                )
+                .is_err(),
+                "{fam} has no durable skip list and must be rejected"
+            );
+        }
     }
 
     #[test]

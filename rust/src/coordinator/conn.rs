@@ -1,6 +1,5 @@
 //! Per-connection state machine for the event-driven connection plane
-//! (DESIGN.md §ConnectionPlane), plus the wire-protocol helpers shared
-//! with the legacy thread-per-connection path.
+//! (DESIGN.md §ConnectionPlane), plus the wire-protocol helpers.
 //!
 //! One [`Conn`] is: read buffer → burst parser → lane classification →
 //! pending-responder set → write buffer. A reactor drives it with
@@ -9,12 +8,13 @@
 //! channels), so a step never blocks the reactor no matter what one
 //! connection is doing.
 //!
-//! The wire semantics are byte-identical to the legacy path: same burst
-//! gathering, same two-lane routing (updates as per-shard
-//! [`Request::Batch`]es, pure reads swept psync-free after the burst's
-//! writes drain — which is exactly what preserves per-connection
-//! read-your-writes), same `MULTI`/`ATOMIC` framing and error lines. The
-//! differences are mechanical: replies accumulate in `wbuf` and drain as
+//! A burst routes into three lanes: updates as per-shard
+//! [`Request::Batch`]es (write lane), point reads swept psync-free after
+//! the burst's writes drain (read lane — the drain-first order is what
+//! preserves per-connection read-your-writes), and ordered
+//! `RANGE`/`SCAN` queries batched into one merge-walk per shard (scan
+//! lane, DESIGN.md §OrderedReads) whose per-shard sorted runs are k-way
+//! merged back into key order. Replies accumulate in `wbuf` and drain as
 //! the socket accepts them (partial writes re-arm write interest), and
 //! an atomic frame — whose two-phase commit blocks on the shard workers
 //! by design — runs on a short-lived helper thread that wakes the
@@ -24,7 +24,7 @@ use super::reactor::{Interest, Waker};
 use super::shard::{BatchSink, Request, Response};
 use super::{DuraKv, Router};
 use crate::pmem::stats;
-use crate::sets::{ConcurrentSet, SetOp};
+use crate::sets::{ConcurrentSet, RangeQuery, SetOp};
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
@@ -46,7 +46,7 @@ const WBUF_HIGH_WATER: usize = 256 * 1024;
 const IDLE_BUF_CAP: usize = 4 * 1024;
 
 // ---------------------------------------------------------------------
-// Wire-protocol pieces (shared by the reactor and legacy paths)
+// Wire-protocol pieces
 // ---------------------------------------------------------------------
 
 /// A routed data command (needed again at reply-formatting time).
@@ -66,6 +66,8 @@ pub(crate) enum Slot {
     Write(DataCmd, usize, usize),
     /// Read-lane op `idx` of shard `shard`'s direct sweep.
     Read(DataCmd, usize, usize),
+    /// Scan-lane ordered query `idx` of the burst's merge-walk.
+    Ordered(usize),
     /// Resolved after the burst's data ops (approximate snapshots).
     Len,
     Stats,
@@ -190,6 +192,62 @@ pub(crate) fn run_read_lane(set: &dyn ConcurrentSet, ops: &[SetOp]) -> Vec<Respo
         .collect()
 }
 
+/// Execute a burst's scan lane: **one** [`crate::sets::OrderedSet::range_batch`]
+/// call per shard (the merge-walk — one EBR pin + one tower descent per
+/// shard regardless of burst depth), then a k-way merge of each query's
+/// per-shard sorted runs back into key order. Keys hash-distribute over
+/// shards ([`Router::all_shards`]), so every shard holds a slice of every
+/// window; keys are globally unique across shards, so the merge needs no
+/// dedup. `Scan` windows are re-capped after the merge: each shard
+/// returns its first `n` keys past the cursor, and the global answer is
+/// the first `n` of their union. Zero psyncs (the caller meters).
+pub(crate) fn run_scan_lane(
+    kv: &DuraKv,
+    router: Router,
+    queries: &[RangeQuery],
+) -> Vec<Vec<(u64, u64)>> {
+    let mut per_shard: Vec<Vec<Vec<(u64, u64)>>> = Vec::with_capacity(router.shards());
+    for shard in router.all_shards() {
+        let ord = kv
+            .shard_set(shard)
+            .as_ordered()
+            .expect("scan lane is classification-gated to ordered stores");
+        per_shard.push(ord.range_batch(queries));
+    }
+    (0..queries.len())
+        .map(|qi| {
+            let runs: Vec<&[(u64, u64)]> =
+                per_shard.iter().map(|s| s[qi].as_slice()).collect();
+            let mut merged = merge_sorted_runs(&runs);
+            if let RangeQuery::Scan(_, n) = queries[qi] {
+                merged.truncate(n);
+            }
+            merged
+        })
+        .collect()
+}
+
+/// K-way merge of key-sorted runs with pairwise-disjoint key sets.
+pub(crate) fn merge_sorted_runs(runs: &[&[(u64, u64)]]) -> Vec<(u64, u64)> {
+    let mut out = Vec::with_capacity(runs.iter().map(|r| r.len()).sum());
+    let mut idx = vec![0usize; runs.len()];
+    loop {
+        let mut best: Option<usize> = None;
+        for (r, run) in runs.iter().enumerate() {
+            if idx[r] < run.len() && best.map_or(true, |b| run[idx[r]].0 < runs[b][idx[b]].0) {
+                best = Some(r);
+            }
+        }
+        match best {
+            Some(r) => {
+                out.push(runs[r][idx[r]]);
+                idx[r] += 1;
+            }
+            None => return out,
+        }
+    }
+}
+
 /// Map a read-lane wire `Response` back to the `OpResult` shape
 /// `Metrics::record_op` classifies on.
 pub(crate) fn read_op_result(op: SetOp, r: Response) -> crate::sets::OpResult {
@@ -205,8 +263,8 @@ pub(crate) fn read_op_result(op: SetOp, r: Response) -> crate::sets::OpResult {
 /// parse strictly (any bad line aborts the whole frame — all-or-nothing
 /// starts at the parser), then run the two-phase protocol over the shard
 /// workers. Blocks on the workers' Prepare/done handshake by design, so
-/// the reactor path calls this from a helper thread; the legacy path
-/// calls it inline.
+/// the reactor calls this from a helper thread (inline only as the
+/// out-of-threads overload fallback).
 pub(crate) fn atomic_frame_lines(
     frame: &[String],
     router: Router,
@@ -297,10 +355,13 @@ pub(crate) struct Conn {
     wbuf: Vec<u8>,
     wstart: usize,
     phase: Phase,
-    // ---- the gathered burst (same shapes as the legacy flush_burst) ----
+    // ---- the gathered burst ----
     slots: Vec<Slot>,
     writes: Vec<Vec<SetOp>>,
     reads: Vec<Vec<SetOp>>,
+    /// Ordered `RANGE`/`SCAN` queries of the burst, in slot order
+    /// (scan lane; executed as one merge-walk per shard).
+    ordered: Vec<RangeQuery>,
     /// Shards whose write sub-batch hit a full queue on `try_send`;
     /// retried each step (this is the queue-bound backpressure, made
     /// non-blocking).
@@ -333,6 +394,7 @@ impl Conn {
             slots: Vec::new(),
             writes: vec![Vec::new(); nshards],
             reads: vec![Vec::new(); nshards],
+            ordered: Vec::new(),
             unsent: Vec::new(),
             pending: Vec::new(),
             write_results: vec![Vec::new(); nshards],
@@ -489,7 +551,7 @@ impl Conn {
 
     /// Next complete line out of `rbuf` (trimmed). At peer EOF a trailing
     /// unterminated line still counts as a line (`BufRead::read_line`
-    /// parity with the legacy path).
+    /// parity).
     fn take_line(&mut self) -> Option<String> {
         let buf = &self.rbuf[self.rstart..];
         if let Some(i) = buf.iter().position(|&b| b == b'\n') {
@@ -540,11 +602,10 @@ impl Conn {
     }
 
     /// Consume complete lines into the burst. Returns (consumed anything,
-    /// dispatch the burst now). Dispatch points mirror the legacy burst
-    /// loop exactly: QUIT, an atomic/starved `MULTI` header with earlier
-    /// commands pending (a slow frame must not withhold their replies),
-    /// a completed atomic frame, or input exhausted with a non-empty
-    /// burst.
+    /// dispatch the burst now). Dispatch points: QUIT, an atomic/starved
+    /// `MULTI` header with earlier commands pending (a slow frame must
+    /// not withhold their replies), a completed atomic frame, or input
+    /// exhausted with a non-empty burst.
     fn gather_lines(&mut self, ctx: &ConnCtx) -> (bool, bool) {
         let mut consumed = false;
         loop {
@@ -599,6 +660,28 @@ impl Conn {
                                 }
                             }
                         },
+                        "RANGE" => {
+                            match (parse_u64(parts.next()), parse_u64(parts.next()), parts.next())
+                            {
+                                (Some(lo), Some(hi), None) => {
+                                    self.push_ordered(RangeQuery::Range(lo, hi), ctx)
+                                }
+                                _ => self
+                                    .slots
+                                    .push(Slot::Text("ERR usage: RANGE <lo> <hi>".to_string())),
+                            }
+                        }
+                        "SCAN" => {
+                            match (parse_u64(parts.next()), parse_u64(parts.next()), parts.next())
+                            {
+                                (Some(cursor), Some(n), None) if n <= MULTI_MAX => {
+                                    self.push_ordered(RangeQuery::Scan(cursor, n as usize), ctx)
+                                }
+                                _ => self.slots.push(Slot::Text(format!(
+                                    "ERR usage: SCAN <cursor> <n> (n <= {MULTI_MAX})"
+                                ))),
+                            }
+                        }
                         "LEN" => self.slots.push(Slot::Len),
                         "STATS" => self.slots.push(Slot::Stats),
                         "QUIT" => {
@@ -615,6 +698,22 @@ impl Conn {
         }
         let dispatch = !self.slots.is_empty();
         (consumed, dispatch)
+    }
+
+    /// Classify an ordered query into the scan lane — or reject it at
+    /// classification time when the store has no ordered view (hash and
+    /// list shards; every shard shares one structure, so shard 0 speaks
+    /// for all).
+    fn push_ordered(&mut self, q: RangeQuery, ctx: &ConnCtx) {
+        if ctx.kv.shard_set(0).as_ordered().is_none() {
+            self.slots.push(Slot::Text(
+                "ERR ordered reads need structure=skiplist (this store is unordered)"
+                    .to_string(),
+            ));
+            return;
+        }
+        self.slots.push(Slot::Ordered(self.ordered.len()));
+        self.ordered.push(q);
     }
 
     /// A `MULTI` frame has all `n + 1` lines: validate EXEC, then either
@@ -733,12 +832,12 @@ impl Conn {
         progress
     }
 
-    /// Every sub-batch completed: run the read lane, then format every
-    /// reply into `wbuf` in line order. Identical ordering semantics to
-    /// the legacy `flush_burst` — all reads of a burst execute after all
-    /// of its writes, which is what preserves per-connection
-    /// read-your-writes no matter which reactor rounds (or wakeups) the
-    /// burst's lifetime spans.
+    /// Every sub-batch completed: run the read lane and the scan lane,
+    /// then format every reply into `wbuf` in line order. All reads of a
+    /// burst execute after all of its writes, which is what preserves
+    /// per-connection read-your-writes no matter which reactor rounds
+    /// (or wakeups) the burst's lifetime spans — `RANGE` after a
+    /// pipelined `PUT` observes the write.
     fn resolve_burst(&mut self, ctx: &ConnCtx) {
         let kv = &ctx.kv;
         let nshards = ctx.senders.len();
@@ -765,6 +864,18 @@ impl Conn {
             let d = stats::thread_snapshot().since(&before);
             kv.metrics.record_read_lane(nops, d.fences, d.flushes);
         }
+        let ordered_queries = std::mem::take(&mut self.ordered);
+        let mut ordered_results: Vec<Vec<(u64, u64)>> = Vec::new();
+        if !ordered_queries.is_empty() {
+            // Scan lane: same drain-first position as the read lane (RYW
+            // holds for ordered reads too), metered around the whole
+            // merge-walk — the zero-psync claim is pinned on these
+            // counters by the scan-bench CI gate.
+            let before = stats::thread_snapshot();
+            ordered_results = run_scan_lane(kv, ctx.router, &ordered_queries);
+            let d = stats::thread_snapshot().since(&before);
+            kv.metrics.record_scan_lane(ordered_queries.len() as u64, d.fences, d.flushes);
+        }
         let slots = std::mem::take(&mut self.slots);
         for slot in slots {
             match slot {
@@ -776,6 +887,20 @@ impl Conn {
                 Slot::Read(cmd, shard, idx) => {
                     let r = read_results[shard][idx];
                     self.push_line(&data_reply(cmd, r));
+                }
+                Slot::Ordered(idx) => {
+                    // Count header, then one `<key> <value>` line per hit
+                    // in key order; a SCAN client pages by re-issuing with
+                    // cursor = last key of the previous page.
+                    let pairs = std::mem::take(&mut ordered_results[idx]);
+                    let verb = match ordered_queries[idx] {
+                        RangeQuery::Range(..) => "RANGE",
+                        RangeQuery::Scan(..) => "SCAN",
+                    };
+                    self.push_line(&format!("{verb} {}", pairs.len()));
+                    for (k, v) in pairs {
+                        self.push_line(&format!("{k} {v}"));
+                    }
                 }
                 Slot::Len => self.push_line(&format!("LEN {}", kv.len_approx())),
                 Slot::Stats => self.push_line(&format!(
@@ -930,6 +1055,84 @@ mod tests {
             assert!(std::time::Instant::now() < deadline, "drain stalled: {got} bytes");
         }
         assert_eq!(got, 8 << 20, "every buffered byte must reach the client");
+    }
+
+    #[test]
+    fn merge_sorted_runs_interleaves_disjoint_runs() {
+        let a: Vec<(u64, u64)> = vec![(1, 10), (4, 40), (7, 70)];
+        let b: Vec<(u64, u64)> = vec![(2, 20), (5, 50)];
+        let c: Vec<(u64, u64)> = vec![];
+        let merged = merge_sorted_runs(&[&a, &b, &c]);
+        assert_eq!(merged, vec![(1, 10), (2, 20), (4, 40), (5, 50), (7, 70)]);
+        assert!(merge_sorted_runs(&[]).is_empty());
+    }
+
+    /// Ordered verbs on an unordered (hash) store are rejected at
+    /// classification time with an ERR line, not at execution time.
+    #[test]
+    fn range_on_hash_store_is_rejected_at_classification() {
+        let (server, mut client) = socket_pair();
+        let (ctx, _kv) = ctx_without_workers(); // structure=hash
+        let mut conn = Conn::new(server, ctx.senders.len()).unwrap();
+        client.write_all(b"RANGE 1 9\nSCAN 0 4\nRANGE nope\n").unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        conn.step(&ctx);
+        let mut reply = [0u8; 256];
+        client.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        let n = client.read(&mut reply).unwrap();
+        let text = std::str::from_utf8(&reply[..n]).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        assert!(lines[0].starts_with("ERR ordered reads need structure=skiplist"));
+        assert!(lines[1].starts_with("ERR ordered reads need structure=skiplist"));
+        assert!(lines[2].starts_with("ERR usage: RANGE"));
+    }
+
+    /// The scan lane end to end on a skip-list store (no shard workers
+    /// needed — a pure-read burst resolves on the direct path): replies
+    /// come back count-headed, key-sorted, merged across shards.
+    #[test]
+    fn ordered_burst_resolves_on_scan_lane_with_merged_replies() {
+        use std::sync::atomic::Ordering;
+        let (server, mut client) = socket_pair();
+        let mut cfg = Config::default();
+        cfg.shards = 2;
+        cfg.key_range = 1024;
+        cfg.psync_ns = 0;
+        cfg.structure = crate::config::Structure::SkipList;
+        let kv = Arc::new(DuraKv::create(cfg));
+        for k in 0..64u64 {
+            kv.shard_set(kv.router().shard_of(k)).insert(k, k + 100);
+        }
+        let ctx = ConnCtx {
+            kv: kv.clone(),
+            router: kv.router(),
+            senders: Arc::new(Vec::new()),
+            waker: Arc::new(Waker::new()),
+        };
+        let mut conn = Conn::new(server, ctx.senders.len()).unwrap();
+        client.write_all(b"RANGE 10 13\nSCAN 60 8\n").unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        conn.step(&ctx);
+        let mut reply = Vec::new();
+        let mut buf = [0u8; 1024];
+        client.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        while !reply.ends_with(b"63 163\n") {
+            let n = client.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed early");
+            reply.extend_from_slice(&buf[..n]);
+        }
+        let text = String::from_utf8(reply).unwrap();
+        assert_eq!(
+            text,
+            "RANGE 4\n10 110\n11 111\n12 112\n13 113\nSCAN 3\n61 161\n62 162\n63 163\n"
+        );
+        assert_eq!(kv.metrics.sl_runs.load(Ordering::Relaxed), 1, "one scan-lane burst");
+        assert_eq!(kv.metrics.sl_ops.load(Ordering::Relaxed), 2);
+        assert_eq!(kv.metrics.sl_fences.load(Ordering::Relaxed), 0);
+        assert_eq!(kv.metrics.sl_flushes.load(Ordering::Relaxed), 0);
     }
 
     /// A fragmented burst — bytes arriving in arbitrary splits, including

@@ -32,6 +32,16 @@ pub struct Metrics {
     pub rl_fences: AtomicU64,
     /// Flushes the read lane issued (same pin as `rl_fences`).
     pub rl_flushes: AtomicU64,
+    /// Scan-lane bursts executed (ordered `RANGE`/`SCAN` merge-walks; one
+    /// per burst with ordered reads).
+    pub sl_runs: AtomicU64,
+    /// Ordered queries served through the scan lane.
+    pub sl_ops: AtomicU64,
+    /// Fences the scan lane issued — pinned 0 for both skip-list families
+    /// (`walk_from` never helps-flush; the CI scan gate enforces this).
+    pub sl_fences: AtomicU64,
+    /// Flushes the scan lane issued (same pin as `sl_fences`).
+    pub sl_flushes: AtomicU64,
     /// Atomic cross-shard batches executed.
     pub atomics: AtomicU64,
     /// Ops inside atomic batches.
@@ -95,6 +105,10 @@ impl Metrics {
             rl_ops: Z,
             rl_fences: Z,
             rl_flushes: Z,
+            sl_runs: Z,
+            sl_ops: Z,
+            sl_fences: Z,
+            sl_flushes: Z,
             atomics: Z,
             atomic_ops: Z,
             rolled_forward: Z,
@@ -200,6 +214,16 @@ impl Metrics {
         self.rl_fences.fetch_add(fences, Ordering::Relaxed);
         self.rl_flushes.fetch_add(flushes, Ordering::Relaxed);
         self.rl_runs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one scan-lane burst of `n` ordered queries plus the
+    /// fences/flushes its merge-walk issued (metered like the read lane).
+    #[inline]
+    pub fn record_scan_lane(&self, n: u64, fences: u64, flushes: u64) {
+        self.sl_ops.fetch_add(n, Ordering::Relaxed);
+        self.sl_fences.fetch_add(fences, Ordering::Relaxed);
+        self.sl_flushes.fetch_add(flushes, Ordering::Relaxed);
+        self.sl_runs.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Count one atomic cross-shard batch of `n` ops.
@@ -340,6 +364,15 @@ impl Metrics {
                 self.rl_flushes.load(Ordering::Relaxed),
             ));
         }
+        if self.sl_runs.load(Ordering::Relaxed) > 0 {
+            out.push_str(&format!(
+                " scanlane=[runs={} ops={} fences={} flushes={}]",
+                self.sl_runs.load(Ordering::Relaxed),
+                self.sl_ops.load(Ordering::Relaxed),
+                self.sl_fences.load(Ordering::Relaxed),
+                self.sl_flushes.load(Ordering::Relaxed),
+            ));
+        }
         if self.cp_workers.load(Ordering::Relaxed) > 0 {
             out.push_str(&format!(
                 " connplane=[workers={} conns={} wakeups={} partial_writes={}]",
@@ -472,6 +505,20 @@ mod tests {
         let s = m.report();
         assert!(s.contains("recovery=[shards=2 members=10 reclaimed=4 wall=5.0ms"), "{s}");
         assert!(s.contains("threads=8 accel=false evicted=7]"), "{s}");
+    }
+
+    #[test]
+    fn scan_lane_counters_record_and_render() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("scanlane=["), "silent until first burst");
+        m.record_scan_lane(16, 0, 0);
+        m.record_scan_lane(3, 0, 0);
+        assert_eq!(m.sl_runs.load(Ordering::Relaxed), 2);
+        assert_eq!(m.sl_ops.load(Ordering::Relaxed), 19);
+        assert_eq!(m.sl_fences.load(Ordering::Relaxed), 0);
+        assert_eq!(m.sl_flushes.load(Ordering::Relaxed), 0);
+        let s = m.report();
+        assert!(s.contains("scanlane=[runs=2 ops=19 fences=0 flushes=0]"), "{s}");
     }
 
     /// Regression companion to the resizable `len_approx` churn test:

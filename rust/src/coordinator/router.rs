@@ -44,6 +44,16 @@ impl Router {
         }
         per_shard
     }
+
+    /// Shards an *ordered* query must visit: all of them. Point keys
+    /// hash-distribute across shards, so any key interval is spread over
+    /// every shard — an ordered burst fans out as one `range_batch`
+    /// (merge-walk) per shard and the caller k-way merges the per-shard
+    /// sorted runs back into key order (`conn::merge_sorted_runs`).
+    #[inline]
+    pub fn all_shards(&self) -> std::ops::Range<usize> {
+        0..self.shards
+    }
 }
 
 #[cfg(test)]

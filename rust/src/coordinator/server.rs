@@ -1,4 +1,4 @@
-//! TCP front: a typed **two-lane op plane** over the adaptive
+//! TCP front: a typed **three-lane op plane** over the adaptive
 //! group-committing shard workers.
 //!
 //! ```text
@@ -6,6 +6,10 @@
 //! GET <key>           ->  FOUND <value> | MISSING
 //! HAS <key>           ->  YES | NO
 //! DEL <key>           ->  OK DELETED | OK ABSENT
+//! RANGE <lo> <hi>     ->  RANGE <n>, then n "<key> <value>" lines in
+//!                         key order (inclusive bounds; skiplist only)
+//! SCAN <cursor> <n>   ->  SCAN <m>, then m "<key> <value>" lines: the
+//!                         first m <= n keys strictly above <cursor>
 //! MULTI <n> [ATOMIC]  ->  (no reply; the next n lines are queued ops)
 //! EXEC                ->  n reply lines, one per queued op, in order
 //!                         (n = 0: a single "OK EMPTY" ack)
@@ -37,6 +41,17 @@
 //! read-side helping psyncs only when racing in-flight updates). A
 //! burst with no writes therefore costs no queue hop at all.
 //!
+//! **Scan lane (DESIGN.md §OrderedReads).** Ordered reads (RANGE/SCAN,
+//! skiplist stores only) form a third lane resolved after the read lane:
+//! the burst's ordered queries fan out as one **merge-walk**
+//! (`OrderedSet::range_batch`) per shard — one EBR pin and one tower
+//! descent serving every window — and the per-shard sorted runs are
+//! k-way merged back into reply order. The walk is flush-free by
+//! construction (`walk_from` never helps-flush), so the lane's
+//! `Metrics::sl_fences`/`sl_flushes` are pinned at zero. It runs after
+//! the burst's write batches drain, so read-your-writes extends to
+//! ordered reads.
+//!
 //! **Explicit batches.** `MULTI <n>` queues the next `n` PUT/GET/HAS/DEL
 //! lines without replying, `EXEC` routes them like a pipelined burst and
 //! emits the `n` replies. A malformed frame yields a single ERR line.
@@ -46,33 +61,25 @@
 //! none. A malformed atomic frame aborts whole (one ERR line, nothing
 //! executed).
 //!
-//! **Connection plane (DESIGN.md §ConnectionPlane).** By default
-//! (`event_workers > 0`) connections are served by a small pool of
-//! event-loop reactor workers over nonblocking sockets: the acceptor
-//! admits (one shared `max_conns` counter for the whole pool) and
-//! round-robins sockets over the reactors; each reactor multiplexes its
-//! connections' state machines ([`super::conn::Conn`]), and shard
-//! completions wake the owning reactor ([`BatchSink`]) instead of
-//! unparking a per-connection thread — so 10k idle connections cost
-//! buffers, not stacks. `event_workers = 0` keeps the legacy
-//! thread-per-connection path (below, one release of fallback); both
-//! planes speak byte-identical wire protocol, and the per-shard queue
-//! bound remains the service's backpressure either way.
+//! **Connection plane (DESIGN.md §ConnectionPlane).** Connections are
+//! served by a small pool of event-loop reactor workers
+//! (`event_workers`, validated into 1..=64) over nonblocking sockets:
+//! the acceptor admits (one shared `max_conns` counter for the whole
+//! pool) and round-robins sockets over the reactors; each reactor
+//! multiplexes its connections' state machines ([`super::conn::Conn`]),
+//! and shard completions wake the owning reactor
+//! ([`super::shard::BatchSink`]) instead of unparking a per-connection
+//! thread — so 10k idle connections cost buffers, not stacks. The
+//! per-shard queue bound remains the service's backpressure.
 
-use super::conn::{
-    atomic_frame_lines, data_reply, parse_data, parse_multi_args, read_op_result, route,
-    run_read_lane, Slot, MULTI_MAX,
-};
-use super::reactor::{PoolHandle, ReactorPool};
-use super::shard::{BatchSink, GroupTuning, Request, Response, ShardWorker};
-use super::{DuraKv, Router};
-use crate::pmem::stats;
-use crate::sets::SetOp;
+use super::reactor::ReactorPool;
+use super::shard::{GroupTuning, Request, ShardWorker};
+use super::DuraKv;
 use anyhow::Result;
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 
 /// Adapter giving a shard's set a `'static` handle via the Arc'd store.
@@ -133,12 +140,6 @@ impl Drop for Server {
     }
 }
 
-/// Which plane serves accepted connections.
-enum FrontEnd {
-    Event(PoolHandle),
-    Legacy,
-}
-
 /// Start serving `kv` on `127.0.0.1:port` (port 0 = ephemeral, for tests).
 pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
     let listener = TcpListener::bind(("127.0.0.1", port))?;
@@ -163,51 +164,30 @@ pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
     let event_workers = kv.config().event_workers;
     let live_conns = Arc::new(AtomicUsize::new(0));
     let stop = Arc::new(AtomicBool::new(false));
-    let pool = if event_workers > 0 {
-        kv.metrics.set_conn_workers(event_workers as u64);
-        Some(ReactorPool::spawn(
-            event_workers,
-            kv.clone(),
-            senders.clone(),
-            live_conns.clone(),
-            stop.clone(),
-        ))
-    } else {
-        None
-    };
-    let front = match &pool {
-        Some(p) => FrontEnd::Event(p.handle()),
-        None => FrontEnd::Legacy,
-    };
+    kv.metrics.set_conn_workers(event_workers as u64);
+    let pool = ReactorPool::spawn(
+        event_workers,
+        kv.clone(),
+        senders,
+        live_conns.clone(),
+        stop.clone(),
+    );
+    let handle = pool.handle();
 
     let stop2 = stop.clone();
-    let kv2 = kv.clone();
     let accept_join = std::thread::spawn(move || {
-        let router = kv2.router();
         while !stop2.load(Ordering::SeqCst) {
             match listener.accept() {
                 Ok((stream, _)) => {
                     // Admission control lives in the acceptor: one shared
-                    // counter bounds the whole server — the reactor pool
-                    // as a unit, or the legacy fan-out — and the serving
-                    // side decrements it when a connection retires.
+                    // counter bounds the whole reactor pool, and a reactor
+                    // decrements it when a connection retires.
                     if max_conns > 0 && live_conns.load(Ordering::SeqCst) >= max_conns {
                         reject_conn(stream, max_conns);
                         continue;
                     }
                     live_conns.fetch_add(1, Ordering::SeqCst);
-                    match &front {
-                        FrontEnd::Event(h) => h.dispatch(stream),
-                        FrontEnd::Legacy => {
-                            let senders = senders.clone();
-                            let kv = kv2.clone();
-                            let live = live_conns.clone();
-                            std::thread::spawn(move || {
-                                let _ = handle_conn(stream, router, &senders, &kv);
-                                live.fetch_sub(1, Ordering::SeqCst);
-                            });
-                        }
-                    }
+                    handle.dispatch(stream);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(5));
@@ -217,7 +197,7 @@ pub fn serve(kv: Arc<DuraKv>, port: u16) -> Result<Server> {
         }
     });
 
-    Ok(Server { addr, stop, accept_join: Some(accept_join), pool, _workers: workers })
+    Ok(Server { addr, stop, accept_join: Some(accept_join), pool: Some(pool), _workers: workers })
 }
 
 /// Refuse a connection over the `max_conns` limit with one ERR line that
@@ -261,229 +241,6 @@ fn reject_conn(stream: TcpStream, max_conns: usize) {
     // gets a reset, which is the pre-PR behaviour, and the accept loop
     // stays alive (a bare `thread::spawn` would have panicked it dead).
     let _ = spawned;
-}
-
-/// Read one line; `Ok(None)` on a clean EOF.
-fn read_line(reader: &mut BufReader<TcpStream>) -> Result<Option<String>> {
-    let mut line = String::new();
-    if reader.read_line(&mut line)? == 0 {
-        return Ok(None);
-    }
-    Ok(Some(line.trim().to_string()))
-}
-
-/// Dispatch a gathered burst: write lane first (one `Request::Batch` per
-/// shard, awaited — this *is* the connection's in-flight write drain),
-/// then the read lane directly on this thread, then every reply in line
-/// order with a single flush. Returns true on QUIT.
-///
-/// Ordering semantics: all reads of a burst execute after all of its
-/// writes. Within one pipelined burst every op is concurrent (the client
-/// sent them without awaiting replies), so this order is a legal
-/// linearization — and it is exactly what preserves read-your-writes
-/// per connection (a read never misses an earlier write of its own
-/// connection, in this burst or any previous one).
-fn flush_burst(
-    slots: &mut Vec<Slot>,
-    per_shard: &mut [Vec<SetOp>],
-    reads: &mut [Vec<SetOp>],
-    senders: &[SyncSender<Request>],
-    writer: &mut BufWriter<TcpStream>,
-    kv: &DuraKv,
-) -> Result<bool> {
-    let mut waiting: Vec<(usize, Receiver<Vec<Response>>)> = Vec::new();
-    for (shard, ops) in per_shard.iter_mut().enumerate() {
-        if ops.is_empty() {
-            continue;
-        }
-        let (btx, brx) = sync_channel(1);
-        senders[shard].send(Request::Batch(std::mem::take(ops), BatchSink::blocking(btx)))?;
-        waiting.push((shard, brx));
-    }
-    let mut shard_results: Vec<Vec<Response>> = vec![Vec::new(); senders.len()];
-    for (shard, brx) in waiting {
-        shard_results[shard] = brx.recv()?;
-    }
-
-    // Read lane: the connection's writes are drained (durable + acked to
-    // us), so direct reads observe them. Metered around the whole sweep —
-    // the psync-free claim is pinned on these counters.
-    let mut read_results: Vec<Vec<Response>> = vec![Vec::new(); senders.len()];
-    if reads.iter().any(|r| !r.is_empty()) {
-        let before = stats::thread_snapshot();
-        let mut nops = 0u64;
-        for (shard, ops) in reads.iter_mut().enumerate() {
-            if ops.is_empty() {
-                continue;
-            }
-            nops += ops.len() as u64;
-            let results = run_read_lane(kv.shard_set(shard), ops);
-            for (&op, &res) in ops.iter().zip(results.iter()) {
-                kv.metrics.record_op(op, read_op_result(op, res));
-            }
-            read_results[shard] = results;
-            ops.clear();
-        }
-        let d = stats::thread_snapshot().since(&before);
-        kv.metrics.record_read_lane(nops, d.fences, d.flushes);
-    }
-
-    let mut quit = false;
-    for slot in slots.drain(..) {
-        match slot {
-            Slot::Text(s) => writeln!(writer, "{s}")?,
-            Slot::Write(cmd, shard, idx) => {
-                writeln!(writer, "{}", data_reply(cmd, shard_results[shard][idx]))?
-            }
-            Slot::Read(cmd, shard, idx) => {
-                writeln!(writer, "{}", data_reply(cmd, read_results[shard][idx]))?
-            }
-            Slot::Len => writeln!(writer, "LEN {}", kv.len_approx())?,
-            Slot::Stats => writeln!(
-                writer,
-                "STATS {}",
-                kv.metrics.report_with_growth(&kv.growth_stats())
-            )?,
-            Slot::Quit => {
-                writeln!(writer, "BYE")?;
-                quit = true;
-                break;
-            }
-        }
-    }
-    writer.flush()?;
-    Ok(quit)
-}
-
-/// Legacy thread-per-connection handler (`event_workers = 0`), kept as
-/// the fallback plane for one release. The event plane's state machine
-/// (`super::conn`) mirrors this control flow exactly.
-fn handle_conn(
-    stream: TcpStream,
-    router: Router,
-    senders: &[SyncSender<Request>],
-    kv: &DuraKv,
-) -> Result<()> {
-    let mut writer = BufWriter::new(stream.try_clone()?);
-    let mut reader = BufReader::new(stream);
-    loop {
-        // ---- gather one pipelined burst ----
-        let Some(first) = read_line(&mut reader)? else {
-            return Ok(()); // EOF
-        };
-        let mut slots: Vec<Slot> = Vec::new();
-        let mut per_shard: Vec<Vec<SetOp>> = vec![Vec::new(); senders.len()];
-        let mut reads: Vec<Vec<SetOp>> = vec![Vec::new(); senders.len()];
-        let mut line = first;
-        let mut quit = false;
-        loop {
-            match parse_data(&line) {
-                Ok(Some((cmd, op))) => {
-                    route(op, cmd, router, &mut slots, &mut per_shard, &mut reads)
-                }
-                Err(usage) => slots.push(Slot::Text(usage)),
-                Ok(None) => {
-                    let mut parts = line.split_ascii_whitespace();
-                    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
-                    match cmd.as_str() {
-                        "MULTI" => match parse_multi_args(&mut parts) {
-                            None => slots.push(Slot::Text(format!(
-                                "ERR usage: MULTI <n> [ATOMIC] (n <= {MULTI_MAX})"
-                            ))),
-                            Some((n, atomic)) => {
-                                // Gather the next n op lines + EXEC. Reading
-                                // may block on the client, so first flush
-                                // what the burst already holds — earlier
-                                // commands must not have their replies (or
-                                // execution) held hostage by a slow frame.
-                                // Atomic frames always flush first: their
-                                // replies are written out of band by the txn
-                                // path, in line order because nothing pends.
-                                let buffered_lines =
-                                    reader.buffer().iter().filter(|&&b| b == b'\n').count() as u64;
-                                if (atomic || buffered_lines < n + 1)
-                                    && !slots.is_empty()
-                                    && flush_burst(
-                                        &mut slots,
-                                        &mut per_shard,
-                                        &mut reads,
-                                        senders,
-                                        &mut writer,
-                                        kv,
-                                    )?
-                                {
-                                    return Ok(());
-                                }
-                                let mut frame = Vec::with_capacity(n as usize + 1);
-                                for _ in 0..=n {
-                                    match read_line(&mut reader)? {
-                                        Some(l) => frame.push(l),
-                                        None => return Ok(()), // EOF mid-frame
-                                    }
-                                }
-                                let exec = frame.pop().expect("n+1 lines read");
-                                if !exec.eq_ignore_ascii_case("EXEC") {
-                                    slots.push(Slot::Text(format!(
-                                        "ERR MULTI: expected EXEC after {n} ops, got '{exec}'"
-                                    )));
-                                } else if atomic {
-                                    for l in atomic_frame_lines(&frame, router, senders, kv) {
-                                        writeln!(writer, "{l}")?;
-                                    }
-                                    writer.flush()?;
-                                } else if frame.is_empty() {
-                                    // `MULTI 0` + EXEC: a valid empty batch.
-                                    // It queues no ops and would otherwise
-                                    // produce zero reply lines — the client,
-                                    // waiting for its EXEC ack, would hang.
-                                    slots.push(Slot::Text("OK EMPTY".to_string()));
-                                } else {
-                                    for l in &frame {
-                                        match parse_data(l) {
-                                            Ok(Some((cmd, op))) => route(
-                                                op,
-                                                cmd,
-                                                router,
-                                                &mut slots,
-                                                &mut per_shard,
-                                                &mut reads,
-                                            ),
-                                            Err(usage) => slots.push(Slot::Text(usage)),
-                                            Ok(None) => slots.push(Slot::Text(format!(
-                                                "ERR MULTI: not a data op: '{l}'"
-                                            ))),
-                                        }
-                                    }
-                                }
-                            }
-                        },
-                        "LEN" => slots.push(Slot::Len),
-                        "STATS" => slots.push(Slot::Stats),
-                        "QUIT" => {
-                            slots.push(Slot::Quit);
-                            quit = true;
-                        }
-                        "" => {}
-                        other => slots.push(Slot::Text(format!("ERR unknown command '{other}'"))),
-                    }
-                }
-            }
-            // Extend the burst with lines already buffered (never blocks).
-            if !quit && reader.buffer().contains(&b'\n') {
-                match read_line(&mut reader)? {
-                    Some(l) => {
-                        line = l;
-                        continue;
-                    }
-                    None => break,
-                }
-            }
-            break;
-        }
-        if flush_burst(&mut slots, &mut per_shard, &mut reads, senders, &mut writer, kv)? {
-            return Ok(());
-        }
-    }
 }
 
 #[cfg(test)]
@@ -562,32 +319,85 @@ mod tests {
         drop(server);
     }
 
-    /// The legacy plane (`event_workers = 0`) must keep serving the full
-    /// protocol unchanged through its deprecation window — the CI tier-1
-    /// matrix additionally runs the *whole* suite on each plane via
-    /// `DURASETS_EVENT_WORKERS`.
+    /// Ordered-tier read-your-writes over the wire: RANGE/SCAN pipelined
+    /// behind PUTs must observe them — the scan lane resolves only after
+    /// the burst's write batches drained, and replies keep line order
+    /// under any TCP burst split.
     #[test]
-    fn legacy_thread_per_conn_fallback_still_serves() {
+    fn range_reads_observe_pipelined_writes() {
+        let mut cfg = Config::default();
+        cfg.shards = 4;
+        cfg.key_range = 4096;
+        cfg.psync_ns = 0;
+        cfg.family = crate::sets::Family::LinkFree;
+        cfg.structure = crate::config::Structure::SkipList;
+        let kv = Arc::new(DuraKv::create(cfg));
+        let server = serve(kv.clone(), 0).unwrap();
+        let mut c = Client::connect(server.addr);
+        let mut burst = String::new();
+        for k in 10..30u64 {
+            burst.push_str(&format!("PUT {k} {}\n", k + 100));
+        }
+        burst.push_str("RANGE 15 20\nSCAN 25 3\n");
+        c.writer.write_all(burst.as_bytes()).unwrap();
+        c.writer.flush().unwrap();
+        for _ in 10..30 {
+            assert_eq!(c.recv(), "OK NEW");
+        }
+        assert_eq!(c.recv(), "RANGE 6");
+        for k in 15..=20u64 {
+            assert_eq!(c.recv(), format!("{k} {}", k + 100), "RYW for key {k}");
+        }
+        assert_eq!(c.recv(), "SCAN 3");
+        for k in 26..=28u64 {
+            assert_eq!(c.recv(), format!("{k} {}", k + 100), "RYW past cursor for key {k}");
+        }
+        assert_eq!(c.send("QUIT"), "BYE");
+        drop(server);
+    }
+
+    /// The ordered-tier pin, through the wire: a pure-scan burst must
+    /// resolve on the scan lane (no shard queue) with **zero** psyncs —
+    /// asserted on the `Metrics::sl_*` counters the scan-bench CI gate
+    /// also enforces.
+    #[test]
+    fn scan_lane_burst_is_psync_free() {
         let mut cfg = Config::default();
         cfg.shards = 2;
         cfg.key_range = 4096;
         cfg.psync_ns = 0;
-        cfg.event_workers = 0;
+        cfg.family = crate::sets::Family::Soft;
+        cfg.structure = crate::config::Structure::SkipList;
         let kv = Arc::new(DuraKv::create(cfg));
-        let server = serve(kv, 0).unwrap();
+        let server = serve(kv.clone(), 0).unwrap();
         let mut c = Client::connect(server.addr);
-        assert_eq!(c.send("PUT 1 10"), "OK NEW");
-        assert_eq!(c.send("GET 1"), "FOUND 10");
-        writeln!(c.writer, "MULTI 2").unwrap();
-        writeln!(c.writer, "PUT 2 20").unwrap();
-        writeln!(c.writer, "GET 2").unwrap();
-        writeln!(c.writer, "EXEC").unwrap();
-        assert_eq!(c.recv(), "OK NEW");
-        assert_eq!(c.recv(), "FOUND 20");
-        writeln!(c.writer, "MULTI 1 ATOMIC").unwrap();
-        writeln!(c.writer, "PUT 3 30").unwrap();
-        writeln!(c.writer, "EXEC").unwrap();
-        assert_eq!(c.recv(), "OK NEW");
+        for k in 0..64u64 {
+            assert_eq!(c.send(&format!("PUT {k} {}", k + 1)), "OK NEW");
+        }
+        let batches_before = kv.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+        let mut burst = String::new();
+        for start in 0..32u64 {
+            burst.push_str(&format!("RANGE {start} {}\n", start + 1));
+        }
+        c.writer.write_all(burst.as_bytes()).unwrap();
+        c.writer.flush().unwrap();
+        for start in 0..32u64 {
+            assert_eq!(c.recv(), "RANGE 2", "window {start}");
+            assert_eq!(c.recv(), format!("{start} {}", start + 1));
+            assert_eq!(c.recv(), format!("{} {}", start + 1, start + 2));
+        }
+        use std::sync::atomic::Ordering;
+        assert_eq!(
+            kv.metrics.batches.load(Ordering::Relaxed),
+            batches_before,
+            "a pure-scan burst must not touch the shard workers"
+        );
+        assert!(kv.metrics.sl_runs.load(Ordering::Relaxed) >= 1, "scan lane engaged");
+        assert_eq!(kv.metrics.sl_ops.load(Ordering::Relaxed), 32);
+        assert_eq!(kv.metrics.sl_fences.load(Ordering::Relaxed), 0, "scan lane fenced!");
+        assert_eq!(kv.metrics.sl_flushes.load(Ordering::Relaxed), 0, "scan lane flushed!");
+        let stats = c.send("STATS");
+        assert!(stats.contains("scanlane=[runs="), "{stats}");
         assert_eq!(c.send("QUIT"), "BYE");
         drop(server);
     }

@@ -69,6 +69,7 @@ impl Shard {
         let set: Box<dyn ConcurrentSet> = match cfg.structure {
             Structure::Hash => sets::new_hash(cfg.family, nbuckets),
             Structure::List => sets::new_list(cfg.family),
+            Structure::SkipList => sets::new_skiplist(cfg.family),
         };
         let meta = ShardMeta {
             index,
@@ -128,6 +129,17 @@ impl Shard {
                             let (l, s, t) = sets::logfree::recover_list_timed(pool, threads);
                             (Box::new(l), s, t)
                         }
+                        (Family::LinkFree, Structure::SkipList) => {
+                            let (l, s, t) = sets::linkfree::recover_skiplist_timed(pool, threads);
+                            (Box::new(l), s, t)
+                        }
+                        (Family::Soft, Structure::SkipList) => {
+                            let (l, s, t) = sets::soft::recover_skiplist_timed(pool, threads);
+                            (Box::new(l), s, t)
+                        }
+                        // Config validation rejects skip lists for the
+                        // remaining families before a shard can exist.
+                        (Family::LogFree, Structure::SkipList) => unreachable!(),
                         (Family::Volatile, _) => unreachable!(),
                     };
                 rec.stats = stats;
@@ -194,17 +206,17 @@ pub enum Request {
 
 /// Where a completed batch's results go, plus (on the event plane) the
 /// reactor to wake. The channel holds one slot, so the worker's `send`
-/// after the trailing fence never blocks: a legacy connection thread is
-/// parked in `recv`, an event-plane connection picks the results up on
-/// its reactor's next wakeup — which `wake` delivers.
+/// after the trailing fence never blocks: a blocking caller (tests,
+/// embedded use) is parked in `recv`, an event-plane connection picks
+/// the results up on its reactor's next wakeup — which `wake` delivers.
 pub struct BatchSink {
     pub tx: SyncSender<Vec<Response>>,
     pub wake: Option<Arc<super::reactor::Waker>>,
 }
 
 impl BatchSink {
-    /// Legacy thread-per-connection responder: the sender blocks in
-    /// `recv`, no wakeup needed.
+    /// Blocking responder (tests / embedded callers): the sender blocks
+    /// in `recv`, no wakeup needed.
     pub fn blocking(tx: SyncSender<Vec<Response>>) -> BatchSink {
         BatchSink { tx, wake: None }
     }
@@ -388,8 +400,7 @@ fn commit_group(
                     results[i..i + n].iter().map(|&r| Response::from_result(r)).collect();
                 // Results land in the one-slot channel strictly after the
                 // trailing fence, then the owning reactor (if any) is
-                // woken — same ack-after-durability point as the legacy
-                // blocking recv.
+                // woken — the ack-after-durability point.
                 let _ = sink.tx.send(group);
                 if let Some(w) = &sink.wake {
                     w.wake();
@@ -699,5 +710,24 @@ mod tests {
         vcfg.family = Family::Volatile;
         let v = Shard::create(&vcfg, 0);
         assert!(v.meta.pool.is_none());
+    }
+
+    #[test]
+    fn skiplist_shard_serves_ordered_reads() {
+        for family in [Family::LinkFree, Family::Soft] {
+            let mut cfg = Config::default();
+            cfg.family = family;
+            cfg.structure = Structure::SkipList;
+            let s = Shard::create(&cfg, 0);
+            assert!(s.meta.pool.is_some());
+            let ord = s.set.as_ordered().expect("skip-list shards are ordered");
+            for k in 0..100u64 {
+                s.set.insert(k, k + 1);
+            }
+            assert_eq!(ord.range(10, 12), vec![(10, 11), (11, 12), (12, 13)]);
+            assert_eq!(ord.scan(97, 10), vec![(98, 99), (99, 100)]);
+        }
+        // Hash shards have no ordered view: the wire layer rejects RANGE.
+        assert!(Shard::create(&Config::default(), 0).set.as_ordered().is_none());
     }
 }

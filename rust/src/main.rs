@@ -41,19 +41,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let port = cfg.port;
     println!(
-        "durasets serve: family={} shards={} key_range={} psync_ns={} port={} event_workers={}{}",
-        cfg.family,
-        cfg.shards,
-        cfg.key_range,
-        cfg.psync_ns,
-        port,
-        cfg.event_workers,
-        if cfg.event_workers == 0 { " (legacy thread-per-conn)" } else { "" }
+        "durasets serve: family={} structure={:?} shards={} key_range={} psync_ns={} port={} event_workers={}",
+        cfg.family, cfg.structure, cfg.shards, cfg.key_range, cfg.psync_ns, port, cfg.event_workers,
     );
     let kv = Arc::new(DuraKv::create(cfg));
     let srv = server::serve(kv.clone(), port)?;
     println!("listening on {}", srv.addr);
-    println!("protocol: PUT <k> <v> | GET <k> | DEL <k> | LEN | STATS | QUIT");
+    println!(
+        "protocol: PUT <k> <v> | GET <k> | HAS <k> | DEL <k> | RANGE <lo> <hi> | SCAN <c> <n> | LEN | STATS | QUIT"
+    );
     // Run until killed; report stats periodically.
     loop {
         std::thread::sleep(Duration::from_secs(10));
@@ -149,6 +145,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let points = bench::rwpath::sweep(cfg.duration, seed);
         print!("{}", bench::rwpath::render(&points));
         json_points.extend(bench::rwpath::to_json_points(&points));
+    } else if fig == "scan" {
+        // The ordered read tier: merge-walk vs N independent probes over
+        // scan length x burst depth, with scan-lane psync counters
+        // (pinned 0 in CI) and the speedup column per point.
+        let points = bench::scan::sweep(cfg.duration, seed);
+        print!("{}", bench::scan::render(&points));
+        json_points.extend(bench::scan::to_json_points(&points));
     } else if fig == "connscale" {
         // Event-plane scaling: live connections x active fraction, with
         // RSS/thread gauges per point and a superlinear-RSS verdict the

@@ -297,6 +297,40 @@ impl LfCore {
         n
     }
 
+    /// Flush-free ordered walk from a validated hint link (or `head`):
+    /// visits every unmarked `(key, value)` with `key >= lo` in key
+    /// order until `visit` returns false. Unlike [`LfCore::get_from`],
+    /// the walk never helps-flushes: an ordered read reports membership
+    /// with the same include-iff-unmarked rule as [`LfCore::snapshot`],
+    /// and every *acked* update was already persisted by its issuer, so
+    /// a scan of any length costs zero fences and zero flushes
+    /// (NVTraverse: persistence work belongs at the destination, and a
+    /// read has none). Caller must hold an EBR guard across the walk.
+    pub(crate) unsafe fn walk_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        lo: u64,
+        mut visit: impl FnMut(u64, u64) -> bool,
+    ) {
+        let mut from = start;
+        // Same hint TOCTOU as get_from (no CAS safety net on a pure read).
+        if !std::ptr::eq(start, head) && is_marked((*start).load(Ordering::Acquire)) {
+            from = head;
+        }
+        let mut curr = ptr_of::<LfNode>((*from).load(Ordering::Acquire));
+        while !curr.is_null() {
+            let succ_t = (*curr).next.load(Ordering::Acquire);
+            if !is_marked(succ_t) {
+                let k = (*curr).key.load(Ordering::Relaxed);
+                if k >= lo && !visit(k, (*curr).value.load(Ordering::Relaxed)) {
+                    return;
+                }
+            }
+            curr = ptr_of::<LfNode>(succ_t);
+        }
+    }
+
     /// Snapshot of unmarked (key, value) pairs from one head, in order
     /// (test/debug only; not linearizable under concurrency).
     pub fn snapshot(&self, head: *const AtomicU64) -> Vec<(u64, u64)> {

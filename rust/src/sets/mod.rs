@@ -2,12 +2,12 @@
 //!
 //! Four families, one trait:
 //!
-//! | family | module | durability | psyncs/update | psyncs/read | fences/op, K-batch | hash growth | `contains_batch` |
-//! |---|---|---|---|---|---|---|---|
-//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | ~1/K | [`resizable`] | coalesced ([`ResizableHash`]: one pin, okey-sorted probes) |
-//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | 1/K | [`resizable`] | coalesced ([`ResizableHash`]) |
-//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | ~1/K (flushes stay ~2/op) | [`resizable`] | coalesced ([`ResizableHash`]) |
-//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | 0 | fixed | default loop |
+//! | family | module | durability | psyncs/update | psyncs/read | fences/op, K-batch | hash growth | `contains_batch` | `range`/`scan` |
+//! |---|---|---|---|---|---|---|---|---|
+//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | ~1/K | [`resizable`] | coalesced ([`ResizableHash`]: one pin, okey-sorted probes; [`linkfree::LfSkipList`]: one pin, sorted probe run) | [`linkfree::LfSkipList`] (flush-free merge-walk) |
+//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | 1/K | [`resizable`] | coalesced ([`ResizableHash`] / [`soft::SoftSkipList`]) | [`soft::SoftSkipList`] (flush-free merge-walk) |
+//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | ~1/K (flushes stay ~2/op) | [`resizable`] | coalesced ([`ResizableHash`]) | — (hash order only) |
+//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | 0 | fixed | default loop | — |
 //!
 //! Each family provides a sorted linked list and a hash set built from the
 //! same core (a bucket is a bare link cell — see [`tagged`]), plus a
@@ -161,6 +161,89 @@ pub trait ConcurrentSet: Send + Sync {
     fn growth_stats(&self) -> Option<GrowthStats> {
         None
     }
+
+    /// The ordered view of this set, if it maintains key order
+    /// (skip-list-backed structures). Hash shards return `None`; the
+    /// wire layer rejects `RANGE`/`SCAN` for them at classification time.
+    fn as_ordered(&self) -> Option<&dyn OrderedSet> {
+        None
+    }
+}
+
+/// One ordered query of a burst: a closed key interval or a cursor page.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RangeQuery {
+    /// All pairs with `lo <= key <= hi`, in key order.
+    Range(u64, u64),
+    /// Up to `n` pairs with `key > cursor`, in key order (cursor paging:
+    /// pass the last key of the previous page to continue).
+    Scan(u64, usize),
+}
+
+impl RangeQuery {
+    /// Smallest key the query can match (`u64::MAX` for an exhausted
+    /// scan cursor — such a query matches nothing).
+    pub fn lo(&self) -> u64 {
+        match *self {
+            RangeQuery::Range(lo, _) => lo,
+            RangeQuery::Scan(cursor, _) => cursor.saturating_add(1),
+        }
+    }
+
+    /// Whether `key` is still below the query's window (the walk has not
+    /// reached it yet).
+    pub fn starts_after(&self, key: u64) -> bool {
+        key < self.lo()
+    }
+
+    /// Whether the query accepts `key`, given `taken` pairs already
+    /// collected for it.
+    pub fn accepts(&self, key: u64, taken: usize) -> bool {
+        match *self {
+            RangeQuery::Range(lo, hi) => lo <= key && key <= hi,
+            RangeQuery::Scan(cursor, n) => key > cursor && taken < n,
+        }
+    }
+
+    /// Whether the query can accept no further key `>= key` (the walk may
+    /// retire it).
+    pub fn done(&self, key: u64, taken: usize) -> bool {
+        match *self {
+            RangeQuery::Range(_, hi) => key > hi,
+            RangeQuery::Scan(cursor, n) => taken >= n || cursor == u64::MAX,
+        }
+    }
+}
+
+/// Key-ordered extension of [`ConcurrentSet`], implemented by the
+/// skip-list families. All traversals are lock-free, EBR-pinned and
+/// **psync-free**: an ordered read walks the volatile bottom level and
+/// never helps-flushes (NVTraverse's destination-only principle — reads
+/// have no destination to persist), so a scan of any length costs zero
+/// fences and zero flushes.
+pub trait OrderedSet: ConcurrentSet {
+    /// All `(key, value)` pairs with `lo <= key <= hi`, in key order.
+    fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)>;
+
+    /// Up to `n` pairs with `key > cursor`, in key order. An empty result
+    /// means the cursor is exhausted; otherwise the last returned key is
+    /// the next cursor.
+    fn scan(&self, cursor: u64, n: usize) -> Vec<(u64, u64)>;
+
+    /// Resolve a whole burst of ordered queries in one traversal where
+    /// possible (the **merge-walk**): results in query order, each in key
+    /// order. The default loops; the skip lists override it with one EBR
+    /// pin + one tower descent at the smallest `lo` + a single forward
+    /// bottom-level walk serving every query window.
+    fn range_batch(&self, queries: &[RangeQuery]) -> Vec<Vec<(u64, u64)>> {
+        queries
+            .iter()
+            .map(|q| match *q {
+                RangeQuery::Range(lo, hi) => self.range(lo, hi),
+                RangeQuery::Scan(cursor, n) => self.scan(cursor, n),
+            })
+            .collect()
+    }
 }
 
 /// Apply a batch under one [`crate::pmem::PsyncScope`]: per-op fences are
@@ -250,6 +333,20 @@ pub fn new_hash(family: Family, nbuckets: usize) -> Box<dyn ConcurrentSet> {
         Family::Soft => Box::new(ResizableHash::new_soft(nbuckets)),
         Family::LogFree => Box::new(ResizableHash::new_logfree(nbuckets)),
         Family::Volatile => Box::new(volatile::VolatileHash::new(nbuckets)),
+    }
+}
+
+/// Construct a key-ordered (skip-list) store of the given family. Only
+/// the link-free and SOFT families have durable skip lists; the config
+/// layer rejects `structure=skiplist` for the others before this is
+/// reachable.
+pub fn new_skiplist(family: Family) -> Box<dyn ConcurrentSet> {
+    match family {
+        Family::LinkFree => Box::new(linkfree::LfSkipList::new()),
+        Family::Soft => Box::new(soft::SoftSkipList::new()),
+        Family::LogFree | Family::Volatile => {
+            panic!("no skip-list structure for family {family} (config validates this)")
+        }
     }
 }
 
@@ -346,5 +443,49 @@ mod tests {
         }
         assert_eq!(d.fences, 0, "a read-only batch owes no trailing fence");
         assert_eq!(d.flushes, 0);
+    }
+
+    #[test]
+    fn range_query_windows() {
+        let r = RangeQuery::Range(10, 20);
+        assert_eq!(r.lo(), 10);
+        assert!(r.starts_after(9) && !r.starts_after(10));
+        assert!(r.accepts(10, 0) && r.accepts(20, 1000) && !r.accepts(21, 0));
+        assert!(r.done(21, 0) && !r.done(20, 0));
+        let s = RangeQuery::Scan(10, 2);
+        assert_eq!(s.lo(), 11);
+        assert!(!s.accepts(10, 0) && s.accepts(11, 0) && s.accepts(u64::MAX, 1));
+        assert!(s.done(0, 2), "page full retires the scan");
+        let exhausted = RangeQuery::Scan(u64::MAX, 5);
+        assert_eq!(exhausted.lo(), u64::MAX);
+        assert!(!exhausted.accepts(u64::MAX, 0), "cursor MAX matches nothing");
+        assert!(exhausted.done(0, 0));
+    }
+
+    #[test]
+    fn ordered_view_gated_to_skiplists() {
+        for family in Family::ALL {
+            let hash = new_hash(family, 16);
+            assert!(hash.as_ordered().is_none(), "{family}: hash order is not key order");
+        }
+        for family in [Family::LinkFree, Family::Soft] {
+            let set = new_skiplist(family);
+            for k in (0..100u64).step_by(2) {
+                assert!(set.insert(k, k + 1));
+            }
+            let ord = set.as_ordered().expect("skip lists are ordered");
+            let a = crate::pmem::stats::thread_snapshot();
+            let win = ord.range(10, 20);
+            let page = ord.scan(9, 3);
+            let both = ord.range_batch(&[RangeQuery::Range(10, 20), RangeQuery::Scan(9, 3)]);
+            let d = crate::pmem::stats::thread_snapshot().since(&a);
+            let expect: Vec<(u64, u64)> =
+                (10..=20u64).filter(|k| k % 2 == 0).map(|k| (k, k + 1)).collect();
+            assert_eq!(win, expect, "{family}");
+            assert_eq!(page, vec![(10, 11), (12, 13), (14, 15)], "{family}");
+            assert_eq!(both, vec![win.clone(), page.clone()], "{family}: merge-walk == singles");
+            assert_eq!(d.fences, 0, "{family}: ordered reads must not fence");
+            assert_eq!(d.flushes, 0, "{family}: ordered reads must not flush");
+        }
     }
 }

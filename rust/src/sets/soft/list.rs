@@ -328,6 +328,40 @@ impl SoftCore {
         head.store(0, Ordering::Relaxed);
     }
 
+    /// Flush-free ordered walk from a validated hint link (or `head`):
+    /// visits every in-set `(key, value)` with `key >= lo` in key order
+    /// until `visit` returns false. SOFT reads are unconditionally
+    /// psync-free, so this is just [`SoftCore::get_from`]'s traversal
+    /// generalized to a window (include iff `State::in_set`). Caller
+    /// must hold an EBR guard across the walk.
+    pub(crate) unsafe fn walk_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        lo: u64,
+        mut visit: impl FnMut(u64, u64) -> bool,
+    ) {
+        let mut from = start;
+        // Same hint TOCTOU as get_from: a deleted hint's frozen suffix
+        // can miss nodes inserted at the unlink point.
+        if !std::ptr::eq(start, head)
+            && State::of((*start).load(Ordering::Acquire)) == State::Deleted
+        {
+            from = head;
+        }
+        let mut curr = ptr_of::<SNode>((*from).load(Ordering::Acquire));
+        while !curr.is_null() {
+            let v = (*curr).next.load(Ordering::Acquire);
+            if State::of(v).in_set() {
+                let k = (*curr).key;
+                if k >= lo && !visit(k, (*curr).value) {
+                    return;
+                }
+            }
+            curr = ptr_of::<SNode>(v);
+        }
+    }
+
     /// In-set node count from one head (test/metrics only).
     pub fn count(&self, head: *const AtomicU64) -> usize {
         self.snapshot_from(head).len()

@@ -1,14 +1,34 @@
 //! YCSB workload presets (Cooper et al., SoCC'10), as referenced by the
 //! paper's §6.1: A = 50% reads, B = 95% reads, C = 100% reads. Updates are
 //! split evenly between inserts and removes (set semantics).
+//!
+//! E is the *ordered-tier* preset: 95% short scans / 5% inserts. The
+//! point-op streams (`WorkloadSpec`) cannot express a scan — `Op` is a
+//! closed point-op enum — so the E mix has its own generator
+//! ([`YcsbWorkload::scan_mix_at`], consumed by `bench --fig scan`), on
+//! the same stateless mix64 chain as everything else.
 
 use super::{KeyDist, WorkloadSpec};
+use crate::util::mix64;
+
+/// Longest scan YCSB-E draws (uniform in `1..=E_SCAN_LEN_MAX`).
+pub const E_SCAN_LEN_MAX: usize = 100;
+
+/// One op of the YCSB-E scan mix.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ScanMixOp {
+    /// Return up to `len` keys strictly above `cursor` (the wire SCAN).
+    Scan { cursor: u64, len: usize },
+    Insert(u64),
+}
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum YcsbWorkload {
     A,
     B,
     C,
+    /// 95% short scans / 5% inserts (scan lengths uniform in 1..=100).
+    E,
 }
 
 impl YcsbWorkload {
@@ -17,6 +37,24 @@ impl YcsbWorkload {
             YcsbWorkload::A => 50,
             YcsbWorkload::B => 95,
             YcsbWorkload::C => 100,
+            YcsbWorkload::E => 95,
+        }
+    }
+
+    /// The `i`-th op of thread `t`'s YCSB-E stream: a pure function of
+    /// `(seed, t, i)` like [`WorkloadSpec::stream`], so scan benchmarks
+    /// are exactly reproducible. The read fraction decides scan vs
+    /// insert; scan cursors draw uniform over the key range.
+    pub fn scan_mix_at(&self, key_range: u64, seed: u64, thread: u64, i: u64) -> ScanMixOp {
+        let seed_mix = mix64(seed ^ thread.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let h1 = mix64(i ^ seed_mix);
+        let h2 = mix64(h1);
+        let key = h1 % key_range;
+        if h2 % 100 < self.read_pct() as u64 {
+            let len = 1 + ((h2 >> 32) as usize % E_SCAN_LEN_MAX);
+            ScanMixOp::Scan { cursor: key, len }
+        } else {
+            ScanMixOp::Insert(key)
         }
     }
 
@@ -40,6 +78,7 @@ impl YcsbWorkload {
             "A" => Some(YcsbWorkload::A),
             "B" => Some(YcsbWorkload::B),
             "C" => Some(YcsbWorkload::C),
+            "E" => Some(YcsbWorkload::E),
             _ => None,
         }
     }
@@ -54,8 +93,32 @@ mod tests {
         assert_eq!(YcsbWorkload::A.read_pct(), 50);
         assert_eq!(YcsbWorkload::B.read_pct(), 95);
         assert_eq!(YcsbWorkload::C.read_pct(), 100);
+        assert_eq!(YcsbWorkload::E.read_pct(), 95);
         assert_eq!(YcsbWorkload::parse("a"), Some(YcsbWorkload::A));
+        assert_eq!(YcsbWorkload::parse("e"), Some(YcsbWorkload::E));
         assert_eq!(YcsbWorkload::parse("x"), None);
+    }
+
+    #[test]
+    fn ycsb_e_mixes_short_scans_with_inserts_deterministically() {
+        let n = 20_000u64;
+        let mut scans = 0usize;
+        for i in 0..n {
+            let op = YcsbWorkload::E.scan_mix_at(10_000, 9, 0, i);
+            assert_eq!(op, YcsbWorkload::E.scan_mix_at(10_000, 9, 0, i));
+            match op {
+                ScanMixOp::Scan { cursor, len } => {
+                    scans += 1;
+                    assert!(cursor < 10_000);
+                    assert!((1..=E_SCAN_LEN_MAX).contains(&len), "len {len}");
+                }
+                ScanMixOp::Insert(k) => assert!(k < 10_000),
+            }
+        }
+        let frac = scans as f64 / n as f64;
+        assert!((frac - 0.95).abs() < 0.01, "scan fraction {frac}");
+        let other = YcsbWorkload::E.scan_mix_at(10_000, 9, 1, 0);
+        assert_ne!(other, YcsbWorkload::E.scan_mix_at(10_000, 9, 0, 0));
     }
 
     #[test]

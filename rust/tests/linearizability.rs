@@ -373,6 +373,112 @@ fn mixed_atomic_and_plain_batches_are_linearizable() {
     }
 }
 
+/// Record histories against a skip-list set, mixing point updates with
+/// **ordered reads** (`OrderedSet::range`/`scan`). A scan is recorded as
+/// one `Contains` event per key of its window — present iff the key
+/// appeared in the result — all sharing the scan's inv/resp interval.
+/// That is exactly the guarantee a single-pass walk provides: each key's
+/// membership was observed at *some* point inside the scan's interval
+/// (no atomic-snapshot claim), and each observation must still respect
+/// real-time order against every other thread's acked ops. `scan` is
+/// issued with `n = keys` so a key missing from the result set means
+/// "absent", never "truncated".
+fn record_scan_mixed(
+    family: Family,
+    threads: usize,
+    ops_per_thread: usize,
+    keys: u64,
+    seed: u64,
+) -> Vec<ThreadHistory> {
+    let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_skiplist(family));
+    let clock = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(threads));
+    let handles: Vec<_> = (0..threads as u64)
+        .map(|t| {
+            let set = set.clone();
+            let clock = clock.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let ord = set.as_ordered().expect("skip lists are ordered");
+                let mut rng = Xoshiro256::new(seed ^ (t * 0x5CA));
+                let mut hist = Vec::with_capacity(ops_per_thread);
+                barrier.wait();
+                while hist.len() < ops_per_thread {
+                    let style = rng.below(100);
+                    if style < 55 {
+                        let key = rng.below(keys);
+                        let kind = match rng.below(3) {
+                            0 => Kind::Insert,
+                            1 => Kind::Remove,
+                            _ => Kind::Contains,
+                        };
+                        let inv = clock.fetch_add(1, Ordering::SeqCst);
+                        let result = match kind {
+                            Kind::Insert => set.insert(key, key),
+                            Kind::Remove => set.remove(key),
+                            Kind::Contains => set.contains(key),
+                        };
+                        let resp = clock.fetch_add(1, Ordering::SeqCst);
+                        hist.push(Event { kind, key, result, inv, resp });
+                    } else if style < 80 {
+                        // RANGE over a random window.
+                        let a = rng.below(keys);
+                        let b = rng.below(keys);
+                        let (lo, hi) = (a.min(b), a.max(b));
+                        let inv = clock.fetch_add(1, Ordering::SeqCst);
+                        let pairs = ord.range(lo, hi);
+                        let resp = clock.fetch_add(1, Ordering::SeqCst);
+                        let got: HashSet<u64> = pairs
+                            .iter()
+                            .map(|&(k, v)| {
+                                assert_eq!(v, k, "scan surfaced a torn value");
+                                k
+                            })
+                            .collect();
+                        assert!(pairs.windows(2).all(|w| w[0].0 < w[1].0), "unsorted range");
+                        for k in lo..=hi {
+                            let result = got.contains(&k);
+                            hist.push(Event { kind: Kind::Contains, key: k, result, inv, resp });
+                        }
+                    } else {
+                        // SCAN past a random cursor, n wide enough to
+                        // cover the whole key space (no truncation).
+                        let cursor = rng.below(keys);
+                        let inv = clock.fetch_add(1, Ordering::SeqCst);
+                        let pairs = ord.scan(cursor, keys as usize);
+                        let resp = clock.fetch_add(1, Ordering::SeqCst);
+                        let got: HashSet<u64> = pairs.iter().map(|&(k, _)| k).collect();
+                        assert!(got.iter().all(|&k| k > cursor), "scan ignored its cursor");
+                        for k in cursor + 1..keys {
+                            let result = got.contains(&k);
+                            hist.push(Event { kind: Kind::Contains, key: k, result, inv, resp });
+                        }
+                    }
+                }
+                hist
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Ordered reads must linearize against concurrent point updates for
+/// both skip-list families: every key-membership a RANGE/SCAN reports
+/// must be explainable at some point inside the scan's interval.
+#[test]
+fn skiplist_scans_are_linearizable() {
+    for family in [Family::Soft, Family::LinkFree] {
+        for round in 0..3u64 {
+            let hist = record_scan_mixed(family, 3, 48, 4, 0x5CA_11C ^ round);
+            let total: usize = hist.iter().map(|h| h.len()).sum();
+            assert!(
+                linearizable(&hist),
+                "{family}: scan history of {total} ops NOT linearizable (round {round}): {hist:#?}"
+            );
+        }
+    }
+}
+
 /// The checker itself must reject broken histories (meta-test).
 #[test]
 fn checker_rejects_impossible_history() {
