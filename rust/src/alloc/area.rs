@@ -187,6 +187,9 @@ impl DurablePool {
         unsafe {
             slot_gen(slot, self.slot_size).fetch_add(1, std::sync::atomic::Ordering::Release);
         }
+        // An unreachable slot forfeits its durability obligations (a
+        // failed insert frees a written-but-never-flushed node).
+        crate::pmem::check::note_freed(slot as *const u8, self.slot_size);
         self.local().free.push(slot);
     }
 

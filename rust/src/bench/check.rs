@@ -1,0 +1,211 @@
+//! `bench --fig check`: durcheck overhead — armed vs disarmed throughput.
+//!
+//! The online persistency checker (pmem::check) only observes sim mode,
+//! so its cost is a *sim-mode-only* tax; Perf-mode builds pay one
+//! predictable `armed()` branch per event site, and `--no-default-features`
+//! compiles even that out. This sweep quantifies the sim tax: for each
+//! durable family, the same deterministic mixed workload runs twice under
+//! `sim_session()` — once with a `check::session()` held (armed) and once
+//! without (disarmed) — and the point reports both throughputs plus the
+//! checker's own gauges (events, violations, redundant flushes).
+//!
+//! `psync_ns` is pinned to 0 so no simulated media latency hides the
+//! checker's bookkeeping: the reported overhead is an upper bound on what
+//! an armed CI run costs. The armed run doubles as a live end-to-end pin:
+//! any violation or redundant flush on these fast paths fails the smoke
+//! test and shows up in `BENCH_check.json` for the CI grep gate.
+
+use crate::pmem::{self, check};
+use crate::sets::{self, Family};
+use std::time::{Duration, Instant};
+
+/// Worker threads per phase (matches the rwpath client count).
+const THREADS: usize = 2;
+
+const KEY_RANGE: u64 = 1 << 14;
+
+const NBUCKETS: usize = 1 << 10;
+
+/// One family's paired measurement: the same workload, disarmed then
+/// armed, under the same sim session.
+pub struct CheckPoint {
+    pub family: Family,
+    pub ops_off: u64,
+    pub elapsed_off: Duration,
+    pub ops_on: u64,
+    pub elapsed_on: Duration,
+    pub events: u64,
+    pub violations: u64,
+    pub redundant_flushes: u64,
+}
+
+impl CheckPoint {
+    pub fn kops_off(&self) -> f64 {
+        self.ops_off as f64 / self.elapsed_off.as_secs_f64() / 1e3
+    }
+
+    pub fn kops_on(&self) -> f64 {
+        self.ops_on as f64 / self.elapsed_on.as_secs_f64() / 1e3
+    }
+
+    /// Armed slowdown in percent (positive = armed is slower).
+    pub fn overhead_pct(&self) -> f64 {
+        let off = self.kops_off();
+        if off <= 0.0 {
+            return 0.0;
+        }
+        (off - self.kops_on()) / off * 100.0
+    }
+}
+
+/// Drive `THREADS` workers over one shared hash set until the deadline.
+/// The mix is the paper's update-heavy point: 50% contains, 30% insert,
+/// 20% remove, keys uniform over `KEY_RANGE` (xorshift per thread).
+fn drive(set: &dyn sets::ConcurrentSet, duration: Duration, seed: u64) -> (u64, Duration) {
+    let t0 = Instant::now();
+    let ops: u64 = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS as u64)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut x = seed ^ (t.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1);
+                    let mut ops = 0u64;
+                    while t0.elapsed() < duration {
+                        // 256 ops per deadline check.
+                        for _ in 0..256 {
+                            x ^= x << 13;
+                            x ^= x >> 7;
+                            x ^= x << 17;
+                            let key = x % KEY_RANGE;
+                            match x % 10 {
+                                0..=4 => {
+                                    set.contains(key);
+                                }
+                                5..=7 => {
+                                    set.insert(key, key);
+                                }
+                                _ => {
+                                    set.remove(key);
+                                }
+                            }
+                        }
+                        ops += 256;
+                    }
+                    ops
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    (ops, t0.elapsed())
+}
+
+fn run_point(family: Family, duration: Duration, seed: u64) -> CheckPoint {
+    let _sim = pmem::sim_session();
+    pmem::set_psync_ns(0);
+
+    // Disarmed: sim mode, no check session — every hook short-circuits at
+    // `armed()`. Fresh set per phase so both start from an empty table.
+    let set = sets::new_hash(family, NBUCKETS);
+    let (ops_off, elapsed_off) = drive(set.as_ref(), duration, seed);
+    drop(set);
+
+    // Armed: same workload under a live session; counters read as the
+    // delta across the phase.
+    let set = sets::new_hash(family, NBUCKETS);
+    let session = check::session();
+    let before = check::snapshot();
+    let (ops_on, elapsed_on) = drive(set.as_ref(), duration, seed);
+    let d = check::snapshot().since(&before);
+    drop(session);
+    drop(set);
+
+    CheckPoint {
+        family,
+        ops_off,
+        elapsed_off,
+        ops_on,
+        elapsed_on,
+        events: d.events,
+        violations: d.violations,
+        redundant_flushes: d.redundant_flushes,
+    }
+}
+
+/// Sweep the durable families.
+pub fn sweep(duration: Duration, seed: u64) -> Vec<CheckPoint> {
+    Family::DURABLE
+        .into_iter()
+        .map(|f| run_point(f, duration, seed))
+        .collect()
+}
+
+/// Text table: armed vs disarmed Kops/s and the checker gauges.
+pub fn render(points: &[CheckPoint]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== check: durcheck overhead, hash {NBUCKETS} buckets, {THREADS} threads, psync_ns=0 (sim-only tax) ==\n"
+    ));
+    out.push_str(&format!(
+        "{:>9} | {:>9} {:>9} {:>7} | {:>10} {:>6} {:>6}\n",
+        "family", "off Kops", "on Kops", "ovh%", "events", "viol", "redund"
+    ));
+    for p in points {
+        out.push_str(&format!(
+            "{:>9} | {:>9.1} {:>9.1} {:>7.1} | {:>10} {:>6} {:>6}\n",
+            p.family.to_string(),
+            p.kops_off(),
+            p.kops_on(),
+            p.overhead_pct(),
+            p.events,
+            p.violations,
+            p.redundant_flushes,
+        ));
+    }
+    out
+}
+
+/// JSON points for `BENCH_check.json` (CI greps `"violations":0` and
+/// `"redundant_flushes":0` per point).
+pub fn to_json_points(points: &[CheckPoint]) -> Vec<String> {
+    points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"fig\":\"check\",\"x\":\"family={}\",\"family\":\"{}\",\"kops_off\":{:.2},\"kops_on\":{:.2},\"overhead_pct\":{:.1},\"ops_off\":{},\"ops_on\":{},\"events\":{},\"violations\":{},\"redundant_flushes\":{},\"elapsed_ms\":{}}}",
+                p.family,
+                p.family,
+                p.kops_off(),
+                p.kops_on(),
+                p.overhead_pct(),
+                p.ops_off,
+                p.ops_on,
+                p.events,
+                p.violations,
+                p.redundant_flushes,
+                (p.elapsed_off + p.elapsed_on).as_millis(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_point_armed_run_is_clean_and_observes_events() {
+        // One short point per durable family: the armed phase must see
+        // checker traffic and must stay violation-free and redundant-free
+        // — the live fast-path pin, end to end through the bench driver.
+        for family in Family::DURABLE {
+            let p = run_point(family, Duration::from_millis(100), 0xC4EC);
+            assert!(p.ops_off > 0 && p.ops_on > 0, "{family}");
+            assert!(p.events > 0, "{family}: armed phase saw no checker events");
+            assert_eq!(p.violations, 0, "{family}: fast-path violations");
+            assert_eq!(p.redundant_flushes, 0, "{family}: clean-line flushes");
+            let json = &to_json_points(&[p])[0];
+            assert!(json.contains("\"fig\":\"check\""), "{json}");
+            assert!(json.contains("\"violations\":0"), "{json}");
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! durlint — the static half of durcheck (DESIGN.md §Checking).
+//!
+//! A deliberately conservative, std-only source scanner that mechanically
+//! enforces the repo conventions ROADMAP.md §"Conventions that must hold"
+//! used to enforce by reviewer discipline:
+//!
+//! * **R1 crash blast radius** — whole-process `pmem::crash(` appears only
+//!   in single-purpose binaries (`src/bin/`, `examples/`); library code and
+//!   tests must use the pool-scoped `pmem::crash_pools`.
+//! * **R2 publish orderings** — no `Ordering::Relaxed` on mutations of the
+//!   tagged durable/link words (`.next`, `.nexts[..]`, `.cells[..]`,
+//!   `slot_gen(..)`) in `src/sets/` and `src/alloc/`. Recovery relink
+//!   modules (single-threaded rebuild) and the volatile family are exempt,
+//!   as is test code.
+//! * **R3 crash-sim discipline** — every file that calls `crash_pools(`
+//!   holds the global sim session (`sim_session`), which serializes armed
+//!   crash windows across the test binary.
+//! * **R4 fence-pin pairing** — every durable-family file carries a pinned
+//!   fence/flush-count assertion (`.fences`) in its test module, so a
+//!   persistency-protocol change cannot land without re-pinning budgets.
+//!
+//! Findings are suppressed by `durlint.allow` (next to `Cargo.toml`):
+//! one entry per line, `RULE <path-suffix> <line-substring…>`. Entries
+//! that suppress nothing are themselves an error — the allowlist only
+//! shrinks. Text-level scanning is the point: it cannot be silenced by
+//! cfg tricks, and false positives are cheap to allowlist explicitly.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Durable-family files that must carry a pinned fence assertion (R4).
+const FENCE_PINNED_FILES: &[&str] = &[
+    "src/sets/linkfree/list.rs",
+    "src/sets/linkfree/skiplist.rs",
+    "src/sets/soft/list.rs",
+    "src/sets/soft/skiplist.rs",
+    "src/sets/logfree/list.rs",
+    "src/sets/resizable.rs",
+];
+
+struct Finding {
+    rule: &'static str,
+    file: String,
+    line: usize,
+    text: String,
+    msg: String,
+}
+
+struct Allow {
+    rule: String,
+    path_suffix: String,
+    substring: String,
+    used: std::cell::Cell<bool>,
+}
+
+fn main() -> ExitCode {
+    // Root = argv[1] if given, else the crate dir baked in at build time
+    // (CI builds and runs on the same checkout).
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let allows = load_allowlist(&root.join("durlint.allow"));
+    let mut files = Vec::new();
+    for top in ["src", "tests"] {
+        collect_rs(&root.join(top), &mut files);
+    }
+    files.sort();
+
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(src) = fs::read_to_string(path) else {
+            eprintln!("durlint: unreadable file {rel}");
+            return ExitCode::FAILURE;
+        };
+        scan_file(&rel, &src, &mut findings);
+    }
+
+    let mut failed = 0usize;
+    for f in &findings {
+        let suppressed = allows.iter().any(|a| {
+            a.rule == f.rule && f.file.ends_with(&a.path_suffix) && f.text.contains(&a.substring)
+        });
+        if suppressed {
+            for a in &allows {
+                if a.rule == f.rule
+                    && f.file.ends_with(&a.path_suffix)
+                    && f.text.contains(&a.substring)
+                {
+                    a.used.set(true);
+                }
+            }
+            continue;
+        }
+        failed += 1;
+        eprintln!("durlint: {} {}:{}: {}", f.rule, f.file, f.line, f.msg);
+        eprintln!("    {}", f.text.trim());
+    }
+    for a in &allows {
+        if !a.used.get() {
+            failed += 1;
+            eprintln!(
+                "durlint: stale allowlist entry suppresses nothing: {} {} {}",
+                a.rule, a.path_suffix, a.substring
+            );
+        }
+    }
+    if failed > 0 {
+        eprintln!("durlint: {failed} finding(s) across {} files", files.len());
+        ExitCode::FAILURE
+    } else {
+        println!("durlint: clean ({} files, {} allowlist entries)", files.len(), allows.len());
+        ExitCode::SUCCESS
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn load_allowlist(path: &Path) -> Vec<Allow> {
+    let Ok(src) = fs::read_to_string(path) else { return Vec::new() };
+    src.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let mut it = l.splitn(3, char::is_whitespace);
+            Some(Allow {
+                rule: it.next()?.to_string(),
+                path_suffix: it.next()?.to_string(),
+                substring: it.next()?.trim().to_string(),
+                used: std::cell::Cell::new(false),
+            })
+        })
+        .collect()
+}
+
+/// First line (0-based) of the trailing `#[cfg(test)]` module, or EOF.
+/// Conservative: everything from the first `#[cfg(test)]` on is test code.
+fn test_region_start(lines: &[&str]) -> usize {
+    lines
+        .iter()
+        .position(|l| l.trim_start().starts_with("#[cfg(test)]"))
+        .unwrap_or(lines.len())
+}
+
+fn scan_file(rel: &str, src: &str, findings: &mut Vec<Finding>) {
+    let lines: Vec<&str> = src.lines().collect();
+    let tests_at = test_region_start(&lines);
+    let in_bin = rel.starts_with("src/bin/") || rel.starts_with("examples/");
+    let in_pmem = rel.starts_with("src/pmem/");
+    let push = |findings: &mut Vec<Finding>, rule, line: usize, text: &str, msg: String| {
+        findings.push(Finding {
+            rule,
+            file: rel.to_string(),
+            line: line + 1,
+            text: text.to_string(),
+            msg,
+        });
+    };
+
+    // R1: whole-process crash only in single-purpose bins (the definition
+    // site in pmem is exempt).
+    if !in_bin && !in_pmem {
+        for (i, l) in lines.iter().enumerate() {
+            if l.contains("pmem::crash(") {
+                push(
+                    findings,
+                    "R1",
+                    i,
+                    l,
+                    String::from(
+                        "whole-process pmem::crash outside src/bin/ — use pmem::crash_pools",
+                    ),
+                );
+            }
+        }
+    }
+
+    // R2: relaxed mutations of tagged durable/link words in sets/ + alloc/.
+    let r2_scope = (rel.starts_with("src/sets/") || rel.starts_with("src/alloc/"))
+        && !rel.ends_with("/recovery.rs")
+        && !rel.contains("/volatile/");
+    if r2_scope {
+        const WORDS: &[&str] = &[".next.", ".nexts[", ".cells[", "slot_gen("];
+        const MUTS: &[&str] = &[".store(", ".compare_exchange", ".fetch_"];
+        for (i, l) in lines.iter().enumerate().take(tests_at) {
+            if l.contains("Ordering::Relaxed")
+                && WORDS.iter().any(|w| l.contains(w))
+                && MUTS.iter().any(|m| l.contains(m))
+            {
+                push(
+                    findings,
+                    "R2",
+                    i,
+                    l,
+                    String::from(
+                        "relaxed mutation of a tagged durable/link word — use Release (or allowlist)",
+                    ),
+                );
+            }
+        }
+    }
+
+    // R3: crash-sim callers must hold the global sim session.
+    if !in_bin && !in_pmem && src.contains("crash_pools(") && !src.contains("sim_session") {
+        push(
+            findings,
+            "R3",
+            0,
+            "",
+            String::from("calls crash_pools without taking pmem::sim_session()"),
+        );
+    }
+
+    // R4: durable-family files must pin fence budgets.
+    if FENCE_PINNED_FILES.contains(&rel) && !src.contains(".fences") {
+        push(
+            findings,
+            "R4",
+            0,
+            "",
+            String::from("durable-family file without a pinned fence-count assertion"),
+        );
+    }
+}

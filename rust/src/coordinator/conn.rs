@@ -876,6 +876,9 @@ impl Conn {
             let d = stats::thread_snapshot().since(&before);
             kv.metrics.record_scan_lane(ordered_queries.len() as u64, d.fences, d.flushes);
         }
+        // Ack boundary: replies formatted below leave the process; any
+        // durable store this thread still owes is a DurabilityRace.
+        crate::pmem::check::assert_persisted("conn.resolve_burst");
         let slots = std::mem::take(&mut self.slots);
         for slot in slots {
             match slot {

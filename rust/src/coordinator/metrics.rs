@@ -391,6 +391,15 @@ impl Metrics {
                 rolled,
             ));
         }
+        // durcheck gauge: only non-zero when the checker is armed (sim
+        // mode), so served Perf runs never show it.
+        let chk = crate::pmem::check::snapshot();
+        if chk.events > 0 {
+            out.push_str(&format!(
+                " check=[events={} violations={} redundant_flushes={}]",
+                chk.events, chk.violations, chk.redundant_flushes,
+            ));
+        }
         if self.rec_shards.load(Ordering::Relaxed) > 0 {
             let ms = |c: &AtomicU64| c.load(Ordering::Relaxed) as f64 / 1000.0;
             out.push_str(&format!(

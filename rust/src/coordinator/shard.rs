@@ -377,6 +377,9 @@ fn commit_group(
     // The group commit: results become claimable only after the batch's
     // trailing fence, i.e. when apply_batch returns.
     let results = set.apply_batch(ops);
+    // Ack boundary: every durable store this group authored must be
+    // flushed + fenced before a single result is scattered.
+    crate::pmem::check::assert_persisted("shard.commit_group");
     let elapsed = t0.elapsed();
     if !ops.is_empty() {
         metrics.record_group(ops.len() as u64);
@@ -428,6 +431,8 @@ fn serve_txn(set: &dyn ConcurrentSet, metrics: &Metrics, handle: TxnHandle) {
                 // "prepare-apply" of the two-phase protocol, running
                 // strictly after the coordinator's commit point.
                 let results = set.apply_batch(&ops);
+                // Ack boundary: the coordinator treats `done` as durable.
+                crate::pmem::check::assert_persisted("shard.serve_txn");
                 metrics.record_group(ops.len() as u64);
                 metrics.record_latency(t0.elapsed());
                 for (&op, &res) in ops.iter().zip(results.iter()) {

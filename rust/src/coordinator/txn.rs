@@ -276,6 +276,8 @@ impl TxnLog {
             }
         }
         self.retire();
+        // Ack boundary: the batch's results leave this call as committed.
+        crate::pmem::check::assert_persisted("txn.execute_inproc");
         metrics.record_atomic(ops.len() as u64);
         out
     }
@@ -384,6 +386,8 @@ impl TxnLog {
 
         // Phase 4: retire, then release the workers, then (caller) ack.
         self.retire();
+        // Ack boundary: responses leave this call as a committed batch.
+        crate::pmem::check::assert_persisted("txn.execute_via_workers");
         for p in &parts {
             let _ = p.go.send(TxnCmd::Release);
         }

@@ -145,6 +145,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let points = bench::rwpath::sweep(cfg.duration, seed);
         print!("{}", bench::rwpath::render(&points));
         json_points.extend(bench::rwpath::to_json_points(&points));
+    } else if fig == "check" {
+        // durcheck overhead: armed vs disarmed throughput per durable
+        // family (sim-mode-only tax; the armed phase must stay violation-
+        // and redundant-flush-free — the CI durcheck job greps the JSON).
+        let points = bench::check::sweep(cfg.duration, seed);
+        print!("{}", bench::check::render(&points));
+        json_points.extend(bench::check::to_json_points(&points));
     } else if fig == "scan" {
         // The ordered read tier: merge-walk vs N independent probes over
         // scan length x burst depth, with scan-lane psync counters

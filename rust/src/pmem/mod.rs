@@ -30,6 +30,7 @@
 //! under test only ever rely on same-line ordering (Cohen et al. 2017), so
 //! this is sufficient to exercise their correctness arguments.
 
+pub mod check;
 pub mod region;
 pub mod root;
 pub mod shadow;
@@ -203,6 +204,9 @@ pub fn flush_line(ptr: *const u8) {
     }
     stats::count_flush();
     if mode() == Mode::Sim {
+        // durcheck observes the flush before the copy lands: the
+        // working-vs-shadow diff is what decides redundancy.
+        check::note_flush(ptr);
         shadow::shadow_copy_line(ptr);
     }
     if in_scope() {
@@ -226,6 +230,7 @@ pub fn fence() {
     }
     stats::count_fence();
     std::sync::atomic::fence(Ordering::SeqCst);
+    check::note_fence();
 }
 
 /// `psync(addr, len)`: flush every cache line covering `[addr, addr+len)`,
@@ -249,6 +254,7 @@ pub fn psync(ptr: *const u8, len: usize) {
     if mode() == Mode::Sim {
         let mut line = start;
         while line < end {
+            check::note_flush(line as *const u8);
             shadow::shadow_copy_line(line as *const u8);
             line += CACHE_LINE;
         }
@@ -265,6 +271,7 @@ pub fn psync(ptr: *const u8, len: usize) {
     stats::count_psync(nlines as u64);
     spin_ns(psync_ns() * nlines as u64);
     std::sync::atomic::fence(Ordering::SeqCst);
+    check::note_fence();
 }
 
 /// Convenience: psync a whole typed record (used for the one-cache-line

@@ -115,6 +115,7 @@ pub fn release_pool(pool: PoolId) {
     while i < reg.len() {
         if reg[i].pool == pool {
             let r = reg.remove(i);
+            super::check::purge_range(r.base, r.len);
             unsafe {
                 dealloc(r.base as *mut u8, layout(r.len));
                 dealloc(r.shadow, layout(r.len));
@@ -133,6 +134,7 @@ pub(crate) fn persist_region_bulk(base: *mut u8) {
     let reg = REGISTRY.read().unwrap();
     if let Some(r) = find_region(&reg, base as usize) {
         unsafe { copy_atomic_u64s(r.base as *const u8, r.shadow, r.len) };
+        super::check::purge_range(r.base, r.len);
     }
 }
 

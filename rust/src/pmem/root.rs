@@ -60,6 +60,7 @@ impl RootCell {
 
     /// psync the cell.
     pub fn persist(&self) {
+        super::check::note_store(self.0 as *const u8);
         super::psync(self.0 as *const u8, 8);
     }
 }
@@ -114,7 +115,9 @@ impl RootArray {
     /// psync words `[start, start + n)`.
     pub fn persist_range(&self, start: usize, n: usize) {
         assert!(start + n <= self.words);
-        super::psync(unsafe { self.base.add(start) } as *const u8, n * 8);
+        let ptr = unsafe { self.base.add(start) } as *const u8;
+        super::check::note_store_range(ptr, n * 8);
+        super::psync(ptr, n * 8);
     }
 }
 

@@ -62,6 +62,9 @@ pub(crate) fn crash_all(policy: CrashPolicy, pools: Option<&[super::PoolId]>) ->
         unsafe {
             copy_atomic_u64s(r.shadow as *const u8, r.base as *mut u8, r.len);
         }
+        // A crash discharges every outstanding persist obligation in the
+        // blast radius: post-crash working memory *is* the persisted image.
+        super::check::purge_range(r.base, r.len);
     }
     evicted
 }

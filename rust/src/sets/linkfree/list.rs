@@ -229,6 +229,9 @@ impl LfCore {
                     .compare_exchange(succ_t, succ_t | MARK, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
                 {
+                    // The mark is the durable delete record: the remover
+                    // now owes a psync of this line before acking.
+                    crate::pmem::check::note_store(curr as *const u8);
                     if !self.trim(pred_link, curr) {
                         // Someone else unlinked it (or our window went
                         // stale); find() guarantees no marked node with

@@ -59,6 +59,7 @@ impl LfNode {
         let v2 = (v & V2) != 0;
         let want = (if v2 { V2 } else { 0 }) | (if v2 { 0 } else { V1 });
         self.validity.store(want, Ordering::Relaxed);
+        pmem::check::note_store(self as *const _ as *const u8);
     }
 
     /// `makeValid`: equate v2 to v1. Racy calls all store the same value.
@@ -69,6 +70,7 @@ impl LfNode {
         let want = (if v1 { V1 | V2 } else { 0 }) as u8;
         if v != want {
             self.validity.store(want, Ordering::Release);
+            pmem::check::note_store(self as *const _ as *const u8);
         }
     }
 

@@ -201,7 +201,7 @@ impl LfSkipList {
             loop {
                 // Find pred/succ at this level.
                 let (pred_nexts, succ_tag) = self.index_window(key, level);
-                (*tower).nexts[level].store(succ_tag & !1, Ordering::Relaxed);
+                (*tower).nexts[level].store(succ_tag & !1, Ordering::Release);
                 if pred_nexts[level]
                     .compare_exchange(succ_tag, tower as u64, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()

@@ -144,7 +144,10 @@ impl LogFreeCore {
                 // slot can never mistake a mid-insert node for a linked
                 // one. Recovery masks tag bits, so the persisted DIRTY is
                 // harmless.
-                (*new_node).next.store(curr as u64 | DIRTY, Ordering::Relaxed);
+                // (Release for the durlint link-store rule; the content
+                // psync below is what publication actually leans on.)
+                (*new_node).next.store(curr as u64 | DIRTY, Ordering::Release);
+                pmem::check::note_store(new_node as *const u8);
                 // Persist node content BEFORE it becomes reachable.
                 pmem::psync_obj(new_node);
                 // Install + persist the link (psync #2 of the update).

@@ -57,6 +57,13 @@ pub fn store_link_persisted(link: &AtomicU64, expect_clean: u64, new: u64) -> bo
     {
         return false;
     }
+    pmem::check::note_store(link as *const AtomicU64 as *const u8);
+    // The CAS made `new`'s node reachable through a durable link: its
+    // own line must already be flushed (psync_obj before linking).
+    let target = new & !(MARK | DIRTY);
+    if target != 0 {
+        pmem::check::note_publish(target as *const u8);
+    }
     pmem::psync(link as *const AtomicU64 as *const u8, 8);
     let _ = link.compare_exchange(new | DIRTY, new, Ordering::AcqRel, Ordering::Acquire);
     true

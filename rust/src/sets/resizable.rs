@@ -731,8 +731,8 @@ impl<F: ResizableFamily> ResizableHash<F> {
                     // validated before use, so a lower-half hint in the upper
                     // child merely causes one fallback hop until repopulated.
                     let h = tr.cells[i].load(Ordering::Relaxed);
-                    nr.cells[2 * i].store(h, Ordering::Relaxed);
-                    nr.cells[2 * i + 1].store(h, Ordering::Relaxed);
+                    nr.cells[2 * i].store(h, Ordering::Release);
+                    nr.cells[2 * i + 1].store(h, Ordering::Release);
                 }
             }
             if self

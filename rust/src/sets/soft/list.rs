@@ -180,10 +180,12 @@ impl SoftCore {
                     alloc_v = v;
                 }
                 // Link with state "intention to insert": visible for
-                // helping but not yet logically in the set.
+                // helping but not yet logically in the set. (Release: the
+                // volatile SNode rides the same publish discipline as the
+                // durable words — durlint R2 flags relaxed link stores.)
                 (*alloc_v)
                     .next
-                    .store(compose(w.curr, State::IntendToInsert as u64), Ordering::Relaxed);
+                    .store(compose(w.curr, State::IntendToInsert as u64), Ordering::Release);
                 let new_val = (alloc_v as u64) | tag_of(w.pred_val);
                 if (*w.pred_link)
                     .compare_exchange(w.pred_val, new_val, Ordering::AcqRel, Ordering::Acquire)
@@ -201,6 +203,9 @@ impl SoftCore {
                 (*result_node).value,
                 (*result_node).p_validity,
             );
+            // Inserted is the durable publish: the PNode's create psync
+            // must have completed (durcheck flags a still-dirty PNode).
+            crate::pmem::check::note_publish((*result_node).pptr as *const u8);
             loop {
                 let v = (*result_node).next.load(Ordering::Acquire);
                 if State::of(v) != State::IntendToInsert {
@@ -254,6 +259,8 @@ impl SoftCore {
             }
             // Help persist + complete regardless of who won (idempotent).
             (*(*curr).pptr).destroy((*curr).p_validity);
+            // Deleted is the durable publish of the removal record.
+            crate::pmem::check::note_publish((*curr).pptr as *const u8);
             loop {
                 let v = (*curr).next.load(Ordering::Acquire);
                 if State::of(v) != State::IntendToDelete {

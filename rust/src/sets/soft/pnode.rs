@@ -59,6 +59,7 @@ impl PNode {
         self.key.store(key, Ordering::Relaxed);
         self.value.store(value, Ordering::Relaxed);
         self.valid_end.store(v, Ordering::Release);
+        pmem::check::note_store(self as *const _ as *const u8);
         pmem::psync_obj(self);
     }
 
@@ -66,6 +67,7 @@ impl PNode {
     /// SOFT remove). Leaves the slot in the free pattern for reuse.
     pub fn destroy(&self, p_validity: bool) {
         self.deleted.store(p_validity as u8, Ordering::Release);
+        pmem::check::note_store(self as *const _ as *const u8);
         pmem::psync_obj(self);
     }
 

@@ -153,7 +153,7 @@ impl SoftSkipList {
         for level in 0..height {
             loop {
                 let (pred_nexts, succ_tag) = self.index_window(key, level);
-                (*tower).nexts[level].store(succ_tag & !1, Ordering::Relaxed);
+                (*tower).nexts[level].store(succ_tag & !1, Ordering::Release);
                 if pred_nexts[level]
                     .compare_exchange(succ_tag, tower as u64, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()

@@ -1,0 +1,235 @@
+//! durcheck integration suite (DESIGN.md §Checking).
+//!
+//! Two halves, mirroring the ISSUE-8 acceptance criteria:
+//!
+//! * **Pins** — the real families' fast paths (insert / remove / contains,
+//!   and the K=64 batch path) run under the armed checker with
+//!   `redundant_flushes == 0` and zero violations. Any flush of an
+//!   already-clean line on a fast path is now a test failure, not a perf
+//!   smell; any ack of an unpersisted store is a `DurabilityRace`.
+//! * **Negative controls** — a deliberately buggy mini-structure (one
+//!   durable slot region + a volatile head link, the smallest thing with
+//!   a persist protocol) is driven through a missing-flush, a
+//!   missing-fence, and a pre-fence-publish insert, and the checker must
+//!   flag each with the *correct* violation type — in the style of the
+//!   `untagged-hints` ABA control: the checker's value is only proven by
+//!   watching it fire.
+//!
+//! Everything here takes `pmem::sim_session()` (the checker only observes
+//! sim mode), which also serializes the armed windows across the binary,
+//! making per-thread counter deltas exact.
+
+use durasets::pmem::check::{self, ViolationKind};
+use durasets::pmem::region::{alloc_region, release_pool, RegionTag};
+use durasets::pmem::{self, PoolId};
+use durasets::sets::{self, ConcurrentSet, Family, SetOp};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Drive one structure's single-op and batch fast paths; return nothing,
+/// assert the checker deltas inline.
+fn pin_fast_paths(label: &str, set: &dyn ConcurrentSet) {
+    let before = check::thread_snapshot();
+    for k in 0..200u64 {
+        assert!(set.insert(k, k + 1), "{label}: insert {k}");
+    }
+    for k in 0..200u64 {
+        assert!(set.contains(k), "{label}: contains {k}");
+        assert_eq!(set.get(k), Some(k + 1), "{label}: get {k}");
+    }
+    for k in 0..100u64 {
+        assert!(set.remove(k), "{label}: remove {k}");
+    }
+    for k in 0..100u64 {
+        assert!(!set.contains(k), "{label}: removed {k} still present");
+    }
+    // The batch fast path at the pinned group size (K = 64): one
+    // PsyncScope, per-op flushes, one trailing fence.
+    let ops: Vec<SetOp> = (1_000..1_064u64).map(|k| SetOp::Insert(k, 7)).collect();
+    let res = set.apply_batch(&ops);
+    assert_eq!(res.len(), 64, "{label}");
+    let d = check::thread_snapshot().since(&before);
+    assert!(d.events > 0, "{label}: armed checker saw no events");
+    assert_eq!(d.redundant_flushes, 0, "{label}: clean-line flush on a fast path");
+    assert_eq!(d.violations, 0, "{label}: checker violations on a fast path");
+    // The ack-boundary assertion the coordinator uses at scatter time.
+    check::assert_persisted(label);
+}
+
+#[test]
+fn hash_fast_paths_pin_zero_redundant_flushes() {
+    let _sim = pmem::sim_session();
+    pmem::set_psync_ns(0);
+    let _c = check::session();
+    for family in Family::DURABLE {
+        let set = sets::new_hash(family, 64);
+        pin_fast_paths(&format!("hash/{family}"), set.as_ref());
+    }
+}
+
+#[test]
+fn list_fast_paths_pin_zero_redundant_flushes() {
+    let _sim = pmem::sim_session();
+    pmem::set_psync_ns(0);
+    let _c = check::session();
+    for family in Family::DURABLE {
+        let set = sets::new_list(family);
+        pin_fast_paths(&format!("list/{family}"), set.as_ref());
+    }
+}
+
+#[test]
+fn skiplist_fast_paths_pin_zero_redundant_flushes() {
+    let _sim = pmem::sim_session();
+    pmem::set_psync_ns(0);
+    let _c = check::session();
+    for family in [Family::LinkFree, Family::Soft] {
+        let set = sets::new_skiplist(family);
+        pin_fast_paths(&format!("skiplist/{family}"), set.as_ref());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Negative controls.
+// ---------------------------------------------------------------------
+
+/// Which step of the persist protocol the buggy insert skips.
+#[derive(Clone, Copy)]
+enum Bug {
+    /// Correct protocol: store → flush → publish → fence → ack.
+    None,
+    /// Store → fence → ack: the fence persists nothing it never flushed.
+    MissingFlush,
+    /// Store → flush → ack: durable-at-issue in the sim model, but the
+    /// ack ordering is exactly what the trailing fence provides.
+    MissingFence,
+    /// Store → publish → flush → fence → ack: the link made the node
+    /// reachable while its line was still dirty.
+    PreFencePublish,
+}
+
+/// The smallest structure with a persist protocol: fixed durable slots
+/// holding one key word each, published through a volatile head link.
+struct MiniList {
+    pool: PoolId,
+    base: *mut u8,
+    head: AtomicU64,
+    next_slot: std::cell::Cell<usize>,
+}
+
+impl MiniList {
+    fn new() -> Self {
+        let pool = PoolId::fresh();
+        let base = alloc_region(pool, 64 * 64, RegionTag::Slots, 64);
+        MiniList { pool, base, head: AtomicU64::new(0), next_slot: std::cell::Cell::new(0) }
+    }
+
+    /// One insert, honest about `bug`, acked via `release_check` — the
+    /// same drain the coordinator's `assert_persisted` performs.
+    fn insert(&self, key: u64, bug: Bug) -> Vec<check::Violation> {
+        let i = self.next_slot.get();
+        self.next_slot.set(i + 1);
+        let slot = unsafe { self.base.add(i * 64) };
+        let word = unsafe { &*(slot as *const AtomicU64) };
+        word.store(key, Ordering::Release);
+        check::note_store(slot);
+        match bug {
+            Bug::None => {
+                pmem::flush_line(slot);
+                check::note_publish(slot);
+                self.head.store(slot as u64, Ordering::Release);
+                pmem::fence();
+            }
+            Bug::MissingFlush => {
+                self.head.store(slot as u64, Ordering::Release);
+                pmem::fence();
+            }
+            Bug::MissingFence => {
+                pmem::flush_line(slot);
+                self.head.store(slot as u64, Ordering::Release);
+            }
+            Bug::PreFencePublish => {
+                check::note_publish(slot);
+                self.head.store(slot as u64, Ordering::Release);
+                // Repair the persist so the *only* finding is the publish
+                // ordering — keeps each control's signature distinct.
+                pmem::psync(slot, 8);
+            }
+        }
+        check::release_check("minilist.ack")
+    }
+}
+
+impl Drop for MiniList {
+    fn drop(&mut self) {
+        release_pool(self.pool);
+    }
+}
+
+#[test]
+fn negative_controls_fire_with_the_correct_violation_type() {
+    let _sim = pmem::sim_session();
+    pmem::set_psync_ns(0);
+    let _c = check::session();
+    let list = MiniList::new();
+
+    // Sanity: the correct protocol acks clean.
+    let v = list.insert(1, Bug::None);
+    assert!(v.is_empty(), "correct insert must ack clean: {v:?}");
+
+    let v = list.insert(2, Bug::MissingFlush);
+    assert_eq!(v.len(), 1, "missing flush: {v:?}");
+    assert_eq!(v[0].kind, ViolationKind::DurabilityRace { flushed: false });
+
+    let v = list.insert(3, Bug::MissingFence);
+    assert_eq!(v.len(), 1, "missing fence: {v:?}");
+    assert_eq!(v[0].kind, ViolationKind::DurabilityRace { flushed: true });
+
+    let v = list.insert(4, Bug::PreFencePublish);
+    assert_eq!(v.len(), 1, "pre-fence publish: {v:?}");
+    assert_eq!(v[0].kind, ViolationKind::UnfencedPublish);
+
+    // And clean again after the buggy ones — no lingering state leaks
+    // into later acks (the buggy slots were drained at their own acks).
+    let v = list.insert(5, Bug::None);
+    assert!(v.is_empty(), "post-bug insert must ack clean: {v:?}");
+}
+
+#[test]
+fn assert_persisted_panics_at_a_dirty_ack_boundary() {
+    let _sim = pmem::sim_session();
+    pmem::set_psync_ns(0);
+    let _c = check::session();
+    let list = MiniList::new();
+    let slot = unsafe { list.base.add(63 * 64) };
+    unsafe { &*(slot as *const AtomicU64) }.store(9, Ordering::Release);
+    check::note_store(slot);
+    let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        check::assert_persisted("durcheck.test.dirty_ack");
+    }));
+    assert!(r.is_err(), "assert_persisted must panic on an unpersisted ack");
+    // Fix the protocol; the same boundary now passes.
+    pmem::psync(slot, 8);
+    check::assert_persisted("durcheck.test.after_fix");
+}
+
+/// The STATS gauge surfaces checker counters without log scraping
+/// (satellite: `check=[events/violations/redundant_flushes]`).
+#[test]
+fn stats_gauge_reports_checker_counters_when_armed() {
+    let _sim = pmem::sim_session();
+    pmem::set_psync_ns(0);
+    let _c = check::session();
+    let set = sets::new_hash(Family::LinkFree, 16);
+    for k in 0..32u64 {
+        assert!(set.insert(k, 1));
+    }
+    let snap = check::snapshot();
+    assert!(snap.events > 0, "armed run must accumulate checker events");
+    let metrics = durasets::coordinator::metrics::Metrics::new();
+    let report = metrics.report();
+    assert!(
+        report.contains("check=[events="),
+        "STATS must carry the check gauge when events exist: {report}"
+    );
+}
