@@ -1,11 +1,41 @@
-//! Durable areas: per-thread pools of fixed-size persistent slots.
+//! Durable areas: a two-level, crash-consistent pool of fixed-size
+//! persistent slots (llfree-shaped; see DESIGN.md §Allocator).
 //!
-//! Mirrors the paper's adapted ssmem allocator (§5): each thread owns a
-//! list of durable areas allocated from persistent memory; slots are
-//! handed out from a bump pointer until the area fills, then from a
-//! per-thread free-list. Areas are registered with the pmem registry
-//! (standing in for the persistent per-thread area lists), so a recovery
-//! procedure can iterate every slot that was ever allocated.
+//! **Lower level (durable):** every area carries a 512-byte header of
+//! occupancy bitmap words — one cacheline-packed `u64` per 64 slots —
+//! living *inside* the durable region image, ahead of the first slot.
+//! A set bit means "slot handed out"; a clear bit means "free". The words
+//! are updated with ordinary atomic RMWs and **never eagerly flushed**:
+//! exactly like the generation words, they ride whatever psync next covers
+//! their line (at the latest the bulk persist of a recovery pass), and
+//! recovery does not trust them — the classify scan reconstructs them from
+//! the slots themselves ([`clear_region_bitmap`] + [`mark_region_slot_live`]
+//! + [`DurablePool::rebuild_index`]). The alloc/free fast paths therefore
+//! add **zero fences and zero flushes** over the seed design.
+//!
+//! **Upper level (volatile):** a lock-free index routes allocations to the
+//! emptiest area and cross-thread frees to their *home* area in O(log n):
+//! - a per-tid reservation (one exclusively reserved area + a scan cursor
+//!   + a bounded LIFO slot cache, [`CACHE_CAP`]) gives the owner a
+//!   contention-free fast path with the seed's LIFO reuse semantics;
+//! - a sorted lookup table (atomically swapped on area add/retire, old
+//!   tables parked in a graveyard until pool drop) maps any slot address
+//!   to its `AreaMeta`;
+//! - Treiber stacks of area *fill classes* (tagged heads — the tag is
+//!   bumped on every successful CAS, so node reuse cannot ABA the stack)
+//!   let `acquire_area` pop the emptiest partially-free area before
+//!   falling back to a sweep and only then growing.
+//!
+//! Cross-thread frees no longer pollute the freeing thread's list: they
+//! clear the home area's bit, bump its fill class, and make the area
+//! re-acquirable by anyone — per-tid state stays bounded by construction.
+//!
+//! On top of the two levels sit the compaction hooks
+//! ([`DurablePool::claim_compaction_targets`] / [`DurablePool::retire_area`]):
+//! a maintenance pass reserves a low-fill area (making it invisible to
+//! `acquire_area`), migrates survivors with the families' zero-psync
+//! relink machinery, and — once the bitmap reads all-zero — retires the
+//! region through an EBR-deferred [`release_region`], returning memory.
 //!
 //! **Fresh-slot discipline.** A freshly created area is initialised to the
 //! structure's canonical *free pattern* (link-free: validity bits equal +
@@ -34,14 +64,37 @@
 //! because all hint words are volatile and die with the crash (tested by
 //! the crash-during-reclamation tests in the family recovery modules).
 
-use crate::pmem::region::{alloc_region, persist_region_bulk, regions_of, release_pool, RegionRef, RegionTag};
+use crate::pmem::region::{
+    alloc_region_with_hdr, persist_region_bulk, regions_of, release_pool, release_region,
+    RegionRef, RegionTag,
+};
 use crate::pmem::PoolId;
 use crate::util::{tid::tid, CACHE_LINE, MAX_THREADS};
 use crossbeam_utils::CachePadded;
 use std::cell::UnsafeCell;
+use std::sync::atomic::{
+    AtomicBool, AtomicI64, AtomicIsize, AtomicPtr, AtomicU64, AtomicUsize, Ordering,
+};
+use std::sync::Mutex;
 
 /// Slots per durable area (256 KiB areas of 64-byte slots).
 pub const SLOTS_PER_AREA: usize = 4096;
+
+/// Occupancy bitmap words per area header (one per 64 slots).
+pub const HDR_WORDS: usize = SLOTS_PER_AREA / 64;
+
+/// Bytes of in-image header per area: 512 = 8 cache lines of bitmap words.
+pub const HDR_BYTES: usize = HDR_WORDS * 8;
+
+/// Per-tid LIFO slot-cache bound. Same-thread free→alloc of a slot in the
+/// thread's reserved area stays a two-instruction push/pop (preserving the
+/// seed's pinned LIFO reuse the gen-tag tests rely on); anything beyond
+/// this depth — and every cross-thread free — routes to the home area's
+/// bitmap instead. This is the bound the churn test pins.
+pub const CACHE_CAP: usize = 64;
+
+/// Area fill classes for the Treiber index (class = more free ⇒ higher).
+const NCLASSES: usize = 4;
 
 /// The generation word of a durable slot: the slot's trailing 8 bytes
 /// (see the module docs). `slot_size` must be the owning pool's slot size
@@ -51,26 +104,250 @@ pub const SLOTS_PER_AREA: usize = 4096;
 /// # Safety
 /// `slot` must point to a live slot of a pool with that `slot_size`.
 #[inline(always)]
-pub unsafe fn slot_gen<'a>(slot: *const u8, slot_size: usize) -> &'a std::sync::atomic::AtomicU64 {
-    &*(slot.add(slot_size - 8) as *const std::sync::atomic::AtomicU64)
+pub unsafe fn slot_gen<'a>(slot: *const u8, slot_size: usize) -> &'a AtomicU64 {
+    &*(slot.add(slot_size - 8) as *const AtomicU64)
+}
+
+// ---------------------------------------------------------------------------
+// Global allocator gauge (STATS `alloc=[…]`; relaxed — monitoring only).
+
+static G_AREAS: AtomicI64 = AtomicI64::new(0);
+static G_PEAK_AREAS: AtomicI64 = AtomicI64::new(0);
+static G_LIVE_SLOTS: AtomicI64 = AtomicI64::new(0);
+static G_COMPACTIONS: AtomicU64 = AtomicU64::new(0);
+static G_RETURNED: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide allocator gauge.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AllocGauge {
+    /// Live (non-retired) areas across all pools.
+    pub areas: i64,
+    /// High-water mark of `areas`.
+    pub peak_areas: i64,
+    /// Allocated slots across all pools.
+    pub live_slots: i64,
+    /// Compaction passes that migrated at least one slot.
+    pub compactions: u64,
+    /// Areas retired and returned to the OS.
+    pub returned: u64,
+}
+
+impl AllocGauge {
+    /// Free capacity inside live areas, in percent (external fragmentation
+    /// the compactor can reclaim).
+    pub fn frag_pct(&self) -> u64 {
+        let cap = self.areas.max(0) * SLOTS_PER_AREA as i64;
+        if cap <= 0 {
+            return 0;
+        }
+        let free = (cap - self.live_slots.max(0)).max(0);
+        (free as u64 * 100) / cap as u64
+    }
+}
+
+/// Read the global allocator gauge.
+pub fn gauge() -> AllocGauge {
+    AllocGauge {
+        areas: G_AREAS.load(Ordering::Relaxed),
+        peak_areas: G_PEAK_AREAS.load(Ordering::Relaxed),
+        live_slots: G_LIVE_SLOTS.load(Ordering::Relaxed),
+        compactions: G_COMPACTIONS.load(Ordering::Relaxed),
+        returned: G_RETURNED.load(Ordering::Relaxed),
+    }
+}
+
+/// Record one compaction pass that migrated survivors (resizable's
+/// maintenance driver calls this; the gauge feeds STATS and `--fig alloc`).
+pub fn note_compaction() {
+    G_COMPACTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+fn g_area_delta(d: i64) {
+    let now = G_AREAS.fetch_add(d, Ordering::Relaxed) + d;
+    G_PEAK_AREAS.fetch_max(now, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Lower-level helpers: the in-image occupancy bitmap of one area.
+
+/// The occupancy bitmap words of an area, viewed in place.
+///
+/// # Safety
+/// `region_base` must be the base of a live `Slots` region allocated with
+/// an [`HDR_BYTES`] header.
+#[inline]
+pub unsafe fn area_bitmap<'a>(region_base: *mut u8) -> &'a [AtomicU64] {
+    std::slice::from_raw_parts(region_base as *const AtomicU64, HDR_WORDS)
+}
+
+/// Zero a region's occupancy bitmap (start of a recovery rebuild — the
+/// crashed words are stale by construction and are never trusted).
+///
+/// # Safety
+/// `r` must be a live `Slots` region of a pool built by this allocator.
+pub unsafe fn clear_region_bitmap(r: &RegionRef) {
+    if r.hdr == 0 {
+        return;
+    }
+    for w in area_bitmap(r.base) {
+        w.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Set the occupancy bit of `slot` within its region (recovery marks every
+/// classified member; parallel workers may race benignly on fetch_or).
+///
+/// # Safety
+/// `slot` must be a slot of region `r`.
+pub unsafe fn mark_region_slot_live(r: &RegionRef, slot: *const u8) {
+    if r.hdr == 0 {
+        return;
+    }
+    let idx = (slot as usize - (r.base as usize + r.hdr)) / r.slot_size;
+    area_bitmap(r.base)[idx / 64].fetch_or(1u64 << (idx % 64), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Upper-level index: area metadata, tagged Treiber class stacks, lookup.
+
+/// Volatile per-area metadata. Owned (boxed) by the pool's `metas` vec and
+/// never freed while the pool lives, so raw pointers to it are stable —
+/// the tag discipline on the class stacks handles re-push ABA.
+struct AreaMeta {
+    /// Region base (= header base).
+    base: usize,
+    /// First slot byte (`base + HDR_BYTES`).
+    slots: usize,
+    /// One past the last slot byte.
+    end: usize,
+    /// Clear bits in the bitmap. Transient dips below the true value are
+    /// possible (bit-clear and counter-bump are two instructions); it is a
+    /// routing heuristic — the bitmap is the source of truth.
+    free_count: AtomicIsize,
+    /// Exclusively held: by an allocating tid or by a compaction claim.
+    reserved: AtomicBool,
+    /// On some class stack (at most one at a time).
+    on_stack: AtomicBool,
+    /// Retired by compaction; region release is EBR-deferred.
+    retired: AtomicBool,
+    /// Treiber intrusive link (meaningful only while `on_stack`).
+    stack_next: AtomicPtr<AreaMeta>,
+}
+
+impl AreaMeta {
+    fn new(base: usize, slot_size: usize, free: isize, reserved: bool) -> Box<Self> {
+        Box::new(AreaMeta {
+            base,
+            slots: base + HDR_BYTES,
+            end: base + HDR_BYTES + SLOTS_PER_AREA * slot_size,
+            free_count: AtomicIsize::new(free),
+            reserved: AtomicBool::new(reserved),
+            on_stack: AtomicBool::new(false),
+            retired: AtomicBool::new(false),
+            stack_next: AtomicPtr::new(std::ptr::null_mut()),
+        })
+    }
+}
+
+/// Fill class of an area with `free` clear bits (higher = emptier).
+fn class_of(free: isize) -> usize {
+    let f = free.max(0) as usize;
+    (f * NCLASSES / SLOTS_PER_AREA).min(NCLASSES - 1)
+}
+
+const PTR_MASK: u64 = (1 << 48) - 1;
+
+/// Treiber stack of `AreaMeta` with a 16-bit tag in the head word. The tag
+/// is bumped on *every* successful CAS (push and pop), so a popped node
+/// re-pushed between a competitor's load and CAS changes the head word —
+/// the classic Treiber ABA cannot occur even though nodes are reused.
+/// Meta pointers are heap pointers (< 2^48 on the supported targets).
+struct TaggedStack(AtomicU64);
+
+impl TaggedStack {
+    const fn new() -> Self {
+        TaggedStack(AtomicU64::new(0))
+    }
+
+    fn push(&self, meta: *mut AreaMeta) {
+        loop {
+            let head = self.0.load(Ordering::Acquire);
+            let top = (head & PTR_MASK) as *mut AreaMeta;
+            unsafe { (*meta).stack_next.store(top, Ordering::Release) };
+            let new = ((head >> 48).wrapping_add(1) << 48) | (meta as u64 & PTR_MASK);
+            if self
+                .0
+                .compare_exchange_weak(head, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    fn pop(&self) -> Option<*mut AreaMeta> {
+        loop {
+            let head = self.0.load(Ordering::Acquire);
+            let top = (head & PTR_MASK) as *mut AreaMeta;
+            if top.is_null() {
+                return None;
+            }
+            let next = unsafe { (*top).stack_next.load(Ordering::Acquire) };
+            let new = ((head >> 48).wrapping_add(1) << 48) | (next as u64 & PTR_MASK);
+            if self
+                .0
+                .compare_exchange_weak(head, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(top);
+            }
+        }
+    }
+}
+
+/// Immutable snapshot of the pool's live areas, sorted by slot base for
+/// O(log n) home-area lookup on the free path. Swapped wholesale on area
+/// add/retire; superseded tables park in the graveyard (freed at pool
+/// drop), so a racing reader's loaded pointer stays valid for the read.
+struct Lookup {
+    /// `(first_slot_byte, end_byte, meta)`, sorted by the first field.
+    entries: Vec<(usize, usize, *mut AreaMeta)>,
 }
 
 /// Per-thread allocation state. Only ever touched by its owning thread.
-struct ThreadAlloc {
-    bump_base: *mut u8,
-    bump_next: usize,
-    bump_cap: usize,
-    free: Vec<*mut u8>,
+struct TidState {
+    /// The tid's exclusively reserved area (null until first alloc).
+    area: *mut AreaMeta,
+    /// Bitmap word to resume scanning from in the reserved area.
+    cursor: usize,
+    /// Bounded LIFO of same-area slots (bits still set — see `free`).
+    cache: Vec<*mut u8>,
 }
 
-impl ThreadAlloc {
+impl TidState {
     const fn new() -> Self {
-        ThreadAlloc {
-            bump_base: std::ptr::null_mut(),
-            bump_next: 0,
-            bump_cap: 0,
-            free: Vec::new(),
-        }
+        TidState { area: std::ptr::null_mut(), cursor: 0, cache: Vec::new() }
+    }
+}
+
+/// A compaction reservation on one area: while held, `acquire_area` and
+/// the free path treat the area as exclusively owned, so the claimant can
+/// migrate survivors and (once the bitmap is empty) retire it.
+pub struct AreaClaim {
+    meta: *mut AreaMeta,
+    /// First slot byte of the claimed area.
+    pub lo: usize,
+    /// One past the last slot byte.
+    pub hi: usize,
+}
+
+unsafe impl Send for AreaClaim {}
+
+impl AreaClaim {
+    /// Does `p` point into the claimed slot range?
+    pub fn contains(&self, p: *const u8) -> bool {
+        let a = p as usize;
+        a >= self.lo && a < self.hi
     }
 }
 
@@ -78,19 +355,31 @@ impl ThreadAlloc {
 ///
 /// `init_slot` writes the canonical free pattern into a slot; it is applied
 /// to every slot of a new area (then bulk-persisted) and to invalid slots
-/// found during recovery before they re-enter free-lists.
+/// found during recovery before they re-enter circulation.
 pub struct DurablePool {
     id: PoolId,
     slot_size: usize,
     init_slot: unsafe fn(*mut u8),
-    per_thread: Box<[CachePadded<UnsafeCell<ThreadAlloc>>]>,
+    per_thread: Box<[CachePadded<UnsafeCell<TidState>>]>,
+    /// Owns every `AreaMeta` ever created (including retired ones) plus
+    /// serialises index mutation (grow / retire / rebuild). Never held on
+    /// the alloc/free fast paths.
+    metas: Mutex<Vec<Box<AreaMeta>>>,
+    /// Current lookup snapshot (never null after construction).
+    lookup: AtomicPtr<Lookup>,
+    /// Superseded lookup snapshots, freed at drop.
+    graveyard: Mutex<Vec<Box<Lookup>>>,
+    /// Fill-class Treiber stacks of re-acquirable areas.
+    classes: [TaggedStack; NCLASSES],
+    /// High-water mark of any tid's cache depth (churn-test probe).
+    cache_hwm: AtomicUsize,
     /// When true, `Drop` leaves the regions registered (crash simulation:
     /// the durable image must survive for recovery to adopt).
-    preserve_on_drop: std::sync::atomic::AtomicBool,
+    preserve_on_drop: AtomicBool,
     /// Balance of `alloc()` minus `free()` calls on this handle (leak
     /// assertions in tests). Recovery adopts pools with fresh counters and
-    /// frees slots it never allocated, so adopted pools can go negative.
-    outstanding: std::sync::atomic::AtomicI64,
+    /// [`DurablePool::rebuild_index`] resets this to the live-bit count.
+    outstanding: AtomicI64,
 }
 
 unsafe impl Send for DurablePool {}
@@ -106,15 +395,25 @@ impl DurablePool {
 
     fn with_id(id: PoolId, slot_size: usize, init_slot: unsafe fn(*mut u8)) -> Self {
         let per_thread = (0..MAX_THREADS)
-            .map(|_| CachePadded::new(UnsafeCell::new(ThreadAlloc::new())))
+            .map(|_| CachePadded::new(UnsafeCell::new(TidState::new())))
             .collect();
         DurablePool {
             id,
             slot_size,
             init_slot,
             per_thread,
-            preserve_on_drop: std::sync::atomic::AtomicBool::new(false),
-            outstanding: std::sync::atomic::AtomicI64::new(0),
+            metas: Mutex::new(Vec::new()),
+            lookup: AtomicPtr::new(Box::into_raw(Box::new(Lookup { entries: Vec::new() }))),
+            graveyard: Mutex::new(Vec::new()),
+            classes: [
+                TaggedStack::new(),
+                TaggedStack::new(),
+                TaggedStack::new(),
+                TaggedStack::new(),
+            ],
+            cache_hwm: AtomicUsize::new(0),
+            preserve_on_drop: AtomicBool::new(false),
+            outstanding: AtomicI64::new(0),
         }
     }
 
@@ -130,49 +429,214 @@ impl DurablePool {
 
     #[inline]
     #[allow(clippy::mut_from_ref)]
-    fn local(&self) -> &mut ThreadAlloc {
+    fn local(&self) -> &mut TidState {
         // Safety: the slot is indexed by the caller's unique tid; only the
         // owning thread ever touches it.
         unsafe { &mut *self.per_thread[tid()].get() }
     }
 
-    /// Allocate one slot (free-list first, then bump, then a new area).
-    /// The returned slot still carries the canonical free pattern (or the
-    /// pattern a previous `free` left — valid-and-deleted in both
-    /// algorithms' schemes).
+    #[inline]
+    fn lookup(&self) -> &Lookup {
+        // Safety: never null; superseded tables outlive all readers (freed
+        // only at pool drop, from the graveyard).
+        unsafe { &*self.lookup.load(Ordering::Acquire) }
+    }
+
+    /// Rebuild and swap the lookup snapshot. Caller holds `metas`.
+    fn swap_lookup(&self, metas: &[Box<AreaMeta>]) {
+        let mut entries: Vec<(usize, usize, *mut AreaMeta)> = metas
+            .iter()
+            .filter(|m| !m.retired.load(Ordering::Acquire))
+            .map(|m| (m.slots, m.end, &**m as *const AreaMeta as *mut AreaMeta))
+            .collect();
+        entries.sort_unstable_by_key(|e| e.0);
+        let new = Box::into_raw(Box::new(Lookup { entries }));
+        let old = self.lookup.swap(new, Ordering::AcqRel);
+        self.graveyard
+            .lock()
+            .unwrap()
+            .push(unsafe { Box::from_raw(old) });
+    }
+
+    /// Home area of `addr`, or null if the address is not a slot of this
+    /// pool (never the case for pointers handed out by `alloc`).
+    fn home_of(&self, addr: usize) -> *mut AreaMeta {
+        let lk = self.lookup();
+        let i = lk.entries.partition_point(|e| e.0 <= addr);
+        if i == 0 {
+            return std::ptr::null_mut();
+        }
+        let (_, end, meta) = lk.entries[i - 1];
+        if addr < end {
+            meta
+        } else {
+            std::ptr::null_mut()
+        }
+    }
+
+    /// Allocate one slot: per-tid cache, then a bitmap scan of the tid's
+    /// reserved area, then `acquire_area` (class stacks → sweep → grow).
+    /// No fences, no flushes — the set bit rides the next psync that
+    /// covers its header line. The returned slot still carries the
+    /// canonical free pattern (or the pattern a previous `free` left —
+    /// valid-and-deleted in both algorithms' schemes).
     pub fn alloc(&self) -> *mut u8 {
-        self.outstanding
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let ta = self.local();
-        if let Some(p) = ta.free.pop() {
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
+        G_LIVE_SLOTS.fetch_add(1, Ordering::Relaxed);
+        let t = self.local();
+        if let Some(p) = t.cache.pop() {
             return p;
         }
-        if ta.bump_next == ta.bump_cap {
-            self.grow(ta);
+        loop {
+            if t.area.is_null() {
+                t.area = self.acquire_area();
+                t.cursor = 0;
+            }
+            let meta = unsafe { &*t.area };
+            if let Some(p) = self.alloc_from(meta, &mut t.cursor) {
+                return p;
+            }
+            // Area exhausted (both scan passes found no clear bit): drop
+            // the reservation and move on. The cache is empty here — it is
+            // only ever filled by frees, and a non-empty cache returns at
+            // the top of `alloc`.
+            meta.reserved.store(false, Ordering::Release);
+            if meta.free_count.load(Ordering::Acquire) > 0 {
+                // A free slipped in behind the scan; make it findable.
+                self.maybe_push(t.area);
+            }
+            t.area = std::ptr::null_mut();
         }
-        let p = unsafe { ta.bump_base.add(ta.bump_next * self.slot_size) };
-        ta.bump_next += 1;
-        p
     }
 
-    fn grow(&self, ta: &mut ThreadAlloc) {
-        let bytes = SLOTS_PER_AREA * self.slot_size;
-        let base = alloc_region(self.id, bytes, RegionTag::Slots, self.slot_size);
+    /// Claim one clear bit of `meta`'s bitmap. Scans cursor→end, then
+    /// wraps 0→cursor to pick up cross-thread frees behind the cursor.
+    fn alloc_from(&self, meta: &AreaMeta, cursor: &mut usize) -> Option<*mut u8> {
+        let words = unsafe { area_bitmap(meta.base as *mut u8) };
+        let start = (*cursor).min(HDR_WORDS);
+        for (lo, hi) in [(start, HDR_WORDS), (0, start)] {
+            for w in lo..hi {
+                loop {
+                    let cur = words[w].load(Ordering::Acquire);
+                    if cur == u64::MAX {
+                        break;
+                    }
+                    let b = (!cur).trailing_zeros() as usize;
+                    let prev = words[w].fetch_or(1u64 << b, Ordering::AcqRel);
+                    if prev & (1u64 << b) == 0 {
+                        meta.free_count.fetch_sub(1, Ordering::AcqRel);
+                        *cursor = w;
+                        return Some((meta.slots + (w * 64 + b) * self.slot_size) as *mut u8);
+                    }
+                    // Lost a set race (possible only against a concurrent
+                    // index rebuild); reload and retry the word.
+                }
+            }
+        }
+        None
+    }
+
+    /// Reserve an area for the calling tid: emptiest class stack first,
+    /// then a sweep of the lookup snapshot, then grow.
+    fn acquire_area(&self) -> *mut AreaMeta {
+        for c in (0..NCLASSES).rev() {
+            while let Some(m) = self.classes[c].pop() {
+                let meta = unsafe { &*m };
+                meta.on_stack.store(false, Ordering::Release);
+                if meta.retired.load(Ordering::Acquire) {
+                    continue;
+                }
+                if meta
+                    .reserved
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_err()
+                {
+                    continue;
+                }
+                if meta.free_count.load(Ordering::Acquire) <= 0 {
+                    meta.reserved.store(false, Ordering::Release);
+                    continue;
+                }
+                return m;
+            }
+        }
+        // Sweep: stacks are best-effort (a maybe_push can lose its race);
+        // the lookup snapshot is the correctness net.
+        for &(_, _, m) in &self.lookup().entries {
+            let meta = unsafe { &*m };
+            if meta.retired.load(Ordering::Acquire)
+                || meta.free_count.load(Ordering::Acquire) <= 0
+            {
+                continue;
+            }
+            if meta
+                .reserved
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return m;
+            }
+        }
+        self.grow()
+    }
+
+    /// Allocate, initialise, and bulk-persist a fresh area; register it
+    /// reserved for the caller. One metered fence per area — amortised
+    /// over [`SLOTS_PER_AREA`] allocations, exactly as in the seed.
+    fn grow(&self) -> *mut AreaMeta {
+        let mut metas = self.metas.lock().unwrap();
+        let bytes = HDR_BYTES + SLOTS_PER_AREA * self.slot_size;
+        let base = alloc_region_with_hdr(self.id, bytes, RegionTag::Slots, self.slot_size, HDR_BYTES);
         for i in 0..SLOTS_PER_AREA {
-            unsafe { (self.init_slot)(base.add(i * self.slot_size)) };
+            unsafe { (self.init_slot)(base.add(HDR_BYTES + i * self.slot_size)) };
         }
         // One bulk persist of the fresh area (amortised; metered as a
-        // single fence, not SLOTS_PER_AREA line flushes).
+        // single fence, not SLOTS_PER_AREA line flushes). The zeroed
+        // bitmap header persists with it.
         persist_region_bulk(base);
         crate::pmem::fence();
-        ta.bump_base = base;
-        ta.bump_next = 0;
-        ta.bump_cap = SLOTS_PER_AREA;
+        let meta = AreaMeta::new(base as usize, self.slot_size, SLOTS_PER_AREA as isize, true);
+        let ptr = &*meta as *const AreaMeta as *mut AreaMeta;
+        metas.push(meta);
+        self.swap_lookup(&metas);
+        g_area_delta(1);
+        ptr
     }
 
-    /// Return a slot to the calling thread's free-list. The caller must
-    /// guarantee the slot is unreachable (EBR grace period elapsed) and
-    /// already carries a recoverable-as-free pattern.
+    /// Push `m` onto its fill-class stack if it is idle and has free slots.
+    /// Best-effort: a lost `on_stack` race just means the next free (or
+    /// the acquire sweep) re-offers the area.
+    fn maybe_push(&self, m: *mut AreaMeta) {
+        let meta = unsafe { &*m };
+        if meta.retired.load(Ordering::Acquire)
+            || meta.reserved.load(Ordering::Acquire)
+            || meta.on_stack.load(Ordering::Acquire)
+        {
+            return;
+        }
+        let free = meta.free_count.load(Ordering::Acquire);
+        if free <= 0 {
+            return;
+        }
+        if meta
+            .on_stack
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.classes[class_of(free)].push(m);
+        }
+    }
+
+    /// Return a slot. The caller must guarantee the slot is unreachable
+    /// (EBR grace period elapsed) and already carries a recoverable-as-free
+    /// pattern.
+    ///
+    /// Same-thread frees into the tid's reserved area ride the bounded
+    /// LIFO cache (the bit stays set — the slot is still "out" as far as
+    /// the bitmap is concerned, which recovery resolves by classifying the
+    /// slot content, not the bit). Everything else routes to the **home
+    /// area**: clear the bit, bump the fill count, and re-offer the area —
+    /// O(log areas), no per-tid growth, no fences, no flushes.
     ///
     /// Bumps the slot's generation word (Release, so any later state
     /// publication of the next incarnation — always a Release CAS/store in
@@ -182,21 +646,53 @@ impl DurablePool {
     /// slot's line (at the latest, the reusing insert's), which keeps the
     /// families' fence/flush budgets exactly unchanged — see module docs.
     pub fn free(&self, slot: *mut u8) {
-        self.outstanding
-            .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+        G_LIVE_SLOTS.fetch_sub(1, Ordering::Relaxed);
         unsafe {
-            slot_gen(slot, self.slot_size).fetch_add(1, std::sync::atomic::Ordering::Release);
+            slot_gen(slot, self.slot_size).fetch_add(1, Ordering::Release);
         }
         // An unreachable slot forfeits its durability obligations (a
         // failed insert frees a written-but-never-flushed node).
         crate::pmem::check::note_freed(slot as *const u8, self.slot_size);
-        self.local().free.push(slot);
+        let t = self.local();
+        let a = slot as usize;
+        if !t.area.is_null() {
+            let meta = unsafe { &*t.area };
+            if a >= meta.slots && a < meta.end && t.cache.len() < CACHE_CAP {
+                t.cache.push(slot);
+                self.cache_hwm.fetch_max(t.cache.len(), Ordering::Relaxed);
+                return;
+            }
+        }
+        let m = self.home_of(a);
+        debug_assert!(!m.is_null(), "freed slot must belong to a live area");
+        if m.is_null() {
+            return;
+        }
+        let meta = unsafe { &*m };
+        let idx = (a - meta.slots) / self.slot_size;
+        let words = unsafe { area_bitmap(meta.base as *mut u8) };
+        let prev = words[idx / 64].fetch_and(!(1u64 << (idx % 64)), Ordering::Release);
+        debug_assert!(prev & (1u64 << (idx % 64)) != 0, "double free of a slot");
+        meta.free_count.fetch_add(1, Ordering::AcqRel);
+        self.maybe_push(m);
     }
 
     /// `alloc()` minus `free()` balance (see the field docs; 0 after a
     /// leak-free teardown of a fresh pool).
     pub fn outstanding(&self) -> i64 {
-        self.outstanding.load(std::sync::atomic::Ordering::Relaxed)
+        self.outstanding.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of any tid's slot-cache depth (bounded by
+    /// [`CACHE_CAP`] by construction; the churn test pins it).
+    pub fn cache_high_water(&self) -> usize {
+        self.cache_hwm.load(Ordering::Relaxed)
+    }
+
+    /// Live (non-retired) areas of this pool.
+    pub fn live_areas(&self) -> usize {
+        self.lookup().entries.len()
     }
 
     /// All durable regions of this pool (recovery scan).
@@ -205,7 +701,8 @@ impl DurablePool {
     }
 
     /// Iterate every slot in every `Slots` area of the pool (other region
-    /// kinds — persistent bucket arrays, root cells — are skipped).
+    /// kinds — persistent bucket arrays, root cells — are skipped; the
+    /// occupancy header is not a slot).
     pub fn iter_slots(&self) -> impl Iterator<Item = *mut u8> {
         let regions = self.regions();
         let slot = self.slot_size;
@@ -213,24 +710,130 @@ impl DurablePool {
             .into_iter()
             .filter(|r| r.tag == RegionTag::Slots)
             .flat_map(move |r| {
-                let n = r.len / slot;
-                let base = r.base as usize;
+                let n = (r.len - r.hdr) / slot;
+                let base = r.base as usize + r.hdr;
                 (0..n).map(move |i| (base + i * slot) as *mut u8)
             })
     }
 
+    // -- Compaction hooks ---------------------------------------------------
+
+    /// Reserve up to `max` low-fill areas (≥ `min_free` clear bits) for
+    /// compaction. Claimed areas disappear from `acquire_area` routing;
+    /// always leaves at least one area unclaimed so allocation never has
+    /// to grow just because the compactor is busy. Claims for areas the
+    /// caller abandons must be released with [`DurablePool::unclaim_area`].
+    pub fn claim_compaction_targets(&self, max: usize, min_free: usize) -> Vec<AreaClaim> {
+        let mut claims = Vec::new();
+        let lk = self.lookup();
+        let mut remaining = lk.entries.len();
+        for &(lo, hi, m) in &lk.entries {
+            if claims.len() >= max || remaining <= 1 {
+                break;
+            }
+            let meta = unsafe { &*m };
+            if meta.retired.load(Ordering::Acquire)
+                || meta.free_count.load(Ordering::Acquire) < min_free as isize
+            {
+                continue;
+            }
+            if meta
+                .reserved
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                remaining -= 1;
+                claims.push(AreaClaim { meta: m, lo, hi });
+            }
+        }
+        claims
+    }
+
+    /// Is the claimed area's bitmap all-zero (no live or in-flight slots)?
+    /// A slot allocated before the claim but not yet freed keeps its bit
+    /// set, so retirement naturally waits for stragglers to converge.
+    pub fn area_is_empty(&self, c: &AreaClaim) -> bool {
+        let meta = unsafe { &*c.meta };
+        unsafe { area_bitmap(meta.base as *mut u8) }
+            .iter()
+            .all(|w| w.load(Ordering::Acquire) == 0)
+    }
+
+    /// Release a compaction claim without retiring (survivors remain; the
+    /// area goes back into allocation routing).
+    pub fn unclaim_area(&self, c: &AreaClaim) {
+        let meta = unsafe { &*c.meta };
+        meta.reserved.store(false, Ordering::Release);
+        self.maybe_push(c.meta);
+    }
+
+    /// Retire a claimed, empty area and return its memory: the area leaves
+    /// the lookup immediately (no new references can form), and the region
+    /// itself is released through `ebr` so any reader still validating a
+    /// stale `(ptr, gen)` hint against a slot's gen word finishes its
+    /// grace period first. The claim is consumed.
+    pub fn retire_area(&self, c: AreaClaim, ebr: &super::ebr::Ebr) {
+        debug_assert!(self.area_is_empty(&c), "retiring a non-empty area");
+        let meta = unsafe { &*c.meta };
+        meta.retired.store(true, Ordering::Release);
+        {
+            let metas = self.metas.lock().unwrap();
+            self.swap_lookup(&metas);
+        }
+        g_area_delta(-1);
+        G_RETURNED.fetch_add(1, Ordering::Relaxed);
+        unsafe fn release_cb(p: *mut u8, _ctx: usize) {
+            // No-op if the pool was torn down first (release_pool already
+            // freed the region): release_region is keyed by base address.
+            release_region(p);
+        }
+        ebr.retire(meta.base as *mut u8, 0, release_cb);
+    }
+
+    // -- Recovery hooks -----------------------------------------------------
+
     /// Mark this pool as crash-preserved: dropping the structure will NOT
     /// release the durable regions, so recovery can adopt them.
     pub fn preserve(&self) {
-        self.preserve_on_drop
-            .store(true, std::sync::atomic::Ordering::SeqCst);
+        self.preserve_on_drop.store(true, Ordering::SeqCst);
     }
 
-    /// Adopt the durable regions of a crashed pool. The new pool has empty
-    /// bump/free state; the recovery procedure classifies each slot and
-    /// calls [`DurablePool::free`]/normalisation as appropriate.
+    /// Adopt the durable regions of a crashed pool. The new pool has an
+    /// empty index; the recovery procedure classifies each slot, rebuilds
+    /// the occupancy bitmaps ([`clear_region_bitmap`] /
+    /// [`mark_region_slot_live`]), then calls
+    /// [`DurablePool::rebuild_index`] to derive the upper level.
     pub fn adopt(id: PoolId, slot_size: usize, init_slot: unsafe fn(*mut u8)) -> Self {
         Self::with_id(id, slot_size, init_slot)
+    }
+
+    /// Derive the volatile upper level from the rebuilt durable bitmaps:
+    /// per-area free counts from popcounts, the sorted lookup, the class
+    /// stacks, and the outstanding balance (= total set bits). Called once
+    /// at the end of a recovery scan, before any alloc/free traffic.
+    pub fn rebuild_index(&self) {
+        let mut metas = self.metas.lock().unwrap();
+        metas.clear();
+        let mut used_total: i64 = 0;
+        for r in self.regions() {
+            if r.tag != RegionTag::Slots || r.hdr == 0 {
+                continue;
+            }
+            let used: u32 = unsafe { area_bitmap(r.base) }
+                .iter()
+                .map(|w| w.load(Ordering::Relaxed).count_ones())
+                .sum();
+            used_total += used as i64;
+            let free = SLOTS_PER_AREA as isize - used as isize;
+            metas.push(AreaMeta::new(r.base as usize, self.slot_size, free, false));
+        }
+        self.swap_lookup(&metas);
+        let old = self.outstanding.swap(used_total, Ordering::Relaxed);
+        G_LIVE_SLOTS.fetch_add(used_total - old, Ordering::Relaxed);
+        g_area_delta(metas.len() as i64);
+        for m in metas.iter() {
+            self.maybe_push(&**m as *const AreaMeta as *mut AreaMeta);
+        }
     }
 
     /// Re-initialise a slot to the canonical free pattern (recovery uses
@@ -241,6 +844,7 @@ impl DurablePool {
     }
 
     /// Bulk-persist every region (end of a recovery normalisation pass).
+    /// This is also the durability point of the rebuilt bitmap headers.
     pub fn persist_all_regions(&self) {
         for r in self.regions() {
             persist_region_bulk(r.base);
@@ -251,9 +855,17 @@ impl DurablePool {
 
 impl Drop for DurablePool {
     fn drop(&mut self) {
-        if !self.preserve_on_drop.load(std::sync::atomic::Ordering::SeqCst) {
+        // Gauge handoff: this handle's live areas/slots leave the gauge;
+        // a recovery adoption re-adds them via rebuild_index.
+        g_area_delta(-(self.live_areas() as i64));
+        G_LIVE_SLOTS.fetch_sub(self.outstanding().max(0), Ordering::Relaxed);
+        if !self.preserve_on_drop.load(Ordering::SeqCst) {
             release_pool(self.id);
         }
+        unsafe {
+            drop(Box::from_raw(self.lookup.load(Ordering::Acquire)));
+        }
+        self.graveyard.lock().unwrap().clear();
     }
 }
 
@@ -319,7 +931,6 @@ mod tests {
 
     #[test]
     fn free_bumps_generation_and_init_preserves_it() {
-        use std::sync::atomic::Ordering;
         let pool = DurablePool::new(64, init_marker);
         let p = pool.alloc();
         let g0 = unsafe { slot_gen(p, 64).load(Ordering::SeqCst) };
@@ -349,5 +960,119 @@ mod tests {
         let adopted = DurablePool::adopt(id, 64, init_marker);
         assert_eq!(adopted.regions().len(), 1);
         // Cleanup: let the adopted pool release the regions.
+    }
+
+    #[test]
+    fn bitmap_tracks_alloc_and_cross_free() {
+        let pool = DurablePool::new(64, init_marker);
+        let p = pool.alloc();
+        let r = pool
+            .regions()
+            .into_iter()
+            .find(|r| r.tag == RegionTag::Slots)
+            .unwrap();
+        let bit0 = unsafe { area_bitmap(r.base) }[0].load(Ordering::SeqCst) & 1;
+        assert_eq!(bit0, 1, "allocated slot 0 must have its bit set");
+        // A foreign-thread free must clear the home bit (no tid cache).
+        let pool2 = std::sync::Arc::new(pool);
+        let pc = pool2.clone();
+        let pp = p as usize;
+        std::thread::spawn(move || pc.free(pp as *mut u8))
+            .join()
+            .unwrap();
+        let bit0 = unsafe { area_bitmap(r.base) }[0].load(Ordering::SeqCst) & 1;
+        assert_eq!(bit0, 0, "cross-thread free must clear the home bit");
+        assert_eq!(pool2.outstanding(), 0);
+    }
+
+    /// Satellite: 2 producers / 1 consumer churn. Frees land on the
+    /// consumer's thread but route to the producers' home areas, so no
+    /// per-tid state grows with throughput: the cache high-water stays at
+    /// the CACHE_CAP bound and the pool reuses a handful of areas instead
+    /// of growing one per wave.
+    #[test]
+    fn cross_thread_frees_stay_bounded() {
+        use std::sync::mpsc;
+        use std::sync::Arc;
+        let pool = Arc::new(DurablePool::new(64, init_marker));
+        // Bounded channel: producers outrun the consumer by at most a few
+        // waves, so the live-slot envelope (and thus the area count) is
+        // deterministic rather than scheduler-dependent.
+        let (tx, rx) = mpsc::sync_channel::<Vec<usize>>(2);
+        let producers: Vec<_> = (0..2)
+            .map(|_| {
+                let pool = pool.clone();
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        let wave: Vec<usize> =
+                            (0..256).map(|_| pool.alloc() as usize).collect();
+                        tx.send(wave).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumer = {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                while let Ok(wave) = rx.recv() {
+                    for p in wave {
+                        pool.free(p as *mut u8);
+                    }
+                }
+            })
+        };
+        for h in producers {
+            h.join().unwrap();
+        }
+        consumer.join().unwrap();
+        assert_eq!(pool.outstanding(), 0, "every alloc was freed");
+        assert!(
+            pool.cache_high_water() <= CACHE_CAP,
+            "per-tid cache depth must stay bounded (got {})",
+            pool.cache_high_water()
+        );
+        // 2×100 waves of 256 slots = 51200 allocations; home-routed frees
+        // keep the working set to the producers' active areas, far below
+        // the 13 areas the churn would pin without reuse.
+        assert!(
+            pool.regions().len() <= 6,
+            "home-routed frees must bound area growth (got {} areas)",
+            pool.regions().len()
+        );
+    }
+
+    /// Claim → (already empty) → retire returns the region to the OS once
+    /// the EBR grace period elapses.
+    #[test]
+    fn claim_and_retire_returns_empty_area() {
+        let pool = DurablePool::new(64, init_marker);
+        // Fill area 1 completely, spilling into area 2.
+        let slots: Vec<usize> = (0..SLOTS_PER_AREA + 1).map(|_| pool.alloc() as usize).collect();
+        assert_eq!(pool.regions().len(), 2);
+        // Free everything in area 1 from a foreign thread: the first
+        // SLOTS_PER_AREA allocations are exactly area 1's slots (a fresh
+        // area's bitmap scan hands them out in order), and a foreign tid
+        // holds no reservation, so every free routes home and clears bits.
+        let pool2 = std::sync::Arc::new(pool);
+        let pc = pool2.clone();
+        let foreign: Vec<usize> = slots[..SLOTS_PER_AREA].to_vec();
+        std::thread::spawn(move || {
+            for s in foreign {
+                pc.free(s as *mut u8);
+            }
+        })
+        .join()
+        .unwrap();
+        let claims = pool2.claim_compaction_targets(4, SLOTS_PER_AREA);
+        assert_eq!(claims.len(), 1, "exactly the drained area is claimable");
+        let c = claims.into_iter().next().unwrap();
+        assert!(pool2.area_is_empty(&c));
+        let ebr = crate::alloc::ebr::Ebr::new();
+        pool2.retire_area(c, &ebr);
+        assert_eq!(pool2.live_areas(), 1, "retired area left the lookup");
+        unsafe { ebr.drain_all() };
+        assert_eq!(pool2.regions().len(), 1, "retired region returned to the OS");
     }
 }

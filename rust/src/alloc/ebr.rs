@@ -138,6 +138,29 @@ impl Ebr {
         self.local().limbo.len()
     }
 
+    /// Current global epoch. The compaction drain protocol stamps an area
+    /// with the epoch at migration time and retires it only once the
+    /// global epoch has advanced ≥ 2 past the stamp — the same "no thread
+    /// can still be in the stamp's epoch" argument `collect` uses.
+    pub fn global_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Nudge the epoch forward and drain the calling thread's limbo list.
+    /// `retire` only collects every COLLECT_THRESHOLD items, which starves
+    /// low-traffic maintenance loops (a compaction tick retires a handful
+    /// of regions and then waits forever); an explicit kick from idle
+    /// ticks keeps the drain protocol moving. Pins briefly so a stalled
+    /// *idle* thread is never the advancement blocker.
+    pub fn try_collect(&self) {
+        drop(self.pin());
+        self.try_advance();
+        let local = self.local();
+        if !local.limbo.is_empty() {
+            self.collect(local);
+        }
+    }
+
     fn try_advance(&self) {
         let e = self.epoch.load(Ordering::SeqCst);
         let n = self.hwm.load(Ordering::SeqCst);

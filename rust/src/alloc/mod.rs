@@ -1,10 +1,15 @@
-//! ssmem-style durable memory management (paper §5).
+//! ssmem-style durable memory management (paper §5), grown into a
+//! two-level crash-consistent allocator (DESIGN.md §Allocator).
 //!
-//! * [`area`] — per-thread **durable areas** of fixed 64-byte slots, the
-//!   only place persistent nodes live, so recovery can find every
-//!   potential set member by scanning areas (no durable linking needed,
-//!   and no persistent-leak logging: a lost allocation is found by the
-//!   scan and reclaimed via the validity scheme).
+//! * [`area`] — **durable areas** of fixed 64-byte slots, the only place
+//!   persistent nodes live, so recovery can find every potential set
+//!   member by scanning areas (no durable linking needed, and no
+//!   persistent-leak logging: a lost allocation is found by the scan and
+//!   reclaimed via the validity scheme). Since PR 9 each area carries an
+//!   in-image occupancy bitmap (lower level, zero extra psyncs) under a
+//!   volatile lock-free index of fill classes (upper level) that routes
+//!   allocations to the emptiest area, sends cross-thread frees to their
+//!   home area, and feeds the compaction / memory-return hooks.
 //! * [`ebr`] — **epoch-based reclamation** guarding against ABA and
 //!   use-after-free, mirroring the paper's choice of the ssmem EBR
 //!   ("not lock-free but provides progress when threads are not stuck").
@@ -22,6 +27,6 @@ pub mod area;
 pub mod ebr;
 pub mod volatile;
 
-pub use area::{slot_gen, DurablePool};
+pub use area::{gauge, note_compaction, slot_gen, AllocGauge, AreaClaim, DurablePool};
 pub use ebr::{Ebr, Guard};
 pub use volatile::{vslot_gen, VolatilePool};

@@ -1,0 +1,303 @@
+//! `bench --fig alloc`: allocator lifecycle — fill, mass delete, steady
+//! state, Zipf churn.
+//!
+//! The figure the two-level allocator argues from: a store that grows to
+//! its peak and then shrinks must hand memory back, and the alloc/free
+//! fast paths must cost **zero** fences and zero flushes (the occupancy
+//! bitmaps ride the owning update's psync; recovery rebuilds them from
+//! the classify scan). Per durable family the point runs:
+//!
+//! 1. **fill** — insert the whole key range (1M under `DURASETS_FULL`),
+//!    recording the peak Slots-region count,
+//! 2. **delete 90%** — the paper-style mass retirement,
+//! 3. **steady state** — drive [`ConcurrentSet::maintain`] until the
+//!    compaction pipeline runs dry; the point records how many areas the
+//!    pipeline returned and the RSS delta across the drain,
+//! 4. **Zipf churn** — skewed mixed ops over the surviving keyspace
+//!    (Kops/s), proving the compacted image serves traffic at speed,
+//! 5. **alloc-path meter** — a raw alloc/free storm on a scratch
+//!    [`DurablePool`], metered with the thread-local psync counters.
+//!    `alloc_fences`/`alloc_flushes` land in `BENCH_alloc.json`, where CI
+//!    fails the gate on any nonzero value (and on zero returned areas).
+
+use crate::alloc::DurablePool;
+use crate::pmem::region::{regions_of, RegionTag};
+use crate::pmem::stats;
+use crate::sets::{self, ConcurrentSet, Family};
+use crate::workload::zipf::Zipf;
+use std::time::{Duration, Instant};
+
+/// Churn worker threads (matches the check-figure client count).
+const THREADS: usize = 2;
+
+/// Initial buckets — the resizable table grows itself from here.
+const NBUCKETS: usize = 1 << 10;
+
+/// Alloc/free cycles of the raw fast-path meter (crosses area boundaries:
+/// several areas' worth of slots are held live at the storm's peak).
+const METER_CYCLES: usize = 3 * crate::alloc::area::SLOTS_PER_AREA / 2;
+
+/// Maintain-loop backstop; the loop normally exits on quiescence.
+const MAX_TICKS: usize = 10_000;
+
+/// One family's lifecycle measurement.
+pub struct AllocPoint {
+    pub family: Family,
+    /// Keys inserted in the fill phase.
+    pub fill: u64,
+    /// Slots regions at peak (post-fill).
+    pub peak_areas: usize,
+    /// Slots regions once maintenance ran dry.
+    pub steady_areas: usize,
+    /// Maintain calls spent reaching steady state.
+    pub ticks: usize,
+    /// RSS delta across the maintenance drain (negative = memory
+    /// returned), in KiB; 0 when `/proc/self/status` is unavailable.
+    pub rss_delta_kb: i64,
+    /// Zipf-churn throughput.
+    pub churn_ops: u64,
+    pub churn_elapsed: Duration,
+    /// Raw alloc/free fast-path psync meter (the zero pin).
+    pub alloc_fences: u64,
+    pub alloc_flushes: u64,
+}
+
+impl AllocPoint {
+    pub fn areas_returned(&self) -> usize {
+        self.peak_areas.saturating_sub(self.steady_areas)
+    }
+
+    pub fn churn_kops(&self) -> f64 {
+        self.churn_ops as f64 / self.churn_elapsed.as_secs_f64().max(1e-9) / 1e3
+    }
+}
+
+/// Current RSS in KiB per `/proc/self/status` (None off-Linux).
+fn rss_kb() -> Option<i64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn slots_regions(pool: crate::pmem::PoolId) -> usize {
+    regions_of(pool).iter().filter(|r| r.tag == RegionTag::Slots).count()
+}
+
+/// Raw fast-path meter: alloc a multi-area working set, free it all, and
+/// report the fences/flushes the storm cost this thread. The allocator's
+/// contract says both are exactly zero — bitmap words ride the next
+/// owner-update psync and are never eagerly persisted.
+fn meter_alloc_path() -> (u64, u64) {
+    unsafe fn noop_init(_slot: *mut u8) {}
+    let pool = DurablePool::new(crate::util::CACHE_LINE, noop_init);
+    let before = stats::thread_snapshot();
+    let mut held: Vec<*mut u8> = Vec::with_capacity(METER_CYCLES);
+    for _ in 0..METER_CYCLES {
+        held.push(pool.alloc());
+    }
+    for slot in held.drain(..) {
+        pool.free(slot);
+    }
+    // A second wave re-serves the same slots through the free lists.
+    for _ in 0..METER_CYCLES / 2 {
+        held.push(pool.alloc());
+    }
+    for slot in held {
+        pool.free(slot);
+    }
+    let d = stats::thread_snapshot().since(&before);
+    (d.fences, d.flushes)
+}
+
+/// Zipf-skewed mixed churn (50% contains / 30% insert / 20% remove) over
+/// the full fill keyspace, `THREADS` workers, fixed wall time.
+fn churn(set: &dyn ConcurrentSet, keys: u64, duration: Duration, seed: u64) -> (u64, Duration) {
+    let zipf = &Zipf::new(keys, 0.8);
+    let t0 = Instant::now();
+    let ops: u64 = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS as u64)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut x = seed ^ (t.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1);
+                    let mut ops = 0u64;
+                    while t0.elapsed() < duration {
+                        for _ in 0..256 {
+                            x ^= x << 13;
+                            x ^= x >> 7;
+                            x ^= x << 17;
+                            let key = zipf.sample(x);
+                            match x % 10 {
+                                0..=4 => {
+                                    set.contains(key);
+                                }
+                                5..=7 => {
+                                    set.insert(key, key);
+                                }
+                                _ => {
+                                    set.remove(key);
+                                }
+                            }
+                        }
+                        ops += 256;
+                    }
+                    ops
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    (ops, t0.elapsed())
+}
+
+fn run_point(family: Family, fill: u64, duration: Duration, seed: u64) -> AllocPoint {
+    let set = sets::new_hash(family, NBUCKETS);
+    let pool = set.durable_pool().expect("durable family");
+
+    // Phase 1: fill to peak.
+    for k in 0..fill {
+        set.insert(k, k);
+    }
+    let peak_areas = slots_regions(pool);
+
+    // Phase 2: mass delete — 90% of the keyspace.
+    for k in 0..fill {
+        if k % 10 != 0 {
+            set.remove(k);
+        }
+    }
+
+    // Phase 3: maintain until the pipeline runs dry (a few consecutive
+    // no-work ticks — phases need EBR grace periods between ticks).
+    let rss_before = rss_kb();
+    let mut ticks = 0;
+    let mut idle = 0;
+    while idle < 8 && ticks < MAX_TICKS {
+        idle = if set.maintain() { 0 } else { idle + 1 };
+        ticks += 1;
+    }
+    let steady_areas = slots_regions(pool);
+    let rss_delta_kb = match (rss_before, rss_kb()) {
+        (Some(a), Some(b)) => b - a,
+        _ => 0,
+    };
+
+    // Phase 4: skewed churn over the compacted image.
+    let (churn_ops, churn_elapsed) = churn(set.as_ref(), fill, duration, seed);
+
+    // Phase 5: the raw fast-path psync meter (scratch pool, this thread).
+    let (alloc_fences, alloc_flushes) = meter_alloc_path();
+
+    AllocPoint {
+        family,
+        fill,
+        peak_areas,
+        steady_areas,
+        ticks,
+        rss_delta_kb,
+        churn_ops,
+        churn_elapsed,
+        alloc_fences,
+        alloc_flushes,
+    }
+}
+
+/// Sweep the durable families. Fill is 1M keys under `DURASETS_FULL`,
+/// scaled down (a few dozen areas) otherwise.
+pub fn sweep(full: bool, duration: Duration, seed: u64) -> Vec<AllocPoint> {
+    let fill = if full { 1_000_000 } else { 120_000 };
+    Family::DURABLE
+        .into_iter()
+        .map(|f| run_point(f, fill, duration, seed))
+        .collect()
+}
+
+/// Text table: lifecycle areas + churn throughput + the zero-psync pin.
+pub fn render(points: &[AllocPoint]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== alloc: fill -> delete 90% -> steady state -> Zipf churn ({} keys, {THREADS} threads) ==\n",
+        points.first().map_or(0, |p| p.fill)
+    ));
+    out.push_str(&format!(
+        "{:>9} | {:>5} {:>6} {:>8} {:>6} | {:>10} {:>10} | {:>8} {:>8}\n",
+        "family", "peak", "steady", "returned", "ticks", "churn Kops", "rss dKiB", "a.fences", "a.flush"
+    ));
+    for p in points {
+        out.push_str(&format!(
+            "{:>9} | {:>5} {:>6} {:>8} {:>6} | {:>10.1} {:>10} | {:>8} {:>8}\n",
+            p.family.to_string(),
+            p.peak_areas,
+            p.steady_areas,
+            p.areas_returned(),
+            p.ticks,
+            p.churn_kops(),
+            p.rss_delta_kb,
+            p.alloc_fences,
+            p.alloc_flushes,
+        ));
+    }
+    out
+}
+
+/// JSON points for `BENCH_alloc.json`. CI fails the gate on any
+/// `"alloc_fences"`/`"alloc_flushes"` ≠ 0 or `"areas_returned":0`.
+pub fn to_json_points(points: &[AllocPoint]) -> Vec<String> {
+    points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"fig\":\"alloc\",\"x\":\"family={}\",\"family\":\"{}\",\"fill\":{},\"peak_areas\":{},\"steady_areas\":{},\"areas_returned\":{},\"maintain_ticks\":{},\"rss_delta_kb\":{},\"churn_kops\":{:.2},\"churn_ops\":{},\"alloc_fences\":{},\"alloc_flushes\":{},\"elapsed_ms\":{}}}",
+                p.family,
+                p.family,
+                p.fill,
+                p.peak_areas,
+                p.steady_areas,
+                p.areas_returned(),
+                p.ticks,
+                p.rss_delta_kb,
+                p.churn_kops(),
+                p.churn_ops,
+                p.alloc_fences,
+                p.alloc_flushes,
+                p.churn_elapsed.as_millis(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_fast_path_is_psync_free() {
+        let (fences, flushes) = meter_alloc_path();
+        assert_eq!(fences, 0, "alloc/free fast path issued fences");
+        assert_eq!(flushes, 0, "alloc/free fast path issued flushes");
+    }
+
+    #[test]
+    fn alloc_point_returns_areas_and_stays_fence_free() {
+        // One scaled-down point per durable family: the maintenance drain
+        // must hand back at least half the peak areas (the PR's
+        // acceptance bar at bench scale) and the raw alloc path must
+        // meter zero psyncs — end to end through the bench driver.
+        for family in Family::DURABLE {
+            let p = run_point(family, 9000, Duration::from_millis(60), 0xA110C);
+            assert!(p.peak_areas >= 3, "{family}: too few areas ({})", p.peak_areas);
+            assert!(
+                p.areas_returned() * 2 >= p.peak_areas,
+                "{family}: returned {} of {} peak areas",
+                p.areas_returned(),
+                p.peak_areas
+            );
+            assert!(p.churn_ops > 0, "{family}: churn did no work");
+            assert_eq!(p.alloc_fences, 0, "{family}: alloc-path fences");
+            assert_eq!(p.alloc_flushes, 0, "{family}: alloc-path flushes");
+            let json = &to_json_points(&[p])[0];
+            assert!(json.contains("\"fig\":\"alloc\""), "{json}");
+            assert!(json.contains("\"alloc_fences\":0"), "{json}");
+            assert!(json.contains("\"alloc_flushes\":0"), "{json}");
+        }
+    }
+}

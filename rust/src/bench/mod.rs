@@ -11,6 +11,7 @@
 //! switches to paper-scale sweeps and longer phases — see DESIGN.md's
 //! single-core note).
 
+pub mod alloc;
 pub mod check;
 pub mod connscale;
 pub mod recovery;

@@ -18,6 +18,12 @@
 //! * **R4 fence-pin pairing** — every durable-family file carries a pinned
 //!   fence/flush-count assertion (`.fences`) in its test module, so a
 //!   persistency-protocol change cannot land without re-pinning budgets.
+//! * **R5 allocator ownership** — raw region carving (`alloc_region(`,
+//!   `alloc_region_with_hdr(`) appears only under `src/alloc/` and
+//!   `src/pmem/`; everything else allocates through `DurablePool`, so
+//!   every durable byte sits under an occupancy bitmap that recovery's
+//!   classify scan rebuilds and compaction can migrate. Test code is
+//!   exempt (harnesses may carve scratch regions).
 //!
 //! Findings are suppressed by `durlint.allow` (next to `Cargo.toml`):
 //! one entry per line, `RULE <path-suffix> <line-substring…>`. Entries
@@ -236,5 +242,31 @@ fn scan_file(rel: &str, src: &str, findings: &mut Vec<Finding>) {
             "",
             String::from("durable-family file without a pinned fence-count assertion"),
         );
+    }
+
+    // R5: raw region carving is the allocator's and pmem's business only.
+    // Library code goes through DurablePool/VolatilePool so every durable
+    // byte sits under an occupancy bitmap the recovery scan can rebuild;
+    // a stray alloc_region elsewhere would be invisible to compaction and
+    // the classify pass. Test code (tests/ and #[cfg(test)] tails) is
+    // exempt — harnesses may carve scratch regions.
+    let r5_scope = rel.starts_with("src/")
+        && !rel.starts_with("src/alloc/")
+        && !rel.starts_with("src/pmem/")
+        && !in_bin;
+    if r5_scope {
+        for (i, l) in lines.iter().enumerate().take(tests_at) {
+            if l.contains("alloc_region(") || l.contains("alloc_region_with_hdr(") {
+                push(
+                    findings,
+                    "R5",
+                    i,
+                    l,
+                    String::from(
+                        "raw alloc_region outside src/alloc//src/pmem/ — allocate through DurablePool",
+                    ),
+                );
+            }
+        }
     }
 }

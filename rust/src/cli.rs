@@ -64,7 +64,7 @@ USAGE:
 COMMANDS:
   serve         run the sharded durable KV service (TCP line protocol)
   bench         regenerate a paper figure:
-                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|rwpath|scan|connscale|all
+                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|rwpath|scan|connscale|alloc|all
                 --json FILE writes machine-readable data points
                 --fig recovery sweeps rebuild wall-clock over recovery
                 threads x pool sizes (--keys N, or DURASETS_RECOVERY_KEYS
@@ -79,6 +79,11 @@ COMMANDS:
                 --fig connscale sweeps live connections x active fraction
                 over the event plane, reporting RSS/threads per point
                 (smoke sizes by default; DURASETS_FULL=1 goes to 10k)
+                --fig alloc runs the allocator lifecycle per durable
+                family: fill (1M under DURASETS_FULL) -> delete 90% ->
+                maintain to steady state -> Zipf churn, reporting areas
+                returned, RSS delta and the alloc-path psync meter
+                (pinned 0)
   crash-test    run ops, crash (sim), recover, verify — end to end
   recover-demo  build a store, crash it, time rust vs XLA-accelerated recovery
   workload      print a sample of the deterministic op stream

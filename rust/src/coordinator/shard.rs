@@ -33,13 +33,21 @@
 //! (one `PsyncScope`), report results, stay parked until released. See
 //! `coordinator::txn` for the protocol and DESIGN.md §Transactions for
 //! why the parking window is what makes recovery's roll-forward sound.
+//!
+//! **Idle maintenance.** A worker that sees no traffic for [`IDLE_TICK`]
+//! spends the wakeup on [`ConcurrentSet::maintain`]: one step of area
+//! compaction / memory return / bucket-array shrink (DESIGN.md
+//! §Allocator). Because every wire update for a shard flows through its
+//! worker, the worker thread is the shard's sole updater — precisely the
+//! serialization `maintain` demands; concurrent readers (the psync-free
+//! read lane) are always safe against it.
 
 use crate::config::{Config, Structure};
 use crate::pmem::PoolId;
 use crate::sets::recovery::{PhaseTimings, RecoveredStats};
 use crate::sets::{self, ConcurrentSet, Family, OpResult, SetOp};
 use anyhow::Result;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -306,6 +314,14 @@ const HOLD_MAX: Duration = Duration::from_millis(1);
 /// below it, commits go out immediately (single-client latency).
 const HOLD_DEPTH: f64 = 4.0;
 
+/// How long a worker waits for traffic before spending the idle wakeup
+/// on one [`ConcurrentSet::maintain`] step (area compaction + memory
+/// return + table shrink). All wire *updates* for a shard flow through
+/// its worker, so the worker thread is the shard's sole updater — which
+/// is exactly the serialization `maintain` requires; the psync-free read
+/// lane that bypasses the queue is reader-only and maintenance-safe.
+const IDLE_TICK: Duration = Duration::from_millis(50);
+
 /// Worker-queue front over a shard set: bounded channel + one worker
 /// thread per shard, draining the queue into adaptive group commits.
 pub struct ShardWorker {
@@ -474,9 +490,17 @@ fn worker_loop(
         sinks.clear();
         let mut parked: Option<TxnHandle> = None;
         let mut shutdown = false;
-        match rx.recv() {
+        match rx.recv_timeout(IDLE_TICK) {
             Ok(req) => gather(req, &mut ops, &mut sinks, &mut parked, &mut shutdown),
-            Err(_) => return,
+            Err(RecvTimeoutError::Timeout) => {
+                // Idle: no request arrived for a whole tick. Spend the
+                // wakeup on background maintenance instead — the worker
+                // is the shard's sole updater, so compaction/shrink run
+                // exactly under the serialization they require.
+                let _ = set.maintain();
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
         }
         // Opportunistic drain up to k; when the depth EWMA says load is
         // heavy, hold (bounded by the commit-latency EWMA) to fill the
@@ -703,6 +727,50 @@ mod tests {
         let (rtx, rrx) = sync_channel(1);
         w.tx.send(Request::Op(SetOp::Insert(5, 5), rtx)).unwrap();
         assert_eq!(rrx.recv().unwrap(), Response::Ok(true), "worker resumes after abort");
+        w.shutdown();
+    }
+
+    fn slots_regions(pool: PoolId) -> usize {
+        crate::pmem::region::regions_of(pool)
+            .iter()
+            .filter(|r| r.tag == crate::pmem::region::RegionTag::Slots)
+            .count()
+    }
+
+    #[test]
+    fn idle_worker_runs_maintenance_and_returns_areas() {
+        // Fill several areas through the worker, delete 90%, then go
+        // idle: the worker's IDLE_TICK wakeups must drive the compaction
+        // pipeline until at least one area is handed back.
+        let set: Arc<dyn ConcurrentSet> = Arc::from(sets::new_hash(Family::LinkFree, 16));
+        let pool = set.durable_pool().unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let w = ShardWorker::spawn(set.clone(), metrics);
+        let (btx, brx) = sync_channel(1);
+        let inserts: Vec<SetOp> = (0..9000u64).map(|k| SetOp::Insert(k, k)).collect();
+        w.tx.send(Request::Batch(inserts, BatchSink::blocking(btx.clone()))).unwrap();
+        assert!(brx.recv().unwrap().iter().all(|r| *r == Response::Ok(true)));
+        let peak = slots_regions(pool);
+        assert!(peak >= 3, "test must span several areas (got {peak})");
+        let removes: Vec<SetOp> =
+            (0..9000u64).filter(|k| k % 10 != 0).map(SetOp::Remove).collect();
+        w.tx.send(Request::Batch(removes, BatchSink::blocking(btx))).unwrap();
+        assert!(brx.recv().unwrap().iter().all(|r| *r == Response::Ok(true)));
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while slots_regions(pool) >= peak {
+            assert!(
+                Instant::now() < deadline,
+                "idle maintenance never returned an area ({} still live)",
+                slots_regions(pool)
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        // Survivors are intact and the shard still serves traffic.
+        let (rtx, rrx) = sync_channel(1);
+        w.tx.send(Request::Op(SetOp::Get(20), rtx.clone())).unwrap();
+        assert_eq!(rrx.recv().unwrap(), Response::Found(20));
+        w.tx.send(Request::Op(SetOp::Insert(1_000_000, 7), rtx)).unwrap();
+        assert_eq!(rrx.recv().unwrap(), Response::Ok(true));
         w.shutdown();
     }
 

@@ -159,6 +159,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let points = bench::scan::sweep(cfg.duration, seed);
         print!("{}", bench::scan::render(&points));
         json_points.extend(bench::scan::to_json_points(&points));
+    } else if fig == "alloc" {
+        // Allocator lifecycle: fill -> delete 90% -> maintain to steady
+        // state -> Zipf churn, per durable family. The JSON carries the
+        // areas-returned count and the raw alloc-path psync meter (both
+        // gated by the CI alloc-bench job: zero fences/flushes, nonzero
+        // return).
+        let points = bench::alloc::sweep(cfg.full, cfg.duration, seed);
+        print!("{}", bench::alloc::render(&points));
+        json_points.extend(bench::alloc::to_json_points(&points));
     } else if fig == "connscale" {
         // Event-plane scaling: live connections x active fraction, with
         // RSS/thread gauges per point and a superlinear-RSS verdict the

@@ -37,6 +37,10 @@ pub(crate) struct Region {
     pub tag: RegionTag,
     /// Size of each slot for `Slots` regions (0 otherwise).
     pub slot_size: usize,
+    /// Bytes of per-region durable metadata (occupancy bitmap words)
+    /// preceding the first slot. Slot iteration skips it; bulk persists
+    /// cover it (the header lives inside the region image on purpose).
+    pub hdr: usize,
     /// Persisted image, same length as the region. Allocated eagerly and
     /// zero-initialised (lazily paged by the OS, so the perf-mode cost is
     /// nil). Only touched in sim mode / at crash time.
@@ -56,17 +60,20 @@ pub struct RegionRef {
     pub len: usize,
     pub tag: RegionTag,
     pub slot_size: usize,
+    /// Header bytes (occupancy bitmap) before the first slot; 0 for
+    /// headerless regions (links, roots, pre-bitmap images).
+    pub hdr: usize,
 }
 
 unsafe impl Send for RegionRef {}
 unsafe impl Sync for RegionRef {}
 
 impl RegionRef {
-    /// Iterate the slot base pointers of a `Slots` region.
+    /// Iterate the slot base pointers of a `Slots` region (header skipped).
     pub fn slots(&self) -> impl Iterator<Item = *mut u8> + '_ {
         assert!(self.tag == RegionTag::Slots && self.slot_size > 0);
-        let n = self.len / self.slot_size;
-        let base = self.base as usize;
+        let n = (self.len - self.hdr) / self.slot_size;
+        let base = self.base as usize + self.hdr;
         let sz = self.slot_size;
         (0..n).map(move |i| (base + i * sz) as *mut u8)
     }
@@ -79,12 +86,26 @@ fn layout(len: usize) -> Layout {
 /// Allocate and register a durable region of `len` bytes (rounded up to a
 /// cache line), zero-initialised. Returns the working-memory base pointer.
 pub fn alloc_region(pool: PoolId, len: usize, tag: RegionTag, slot_size: usize) -> *mut u8 {
+    alloc_region_with_hdr(pool, len, tag, slot_size, 0)
+}
+
+/// [`alloc_region`] with `hdr` bytes of in-image metadata (the area
+/// occupancy bitmap) before the first slot. `hdr` must be line-aligned so
+/// slots keep their cache-line alignment.
+pub fn alloc_region_with_hdr(
+    pool: PoolId,
+    len: usize,
+    tag: RegionTag,
+    slot_size: usize,
+    hdr: usize,
+) -> *mut u8 {
+    assert_eq!(hdr % CACHE_LINE, 0, "region header must be line-aligned");
     let len = crate::util::line_up(len.max(CACHE_LINE));
     let base = unsafe { alloc_zeroed(layout(len)) };
     assert!(!base.is_null(), "durable region allocation failed");
     let shadow = unsafe { alloc_zeroed(layout(len)) };
     assert!(!shadow.is_null(), "shadow allocation failed");
-    let region = Region { base: base as usize, len, pool, tag, slot_size, shadow };
+    let region = Region { base: base as usize, len, pool, tag, slot_size, hdr, shadow };
     let mut reg = REGISTRY.write().unwrap();
     let pos = reg.partition_point(|r| r.base < region.base);
     reg.insert(pos, region);
@@ -103,8 +124,28 @@ pub fn regions_of(pool: PoolId) -> Vec<RegionRef> {
             len: r.len,
             tag: r.tag,
             slot_size: r.slot_size,
+            hdr: r.hdr,
         })
         .collect()
+}
+
+/// Unregister and free ONE region by base address (area compaction's
+/// memory return). The caller owns the ordering argument: nothing may
+/// reference the region when this runs — the allocator only calls it from
+/// an EBR-deferred callback after the area has drained to empty and every
+/// hint cell covering its range has been cleared.
+pub fn release_region(base: *mut u8) -> bool {
+    let mut reg = REGISTRY.write().unwrap();
+    let Some(i) = reg.iter().position(|r| r.base == base as usize) else {
+        return false;
+    };
+    let r = reg.remove(i);
+    super::check::purge_range(r.base, r.len);
+    unsafe {
+        dealloc(r.base as *mut u8, layout(r.len));
+        dealloc(r.shadow, layout(r.len));
+    }
+    true
 }
 
 /// Unregister and free all regions of a pool (normal shutdown only — a
@@ -197,6 +238,31 @@ mod tests {
         for i in 0..256 {
             assert_eq!(unsafe { *base.add(i) }, 0);
         }
+        release_pool(pool);
+    }
+
+    #[test]
+    fn header_region_skips_bitmap_in_slot_iteration() {
+        let pool = PoolId::fresh();
+        let base = alloc_region_with_hdr(pool, 512 + 16 * 64, RegionTag::Slots, 64, 512);
+        let rs = regions_of(pool);
+        assert_eq!(rs[0].hdr, 512);
+        let slots: Vec<_> = rs[0].slots().collect();
+        assert_eq!(slots.len(), 16);
+        assert_eq!(slots[0] as usize, base as usize + 512, "first slot follows the header");
+        release_pool(pool);
+    }
+
+    #[test]
+    fn release_region_frees_one_area_only() {
+        let pool = PoolId::fresh();
+        let a = alloc_region(pool, 256, RegionTag::Slots, 64);
+        let _b = alloc_region(pool, 256, RegionTag::Slots, 64);
+        assert_eq!(regions_of(pool).len(), 2);
+        assert!(release_region(a));
+        assert!(!release_region(a), "double release is a no-op");
+        let rs = regions_of(pool);
+        assert_eq!(rs.len(), 1, "only the released area left the registry");
         release_pool(pool);
     }
 

@@ -155,10 +155,52 @@ fn raw_slots(id: PoolId) -> Vec<usize> {
         .into_iter()
         .filter(|r| r.tag == RegionTag::Slots)
         .flat_map(|r| {
-            let base = r.base as usize;
-            (0..r.len / CACHE_LINE).map(move |i| base + i * CACHE_LINE)
+            // Skip the area's occupancy-bitmap header: it is allocator
+            // metadata, not a slot.
+            let base = r.base as usize + r.hdr;
+            (0..(r.len - r.hdr) / CACHE_LINE).map(move |i| base + i * CACHE_LINE)
         })
         .collect()
+}
+
+/// Engine-equivalent occupancy-bitmap rebuild for the plain-hash accel
+/// paths, which classify outside `scan_planned`: zero every area header
+/// up front, `mark` each member, `reclaim` (normalise + gen bump +
+/// obligation forfeit — the clear bit IS the free state) each non-member,
+/// then let the caller run `DurablePool::rebuild_index`.
+struct BitmapRebuild {
+    areas: Vec<crate::pmem::region::RegionRef>,
+}
+
+impl BitmapRebuild {
+    fn new(pool: &DurablePool) -> Self {
+        let mut areas: Vec<_> = pool
+            .regions()
+            .into_iter()
+            .filter(|r| r.tag == RegionTag::Slots)
+            .collect();
+        areas.sort_unstable_by_key(|r| r.base as usize);
+        for r in &areas {
+            unsafe { crate::alloc::area::clear_region_bitmap(r) };
+        }
+        BitmapRebuild { areas }
+    }
+
+    fn mark(&self, slot: *const u8) {
+        let addr = slot as usize;
+        let i = self.areas.partition_point(|r| (r.base as usize) <= addr);
+        debug_assert!(i > 0);
+        unsafe { crate::alloc::area::mark_region_slot_live(&self.areas[i - 1], slot) };
+    }
+
+    fn reclaim(&self, pool: &DurablePool, slot: *mut u8) {
+        unsafe {
+            pool.normalize_slot(slot);
+            crate::alloc::area::slot_gen(slot, pool.slot_size())
+                .fetch_add(1, Ordering::Release);
+        }
+        crate::pmem::check::note_freed(slot as *const u8, pool.slot_size());
+    }
 }
 
 /// XLA-accelerated recovery of a **resizable** link-free hash — the
@@ -204,6 +246,7 @@ pub fn recover_resizable_linkfree_accel(
     );
     rec.timings.scan += planned;
     rec.sort_by_key();
+    unsafe { rec.dedup_duplicates(&crate::sets::linkfree::LfClassify, &pool) };
     let head = unsafe { rec.relink_chain(&crate::sets::linkfree::LfClassify) };
     pool.persist_all_regions();
     let core = crate::sets::linkfree::LfCore::from_parts(pool, Arc::new(Ebr::new()));
@@ -266,6 +309,7 @@ pub fn recover_resizable_soft_accel(
     );
     rec.timings.scan += planned;
     rec.sort_by_key();
+    unsafe { rec.dedup_duplicates(&crate::sets::soft::SoftClassify { core: &core }, &core.dpool) };
     let head = unsafe { rec.relink_chain(&crate::sets::soft::SoftClassify { core: &core }) };
     core.dpool.persist_all_regions();
     let list = crate::sets::soft::SoftList::from_parts(head, core);
@@ -304,20 +348,20 @@ pub fn recover_soft_hash_accel(
     );
     let hash = SoftHash::from_parts(n, core);
     let mut stats = RecoveredStats::default();
+    let bm = BitmapRebuild::new(&hash.core.dpool);
     // Group member slots by bucket, then chain each bucket sorted by key.
     let mut grouped: Vec<(i32, u64, *mut u8)> = Vec::new();
     for (i, &s) in slots.iter().enumerate() {
         if plan.member[i] != 0 {
+            bm.mark(s);
             grouped.push((plan.bucket[i], keys[i] as u64, s));
             stats.members += 1;
         } else {
-            unsafe {
-                hash.core.dpool.normalize_slot(s);
-                hash.core.dpool.free(s);
-            }
+            bm.reclaim(&hash.core.dpool, s);
             stats.reclaimed += 1;
         }
     }
+    hash.core.dpool.rebuild_index();
     grouped.sort_unstable_by_key(|&(b, k, _)| (b, k));
     let mut i = 0;
     while i < grouped.len() {
@@ -376,19 +420,19 @@ pub fn recover_linkfree_hash_accel(
     let core = crate::sets::linkfree::LfCore::from_parts(pool, Arc::new(Ebr::new()));
     let hash = LfHash::from_parts(n, core);
     let mut stats = RecoveredStats::default();
+    let bm = BitmapRebuild::new(&hash.core.pool);
     let mut grouped: Vec<(i32, u64, *mut u8)> = Vec::new();
     for (i, &s) in slots.iter().enumerate() {
         if plan.member[i] != 0 {
+            bm.mark(s);
             grouped.push((plan.bucket[i], keys[i] as u64, s));
             stats.members += 1;
         } else {
-            unsafe {
-                hash.core.pool.normalize_slot(s);
-                hash.core.pool.free(s);
-            }
+            bm.reclaim(&hash.core.pool, s);
             stats.reclaimed += 1;
         }
     }
+    hash.core.pool.rebuild_index();
     grouped.sort_unstable_by_key(|&(b, k, _)| (b, k));
     let mut i = 0;
     while i < grouped.len() {

@@ -334,6 +334,83 @@ impl LfCore {
         }
     }
 
+    /// Compaction: relocate every member node whose slot lies in
+    /// `[lo, hi)` to a freshly allocated slot (the claimed area is off
+    /// the allocation index, so the copy always lands elsewhere).
+    ///
+    /// Per node: durably copy first (`flush_insert` of the valid copy),
+    /// then swing the predecessor link volatilely. A crash between the
+    /// two leaves the original *and* the copy valid with the same key —
+    /// recovery's dedup keeps one, so the acked member set is exact at
+    /// every flush point. The original is **not** marked here: a reader
+    /// parked at it mid-traversal must keep seeing the key as present
+    /// (the copy carries it). Its durable delete record is written by
+    /// [`LfCore::finish_migration`] after a grace period, once no reader
+    /// can still be positioned on it. Returns the unlinked originals.
+    ///
+    /// # Safety
+    /// Caller must serialize this against *updates* on the list (the
+    /// shard worker's idle tick does); concurrent readers are safe.
+    pub(crate) unsafe fn migrate_range(
+        &self,
+        head: *const AtomicU64,
+        lo: usize,
+        hi: usize,
+    ) -> Vec<usize> {
+        let mut originals = Vec::new();
+        let mut pred_link = head;
+        let mut curr = ptr_of::<LfNode>((*pred_link).load(Ordering::Acquire));
+        while !curr.is_null() {
+            let succ_t = (*curr).next.load(Ordering::Acquire);
+            if is_marked(succ_t) {
+                // With updates serialized out, every remove trimmed its
+                // node before returning — a marked node mid-chain means
+                // the serialization contract is broken. Stop cleanly.
+                debug_assert!(false, "marked node under serialized migration");
+                break;
+            }
+            let addr = curr as usize;
+            if addr >= lo && addr < hi {
+                let y = self.pool.alloc() as *mut LfNode;
+                debug_assert!((y as usize) < lo || (y as usize) >= hi);
+                (*y).make_invalid();
+                std::sync::atomic::fence(Ordering::Release);
+                (*y).reset_flush_flags();
+                (*y).key.store((*curr).key.load(Ordering::Relaxed), Ordering::Release);
+                (*y).value.store((*curr).value.load(Ordering::Relaxed), Ordering::Relaxed);
+                (*y).next.store(succ_t, Ordering::Release);
+                (*y).make_valid();
+                (*y).flush_insert();
+                (*pred_link).store(y as u64, Ordering::Release);
+                originals.push(addr);
+                pred_link = &(*y).next as *const AtomicU64;
+            } else {
+                pred_link = &(*curr).next as *const AtomicU64;
+            }
+            curr = ptr_of::<LfNode>(succ_t);
+        }
+        originals
+    }
+
+    /// Second migration step: the unlinked originals' durable delete
+    /// records. Safe to call only after a full EBR grace period since
+    /// [`LfCore::migrate_range`] unlinked them (no reader can still be
+    /// positioned on one), under the same serialization contract. Each
+    /// node is marked + `flush_delete`d (so a crash can no longer revive
+    /// it as a duplicate) and retired; its slot frees after one more
+    /// grace period.
+    pub(crate) unsafe fn finish_migration(&self, originals: &[usize]) {
+        for &addr in originals {
+            let n = addr as *mut LfNode;
+            let succ_t = (*n).next.load(Ordering::Acquire);
+            debug_assert!(!is_marked(succ_t));
+            (*n).next.store(succ_t | MARK, Ordering::Release);
+            crate::pmem::check::note_store(n as *const u8);
+            (*n).flush_delete();
+            self.retire_node(n);
+        }
+    }
+
     /// Snapshot of unmarked (key, value) pairs from one head, in order
     /// (test/debug only; not linearizable under concurrency).
     pub fn snapshot(&self, head: *const AtomicU64) -> Vec<(u64, u64)> {

@@ -65,6 +65,9 @@ pub fn recover_list_timed(id: PoolId, threads: usize) -> (LfList, RecoveredStats
     let pool = Arc::new(DurablePool::adopt(id, 64, LfNode::init_free_pattern));
     let mut rec = engine::scan(&pool, &LfClassify, threads);
     rec.sort_by_key();
+    // A crash mid-compaction legitimately leaves a migrated copy AND its
+    // source valid with the same key; keep one, demote the other.
+    unsafe { rec.dedup_duplicates(&LfClassify, &pool) };
     let head = unsafe { rec.relink_chain(&LfClassify) };
     pool.persist_all_regions();
     let core = LfCore::from_parts(pool, Arc::new(Ebr::new()));
@@ -91,6 +94,7 @@ pub fn recover_hash_timed(
     let mask = (hash.nbuckets() - 1) as u64;
     let bucket_of = |k: u64| (mix64(k) & mask) as usize;
     rec.sort_by_bucket(bucket_of);
+    unsafe { rec.dedup_duplicates(&LfClassify, &hash.core.pool) };
     for (b, head) in unsafe { rec.relink_buckets(&LfClassify, &bucket_of) } {
         hash.buckets[b].store(head, Ordering::Relaxed);
     }

@@ -240,6 +240,69 @@ impl LogFreeCore {
         }
     }
 
+    /// Compaction: relocate every member node whose slot lies in
+    /// `[lo, hi)` to a freshly allocated slot (the claimed area is off
+    /// the allocation index).
+    ///
+    /// Per node: psync the copy's content (as an insert would), then
+    /// `store_link_persisted` the predecessor from original to copy —
+    /// the durable chain swings in a single persisted link update, so
+    /// unlike the link-free family there is **no** crash window with two
+    /// reachable same-key nodes (recovery's dedup stays a no-op). Crash
+    /// before the link psync: the copy is durable but unreachable, and
+    /// the reachability walk reclaims it. The original keeps its clean
+    /// outgoing link for parked readers and is retired through EBR; it
+    /// needs no delete record because recovery never reaches it.
+    ///
+    /// # Safety
+    /// Caller must serialize this against *updates* on the list (the
+    /// shard worker's idle tick does); concurrent readers are safe.
+    pub(crate) unsafe fn migrate_range(
+        &self,
+        head: *const AtomicU64,
+        lo: usize,
+        hi: usize,
+    ) -> usize {
+        let mut moved = 0;
+        let mut pred_link = head;
+        let mut curr = ptr_of::<LogFreeNode>(load_link_persisted(&*pred_link));
+        while !curr.is_null() {
+            let succ_v = load_link_persisted(&(*curr).next);
+            if is_marked(succ_v) {
+                // Serialized updates trim before returning; see the
+                // link-free twin for why a marked node means a broken
+                // contract rather than something to repair here.
+                debug_assert!(false, "marked node under serialized migration");
+                break;
+            }
+            let addr = curr as usize;
+            if addr >= lo && addr < hi {
+                let y = self.pool.alloc() as *mut LogFreeNode;
+                debug_assert!((y as usize) < lo || (y as usize) >= hi);
+                (*y).key.store((*curr).key.load(Ordering::Relaxed), Ordering::Release);
+                (*y).value.store((*curr).value.load(Ordering::Relaxed), Ordering::Relaxed);
+                (*y).next.store(succ_v | DIRTY, Ordering::Release);
+                pmem::check::note_store(y as *const u8);
+                pmem::psync_obj(y);
+                let ok = store_link_persisted(&*pred_link, curr as u64, y as u64);
+                debug_assert!(ok, "serialized migration lost a link CAS");
+                let _ = (*y).next.compare_exchange(
+                    succ_v | DIRTY,
+                    succ_v,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                );
+                self.retire_node(curr);
+                moved += 1;
+                pred_link = &(*y).next as *const AtomicU64;
+            } else {
+                pred_link = &(*curr).next as *const AtomicU64;
+            }
+            curr = ptr_of::<LogFreeNode>(succ_v);
+        }
+        moved
+    }
+
     pub fn count(&self, head: *const AtomicU64) -> usize {
         self.snapshot_from(head).len()
     }

@@ -100,6 +100,9 @@ pub fn recover_list_timed(
     let anchor = head.word().load(Ordering::Relaxed);
     let (reached, mut rec) = walk_and_scan(&pool, std::iter::once(anchor), threads);
     rec.sort_by_key();
+    // Log-free migration links-and-persists atomically, so a crash never
+    // leaves both copies reachable — dedup is a no-op uniformity gate.
+    unsafe { rec.dedup_duplicates(&LogFreeClassify { reached: &reached }, &pool) };
     let head_val = unsafe { rec.relink_chain(&LogFreeClassify { reached: &reached }) };
     head.word().store(head_val, Ordering::Relaxed);
     pool.persist_all_regions();
@@ -129,6 +132,7 @@ pub fn recover_hash_timed(id: PoolId, threads: usize) -> (LogFreeHash, Recovered
     let mask = (nbuckets - 1) as u64;
     let bucket_of = |k: u64| (mix64(k) & mask) as usize;
     rec.sort_by_bucket(bucket_of);
+    unsafe { rec.dedup_duplicates(&LogFreeClassify { reached: &reached }, &pool) };
     // Start from empty cells: a bucket whose members all died must not
     // keep its stale pre-crash chain.
     for i in 0..nbuckets {

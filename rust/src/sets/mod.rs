@@ -2,12 +2,12 @@
 //!
 //! Four families, one trait:
 //!
-//! | family | module | durability | psyncs/update | psyncs/read | fences/op, K-batch | hash growth | `contains_batch` | `range`/`scan` | durcheck hooks (DESIGN.md §Checking) |
-//! |---|---|---|---|---|---|---|---|---|---|
-//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | ~1/K | [`resizable`] | coalesced ([`ResizableHash`]: one pin, okey-sorted probes; [`linkfree::LfSkipList`]: one pin, sorted probe run) | [`linkfree::LfSkipList`] (flush-free merge-walk) | validity flips + delete marks noted as durable stores |
-//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | 1/K | [`resizable`] | coalesced ([`ResizableHash`] / [`soft::SoftSkipList`]) | [`soft::SoftSkipList`] (flush-free merge-walk) | pnode create/destroy noted; `pptr` publish order asserted |
-//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | ~1/K (flushes stay ~2/op) | [`resizable`] | coalesced ([`ResizableHash`]) | — (hash order only) | link-and-persist stores noted; link-target publish order asserted |
-//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | 0 | fixed | default loop | — | — (no durable stores) |
+//! | family | module | durability | psyncs/update | psyncs/read | fences/op, K-batch | hash growth | compaction migrate (DESIGN.md §Allocator) | `contains_batch` | `range`/`scan` | durcheck hooks (DESIGN.md §Checking) |
+//! |---|---|---|---|---|---|---|---|---|---|---|
+//! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | ~1/K | [`resizable`] | copy + volatile pred swing; delete record deferred one EBR grace period (crash in window ⇒ recovery dedup) | coalesced ([`ResizableHash`]: one pin, okey-sorted probes; [`linkfree::LfSkipList`]: one pin, sorted probe run) | [`linkfree::LfSkipList`] (flush-free merge-walk) | validity flips + delete marks noted as durable stores |
+//! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | 1/K | [`resizable`] | fresh `PNode` + `pptr` swap; old destroyed + freed immediately (readers never dereference `pptr`) | coalesced ([`ResizableHash`] / [`soft::SoftSkipList`]) | [`soft::SoftSkipList`] (flush-free merge-walk) | pnode create/destroy noted; `pptr` publish order asserted |
+//! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | ~1/K (flushes stay ~2/op) | [`resizable`] | copy + link-and-persist pred swing (atomic durable handoff, no duplicate window) | coalesced ([`ResizableHash`]) | — (hash order only) | link-and-persist stores noted; link-target publish order asserted |
+//! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | 0 | fixed | — (nothing durable to compact) | default loop | — | — (no durable stores) |
 //!
 //! Each family provides a sorted linked list and a hash set built from the
 //! same core (a bucket is a bare link cell — see [`tagged`]), plus a
@@ -160,6 +160,18 @@ pub trait ConcurrentSet: Send + Sync {
     /// Bucket-array growth statistics (resizable hash sets only).
     fn growth_stats(&self) -> Option<GrowthStats> {
         None
+    }
+
+    /// One background maintenance step: area compaction + memory return
+    /// and bucket-array shrink ([`resizable::ResizableHash::maintain_tick`]).
+    /// The caller must be the set's **sole updater** for the duration of
+    /// the call (the shard worker runs it from idle ticks, where the
+    /// single-writer-per-shard discipline provides exactly that);
+    /// concurrent *readers* are always safe. Returns true if any work
+    /// was done. The default (fixed tables, lists, skip lists) does
+    /// nothing.
+    fn maintain(&self) -> bool {
+        false
     }
 
     /// The ordered view of this set, if it maintains key order

@@ -114,6 +114,21 @@ pub trait Classify: Sync {
     /// `node` is a member handle returned by [`Classify::classify`];
     /// called exactly once per member, by exactly one worker.
     unsafe fn link(&self, node: usize, next: u64);
+
+    /// Map a member handle the engine decided to *demote* (it is a
+    /// same-key duplicate — a crash mid-compaction leaves both the source
+    /// and the migrated copy valid) back to its durable slot, releasing
+    /// any volatile side allocation the handle carried. Default: the
+    /// handle IS the durable slot (link-free / log-free); SOFT overrides
+    /// to free the fresh SNode and return its `pptr`.
+    ///
+    /// # Safety
+    /// `handle` came from this classifier's [`Classify::classify`] (or the
+    /// planned materialise) during the current recovery, and is dropped
+    /// from the member run by the caller.
+    unsafe fn demote_duplicate(&self, handle: usize) -> *mut u8 {
+        handle as *mut u8
+    }
 }
 
 /// Upper bound on engine workers (scoped threads share the process tid
@@ -170,31 +185,43 @@ fn segments(len: usize, parts: usize) -> Vec<(usize, usize)> {
 /// Scan every slot of `pool`'s durable areas, classifying through `c`:
 /// members are collected, everything else is normalised to the family's
 /// free pattern and reclaimed. With `threads > 1` the areas — independent
-/// per-thread allocations — are distributed over a worker pool through an
+/// fixed-size allocations — are distributed over a worker pool through an
 /// atomic area cursor; workers classify and normalise with no locking.
-/// The `free` calls themselves run on the *calling* thread after the
-/// join: the allocator's free-lists are per-tid, so a worker-side free
-/// would strand every reclaimed slot in a dead transient thread's list
-/// and a crash→recover→insert loop would grow fresh areas forever
-/// instead of reusing them (pinned by the reclamation tests).
+///
+/// The occupancy bitmaps are rebuilt in the same pass: each worker zeroes
+/// its area's (untrusted, possibly stale) bitmap header, then sets the
+/// bit of every classified member — a reclaimed slot simply keeps its
+/// clear bit, which *is* the new allocator's free state, so the old
+/// per-slot `free` push is gone entirely. [`DurablePool::rebuild_index`]
+/// then derives the volatile upper level (fill counts, lookup, class
+/// stacks) from the finished bitmaps. Gen bumps + durability-obligation
+/// forfeits for reclaimed slots still run centralised on the calling
+/// thread (no psyncs; parity with the sequential path).
 pub fn scan<C: Classify>(pool: &DurablePool, c: &C, threads: usize) -> Scan {
     let t0 = Instant::now();
     let slot_size = pool.slot_size();
-    let areas: Vec<(usize, usize)> = pool
+    let areas: Vec<crate::pmem::region::RegionRef> = pool
         .regions()
         .into_iter()
         .filter(|r| r.tag == RegionTag::Slots)
-        .map(|r| (r.base as usize, r.len / slot_size))
         .collect();
 
-    // One worker's pass over one area: classify members, normalise and
-    // collect (not yet free) the rest.
-    let scan_area = |base: usize, n: usize, members: &mut Vec<(u64, usize)>, reclaim: &mut Vec<usize>| {
+    // One worker's pass over one area: rebuild the bitmap, classify
+    // members, normalise and collect (not yet gen-bumped) the rest.
+    let scan_area = |r: &crate::pmem::region::RegionRef,
+                     members: &mut Vec<(u64, usize)>,
+                     reclaim: &mut Vec<usize>| {
+        unsafe { crate::alloc::area::clear_region_bitmap(r) };
+        let n = (r.len - r.hdr) / slot_size;
+        let base = r.base as usize + r.hdr;
         for i in 0..n {
             let slot = (base + i * slot_size) as *mut u8;
             unsafe {
                 match c.classify(slot) {
-                    Some(m) => members.push(m),
+                    Some(m) => {
+                        crate::alloc::area::mark_region_slot_live(r, slot);
+                        members.push(m);
+                    }
                     None => {
                         pool.normalize_slot(slot);
                         reclaim.push(slot as usize);
@@ -208,8 +235,8 @@ pub fn scan<C: Classify>(pool: &DurablePool, c: &C, threads: usize) -> Scan {
     let mut members: Vec<(u64, usize)> = Vec::new();
     let mut reclaim: Vec<usize> = Vec::new();
     if threads <= 1 || areas.len() <= 1 {
-        for &(base, n) in &areas {
-            scan_area(base, n, &mut members, &mut reclaim);
+        for r in &areas {
+            scan_area(r, &mut members, &mut reclaim);
         }
     } else {
         let cursor = AtomicUsize::new(0);
@@ -228,8 +255,7 @@ pub fn scan<C: Classify>(pool: &DurablePool, c: &C, threads: usize) -> Scan {
                             if a >= areas.len() {
                                 break;
                             }
-                            let (base, n) = areas[a];
-                            scan_area(base, n, &mut local, &mut rec);
+                            scan_area(&areas[a], &mut local, &mut rec);
                         }
                         (local, rec)
                     })
@@ -242,11 +268,17 @@ pub fn scan<C: Classify>(pool: &DurablePool, c: &C, threads: usize) -> Scan {
             reclaim.extend(rec);
         }
     }
-    // Centralised reclamation (see fn docs): gen bump + free-list push
-    // per slot, no psyncs, into *this* thread's list.
+    // Centralised reclamation bookkeeping (no psyncs): the clear bit is
+    // the free state; the gen bump + obligation forfeit mirror what the
+    // old free-list push did for each reclaimed slot.
     for &slot in &reclaim {
-        pool.free(slot as *mut u8);
+        unsafe {
+            crate::alloc::area::slot_gen(slot as *const u8, slot_size)
+                .fetch_add(1, Ordering::Release);
+        }
+        crate::pmem::check::note_freed(slot as *const u8, slot_size);
     }
+    pool.rebuild_index();
 
     let stats = RecoveredStats { members: members.len(), reclaimed: reclaim.len() };
     Scan {
@@ -274,19 +306,43 @@ pub fn scan_planned(
     threads: usize,
 ) -> Scan {
     let t0 = Instant::now();
+    let slot_size = pool.slot_size();
+    // Same bitmap rebuild as [`scan`]: zero every area header, set member
+    // bits (region found by binary search — the slot list is flat), and
+    // derive the upper index at the end.
+    let mut areas: Vec<crate::pmem::region::RegionRef> = pool
+        .regions()
+        .into_iter()
+        .filter(|r| r.tag == RegionTag::Slots)
+        .collect();
+    areas.sort_unstable_by_key(|r| r.base as usize);
+    for r in &areas {
+        unsafe { crate::alloc::area::clear_region_bitmap(r) };
+    }
+    let region_of = |addr: usize| -> &crate::pmem::region::RegionRef {
+        let i = areas.partition_point(|r| (r.base as usize) <= addr);
+        debug_assert!(i > 0);
+        &areas[i - 1]
+    };
     let mut materialise = materialise;
     let mut members = Vec::new();
     let mut reclaimed = 0usize;
     for (i, &s) in slots.iter().enumerate() {
         let slot = s as *mut u8;
         if is_member(i) {
+            unsafe { crate::alloc::area::mark_region_slot_live(region_of(s), slot) };
             members.push(materialise(i, slot));
         } else {
-            unsafe { pool.normalize_slot(slot) };
-            pool.free(slot);
+            unsafe {
+                pool.normalize_slot(slot);
+                crate::alloc::area::slot_gen(slot as *const u8, slot_size)
+                    .fetch_add(1, Ordering::Release);
+            }
+            crate::pmem::check::note_freed(slot as *const u8, slot_size);
             reclaimed += 1;
         }
     }
+    pool.rebuild_index();
     let stats = RecoveredStats { members: members.len(), reclaimed };
     Scan {
         members,
@@ -437,8 +493,47 @@ impl Scan {
     pub fn sort_by_key(&mut self) {
         let t0 = Instant::now();
         par_sort_by(&mut self.members, self.threads, |k| k);
-        assert_unique_sorted(&self.members, self.family);
         self.timings.sort += t0.elapsed();
+    }
+
+    /// Drop same-key duplicates from the sorted run, keeping the first of
+    /// each key and demoting the rest back to free slots. A clean image
+    /// has none (paper Claim B.12) — but a crash *during a compaction
+    /// migration* legitimately leaves both the source node and its
+    /// migrated copy valid (the copy-then-relink window), and recovery
+    /// resolves that here: the duplicate is freed through the pool (bit
+    /// cleared, accounting fixed — the scan set its bit and counted it),
+    /// zero psyncs. Ends with the uniqueness assertion the sorts used to
+    /// carry, so a genuinely corrupt image still fails loudly.
+    ///
+    /// # Safety
+    /// `c` is the classifier the scan ran with; the run is sorted so equal
+    /// keys are adjacent; [`DurablePool::rebuild_index`] has run (the
+    /// engine's scans guarantee it).
+    pub unsafe fn dedup_duplicates<C: Classify>(&mut self, c: &C, pool: &DurablePool) -> usize {
+        let t0 = Instant::now();
+        let mut dropped = 0usize;
+        let mut i = 1;
+        while i < self.members.len() {
+            if self.members[i].0 == self.members[i - 1].0 {
+                let (_, handle) = self.members.remove(i);
+                let slot = c.demote_duplicate(handle);
+                // Free contract: the slot must re-enter circulation
+                // recoverable-as-free, and a demoted duplicate still
+                // carries member flags — normalise first (persisted by
+                // the recovery flow's final persist_all_regions).
+                pool.normalize_slot(slot);
+                pool.free(slot);
+                dropped += 1;
+            } else {
+                i += 1;
+            }
+        }
+        assert_unique_sorted(&self.members, self.family);
+        self.stats.members -= dropped;
+        self.stats.reclaimed += dropped;
+        self.timings.sort += t0.elapsed();
+        dropped
     }
 
     /// Sort the member run by `(bucket, key)` (fixed-bucket hash shapes).
@@ -447,7 +542,6 @@ impl Scan {
     pub fn sort_by_bucket(&mut self, bucket_of: impl Fn(u64) -> usize + Sync) {
         let t0 = Instant::now();
         par_sort_by(&mut self.members, self.threads, |k| (bucket_of(k), k));
-        assert_unique_sorted(&self.members, self.family);
         self.timings.sort += t0.elapsed();
     }
 
@@ -462,6 +556,9 @@ impl Scan {
     /// be sorted.
     pub unsafe fn relink_chain<C: Classify>(&mut self, c: &C) -> u64 {
         let t0 = Instant::now();
+        // Safety net for callers that skipped dedup: a duplicate here
+        // would double-link one key.
+        assert_unique_sorted(&self.members, self.family);
         let head = relink_chain_run(c, &self.members, self.threads);
         self.timings.relink += t0.elapsed();
         head
@@ -481,6 +578,7 @@ impl Scan {
         bucket_of: &(impl Fn(u64) -> usize + Sync),
     ) -> Vec<(usize, u64)> {
         let t0 = Instant::now();
+        assert_unique_sorted(&self.members, self.family);
         // Bucket-group boundaries over the sorted run.
         let mut groups: Vec<(usize, usize, usize)> = Vec::new(); // (bucket, start, end)
         let mut i = 0;

@@ -33,7 +33,22 @@
 //!   (`resizable.<family>.<pool>`), so recovery rebuilds the right table
 //!   size: recover the family's list (members relinked in okey order —
 //!   exactly this structure's chain), read the epoch, start with empty
-//!   hints.
+//!   hints. The cell encodes `(seq << 8) | (log2n + 1)`: growth max-CASes
+//!   the size byte, a **shrink** bumps `seq` so the word stays monotone
+//!   while the size drops.
+//! * **Compaction + shrink** ride the shard worker's idle tick through
+//!   [`ResizableHash::maintain_tick`]: low-fill allocator areas are
+//!   claimed off the allocation index, their surviving nodes migrated to
+//!   fresh slots with each family's crash-safe copy protocol (every
+//!   window a power loss can hit leaves either the original, the copy,
+//!   or a same-key duplicate pair that recovery's dedup collapses — the
+//!   acked member set is exact at every flush boundary), bucket hints
+//!   into the range are dropped, and after EBR grace periods the empty
+//!   area is retired and its memory returned to the OS. Sustained low
+//!   load halves the bucket array under the same tick (hysteresis keeps
+//!   shrinks and doublings from ping-ponging). Maintenance requires the
+//!   shard worker's serialization against updates; concurrent readers
+//!   are safe throughout.
 //!
 //! Durability is untouched: the only durable state is the family's own
 //! node protocol plus the epoch cell (persisted once per doubling), so
@@ -64,7 +79,7 @@
 //! compiles the gen checks out — the configuration the reclamation-churn
 //! harness uses to demonstrate the pre-tag ABA misvalidation.
 
-use crate::alloc::Ebr;
+use crate::alloc::{AreaClaim, DurablePool, Ebr};
 use crate::pmem::root::{root_cell, RootCell};
 use crate::pmem::PoolId;
 use crate::sets::linkfree::{LfList, LfNode, RecoveredStats};
@@ -82,6 +97,27 @@ use std::sync::Mutex;
 
 /// Average chain length that triggers a doubling.
 pub const GROW_LOAD: usize = 4;
+
+/// Shrink trigger: the item count must stay below `GROW_LOAD << log2n /
+/// SHRINK_DIV` for [`SHRINK_STREAK`] consecutive maintenance ticks. The
+/// divisor leaves the halved table still 4x under its own grow trigger,
+/// so a shrink can never ping-pong with a doubling.
+const SHRINK_DIV: i64 = 8;
+
+/// Consecutive low-load maintenance ticks before the table halves.
+const SHRINK_STREAK: u32 = 4;
+
+/// Never shrink below 2 buckets.
+const SHRINK_MIN_LOG2: u32 = 1;
+
+/// Compaction claims an area only when at least this many of its slots
+/// are free (75%: migrating the survivors costs at most a quarter of the
+/// area's capacity in copies).
+const COMPACT_MIN_FREE: usize = (crate::alloc::area::SLOTS_PER_AREA / 4) * 3;
+
+/// Areas claimed per maintenance tick / maximum claims mid-drain.
+const COMPACT_CLAIMS_PER_TICK: usize = 4;
+const COMPACT_MAX_DRAINS: usize = 8;
 
 /// Hard cap on the bucket-array size (2^24 cells = 128 MiB of hints).
 const MAX_LOG2: u32 = 24;
@@ -168,7 +204,24 @@ pub trait ResizableFamily: sealed::Sealed + Send + Sync + 'static {
     #[doc(hidden)]
     fn pool(&self) -> PoolId;
     #[doc(hidden)]
+    fn durable(&self) -> &DurablePool;
+    #[doc(hidden)]
     fn preserve(&self);
+
+    /// Relocate every member whose durable slot lies in `[lo, hi)` to a
+    /// fresh slot, per the family's compaction protocol. Returns the
+    /// migrated count and (link-free only) the unlinked originals whose
+    /// durable delete records are deferred to [`Self::finish_migration`]
+    /// after a grace period. Caller must serialize against updates.
+    #[doc(hidden)]
+    unsafe fn migrate_range(&self, lo: usize, hi: usize) -> (usize, Vec<usize>);
+
+    /// Write the deferred originals' durable delete records and retire
+    /// them (no-op for families whose migration has none).
+    #[doc(hidden)]
+    unsafe fn finish_migration(&self, originals: &[usize]) {
+        debug_assert!(originals.is_empty());
+    }
 
     /// The link cell owned by `node` (its `next` word).
     #[doc(hidden)]
@@ -222,8 +275,21 @@ impl ResizableFamily for LfList {
         self.pool_id()
     }
 
+    fn durable(&self) -> &DurablePool {
+        &self.core.pool
+    }
+
     fn preserve(&self) {
         self.crash_preserve();
+    }
+
+    unsafe fn migrate_range(&self, lo: usize, hi: usize) -> (usize, Vec<usize>) {
+        let originals = self.core.migrate_range(&self.head, lo, hi);
+        (originals.len(), originals)
+    }
+
+    unsafe fn finish_migration(&self, originals: &[usize]) {
+        self.core.finish_migration(originals);
     }
 
     unsafe fn node_link(node: *mut LfNode) -> *const AtomicU64 {
@@ -296,8 +362,16 @@ impl ResizableFamily for SoftList {
         self.pool_id()
     }
 
+    fn durable(&self) -> &DurablePool {
+        &self.core.dpool
+    }
+
     fn preserve(&self) {
         self.crash_preserve();
+    }
+
+    unsafe fn migrate_range(&self, lo: usize, hi: usize) -> (usize, Vec<usize>) {
+        (self.core.migrate_range(&self.head, lo, hi), Vec::new())
     }
 
     unsafe fn node_link(node: *mut SNode) -> *const AtomicU64 {
@@ -368,8 +442,16 @@ impl ResizableFamily for LogFreeList {
         self.pool_id()
     }
 
+    fn durable(&self) -> &DurablePool {
+        &self.core.pool
+    }
+
     fn preserve(&self) {
         self.crash_preserve();
+    }
+
+    unsafe fn migrate_range(&self, lo: usize, hi: usize) -> (usize, Vec<usize>) {
+        (self.core.migrate_range(self.head.word(), lo, hi), Vec::new())
     }
 
     unsafe fn node_link(node: *mut LogFreeNode) -> *const AtomicU64 {
@@ -455,6 +537,30 @@ impl Table {
     }
 }
 
+/// One claimed area working its way through the compaction pipeline:
+/// migrated at claim time, then (after an EBR grace period so no reader
+/// still holds a hint word or chain position into the range) the
+/// link-free originals get their durable delete records, and finally the
+/// empty area is retired and its memory returned.
+struct Drain {
+    claim: AreaClaim,
+    /// Unlinked originals awaiting their deferred delete records
+    /// (link-free only; empty for SOFT/log-free).
+    originals: Vec<usize>,
+    /// EBR epoch stamped when this phase began; the next phase runs only
+    /// at `stamp + 2` or later.
+    stamp: u64,
+    /// The originals' delete records are written and retired.
+    finished: bool,
+}
+
+/// Compaction/shrink state driven by [`ResizableHash::maintain_tick`].
+struct CompactState {
+    draining: Vec<Drain>,
+    /// Consecutive low-load ticks (shrink hysteresis).
+    low_streak: u32,
+}
+
 /// A lock-free durable hash set that grows its bucket array on demand.
 /// See the module docs for the design; construct via the per-family
 /// constructors or [`crate::sets::new_hash`].
@@ -468,8 +574,14 @@ pub struct ResizableHash<F: ResizableFamily> {
     items: StripedItems,
     /// Doublings since construction/recovery (growth stats).
     doublings: AtomicU64,
-    /// Durable bucket-count epoch: `log2n + 1` (0 = never written).
+    /// Durable bucket-count epoch: `(seq << 8) | (log2n + 1)`, low byte
+    /// 0 = never written. The sequence number keeps the word monotone
+    /// across shrinks (which lower the low byte); pre-shrink images are
+    /// plain `log2n + 1`, i.e. `seq == 0`.
     epoch: RootCell,
+    /// Compaction pipeline (see [`Drain`]); `try_lock` so concurrent
+    /// maintenance calls fall through instead of queueing.
+    compact: Mutex<CompactState>,
 }
 
 unsafe impl<F: ResizableFamily> Send for ResizableHash<F> {}
@@ -515,6 +627,7 @@ impl<F: ResizableFamily> ResizableHash<F> {
             items: StripedItems::new(0),
             doublings: AtomicU64::new(0),
             epoch,
+            compact: Mutex::new(CompactState { draining: Vec::new(), low_streak: 0 }),
         };
         h.persist_epoch(log2n);
         h
@@ -529,8 +642,8 @@ impl<F: ResizableFamily> ResizableHash<F> {
     pub(crate) fn adopt(inner: F, default_nbuckets: usize) -> Self {
         let epoch = root_cell(&format!("resizable.{}.{}", F::FAMILY, inner.pool().0));
         let stored = epoch.word().load(Ordering::SeqCst);
-        let log2n = if stored > 0 {
-            ((stored - 1) as u32).min(MAX_LOG2)
+        let log2n = if stored & 0xff > 0 {
+            (((stored & 0xff) - 1) as u32).min(MAX_LOG2)
         } else {
             default_nbuckets
                 .next_power_of_two()
@@ -546,22 +659,43 @@ impl<F: ResizableFamily> ResizableHash<F> {
             items: StripedItems::new(members),
             doublings: AtomicU64::new(0),
             epoch,
+            compact: Mutex::new(CompactState { draining: Vec::new(), low_streak: 0 }),
         };
         h.persist_epoch(log2n);
         h
     }
 
     fn persist_epoch(&self, log2n: u32) {
-        // Monotone max-CAS: a doubling winner that stalls before recording
-        // its epoch must not later overwrite a larger value some newer
-        // doubling already persisted (the recovered table would shrink).
-        let want = log2n as u64 + 1;
+        // Monotone max-CAS on the size byte within the current sequence:
+        // a doubling winner that stalls before recording its epoch must
+        // not later overwrite a larger value some newer doubling already
+        // persisted (the recovered table would be wrong-sized). Shrinks
+        // bump the sequence instead ([`Self::persist_epoch_shrunk`]).
         let word = self.epoch.word();
         let mut cur = word.load(Ordering::SeqCst);
         loop {
-            if cur >= want {
+            if cur & 0xff >= log2n as u64 + 1 {
                 return;
             }
+            let want = (cur & !0xff) | (log2n as u64 + 1);
+            match word.compare_exchange(cur, want, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        self.epoch.persist();
+    }
+
+    /// Record a *smaller* table durably. Lowering the size byte would
+    /// break the monotone-max discipline, so the sequence in the high
+    /// bits is bumped instead — the new word always exceeds the old one,
+    /// and any stale grower's max-CAS within the superseded sequence
+    /// loses to it.
+    fn persist_epoch_shrunk(&self, log2n: u32) {
+        let word = self.epoch.word();
+        let mut cur = word.load(Ordering::SeqCst);
+        loop {
+            let want = (((cur >> 8) + 1) << 8) | (log2n as u64 + 1);
             match word.compare_exchange(cur, want, Ordering::SeqCst, Ordering::SeqCst) {
                 Ok(_) => break,
                 Err(now) => cur = now,
@@ -748,6 +882,162 @@ impl<F: ResizableFamily> ResizableHash<F> {
             }
         }
     }
+
+    /// Drop every published hint whose target slot lies in `[lo, hi)`,
+    /// in the live table and all retired ones (an in-flight reader may
+    /// still probe a superseded table). A lost CAS means a reader's lazy
+    /// repair already cleared the cell; nothing can republish into the
+    /// range because no linked node lives there after migration.
+    fn clear_hints_in_range(&self, lo: usize, hi: usize) {
+        let clear = |t: &Table| {
+            for cell in t.cells.iter() {
+                let w = cell.load(Ordering::Acquire);
+                if w != 0 {
+                    let p = hint_ptr::<u8>(w) as usize;
+                    if p >= lo && p < hi {
+                        let _ = cell.compare_exchange(w, 0, Ordering::AcqRel, Ordering::Acquire);
+                    }
+                }
+            }
+        };
+        clear(unsafe { &*self.table.load(Ordering::Acquire) });
+        for &t in self.retired.lock().unwrap().iter() {
+            clear(unsafe { &*t });
+        }
+    }
+
+    /// One compaction/shrink tick — the idle-time maintenance pass the
+    /// shard worker drives between requests. Returns true if it made
+    /// progress (migrated, retired an area, or shrank the table).
+    ///
+    /// The pipeline per claimed area (each arrow is >= one full EBR
+    /// grace period, so no reader still holds a cleared hint word or a
+    /// chain position into the range):
+    ///
+    /// 1. claim (off the allocation index) -> migrate survivors (copy
+    ///    durably first; dedup-covered crash windows) -> clear hints;
+    /// 2. write the link-free originals' deferred delete records and
+    ///    retire them; clear hints again;
+    /// 3. once the occupancy bitmap reads empty (the EBR frees landed),
+    ///    retire the area: regions drop it and the memory is returned.
+    ///
+    /// **Serialization contract:** must not run concurrently with
+    /// updates on this set (readers are fine). The shard worker owns
+    /// all updates to its sets, so its idle tick satisfies this by
+    /// construction; library users must provide the same guarantee.
+    pub fn maintain_tick(&self) -> bool {
+        let ebr = self.inner.ebr();
+        // Advance the epoch and collect our own limbo so retired
+        // originals actually free (their bitmap bits clear) and the
+        // drains below converge even on an otherwise idle set.
+        ebr.try_collect();
+        let mut st = match self.compact.try_lock() {
+            Ok(g) => g,
+            Err(_) => return false,
+        };
+        let pool = self.inner.durable();
+        let mut progressed = false;
+
+        // Phases 2/3: advance in-flight drains.
+        let epoch = ebr.global_epoch();
+        let mut i = 0;
+        while i < st.draining.len() {
+            if epoch < st.draining[i].stamp + 2 {
+                i += 1;
+                continue;
+            }
+            if !st.draining[i].finished {
+                let d = &mut st.draining[i];
+                self.clear_hints_in_range(d.claim.lo, d.claim.hi);
+                {
+                    let _scope = crate::pmem::psync_scope();
+                    unsafe { self.inner.finish_migration(&d.originals) };
+                }
+                d.originals.clear();
+                d.finished = true;
+                d.stamp = epoch;
+                progressed = true;
+                i += 1;
+            } else if pool.area_is_empty(&st.draining[i].claim) {
+                let d = st.draining.swap_remove(i);
+                self.clear_hints_in_range(d.claim.lo, d.claim.hi);
+                pool.retire_area(d.claim, ebr);
+                progressed = true;
+            } else {
+                // Waiting on EBR frees to land in the bitmap.
+                i += 1;
+            }
+        }
+
+        // Phase 1: claim + migrate fresh low-fill areas.
+        if st.draining.len() < COMPACT_MAX_DRAINS {
+            let room = COMPACT_MAX_DRAINS - st.draining.len();
+            for claim in pool
+                .claim_compaction_targets(room.min(COMPACT_CLAIMS_PER_TICK), COMPACT_MIN_FREE)
+            {
+                let (lo, hi) = (claim.lo, claim.hi);
+                let originals = {
+                    let _scope = crate::pmem::psync_scope();
+                    unsafe { self.inner.migrate_range(lo, hi) }.1
+                };
+                self.clear_hints_in_range(lo, hi);
+                crate::alloc::note_compaction();
+                st.draining.push(Drain {
+                    claim,
+                    originals,
+                    stamp: ebr.global_epoch(),
+                    finished: false,
+                });
+                progressed = true;
+            }
+        }
+
+        if self.maybe_shrink(&mut st) {
+            progressed = true;
+        }
+        progressed
+    }
+
+    /// Halve the bucket array after [`SHRINK_STREAK`] consecutive ticks
+    /// of sustained low load. Same publish discipline as a doubling
+    /// (retire the old table, persist the epoch — via the shrink rule).
+    fn maybe_shrink(&self, st: &mut CompactState) -> bool {
+        let t = self.table.load(Ordering::Acquire);
+        let tr = unsafe { &*t };
+        let items = self.items.sum().max(0);
+        if tr.log2n <= SHRINK_MIN_LOG2 || items >= ((GROW_LOAD as i64) << tr.log2n) / SHRINK_DIV
+        {
+            st.low_streak = 0;
+            return false;
+        }
+        st.low_streak += 1;
+        if st.low_streak < SHRINK_STREAK {
+            return false;
+        }
+        st.low_streak = 0;
+        let new = Table::alloc(tr.log2n - 1);
+        {
+            let nr = unsafe { &*new };
+            for j in 0..nr.nbuckets() {
+                // The left child's range starts where the merged bucket's
+                // does; its hint (validated before use, like any other)
+                // seeds the merge.
+                nr.cells[j].store(tr.cells[2 * j].load(Ordering::Relaxed), Ordering::Release);
+            }
+        }
+        if self
+            .table
+            .compare_exchange(t, new, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.retired.lock().unwrap().push(t);
+            self.persist_epoch_shrunk(tr.log2n - 1);
+            true
+        } else {
+            unsafe { drop(Box::from_raw(new)) };
+            false
+        }
+    }
 }
 
 impl<F: ResizableFamily> ConcurrentSet for ResizableHash<F> {
@@ -846,6 +1136,10 @@ impl<F: ResizableFamily> ConcurrentSet for ResizableHash<F> {
             doublings: self.doublings.load(Ordering::Relaxed),
             items: self.items.sum().max(0) as usize,
         })
+    }
+
+    fn maintain(&self) -> bool {
+        self.maintain_tick()
     }
 }
 
@@ -1249,5 +1543,124 @@ mod tests {
         }
         assert_eq!(h.len_approx(), model.len());
         assert!(h.nbuckets() > 4, "skewed growth must still trigger resizes");
+    }
+
+    /// Drive the multi-tick compaction pipeline (each phase needs EBR
+    /// grace periods between ticks) on an otherwise idle set.
+    fn run_maintenance<F: ResizableFamily>(h: &ResizableHash<F>, ticks: usize) {
+        for _ in 0..ticks {
+            let _ = h.maintain_tick();
+        }
+    }
+
+    /// Fill ~3 areas, delete 90%, then maintain: low-fill areas must be
+    /// compacted away and their regions returned, with every surviving
+    /// key (and the allocator) fully functional afterwards.
+    fn compaction_returns_areas<F: ResizableFamily>(h: ResizableHash<F>) {
+        for k in 0..9000u64 {
+            assert!(h.insert(k, k + 5));
+        }
+        let peak = h.inner.durable().regions().len();
+        assert!(peak >= 3, "{}: test must span several areas (got {peak})", F::FAMILY);
+        for k in 0..9000u64 {
+            if k % 10 != 0 {
+                assert!(h.remove(k));
+            }
+        }
+        run_maintenance(&h, 64);
+        let now = h.inner.durable().regions().len();
+        assert!(
+            now < peak,
+            "{}: compaction must return areas ({peak} -> {now})",
+            F::FAMILY
+        );
+        for k in 0..9000u64 {
+            let want = (k % 10 == 0).then_some(k + 5);
+            assert_eq!(h.get(k), want, "{}: key {k} after compaction", F::FAMILY);
+        }
+        // The survivors' relocated slots and the remaining areas keep
+        // working: churn on top of the compacted image.
+        for k in 20_000..21_000u64 {
+            assert!(h.insert(k, k));
+        }
+        for k in 20_000..21_000u64 {
+            assert_eq!(h.get(k), Some(k));
+        }
+    }
+
+    #[test]
+    fn linkfree_compaction_returns_areas() {
+        compaction_returns_areas(ResizableHash::new_linkfree(2));
+    }
+
+    #[test]
+    fn soft_compaction_returns_areas() {
+        compaction_returns_areas(ResizableHash::new_soft(2));
+    }
+
+    #[test]
+    fn logfree_compaction_returns_areas() {
+        compaction_returns_areas(ResizableHash::new_logfree(2));
+    }
+
+    #[test]
+    fn migration_preserves_reader_view_between_ticks() {
+        // A reader that validated a bucket hint before a maintain tick
+        // must keep getting exact answers after migration moved the
+        // bucket's nodes (the original stays traversable until the
+        // deferred delete records land, two grace periods later).
+        let h = ResizableHash::new_linkfree(2);
+        for k in 0..9000u64 {
+            assert!(h.insert(k, k));
+        }
+        for k in 4500..9000u64 {
+            assert!(h.remove(k));
+        }
+        // Interleave reads with single ticks: every pipeline phase runs
+        // while reads are in flight between ticks.
+        for round in 0..24u64 {
+            let _ = h.maintain_tick();
+            for k in (round * 100)..(round * 100 + 100) {
+                assert_eq!(h.get(k), (k < 4500).then_some(k), "key {k} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn sustained_low_load_shrinks_table_and_epoch_recovers() {
+        let _sim = pmem::sim_session();
+        let h = ResizableHash::new_linkfree(2);
+        let id = h.pool_id();
+        for k in 0..600u64 {
+            assert!(h.insert(k, k * 2));
+        }
+        let grown = h.nbuckets();
+        assert!(grown >= 64, "must grow first (got {grown})");
+        for k in 0..590u64 {
+            assert!(h.remove(k));
+        }
+        run_maintenance(&h, 64);
+        let shrunk = h.nbuckets();
+        assert!(
+            shrunk < grown,
+            "sustained low load must shrink the table ({grown} -> {shrunk})"
+        );
+        assert!(shrunk >= 2, "never below the floor");
+        for k in 0..600u64 {
+            assert_eq!(h.get(k), (k >= 590).then_some(k * 2), "key {k} after shrink");
+        }
+        // The shrunk size is durable: the seq-bumped epoch must win over
+        // the larger pre-shrink value after a crash.
+        h.crash_preserve();
+        drop(h);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+        let (h2, stats) = recover_linkfree(id, 2);
+        assert_eq!(stats.members, 10);
+        assert_eq!(h2.nbuckets(), shrunk, "shrunk epoch must survive the crash");
+        // And the recovered table still grows again under load.
+        for k in 1000..3000u64 {
+            assert!(h2.insert(k, k));
+        }
+        assert!(h2.nbuckets() > shrunk);
     }
 }

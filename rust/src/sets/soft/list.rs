@@ -369,6 +369,50 @@ impl SoftCore {
         }
     }
 
+    /// Compaction: re-home every member whose *PNode* lies in `[lo, hi)`
+    /// onto a freshly allocated PNode (the claimed area is off the
+    /// allocation index). The volatile chain is untouched — each SNode
+    /// keeps its position and only its `pptr`/`p_validity` move, which
+    /// no reader ever dereferences (reads are answered from the SNode).
+    ///
+    /// Per node: `create` the copy (durable, one psync), swap the SNode's
+    /// plumbing, `destroy` the original (durable, one psync) and free it
+    /// directly — with updates serialized out and readers never touching
+    /// `pptr`, nothing else can reference the old PNode. A crash between
+    /// create and destroy leaves two member PNodes with the same key;
+    /// recovery's dedup keeps one. Returns the migrated count.
+    ///
+    /// # Safety
+    /// Caller must serialize this against *updates* on the list (the
+    /// shard worker's idle tick does); concurrent readers are safe.
+    pub(crate) unsafe fn migrate_range(
+        &self,
+        head: *const AtomicU64,
+        lo: usize,
+        hi: usize,
+    ) -> usize {
+        let mut moved = 0;
+        let mut curr = ptr_of::<SNode>((*head).load(Ordering::Acquire));
+        while !curr.is_null() {
+            let v = (*curr).next.load(Ordering::Acquire);
+            let p_old = (*curr).pptr;
+            if State::of(v).in_set() && (p_old as usize) >= lo && (p_old as usize) < hi {
+                let p_new = self.dpool.alloc() as *mut PNode;
+                debug_assert!((p_new as usize) < lo || (p_new as usize) >= hi);
+                let pv_new = (*p_new).alloc();
+                (*p_new).create((*curr).key, (*curr).value, pv_new);
+                let pv_old = (*curr).p_validity;
+                (*curr).pptr = p_new;
+                (*curr).p_validity = pv_new;
+                (*p_old).destroy(pv_old);
+                self.dpool.free(p_old as *mut u8);
+                moved += 1;
+            }
+            curr = ptr_of::<SNode>(v);
+        }
+        moved
+    }
+
     /// In-set node count from one head (test/metrics only).
     pub fn count(&self, head: *const AtomicU64) -> usize {
         self.snapshot_from(head).len()

@@ -60,6 +60,15 @@ impl Classify for SoftClassify<'_> {
     unsafe fn link(&self, node: usize, next: u64) {
         (*(node as *mut SNode)).next.store(next, Ordering::Relaxed);
     }
+
+    /// A demoted duplicate's handle is its fresh SNode: release it back
+    /// to the slab and hand the engine the durable PNode to free.
+    unsafe fn demote_duplicate(&self, handle: usize) -> *mut u8 {
+        let vn = handle as *mut SNode;
+        let pn = (*vn).pptr as *mut u8;
+        self.core.vpool.free(vn as *mut u8);
+        pn
+    }
 }
 
 /// Adopt `id`'s durable areas into a fresh SoftCore (also used by the
@@ -83,6 +92,7 @@ pub fn recover_list_timed(id: PoolId, threads: usize) -> (SoftList, RecoveredSta
     let core = adopt_core(id);
     let mut rec = engine::scan(&core.dpool, &SoftClassify { core: &core }, threads);
     rec.sort_by_key();
+    unsafe { rec.dedup_duplicates(&SoftClassify { core: &core }, &core.dpool) };
     let head = unsafe { rec.relink_chain(&SoftClassify { core: &core }) };
     core.dpool.persist_all_regions();
     (SoftList::from_parts(head, core), rec.stats, rec.timings)
@@ -107,6 +117,7 @@ pub fn recover_hash_timed(
     let mask = (hash.nbuckets() - 1) as u64;
     let bucket_of = |k: u64| (mix64(k) & mask) as usize;
     rec.sort_by_bucket(bucket_of);
+    unsafe { rec.dedup_duplicates(&SoftClassify { core: &hash.core }, &hash.core.dpool) };
     for (b, head) in unsafe { rec.relink_buckets(&SoftClassify { core: &hash.core }, &bucket_of) } {
         hash.buckets[b].store(head, Ordering::Relaxed);
     }

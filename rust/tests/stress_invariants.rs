@@ -131,7 +131,7 @@ fn durable_footprint_stays_bounded_under_churn() {
         let slots: usize = durasets::pmem::region::regions_of(pool)
             .iter()
             .filter(|r| r.tag == durasets::pmem::region::RegionTag::Slots)
-            .map(|r| r.len / 64)
+            .map(|r| (r.len - r.hdr) / 64)
             .sum();
         // 4 threads x small key space: a few areas at most (4096 slots each).
         assert!(
