@@ -246,7 +246,7 @@ pub fn to_json_points(points: &[AllocPoint]) -> Vec<String> {
         .iter()
         .map(|p| {
             format!(
-                "{{\"fig\":\"alloc\",\"x\":\"family={}\",\"family\":\"{}\",\"fill\":{},\"peak_areas\":{},\"steady_areas\":{},\"areas_returned\":{},\"maintain_ticks\":{},\"rss_delta_kb\":{},\"churn_kops\":{:.2},\"churn_ops\":{},\"alloc_fences\":{},\"alloc_flushes\":{},\"elapsed_ms\":{}}}",
+                "{{\"schema\":1,\"fig\":\"alloc\",\"x\":\"family={}\",\"family\":\"{}\",\"fill\":{},\"peak_areas\":{},\"steady_areas\":{},\"areas_returned\":{},\"maintain_ticks\":{},\"rss_delta_kb\":{},\"churn_kops\":{:.2},\"churn_ops\":{},\"alloc_fences\":{},\"alloc_flushes\":{},\"elapsed_ms\":{}}}",
                 p.family,
                 p.family,
                 p.fill,

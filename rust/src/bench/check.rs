@@ -171,7 +171,7 @@ pub fn to_json_points(points: &[CheckPoint]) -> Vec<String> {
         .iter()
         .map(|p| {
             format!(
-                "{{\"fig\":\"check\",\"x\":\"family={}\",\"family\":\"{}\",\"kops_off\":{:.2},\"kops_on\":{:.2},\"overhead_pct\":{:.1},\"ops_off\":{},\"ops_on\":{},\"events\":{},\"violations\":{},\"redundant_flushes\":{},\"elapsed_ms\":{}}}",
+                "{{\"schema\":1,\"fig\":\"check\",\"x\":\"family={}\",\"family\":\"{}\",\"kops_off\":{:.2},\"kops_on\":{:.2},\"overhead_pct\":{:.1},\"ops_off\":{},\"ops_on\":{},\"events\":{},\"violations\":{},\"redundant_flushes\":{},\"elapsed_ms\":{}}}",
                 p.family,
                 p.family,
                 p.kops_off(),

@@ -249,7 +249,7 @@ pub fn to_json_points(points: &[ConnPoint]) -> Vec<String> {
         .iter()
         .map(|p| {
             format!(
-                "{{\"fig\":\"connscale\",\"x\":\"conns={},active={}\",\"conns\":{},\"opened\":{},\"active_pct\":{},\"kops\":{:.2},\"rss_kb_before\":{},\"rss_kb\":{},\"rss_kb_per_conn\":{:.2},\"threads\":{},\"elapsed_ms\":{}}}",
+                "{{\"schema\":1,\"fig\":\"connscale\",\"x\":\"conns={},active={}\",\"conns\":{},\"opened\":{},\"active_pct\":{},\"kops\":{:.2},\"rss_kb_before\":{},\"rss_kb\":{},\"rss_kb_per_conn\":{:.2},\"threads\":{},\"elapsed_ms\":{}}}",
                 p.conns,
                 p.active_pct,
                 p.conns,
@@ -265,7 +265,7 @@ pub fn to_json_points(points: &[ConnPoint]) -> Vec<String> {
         })
         .collect();
     out.push(format!(
-        "{{\"fig\":\"connscale\",\"x\":\"verdict\",\"rss_superlinear\":{}}}",
+        "{{\"schema\":1,\"fig\":\"connscale\",\"x\":\"verdict\",\"rss_superlinear\":{}}}",
         rss_superlinear(points)
     ));
     out

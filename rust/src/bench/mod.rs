@@ -14,6 +14,7 @@
 pub mod alloc;
 pub mod check;
 pub mod connscale;
+pub mod fences;
 pub mod recovery;
 pub mod report;
 pub mod rwpath;

@@ -150,7 +150,7 @@ pub fn to_json_points(points: &[RecoveryPoint]) -> Vec<String> {
         .iter()
         .map(|p| {
             format!(
-                "{{\"fig\":\"recovery\",\"family\":\"{}\",\"keys\":{},\"threads\":{},\"members\":{},\"reclaimed\":{},\"wall_ms\":{:.3},\"scan_ms\":{:.3},\"sort_ms\":{:.3},\"relink_ms\":{:.3},\"mslots_per_s\":{:.3},\"fences\":{}}}",
+                "{{\"schema\":1,\"fig\":\"recovery\",\"family\":\"{}\",\"keys\":{},\"threads\":{},\"members\":{},\"reclaimed\":{},\"wall_ms\":{:.3},\"scan_ms\":{:.3},\"sort_ms\":{:.3},\"relink_ms\":{:.3},\"mslots_per_s\":{:.3},\"fences\":{}}}",
                 p.family,
                 p.keys,
                 p.threads,
@@ -195,7 +195,9 @@ mod tests {
         // where a lock isolates the global fence counter; lib tests run in
         // parallel threads, so an exact global delta would flake here.)
         let json = to_json_points(&pts);
-        assert!(json[0].starts_with("{\"fig\":\"recovery\",\"family\":\"soft\",\"keys\":3000,\"threads\":1"));
+        assert!(json[0].starts_with(
+            "{\"schema\":1,\"fig\":\"recovery\",\"family\":\"soft\",\"keys\":3000,\"threads\":1"
+        ));
         assert!(json[1].contains("\"threads\":2"));
         let table = render(&pts);
         assert!(table.contains("soft"), "{table}");

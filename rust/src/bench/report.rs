@@ -74,7 +74,7 @@ pub fn to_json_points(fig: &str, x_label: &str, rows: &[Row]) -> Vec<String> {
     for row in rows {
         for (f, s) in &row.samples {
             points.push(format!(
-                "{{\"fig\":\"{}\",\"x_label\":\"{}\",\"x\":\"{}\",\"family\":\"{}\",\"mops\":{:.4},\"psync_per_op\":{:.5},\"ops\":{},\"fences\":{},\"flushes\":{},\"elapsed_ms\":{}}}",
+                "{{\"schema\":1,\"fig\":\"{}\",\"x_label\":\"{}\",\"x\":\"{}\",\"family\":\"{}\",\"mops\":{:.4},\"psync_per_op\":{:.5},\"ops\":{},\"fences\":{},\"flushes\":{},\"elapsed_ms\":{}}}",
                 fig,
                 x_label,
                 row.x,
@@ -154,7 +154,7 @@ mod tests {
     fn json_points_are_wellformed() {
         let pts = to_json_points("1c", "threads", &rows());
         assert_eq!(pts.len(), 3);
-        assert!(pts[0].starts_with("{\"fig\":\"1c\",\"x_label\":\"threads\",\"x\":\"8\""));
+        assert!(pts[0].starts_with("{\"schema\":1,\"fig\":\"1c\",\"x_label\":\"threads\",\"x\":\"8\""));
         assert!(pts[0].contains("\"family\":\"soft\""));
         assert!(pts[0].contains("\"mops\":3.3000"));
         assert!(pts[0].ends_with('}'));

@@ -189,7 +189,7 @@ pub fn to_json_points(points: &[RwPoint]) -> Vec<String> {
         .iter()
         .map(|p| {
             format!(
-                "{{\"fig\":\"rwpath\",\"x\":\"rf={},depth={}\",\"family\":\"soft\",\"kops\":{:.2},\"ops\":{},\"read_lane_ops\":{},\"read_lane_fences\":{},\"read_lane_flushes\":{},\"adaptive_k_last\":{},\"adaptive_k_lo\":{},\"adaptive_k_hi\":{},\"batches\":{},\"elapsed_ms\":{}}}",
+                "{{\"schema\":1,\"fig\":\"rwpath\",\"x\":\"rf={},depth={}\",\"family\":\"soft\",\"kops\":{:.2},\"ops\":{},\"read_lane_ops\":{},\"read_lane_fences\":{},\"read_lane_flushes\":{},\"adaptive_k_last\":{},\"adaptive_k_lo\":{},\"adaptive_k_hi\":{},\"batches\":{},\"elapsed_ms\":{}}}",
                 p.read_pct,
                 p.depth,
                 p.kops(),

@@ -202,7 +202,7 @@ pub fn to_json_points(points: &[ScanPoint]) -> Vec<String> {
         .iter()
         .map(|p| {
             format!(
-                "{{\"fig\":\"scan\",\"x\":\"len={},depth={}\",\"family\":\"{}\",\"merge_kqps\":{:.2},\"probe_kqps\":{:.2},\"speedup\":{:.3},\"bursts\":{},\"items\":{},\"scan_lane_fences\":{},\"scan_lane_flushes\":{},\"elapsed_ms\":{}}}",
+                "{{\"schema\":1,\"fig\":\"scan\",\"x\":\"len={},depth={}\",\"family\":\"{}\",\"merge_kqps\":{:.2},\"probe_kqps\":{:.2},\"speedup\":{:.3},\"bursts\":{},\"items\":{},\"scan_lane_fences\":{},\"scan_lane_flushes\":{},\"elapsed_ms\":{}}}",
                 p.scan_len,
                 p.depth,
                 p.family,

@@ -42,6 +42,7 @@ const FENCE_PINNED_FILES: &[&str] = &[
     "src/sets/soft/list.rs",
     "src/sets/soft/skiplist.rs",
     "src/sets/logfree/list.rs",
+    "src/sets/nvtraverse/list.rs",
     "src/sets/resizable.rs",
 ];
 

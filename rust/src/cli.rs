@@ -64,7 +64,7 @@ USAGE:
 COMMANDS:
   serve         run the sharded durable KV service (TCP line protocol)
   bench         regenerate a paper figure:
-                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|rwpath|scan|connscale|alloc|all
+                --fig 1a|1b|1c|2a|2b|3a|3b|3c|psync|batch|recovery|rwpath|scan|connscale|alloc|fences|all
                 --json FILE writes machine-readable data points
                 --fig recovery sweeps rebuild wall-clock over recovery
                 threads x pool sizes (--keys N, or DURASETS_RECOVERY_KEYS
@@ -84,6 +84,11 @@ COMMANDS:
                 maintain to steady state -> Zipf churn, reporting areas
                 returned, RSS delta and the alloc-path psync meter
                 (pinned 0)
+                --fig fences runs the fences/op ablation: all four
+                durable families x {insert-heavy, zipf-mixed,
+                contains-heavy, batch K in {1,64}, traversal-zipf-miss},
+                reporting fences/op, flushes/op, elided/op and the
+                NVTraverse-below-link-free traversal verdict (CI-gated)
   crash-test    run ops, crash (sim), recover, verify — end to end
   recover-demo  build a store, crash it, time rust vs XLA-accelerated recovery
   workload      print a sample of the deterministic op stream
@@ -102,7 +107,7 @@ PROTOCOL (serve): PUT/GET/HAS/DEL/RANGE/SCAN/LEN/STATS/QUIT. Updates
   (all-or-nothing under crashes).
 
 CONFIG KEYS (file or key=value):
-  family=soft|link-free|log-free|volatile   structure=hash|list|skiplist
+  family=soft|link-free|log-free|nvtraverse|volatile   structure=hash|list|skiplist
   (skiplist requires family soft or link-free; serves RANGE/SCAN)
   shards=N  key_range=N[K|M]  read_pct=0..100  threads=N
   psync_ns=N  sim=true|false  seed=N  port=N  max_conns=N  duration_ms=N

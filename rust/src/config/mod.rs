@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! # durasets.conf
-//! family      = soft        # link-free | soft | log-free | volatile
+//! family      = soft        # link-free | soft | log-free | nvtraverse | volatile
 //! structure   = hash        # hash | list | skiplist
 //! shards      = 4
 //! key_range   = 1048576
@@ -312,7 +312,7 @@ mod tests {
             Config::load(None, &["structure=skiplist".into(), "family=link-free".into()])
                 .unwrap();
         assert_eq!(cfg.family, Family::LinkFree);
-        for fam in ["log-free", "volatile"] {
+        for fam in ["log-free", "nvtraverse", "volatile"] {
             assert!(
                 Config::load(
                     None,

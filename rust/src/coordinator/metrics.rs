@@ -3,6 +3,7 @@
 //! overkill here — shard workers are few; plain relaxed atomics are
 //! uncontended in practice).
 
+use crate::pmem::stats::PmemStats;
 use crate::sets::{GrowthStats, OpResult, SetOp};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -42,6 +43,16 @@ pub struct Metrics {
     pub sl_fences: AtomicU64,
     /// Flushes the scan lane issued (same pin as `sl_fences`).
     pub sl_flushes: AtomicU64,
+    /// Ops covered by the worker-path fence gauge (group commits +
+    /// atomic sub-batches; the fences/op ablation's serving-path mirror).
+    pub fence_ops: AtomicU64,
+    /// Fences those ops paid (each group's trailing fence, mostly).
+    pub fences_total: AtomicU64,
+    /// Cache-line flushes those ops issued.
+    pub flushes_total: AtomicU64,
+    /// Per-op fences elided into a group's single trailing fence
+    /// (`PsyncScope` coalescing) — `elided / fences` is the amortization.
+    pub fences_elided: AtomicU64,
     /// Atomic cross-shard batches executed.
     pub atomics: AtomicU64,
     /// Ops inside atomic batches.
@@ -109,6 +120,10 @@ impl Metrics {
             sl_ops: Z,
             sl_fences: Z,
             sl_flushes: Z,
+            fence_ops: Z,
+            fences_total: Z,
+            flushes_total: Z,
+            fences_elided: Z,
             atomics: Z,
             atomic_ops: Z,
             rolled_forward: Z,
@@ -224,6 +239,17 @@ impl Metrics {
         self.sl_fences.fetch_add(fences, Ordering::Relaxed);
         self.sl_flushes.fetch_add(flushes, Ordering::Relaxed);
         self.sl_runs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `ops` committed ops against the worker-path fence gauge,
+    /// with the pmem counter delta their commit measured around
+    /// `apply_batch` (the worker meters its own thread).
+    #[inline]
+    pub fn record_fences(&self, ops: u64, d: &PmemStats) {
+        self.fence_ops.fetch_add(ops, Ordering::Relaxed);
+        self.fences_total.fetch_add(d.fences, Ordering::Relaxed);
+        self.flushes_total.fetch_add(d.flushes, Ordering::Relaxed);
+        self.fences_elided.fetch_add(d.elided, Ordering::Relaxed);
     }
 
     /// Count one atomic cross-shard batch of `n` ops.
@@ -371,6 +397,15 @@ impl Metrics {
                 self.sl_ops.load(Ordering::Relaxed),
                 self.sl_fences.load(Ordering::Relaxed),
                 self.sl_flushes.load(Ordering::Relaxed),
+            ));
+        }
+        if self.fence_ops.load(Ordering::Relaxed) > 0 {
+            out.push_str(&format!(
+                " fences=[ops={} fences={} flushes={} elided={}]",
+                self.fence_ops.load(Ordering::Relaxed),
+                self.fences_total.load(Ordering::Relaxed),
+                self.flushes_total.load(Ordering::Relaxed),
+                self.fences_elided.load(Ordering::Relaxed),
             ));
         }
         if self.cp_workers.load(Ordering::Relaxed) > 0 {
@@ -630,6 +665,16 @@ mod tests {
         assert_eq!(m.batches.load(Ordering::Relaxed), total);
         assert_eq!(m.rl_runs.load(Ordering::Relaxed), total);
         assert_eq!(m.rl_ops.load(Ordering::Relaxed), total * 4);
+    }
+
+    #[test]
+    fn fence_gauge_renders_only_after_update_commits() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("fences=["), "silent until first commit");
+        m.record_fences(64, &PmemStats { flushes: 64, fences: 1, elided: 64 });
+        m.record_fences(1, &PmemStats { flushes: 1, fences: 1, elided: 1 });
+        let r = m.report();
+        assert!(r.contains("fences=[ops=65 fences=2 flushes=65 elided=65]"), "{r}");
     }
 
     #[test]

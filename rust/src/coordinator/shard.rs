@@ -137,6 +137,18 @@ impl Shard {
                             let (l, s, t) = sets::logfree::recover_list_timed(pool, threads);
                             (Box::new(l), s, t)
                         }
+                        (Family::NvTraverse, Structure::Hash) => {
+                            let (h, s, t) = sets::resizable::recover_nvtraverse_timed(
+                                pool,
+                                meta.nbuckets,
+                                threads,
+                            );
+                            (Box::new(h), s, t)
+                        }
+                        (Family::NvTraverse, Structure::List) => {
+                            let (l, s, t) = sets::nvtraverse::recover_list_timed(pool, threads);
+                            (Box::new(l), s, t)
+                        }
                         (Family::LinkFree, Structure::SkipList) => {
                             let (l, s, t) = sets::linkfree::recover_skiplist_timed(pool, threads);
                             (Box::new(l), s, t)
@@ -147,7 +159,9 @@ impl Shard {
                         }
                         // Config validation rejects skip lists for the
                         // remaining families before a shard can exist.
-                        (Family::LogFree, Structure::SkipList) => unreachable!(),
+                        (Family::LogFree | Family::NvTraverse, Structure::SkipList) => {
+                            unreachable!()
+                        }
                         (Family::Volatile, _) => unreachable!(),
                     };
                 rec.stats = stats;
@@ -390,6 +404,7 @@ fn commit_group(
     sinks: &mut Vec<Sink>,
 ) -> Duration {
     let t0 = Instant::now();
+    let pm0 = crate::pmem::stats::thread_snapshot();
     // The group commit: results become claimable only after the batch's
     // trailing fence, i.e. when apply_batch returns.
     let results = set.apply_batch(ops);
@@ -399,6 +414,13 @@ fn commit_group(
     let elapsed = t0.elapsed();
     if !ops.is_empty() {
         metrics.record_group(ops.len() as u64);
+        // The worker thread ran the whole batch, so its counter delta is
+        // exactly this commit's fence/flush bill (the STATS `fences=`
+        // gauge, mirroring `bench --fig fences` on the serving path).
+        metrics.record_fences(
+            ops.len() as u64,
+            &crate::pmem::stats::thread_snapshot().since(&pm0),
+        );
         // One histogram entry per group commit: the histogram tracks
         // commit latency (every request in the group waited this long),
         // not per-op cost repeated N times.
@@ -443,6 +465,7 @@ fn serve_txn(set: &dyn ConcurrentSet, metrics: &Metrics, handle: TxnHandle) {
         match handle.go.recv() {
             Ok(TxnCmd::Apply(ops)) => {
                 let t0 = Instant::now();
+                let pm0 = crate::pmem::stats::thread_snapshot();
                 // One PsyncScope per participating shard: this is the
                 // "prepare-apply" of the two-phase protocol, running
                 // strictly after the coordinator's commit point.
@@ -450,6 +473,10 @@ fn serve_txn(set: &dyn ConcurrentSet, metrics: &Metrics, handle: TxnHandle) {
                 // Ack boundary: the coordinator treats `done` as durable.
                 crate::pmem::check::assert_persisted("shard.serve_txn");
                 metrics.record_group(ops.len() as u64);
+                metrics.record_fences(
+                    ops.len() as u64,
+                    &crate::pmem::stats::thread_snapshot().since(&pm0),
+                );
                 metrics.record_latency(t0.elapsed());
                 for (&op, &res) in ops.iter().zip(results.iter()) {
                     metrics.record_op(op, res);
@@ -610,6 +637,11 @@ mod tests {
         );
         assert_eq!(metrics.ops_total(), 5);
         assert!(metrics.batches.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        assert_eq!(
+            metrics.fence_ops.load(std::sync::atomic::Ordering::Relaxed),
+            5,
+            "every committed op is covered by the fence gauge"
+        );
         w.shutdown();
     }
 

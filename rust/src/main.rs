@@ -145,6 +145,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let points = bench::rwpath::sweep(cfg.duration, seed);
         print!("{}", bench::rwpath::render(&points));
         json_points.extend(bench::rwpath::to_json_points(&points));
+    } else if fig == "fences" {
+        // The fences/op ablation: all four durable families across
+        // update-heavy / Zipf-mixed / contains-heavy / batched regimes,
+        // plus the traversal gate (NVTraverse flushes/op strictly below
+        // link-free under churn; its read lane pinned 0 — the CI
+        // fences-bench job greps the JSON verdict).
+        let points = bench::fences::sweep(cfg.duration, seed, psync_ns);
+        print!("{}", bench::fences::render(&points));
+        json_points.extend(bench::fences::to_json_points(&points));
     } else if fig == "check" {
         // durcheck overhead: armed vs disarmed throughput per durable
         // family (sim-mode-only tax; the armed phase must stay violation-

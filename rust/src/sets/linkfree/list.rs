@@ -39,7 +39,7 @@ impl LfCore {
     /// returns to a free-list after the grace period (still carrying the
     /// valid+marked pattern, i.e. recoverable-as-free).
     #[inline]
-    unsafe fn retire_node(&self, node: *mut LfNode) {
+    pub(crate) unsafe fn retire_node(&self, node: *mut LfNode) {
         self.ebr
             .retire(node as *mut u8, Arc::as_ptr(&self.pool) as usize, free_into_pool);
     }

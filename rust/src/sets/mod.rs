@@ -1,12 +1,13 @@
 //! The durable set algorithms.
 //!
-//! Four families, one trait:
+//! Five families, one trait:
 //!
 //! | family | module | durability | psyncs/update | psyncs/read | fences/op, K-batch | hash growth | compaction migrate (DESIGN.md §Allocator) | `contains_batch` | `range`/`scan` | durcheck hooks (DESIGN.md §Checking) |
 //! |---|---|---|---|---|---|---|---|---|---|---|
 //! | **link-free** (paper §3) | [`linkfree`] | durable linearizable | ~1 (flag-elided) | ≤1 (0 quiescent) | ~1/K | [`resizable`] | copy + volatile pred swing; delete record deferred one EBR grace period (crash in window ⇒ recovery dedup) | coalesced ([`ResizableHash`]: one pin, okey-sorted probes; [`linkfree::LfSkipList`]: one pin, sorted probe run) | [`linkfree::LfSkipList`] (flush-free merge-walk) | validity flips + delete marks noted as durable stores |
 //! | **SOFT** (paper §4) | [`soft`] | durable linearizable | exactly 1 | 0 | 1/K | [`resizable`] | fresh `PNode` + `pptr` swap; old destroyed + freed immediately (readers never dereference `pptr`) | coalesced ([`ResizableHash`] / [`soft::SoftSkipList`]) | [`soft::SoftSkipList`] (flush-free merge-walk) | pnode create/destroy noted; `pptr` publish order asserted |
 //! | **log-free** (David et al. ATC'18, baseline) | [`logfree`] | durable linearizable | ~2 | ≤2 (0 clean) | ~1/K (flushes stay ~2/op) | [`resizable`] | copy + link-and-persist pred swing (atomic durable handoff, no duplicate window) | coalesced ([`ResizableHash`]) | — (hash order only) | link-and-persist stores noted; link-target publish order asserted |
+//! | **nvtraverse** (Friedman et al. PLDI'20) | [`nvtraverse`] | durable linearizable (buffered for pure reads — DESIGN.md §Families) | 1 (destination-only) | **0 always** | 1/K | [`resizable`] | link-free machinery (shared durable format) | coalesced ([`ResizableHash`]) | — (hash order only) | delete marks noted; flush-before-unlink on every detach |
 //! | **volatile** (Harris 2001, ablation) | [`volatile`] | none | 0 | 0 | 0 | fixed | — (nothing durable to compact) | default loop | — | — (no durable stores) |
 //!
 //! Each family provides a sorted linked list and a hash set built from the
@@ -17,7 +18,7 @@
 //! link-word shape; area scanning, classification and chain relinking are
 //! engine-owned and multi-threaded (DESIGN.md §Recovery).
 //!
-//! Hash sets of the three durable families are **resizable**
+//! Hash sets of the durable families are **resizable**
 //! ([`ResizableHash`]): one family list in `mix64(key)` order plus a
 //! lock-free doubling array of bucket entry hints. Growth triggers when
 //! the average chain length crosses [`resizable::GROW_LOAD`], migration is
@@ -51,6 +52,7 @@
 
 pub mod linkfree;
 pub mod logfree;
+pub mod nvtraverse;
 pub mod recovery;
 pub mod resizable;
 pub mod soft;
@@ -58,7 +60,9 @@ pub mod tagged;
 pub mod volatile;
 
 pub use recovery::{PhaseTimings, RecoveredStats};
-pub use resizable::{ResizableHash, ResizableLfHash, ResizableLogFreeHash, ResizableSoftHash};
+pub use resizable::{
+    ResizableHash, ResizableLfHash, ResizableLogFreeHash, ResizableNvHash, ResizableSoftHash,
+};
 
 /// One operation of a batch — the wire protocol's verbs over the set API.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -98,7 +102,7 @@ pub enum OpResult {
 ///
 /// * `insert` adds `key -> value`; false if the key was present.
 /// * `remove` deletes `key`; false if it was absent.
-/// * `contains` is read-only (wait-free in all four families).
+/// * `contains` is read-only (wait-free in all five families).
 pub trait ConcurrentSet: Send + Sync {
     fn insert(&self, key: u64, value: u64) -> bool;
     fn remove(&self, key: u64) -> bool;
@@ -291,20 +295,30 @@ pub enum Family {
     LinkFree,
     Soft,
     LogFree,
+    NvTraverse,
     Volatile,
 }
 
 impl Family {
-    pub const ALL: [Family; 4] = [Family::LinkFree, Family::Soft, Family::LogFree, Family::Volatile];
+    pub const ALL: [Family; 5] = [
+        Family::LinkFree,
+        Family::Soft,
+        Family::LogFree,
+        Family::NvTraverse,
+        Family::Volatile,
+    ];
 
-    /// The three durable families compared in the paper's evaluation.
-    pub const DURABLE: [Family; 3] = [Family::LinkFree, Family::Soft, Family::LogFree];
+    /// The durable families: the paper's three plus the NVTraverse
+    /// follow-on (the fences/op ablation compares all four).
+    pub const DURABLE: [Family; 4] =
+        [Family::LinkFree, Family::Soft, Family::LogFree, Family::NvTraverse];
 
     pub fn name(&self) -> &'static str {
         match self {
             Family::LinkFree => "link-free",
             Family::Soft => "soft",
             Family::LogFree => "log-free",
+            Family::NvTraverse => "nvtraverse",
             Family::Volatile => "volatile",
         }
     }
@@ -314,6 +328,7 @@ impl Family {
             "link-free" | "linkfree" | "lf" => Some(Family::LinkFree),
             "soft" => Some(Family::Soft),
             "log-free" | "logfree" => Some(Family::LogFree),
+            "nvtraverse" | "nv-traverse" | "nv" => Some(Family::NvTraverse),
             "volatile" | "harris" => Some(Family::Volatile),
             _ => None,
         }
@@ -332,6 +347,7 @@ pub fn new_list(family: Family) -> Box<dyn ConcurrentSet> {
         Family::LinkFree => Box::new(linkfree::LfList::new()),
         Family::Soft => Box::new(soft::SoftList::new()),
         Family::LogFree => Box::new(logfree::LogFreeList::new()),
+        Family::NvTraverse => Box::new(nvtraverse::NvList::new()),
         Family::Volatile => Box::new(volatile::VolatileList::new()),
     }
 }
@@ -344,6 +360,7 @@ pub fn new_hash(family: Family, nbuckets: usize) -> Box<dyn ConcurrentSet> {
         Family::LinkFree => Box::new(ResizableHash::new_linkfree(nbuckets)),
         Family::Soft => Box::new(ResizableHash::new_soft(nbuckets)),
         Family::LogFree => Box::new(ResizableHash::new_logfree(nbuckets)),
+        Family::NvTraverse => Box::new(ResizableHash::new_nvtraverse(nbuckets)),
         Family::Volatile => Box::new(volatile::VolatileHash::new(nbuckets)),
     }
 }
@@ -356,7 +373,7 @@ pub fn new_skiplist(family: Family) -> Box<dyn ConcurrentSet> {
     match family {
         Family::LinkFree => Box::new(linkfree::LfSkipList::new()),
         Family::Soft => Box::new(soft::SoftSkipList::new()),
-        Family::LogFree | Family::Volatile => {
+        Family::LogFree | Family::NvTraverse | Family::Volatile => {
             panic!("no skip-list structure for family {family} (config validates this)")
         }
     }

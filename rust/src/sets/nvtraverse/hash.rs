@@ -1,0 +1,160 @@
+//! NVTraverse fixed-bucket hash set (load-factor-1 evaluation shape,
+//! like [`crate::sets::linkfree::LfHash`]). A bucket is one bare link
+//! cell; the NVTraverse list core runs unchanged on it. The bucket
+//! array is volatile — recovery rebuilds it from the durable areas.
+
+use crate::sets::ConcurrentSet;
+use crate::util::mix64;
+use std::sync::atomic::AtomicU64;
+
+use super::list::NvCore;
+
+pub struct NvHash {
+    pub(crate) buckets: Box<[AtomicU64]>,
+    pub(crate) core: NvCore,
+}
+
+unsafe impl Send for NvHash {}
+unsafe impl Sync for NvHash {}
+
+impl NvHash {
+    /// `nbuckets` is rounded up to a power of two.
+    pub fn new(nbuckets: usize) -> Self {
+        Self::from_parts(nbuckets, NvCore::new())
+    }
+
+    pub(crate) fn from_parts(nbuckets: usize, core: NvCore) -> Self {
+        let n = nbuckets.next_power_of_two().max(1);
+        let buckets = (0..n).map(|_| AtomicU64::new(0)).collect();
+        NvHash { buckets, core }
+    }
+
+    #[inline(always)]
+    pub(crate) fn bucket_of(&self, key: u64) -> &AtomicU64 {
+        let i = (mix64(key) as usize) & (self.buckets.len() - 1);
+        &self.buckets[i]
+    }
+
+    pub fn nbuckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn pool_id(&self) -> crate::pmem::PoolId {
+        self.core.inner.pool.id()
+    }
+
+    /// Keep durable regions alive across a simulated crash.
+    pub fn crash_preserve(&self) {
+        self.core.inner.pool.preserve();
+    }
+
+    /// All (key, value) pairs, unordered (test/debug only).
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for b in self.buckets.iter() {
+            out.extend(self.core.inner.snapshot(b));
+        }
+        out
+    }
+}
+
+impl Drop for NvHash {
+    fn drop(&mut self) {
+        unsafe { self.core.inner.ebr.drain_all() };
+    }
+}
+
+impl ConcurrentSet for NvHash {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.core.insert(self.bucket_of(key), key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.core.remove(self.bucket_of(key), key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.core.get(self.bucket_of(key), key).is_some()
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.core.get(self.bucket_of(key), key)
+    }
+    fn len_approx(&self) -> usize {
+        self.buckets.iter().map(|b| self.core.inner.count(b)).sum()
+    }
+    fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
+        crate::sets::apply_batch_coalesced(self, ops)
+    }
+    fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
+        Some(self.pool_id())
+    }
+    fn prepare_crash(&self) {
+        self.crash_preserve();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_hash_ops() {
+        let h = NvHash::new(16);
+        assert_eq!(h.nbuckets(), 16);
+        for k in 0..100u64 {
+            assert!(h.insert(k, k * 10));
+        }
+        for k in 0..100u64 {
+            assert!(h.contains(k));
+            assert_eq!(h.get(k), Some(k * 10));
+            assert!(!h.insert(k, 0));
+        }
+        assert_eq!(h.len_approx(), 100);
+        for k in (0..100u64).step_by(2) {
+            assert!(h.remove(k));
+        }
+        assert_eq!(h.len_approx(), 50);
+        assert!(!h.contains(0));
+        assert!(h.contains(1));
+    }
+
+    #[test]
+    fn concurrent_hash_stress() {
+        use std::sync::Arc;
+        let h = Arc::new(NvHash::new(64));
+        let handles: Vec<_> = (0..8u64)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::new(t * 11 + 3);
+                    let mut net = 0i64;
+                    for _ in 0..5000 {
+                        let k = rng.below(256);
+                        match rng.below(3) {
+                            0 => {
+                                if h.insert(k, k) {
+                                    net += 1;
+                                }
+                            }
+                            1 => {
+                                if h.remove(k) {
+                                    net -= 1;
+                                }
+                            }
+                            _ => {
+                                let _ = h.contains(k);
+                            }
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(h.len_approx() as i64, net);
+        let snap = h.snapshot();
+        let mut uniq: Vec<u64> = snap.iter().map(|kv| kv.0).collect();
+        uniq.sort_unstable();
+        let n = uniq.len();
+        uniq.dedup();
+        assert_eq!(n, uniq.len(), "no duplicate keys across buckets");
+    }
+}

@@ -1,0 +1,622 @@
+//! NVTraverse-transformed link-free sorted list.
+//!
+//! Same durable format as the link-free family (one [`LfNode`] cache
+//! line, two-bit validity, flush flags, slot-scan recovery) but the
+//! *traversal* discipline of NVTraverse ("the destination is more
+//! important than the journey"): the search prefix of an operation
+//! issues **zero** flushes and zero CASes. Marked nodes met on the way
+//! are skipped, not trimmed; only at the operation's destination window
+//! (pred/curr at the linearization point) is persistence work done —
+//! the skipped run's delete records are flushed and the whole run
+//! unlinked with one batch CAS. Updates keep the link-free shape of
+//! exactly one psync at the destination; reads flush nothing at all
+//! (they have no destination — the same contract as the scan lane's
+//! [`super::super::linkfree::list::LfCore::walk_from`]: every *acked*
+//! update was already persisted by its issuer). See DESIGN.md §Families
+//! for the durable-linearizability argument.
+//!
+//! Invariant shared with link-free trim: a marked node's delete record
+//! is `flush_delete`d **before** any unlink CAS makes it unreachable —
+//! otherwise a same-key re-insert could put two valid copies of the key
+//! in the durable image and recovery would see a duplicate it cannot
+//! attribute to compaction.
+
+use crate::alloc::{DurablePool, Ebr};
+use crate::sets::linkfree::{LfCore, LfNode};
+use crate::sets::tagged::{is_marked, ptr_of, MARK};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared engine for the NVTraverse containers: the link-free core's
+/// pool/EBR/node machinery with the NVTraverse traversal discipline on
+/// top. Neutral plumbing (count, snapshot, compaction migration)
+/// delegates to the embedded [`LfCore`] — the durable format is
+/// identical, only the hot paths differ.
+pub(crate) struct NvCore {
+    pub(crate) inner: LfCore,
+}
+
+impl NvCore {
+    pub fn new() -> Self {
+        NvCore { inner: LfCore::new() }
+    }
+
+    pub fn from_parts(pool: Arc<DurablePool>, ebr: Arc<Ebr>) -> Self {
+        NvCore { inner: LfCore::from_parts(pool, ebr) }
+    }
+
+    /// Locate the first unmarked node with key >= `key`, flush-free on
+    /// the journey. Returns the link cell of the last unmarked node with
+    /// a smaller key and `curr` itself (null = end of list), with the
+    /// window between them guaranteed clean of marked nodes at return:
+    /// a skipped run is flushed and batch-unlinked at the destination.
+    /// Caller must hold an EBR guard.
+    unsafe fn find(&self, head: *const AtomicU64, key: u64) -> (*const AtomicU64, *mut LfNode) {
+        self.find_from(head, head, key)
+    }
+
+    /// `find` starting from a *hint* link cell (resizable-hash fast
+    /// path), with the same gen-validated-hint TOCTOU fallback as the
+    /// link-free core.
+    pub(crate) unsafe fn find_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> (*const AtomicU64, *mut LfNode) {
+        let mut from = start;
+        'retry: loop {
+            let mut pred_link = std::mem::replace(&mut from, head);
+            let first = (*pred_link).load(Ordering::Acquire);
+            // Hint staleness (TOCTOU): a hint marked after validation has
+            // a frozen `next` that bypasses nodes inserted at its unlink
+            // point. Restart from the head.
+            if !std::ptr::eq(pred_link, head) && is_marked(first) {
+                continue 'retry;
+            }
+            // Journey: pure reads. Marked nodes are skipped — no flush,
+            // no CAS; `skipped` records whether the final window
+            // [pred_link -> curr] still contains any.
+            let mut curr = ptr_of::<LfNode>(first);
+            let mut skipped = false;
+            loop {
+                if curr.is_null() {
+                    break;
+                }
+                let succ_t = (*curr).next.load(Ordering::Acquire);
+                if is_marked(succ_t) {
+                    skipped = true;
+                    curr = ptr_of::<LfNode>(succ_t);
+                } else if (*curr).key.load(Ordering::Relaxed) >= key {
+                    break;
+                } else {
+                    pred_link = &(*curr).next as *const AtomicU64;
+                    skipped = false;
+                    curr = ptr_of::<LfNode>(succ_t);
+                }
+            }
+            if !skipped {
+                return (pred_link, curr);
+            }
+            // Destination: persist the skipped run's delete records, then
+            // detach the whole run with one CAS. Reload the window first —
+            // it may have moved under the flush-free walk.
+            let observed = (*pred_link).load(Ordering::Acquire);
+            if is_marked(observed) {
+                continue 'retry; // pred itself was deleted meanwhile
+            }
+            if ptr_of::<LfNode>(observed) == curr {
+                return (pred_link, curr); // someone else unlinked the run
+            }
+            // Re-walk observed..curr verifying every intermediate node is
+            // (still) marked: an unmarked one means a concurrent insert
+            // landed inside the stale window — restart rather than detach
+            // a live node. Each marked node is flushed BEFORE the unlink
+            // (see the module invariant); the flags elide re-flushes.
+            let mut run = ptr_of::<LfNode>(observed);
+            loop {
+                if std::ptr::eq(run, curr) {
+                    break;
+                }
+                if run.is_null() {
+                    continue 'retry;
+                }
+                let s = (*run).next.load(Ordering::Acquire);
+                if !is_marked(s) {
+                    continue 'retry;
+                }
+                (*run).flush_delete();
+                run = ptr_of::<LfNode>(s);
+            }
+            if (*pred_link)
+                .compare_exchange(observed, curr as u64, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue 'retry;
+            }
+            // The detached run is NOT retired here: reclamation stays
+            // with each node's mark-CAS winner (its remover), exactly as
+            // in the link-free core.
+            return (pred_link, curr);
+        }
+    }
+
+    pub fn insert(&self, head: *const AtomicU64, key: u64, value: u64) -> bool {
+        self.insert_from(head, head, key, value)
+    }
+
+    /// Insert whose first window search starts at a validated hint link.
+    /// Identical to the link-free insert except that the window search is
+    /// the flush-free NVTraverse `find` — the destination work (helping
+    /// an earlier same-key insert, or validate + flush the new node) is
+    /// byte-for-byte the link-free protocol.
+    pub(crate) fn insert_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+        value: u64,
+    ) -> bool {
+        let _g = self.inner.ebr.pin();
+        let mut new_node: *mut LfNode = std::ptr::null_mut();
+        let mut from = start;
+        loop {
+            unsafe {
+                let (pred_link, curr) = self.find_from(std::mem::replace(&mut from, head), head, key);
+                if !curr.is_null() && (*curr).key.load(Ordering::Relaxed) == key {
+                    // Destination help (§3.3): the earlier insert of this
+                    // key must be durable before this failed insert acks.
+                    (*curr).make_valid();
+                    (*curr).flush_insert();
+                    if !new_node.is_null() {
+                        LfNode::init_free_pattern(new_node as *mut u8);
+                        self.inner.pool.free(new_node as *mut u8);
+                    }
+                    return false;
+                }
+                if new_node.is_null() {
+                    new_node = self.inner.pool.alloc() as *mut LfNode;
+                    // Invalid-before-init: a crash during initialisation
+                    // must not let recovery see a half-written node.
+                    (*new_node).make_invalid();
+                    std::sync::atomic::fence(Ordering::Release);
+                    (*new_node).reset_flush_flags();
+                    // Release: a hint validator that reads THIS incarnation's
+                    // key (Acquire) must also observe the allocator's gen
+                    // bump (DESIGN.md §Reclamation — same rationale as the
+                    // link-free insert).
+                    (*new_node).key.store(key, Ordering::Release);
+                    (*new_node).value.store(value, Ordering::Relaxed);
+                }
+                // Link (still invalid!), then validate, then persist —
+                // the one psync of the operation, at the destination.
+                (*new_node).next.store(curr as u64, Ordering::Release);
+                if (*pred_link)
+                    .compare_exchange(
+                        curr as u64,
+                        new_node as u64,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    (*new_node).make_valid();
+                    (*new_node).flush_insert();
+                    return true;
+                }
+            }
+        }
+    }
+
+    pub fn remove(&self, head: *const AtomicU64, key: u64) -> bool {
+        self.remove_from(head, head, key)
+    }
+
+    /// Remove whose first window search starts at a validated hint link.
+    /// Destination shape: mark CAS, **flush the delete record**, then one
+    /// unlink CAS — flush-before-unlink, so the record is durable before
+    /// the node can become unreachable.
+    pub(crate) fn remove_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> bool {
+        let _g = self.inner.ebr.pin();
+        let mut from = start;
+        loop {
+            unsafe {
+                let (pred_link, curr) = self.find_from(std::mem::replace(&mut from, head), head, key);
+                if curr.is_null() || (*curr).key.load(Ordering::Relaxed) != key {
+                    return false;
+                }
+                let succ_t = (*curr).next.load(Ordering::Acquire);
+                if is_marked(succ_t) {
+                    // Lost to another remover; converge via find (whose
+                    // destination cleanup detaches it) and fail there.
+                    continue;
+                }
+                // Invariant: a marked node is valid (same line, no psync
+                // needed between the two stores — paper §3.4).
+                (*curr).make_valid();
+                if (*curr)
+                    .next
+                    .compare_exchange(succ_t, succ_t | MARK, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    // The mark is the durable delete record; persist it at
+                    // the destination before any unlink can hide the node.
+                    crate::pmem::check::note_store(curr as *const u8);
+                    (*curr).flush_delete();
+                    let succ = ptr_of::<LfNode>(succ_t);
+                    if (*pred_link)
+                        .compare_exchange(
+                            curr as u64,
+                            succ as u64,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_err()
+                    {
+                        // Window went stale; find's destination cleanup
+                        // guarantees no marked node with this key stays
+                        // reachable.
+                        let _ = self.find(head, key);
+                    }
+                    self.inner.retire_node(curr);
+                    return true;
+                }
+            }
+        }
+    }
+
+    pub fn get(&self, head: *const AtomicU64, key: u64) -> Option<u64> {
+        self.get_from(head, head, key)
+    }
+
+    /// Wait-free read, **unconditionally flush- and fence-free**: a read
+    /// has no destination to persist (unlike the link-free read, which
+    /// helps-flush in-flight state it depends on). Membership uses the
+    /// same include-iff-unmarked rule as the scan lane; every acked
+    /// update was persisted by its issuer, so the answer is durable for
+    /// everything the client could have observed acked (DESIGN.md
+    /// §Families).
+    pub(crate) fn get_from(
+        &self,
+        start: *const AtomicU64,
+        head: *const AtomicU64,
+        key: u64,
+    ) -> Option<u64> {
+        let _g = self.inner.ebr.pin();
+        unsafe {
+            let mut from = start;
+            // Same hint TOCTOU as find_from (no CAS safety net on a read).
+            if !std::ptr::eq(start, head) && is_marked((*start).load(Ordering::Acquire)) {
+                from = head;
+            }
+            let mut curr = ptr_of::<LfNode>((*from).load(Ordering::Acquire));
+            while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) < key {
+                curr = ptr_of::<LfNode>((*curr).next.load(Ordering::Acquire));
+            }
+            if curr.is_null() || (*curr).key.load(Ordering::Relaxed) != key {
+                return None;
+            }
+            if is_marked((*curr).next.load(Ordering::Acquire)) {
+                return None;
+            }
+            Some((*curr).value.load(Ordering::Relaxed))
+        }
+    }
+}
+
+/// The NVTraverse sorted-list set.
+pub struct NvList {
+    pub(crate) head: AtomicU64,
+    pub(crate) core: NvCore,
+}
+
+unsafe impl Send for NvList {}
+unsafe impl Sync for NvList {}
+
+impl NvList {
+    pub fn new() -> Self {
+        NvList { head: AtomicU64::new(0), core: NvCore::new() }
+    }
+
+    pub(crate) fn from_parts(head_value: u64, core: NvCore) -> Self {
+        NvList { head: AtomicU64::new(head_value), core }
+    }
+
+    /// The durable pool id (names the areas; needed to recover after a
+    /// crash — see [`super::recover_list`]).
+    pub fn pool_id(&self) -> crate::pmem::PoolId {
+        self.core.inner.pool.id()
+    }
+
+    /// Prepare for a simulated crash: keep the durable regions alive when
+    /// this (volatile) handle is dropped.
+    pub fn crash_preserve(&self) {
+        self.core.inner.pool.preserve();
+    }
+
+    /// Ordered snapshot (test/debug).
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        self.core.inner.snapshot(&self.head)
+    }
+}
+
+impl Default for NvList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for NvList {
+    fn drop(&mut self) {
+        // Flush deferred frees while the pool is still alive; after a
+        // simulated crash the limbo lists are abandoned (recovery reclaims
+        // the durable slots from the areas instead).
+        unsafe { self.core.inner.ebr.drain_all() };
+    }
+}
+
+impl crate::sets::ConcurrentSet for NvList {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.core.insert(&self.head, key, value)
+    }
+    fn remove(&self, key: u64) -> bool {
+        self.core.remove(&self.head, key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.core.get(&self.head, key).is_some()
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        self.core.get(&self.head, key)
+    }
+    fn len_approx(&self) -> usize {
+        self.core.inner.count(&self.head)
+    }
+    fn apply_batch(&self, ops: &[crate::sets::SetOp]) -> Vec<crate::sets::OpResult> {
+        // Group commit: the batch issuer's fences collapse into one
+        // trailing fence; per-op destination flushes stay flag-elided.
+        crate::sets::apply_batch_coalesced(self, ops)
+    }
+    fn durable_pool(&self) -> Option<crate::pmem::PoolId> {
+        Some(self.pool_id())
+    }
+    fn prepare_crash(&self) {
+        self.crash_preserve();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sets::{ConcurrentSet, SetOp};
+
+    #[test]
+    fn sequential_semantics() {
+        let l = NvList::new();
+        assert!(!l.contains(5));
+        assert!(l.insert(5, 50));
+        assert!(!l.insert(5, 51), "duplicate insert must fail");
+        assert!(l.contains(5));
+        assert_eq!(l.get(5), Some(50));
+        assert!(l.insert(3, 30));
+        assert!(l.insert(7, 70));
+        assert_eq!(l.snapshot(), vec![(3, 30), (5, 50), (7, 70)]);
+        assert!(l.remove(5));
+        assert!(!l.remove(5), "double remove must fail");
+        assert!(!l.contains(5));
+        assert_eq!(l.snapshot(), vec![(3, 30), (7, 70)]);
+        assert_eq!(l.len_approx(), 2);
+    }
+
+    #[test]
+    fn matches_btreeset_model_random_ops() {
+        use crate::util::rng::Xoshiro256;
+        let l = NvList::new();
+        let mut model = std::collections::BTreeSet::new();
+        let mut rng = Xoshiro256::new(0xBEEF);
+        for _ in 0..20_000 {
+            let k = rng.below(64);
+            match rng.below(3) {
+                0 => assert_eq!(l.insert(k, k), model.insert(k)),
+                1 => assert_eq!(l.remove(k), model.remove(&k)),
+                _ => assert_eq!(l.contains(k), model.contains(&k)),
+            }
+        }
+        let snap: Vec<u64> = l.snapshot().iter().map(|kv| kv.0).collect();
+        let want: Vec<u64> = model.iter().copied().collect();
+        assert_eq!(snap, want);
+    }
+
+    #[test]
+    fn contention_on_same_keys() {
+        use std::sync::Arc;
+        let l = Arc::new(NvList::new());
+        let handles: Vec<_> = (0..8u64)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Xoshiro256::new(t + 0x9E);
+                    let mut net = 0i64;
+                    for _ in 0..3000 {
+                        let k = rng.below(16);
+                        if rng.below(2) == 0 {
+                            if l.insert(k, t) {
+                                net += 1;
+                            }
+                        } else if l.remove(k) {
+                            net -= 1;
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(l.len_approx() as i64, net, "successful inserts - removes must equal size");
+        let snap = l.snapshot();
+        for w in snap.windows(2) {
+            assert!(w[0].0 < w[1].0, "list must stay strictly sorted");
+        }
+    }
+
+    #[test]
+    fn pinned_fence_flush_budgets() {
+        // The NVTraverse headline: the whole operation pays exactly one
+        // psync at the destination — and a read pays none, ever.
+        let l = NvList::new();
+        for k in 0..8u64 {
+            assert!(l.insert(k * 2, k)); // warm up allocator areas
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(l.insert(100, 1));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "insert = 1 destination psync");
+        assert_eq!(d.flushes, 1, "insert = 1 destination flush");
+
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(l.remove(100));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "remove = 1 destination psync");
+        assert_eq!(d.flushes, 1, "remove = 1 destination flush");
+
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(l.contains(4));
+        assert_eq!(l.get(4), Some(2));
+        assert!(!l.contains(5), "miss walks the same flush-free path");
+        assert!(l.get(999).is_none());
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "reads never fence (hit or miss)");
+        assert_eq!(d.flushes, 0, "reads never flush (hit or miss)");
+    }
+
+    #[test]
+    fn failed_ops_flush_bounds() {
+        // Same helping rule as link-free (§3.3): a failed insert helps the
+        // earlier insert of the key become durable at the destination —
+        // flag-elided when it already is; a failed remove needs nothing.
+        let l = NvList::new();
+        for k in 0..8u64 {
+            assert!(l.insert(k, k));
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.insert(3, 99), "duplicate insert fails");
+        assert!(!l.remove(999), "absent remove fails");
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "failed ops over durable keys are psync-free");
+
+        // Strip key 3's insert-flushed flag (as if its inserter has not
+        // psync'd yet): the next failed insert must help-persist it.
+        unsafe {
+            let mut curr = ptr_of::<LfNode>(l.head.load(Ordering::Acquire));
+            while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) != 3 {
+                curr = ptr_of::<LfNode>((*curr).next.load(Ordering::Acquire));
+            }
+            assert!(!curr.is_null());
+            (*curr).reset_flush_flags();
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.insert(3, 99));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 1, "helping a not-yet-durable insert costs its psync");
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.insert(3, 99));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "the helped psync is flag-elided afterwards");
+    }
+
+    #[test]
+    fn reads_stay_flush_free_over_unpersisted_state() {
+        // The link-free reader helps-flush in-flight state it depends on;
+        // the NVTraverse reader never does — strip a node's flags as if
+        // its inserter has not psync'd yet and read right through it.
+        let l = NvList::new();
+        for k in 0..8u64 {
+            assert!(l.insert(k, k + 10));
+        }
+        unsafe {
+            let mut curr = ptr_of::<LfNode>(l.head.load(Ordering::Acquire));
+            while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) != 3 {
+                curr = ptr_of::<LfNode>((*curr).next.load(Ordering::Acquire));
+            }
+            assert!(!curr.is_null());
+            (*curr).reset_flush_flags();
+        }
+        let a = crate::pmem::stats::thread_snapshot();
+        assert_eq!(l.get(3), Some(13));
+        assert!(l.contains(3));
+        assert!(l.contains(7), "walks past the unflushed node, still free");
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "reads never help-flush");
+        assert_eq!(d.flushes, 0);
+    }
+
+    #[test]
+    fn traversal_skips_marked_nodes_and_cleans_only_the_destination() {
+        // Hand-mark a linked node (a remover between its mark CAS and its
+        // unlink): a read walks over it flush-free; the next *update*
+        // whose destination window contains it flushes its delete record
+        // and batch-unlinks it — flush-before-unlink.
+        let l = NvList::new();
+        for k in 0..8u64 {
+            assert!(l.insert(k, k));
+        }
+        let marked = unsafe {
+            let mut curr = ptr_of::<LfNode>(l.head.load(Ordering::Acquire));
+            while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) != 5 {
+                curr = ptr_of::<LfNode>((*curr).next.load(Ordering::Acquire));
+            }
+            assert!(!curr.is_null());
+            let succ = (*curr).next.load(Ordering::Acquire);
+            assert!(!is_marked(succ));
+            (*curr).next.store(succ | MARK, Ordering::Release);
+            crate::pmem::check::note_store(curr as *const u8);
+            (*curr).reset_flush_flags();
+            curr
+        };
+
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(!l.contains(5), "marked = absent");
+        assert!(l.contains(6), "read walks over the marked node");
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 0, "the journey over a marked node flushes nothing");
+        assert_eq!(d.flushes, 0);
+
+        // Re-insert of the same key: its destination window contains the
+        // marked node, so it is flushed (1) + unlinked, then the fresh
+        // node pays its own destination psync (1).
+        let a = crate::pmem::stats::thread_snapshot();
+        assert!(l.insert(5, 55));
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert_eq!(d.fences, 2, "destination cleanup + the insert's own psync");
+        assert_eq!(d.flushes, 2);
+        assert_eq!(l.get(5), Some(55));
+        unsafe {
+            assert!(
+                is_marked((*marked).next.load(Ordering::Acquire)),
+                "the stale node stays marked"
+            );
+        }
+        let keys: Vec<u64> = l.snapshot().iter().map(|kv| kv.0).collect();
+        assert_eq!(keys, (0..8u64).collect::<Vec<_>>(), "exactly one 5 reachable");
+    }
+
+    #[test]
+    fn batched_updates_share_one_trailing_fence() {
+        let l = NvList::new();
+        for k in 0..8u64 {
+            assert!(l.insert(k, k)); // warm up allocator areas
+        }
+        let ops: Vec<SetOp> = (100..164u64).map(|k| SetOp::Insert(k, k * 3)).collect();
+        let a = crate::pmem::stats::thread_snapshot();
+        let res = l.apply_batch(&ops);
+        let d = crate::pmem::stats::thread_snapshot().since(&a);
+        assert!(res.iter().all(|r| *r == crate::sets::OpResult::Applied(true)));
+        assert_eq!(d.fences, 1, "64 batched inserts = one trailing fence");
+        assert_eq!(d.elided, 64, "each op's destination fence is elided");
+        assert_eq!(d.flushes, 64, "destination flushes still happen per-op");
+    }
+}

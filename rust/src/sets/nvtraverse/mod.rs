@@ -1,0 +1,20 @@
+//! The **NVTraverse** durable sets (Friedman et al., PLDI 2020: "the
+//! destination is more important than the journey").
+//!
+//! Link-free durable format, NVTraverse traversal discipline: the
+//! search prefix of every operation is flush-free (marked nodes are
+//! skipped, not trimmed), and persistence work happens only at the
+//! operation's destination window — one psync per update, zero per
+//! read. The fences/op ablation (`bench --fig fences`) compares this
+//! family against link-free/SOFT/log-free; DESIGN.md §Families has the
+//! protocol and the durable-linearizability argument.
+
+mod hash;
+pub(crate) mod list;
+mod recovery;
+
+pub use hash::NvHash;
+pub use list::NvList;
+pub use recovery::{
+    recover_hash, recover_hash_timed, recover_list, recover_list_timed, RecoveredStats,
+};

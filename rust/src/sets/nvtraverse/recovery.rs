@@ -1,0 +1,261 @@
+//! NVTraverse recovery via the shared engine ([`crate::sets::recovery`]).
+//!
+//! The durable format is byte-identical to link-free (same [`LfNode`]
+//! validity scheme, same free pattern), so the classify rule is the
+//! same: **valid & unmarked ⇒ member**. The family string differs only
+//! so the resizable layer's epoch root cell and the recovery stats are
+//! attributed to the right family. The traversal discipline changes
+//! nothing here — what NVTraverse defers on the hot path (journey
+//! flushes) was never durable state to begin with; every destination
+//! flush lands before its op acks, so the engine sees the same class of
+//! images link-free recovery proves exact.
+
+use crate::alloc::{DurablePool, Ebr};
+use crate::pmem::PoolId;
+use crate::sets::linkfree::LfNode;
+use crate::sets::recovery::{self as engine, Classify, PhaseTimings};
+use crate::sets::tagged::MARK;
+use crate::util::mix64;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::hash::NvHash;
+use super::list::{NvCore, NvList};
+
+pub use crate::sets::recovery::RecoveredStats;
+
+/// The NVTraverse validity rule for the engine (the link-free rule under
+/// the family's own name).
+pub(crate) struct NvClassify;
+
+impl Classify for NvClassify {
+    const FAMILY: &'static str = "nvtraverse";
+    const NULL_LINK: u64 = 0; // null, unmarked
+
+    unsafe fn classify(&self, slot: *mut u8) -> Option<(u64, usize)> {
+        let node = slot as *mut LfNode;
+        if (*node).is_member() {
+            Some(((*node).key.load(Ordering::Relaxed), node as usize))
+        } else {
+            None
+        }
+    }
+
+    unsafe fn link_word(&self, node: usize) -> u64 {
+        debug_assert_eq!(node as u64 & MARK, 0);
+        node as u64
+    }
+
+    unsafe fn link(&self, node: usize, next: u64) {
+        let n = node as *mut LfNode;
+        (*n).next.store(next, Ordering::Relaxed);
+        // Content is durable: arm the insert-flush flag so post-recovery
+        // updates don't re-psync, and clear the delete flag.
+        (*n).reset_flush_flags();
+        (*n).set_insert_flushed();
+    }
+}
+
+/// Rebuild an NVTraverse list from the durable areas of `id`.
+pub fn recover_list(id: PoolId) -> (NvList, RecoveredStats) {
+    let (l, s, _) = recover_list_timed(id, engine::default_threads());
+    (l, s)
+}
+
+/// [`recover_list`] with an explicit recovery worker count.
+pub fn recover_list_timed(id: PoolId, threads: usize) -> (NvList, RecoveredStats, PhaseTimings) {
+    let pool = Arc::new(DurablePool::adopt(id, 64, LfNode::init_free_pattern));
+    let mut rec = engine::scan(&pool, &NvClassify, threads);
+    rec.sort_by_key();
+    // A crash mid-compaction legitimately leaves a migrated copy AND its
+    // source valid with the same key; keep one, demote the other.
+    unsafe { rec.dedup_duplicates(&NvClassify, &pool) };
+    let head = unsafe { rec.relink_chain(&NvClassify) };
+    pool.persist_all_regions();
+    let core = NvCore::from_parts(pool, Arc::new(Ebr::new()));
+    (NvList::from_parts(head, core), rec.stats, rec.timings)
+}
+
+/// Rebuild an NVTraverse hash set from the durable areas of `id`.
+pub fn recover_hash(id: PoolId, nbuckets: usize) -> (NvHash, RecoveredStats) {
+    let (h, s, _) = recover_hash_timed(id, nbuckets, engine::default_threads());
+    (h, s)
+}
+
+/// [`recover_hash`] with an explicit recovery worker count (bucket-
+/// partitioned relink: no two workers touch the same chain).
+pub fn recover_hash_timed(
+    id: PoolId,
+    nbuckets: usize,
+    threads: usize,
+) -> (NvHash, RecoveredStats, PhaseTimings) {
+    let pool = Arc::new(DurablePool::adopt(id, 64, LfNode::init_free_pattern));
+    let mut rec = engine::scan(&pool, &NvClassify, threads);
+    let core = NvCore::from_parts(pool, Arc::new(Ebr::new()));
+    let hash = NvHash::from_parts(nbuckets, core);
+    let mask = (hash.nbuckets() - 1) as u64;
+    let bucket_of = |k: u64| (mix64(k) & mask) as usize;
+    rec.sort_by_bucket(bucket_of);
+    unsafe { rec.dedup_duplicates(&NvClassify, &hash.core.inner.pool) };
+    for (b, head) in unsafe { rec.relink_buckets(&NvClassify, &bucket_of) } {
+        hash.buckets[b].store(head, Ordering::Relaxed);
+    }
+    hash.core.inner.pool.persist_all_regions();
+    (hash, rec.stats, rec.timings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{self, CrashPolicy};
+    use crate::sets::ConcurrentSet;
+
+    #[test]
+    fn recover_list_after_pessimistic_crash() {
+        let _sim = pmem::sim_session();
+        let l = NvList::new();
+        let id = l.pool_id();
+        for k in 0..50u64 {
+            assert!(l.insert(k, k + 1000));
+        }
+        for k in (0..50u64).step_by(3) {
+            assert!(l.remove(k));
+        }
+        l.crash_preserve();
+        drop(l);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+
+        let (l2, stats) = recover_list(id);
+        // Every acked op's destination flush was psync'd before it
+        // returned, so the recovered set must match exactly.
+        for k in 0..50u64 {
+            if k % 3 == 0 {
+                assert!(!l2.contains(k), "removed key {k} resurrected");
+            } else {
+                assert_eq!(l2.get(k), Some(k + 1000), "key {k} lost");
+            }
+        }
+        assert_eq!(stats.members as usize, (0..50).filter(|k| k % 3 != 0).count());
+        // Post-recovery the structure is fully operational.
+        assert!(l2.insert(999, 1));
+        assert!(l2.remove(1));
+    }
+
+    #[test]
+    fn recover_hash_after_random_eviction_crash() {
+        let _sim = pmem::sim_session();
+        let h = NvHash::new(32);
+        let id = h.pool_id();
+        for k in 0..200u64 {
+            assert!(h.insert(k, k));
+        }
+        for k in 100..150u64 {
+            assert!(h.remove(k));
+        }
+        h.crash_preserve();
+        drop(h);
+        // Random eviction may persist *extra* lines, never fewer: acked
+        // ops must still be exact.
+        pmem::crash_pools(CrashPolicy::random(0.5, 43), &[id]);
+
+        let (h2, stats) = recover_hash(id, 32);
+        for k in 0..200u64 {
+            let expect = !(100..150).contains(&k);
+            assert_eq!(h2.contains(k), expect, "key {k}");
+        }
+        assert_eq!(stats.members, 150);
+        assert!(stats.reclaimed > 0);
+        // Reclaimed slots are reusable.
+        for k in 1000..1100u64 {
+            assert!(h2.insert(k, k));
+        }
+    }
+
+    #[test]
+    fn unflushed_insert_does_not_survive_pessimistic_crash() {
+        let _sim = pmem::sim_session();
+        // Hand-craft an in-flight insert: linked and valid in volatile
+        // memory but never psync'd (its destination flush never ran).
+        let l = NvList::new();
+        let id = l.pool_id();
+        assert!(l.insert(1, 1)); // psync'd
+        unsafe {
+            let node = l.core.inner.pool.alloc() as *mut LfNode;
+            (*node).make_invalid();
+            (*node).reset_flush_flags();
+            (*node).key.store(2, std::sync::atomic::Ordering::Relaxed);
+            (*node).value.store(2, std::sync::atomic::Ordering::Relaxed);
+            (*node).next.store(0, std::sync::atomic::Ordering::Relaxed);
+            (*node).make_valid(); // valid in cache, never flushed
+        }
+        l.crash_preserve();
+        drop(l);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+        let (l2, _) = recover_list(id);
+        assert!(l2.contains(1));
+        assert!(!l2.contains(2), "unflushed insert must not survive");
+    }
+
+    #[test]
+    fn skipped_marked_run_is_durable_before_unlink() {
+        let _sim = pmem::sim_session();
+        // The module invariant under crash: hand-mark a linked node with
+        // its flags stripped (a remover between mark CAS and destination
+        // flush), let an insert's destination cleanup detach it, then
+        // crash pessimistically. The cleanup flushed the delete record
+        // BEFORE the unlink, so recovery must not resurrect the key with
+        // its old value alongside the re-inserted one.
+        use crate::sets::tagged::{is_marked, ptr_of, MARK};
+        let l = NvList::new();
+        let id = l.pool_id();
+        for k in 0..8u64 {
+            assert!(l.insert(k, k + 100));
+        }
+        unsafe {
+            let mut curr = ptr_of::<LfNode>(l.head.load(std::sync::atomic::Ordering::Acquire));
+            while !curr.is_null() && (*curr).key.load(Ordering::Relaxed) != 5 {
+                curr = ptr_of::<LfNode>((*curr).next.load(std::sync::atomic::Ordering::Acquire));
+            }
+            assert!(!curr.is_null());
+            let succ = (*curr).next.load(std::sync::atomic::Ordering::Acquire);
+            assert!(!is_marked(succ));
+            (*curr).next.store(succ | MARK, std::sync::atomic::Ordering::Release);
+            crate::pmem::check::note_store(curr as *const u8);
+            (*curr).reset_flush_flags();
+        }
+        assert!(l.insert(5, 555), "re-insert through the destination cleanup");
+        l.crash_preserve();
+        drop(l);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+        let (l2, stats) = recover_list(id);
+        assert_eq!(l2.get(5), Some(555), "exactly the re-inserted incarnation");
+        assert_eq!(stats.members, 8, "no duplicate 5 in the durable image");
+    }
+
+    #[test]
+    fn double_crash_no_ghosts() {
+        let _sim = pmem::sim_session();
+        let l = NvList::new();
+        let id = l.pool_id();
+        for k in 0..20u64 {
+            l.insert(k, k);
+        }
+        for k in 0..10u64 {
+            l.remove(k);
+        }
+        l.crash_preserve();
+        drop(l);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+        let (l2, _) = recover_list(id);
+        // Crash again immediately: normalisation of reclaimed slots was
+        // persisted by recovery, so the second recovery sees the same set.
+        l2.crash_preserve();
+        drop(l2);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[id]);
+        let (l3, stats) = recover_list(id);
+        for k in 0..20u64 {
+            assert_eq!(l3.contains(k), k >= 10, "key {k} after double crash");
+        }
+        assert_eq!(stats.members, 10);
+    }
+}

@@ -84,6 +84,7 @@ use crate::pmem::root::{root_cell, RootCell};
 use crate::pmem::PoolId;
 use crate::sets::linkfree::{LfList, LfNode, RecoveredStats};
 use crate::sets::logfree::{load_link_persisted, LogFreeList, LogFreeNode};
+use crate::sets::nvtraverse::NvList;
 use crate::sets::soft::{snode_gen, SNode, SoftList};
 use crate::sets::tagged::{
     gen_validated, hint_gen, hint_ptr, is_marked, pack_hint, ptr_of, DIRTY, HINT_GEN_MASK, MARK,
@@ -176,6 +177,7 @@ mod sealed {
     impl Sealed for crate::sets::linkfree::LfList {}
     impl Sealed for crate::sets::soft::SoftList {}
     impl Sealed for crate::sets::logfree::LogFreeList {}
+    impl Sealed for crate::sets::nvtraverse::NvList {}
 }
 
 /// Family plumbing for [`ResizableHash`] (sealed; implemented by the three
@@ -290,6 +292,95 @@ impl ResizableFamily for LfList {
 
     unsafe fn finish_migration(&self, originals: &[usize]) {
         self.core.finish_migration(originals);
+    }
+
+    unsafe fn node_link(node: *mut LfNode) -> *const AtomicU64 {
+        &(*node).next
+    }
+
+    unsafe fn node_gen(node: *mut LfNode) -> u64 {
+        crate::alloc::slot_gen(node as *const u8, CACHE_LINE).load(Ordering::Acquire)
+    }
+
+    unsafe fn node_key_if_linked(node: *mut LfNode) -> Option<u64> {
+        // Free pattern is valid+marked; a deleted node is marked; a
+        // mid-insert node is invalid until its link CAS succeeds.
+        if is_marked((*node).next.load(Ordering::Acquire)) || !(*node).is_valid() {
+            return None;
+        }
+        Some((*node).key.load(Ordering::Acquire))
+    }
+
+    unsafe fn find_linked(&self, start: *const AtomicU64, okey: u64) -> Option<*mut LfNode> {
+        let mut curr = ptr_of::<LfNode>((*start).load(Ordering::Acquire));
+        while !curr.is_null() {
+            let k = (*curr).key.load(Ordering::Relaxed);
+            if k > okey {
+                return None;
+            }
+            let next = (*curr).next.load(Ordering::Acquire);
+            if k == okey {
+                return if is_marked(next) { None } else { Some(curr) };
+            }
+            curr = ptr_of::<LfNode>(next);
+        }
+        None
+    }
+}
+
+impl ResizableFamily for NvList {
+    type Node = LfNode;
+    const FAMILY: &'static str = "nvtraverse";
+
+    fn head_cell(&self) -> *const AtomicU64 {
+        &self.head
+    }
+
+    fn ebr(&self) -> &Ebr {
+        self.core.inner.ebr.as_ref()
+    }
+
+    fn insert_from(&self, start: *const AtomicU64, okey: u64, value: u64) -> bool {
+        self.core.insert_from(start, &self.head, okey, value)
+    }
+
+    fn remove_from(&self, start: *const AtomicU64, okey: u64) -> bool {
+        self.core.remove_from(start, &self.head, okey)
+    }
+
+    fn get_from(&self, start: *const AtomicU64, okey: u64) -> Option<u64> {
+        self.core.get_from(start, &self.head, okey)
+    }
+
+    fn count(&self) -> usize {
+        self.core.inner.count(&self.head)
+    }
+
+    fn snapshot_okey(&self) -> Vec<(u64, u64)> {
+        self.core.inner.snapshot(&self.head)
+    }
+
+    fn pool(&self) -> PoolId {
+        self.pool_id()
+    }
+
+    fn durable(&self) -> &DurablePool {
+        &self.core.inner.pool
+    }
+
+    fn preserve(&self) {
+        self.crash_preserve();
+    }
+
+    // Compaction uses the link-free durable-copy machinery unchanged
+    // (shared format; the duplicate window is closed by recovery dedup).
+    unsafe fn migrate_range(&self, lo: usize, hi: usize) -> (usize, Vec<usize>) {
+        let originals = self.core.inner.migrate_range(&self.head, lo, hi);
+        (originals.len(), originals)
+    }
+
+    unsafe fn finish_migration(&self, originals: &[usize]) {
+        self.core.inner.finish_migration(originals);
     }
 
     unsafe fn node_link(node: *mut LfNode) -> *const AtomicU64 {
@@ -593,6 +684,8 @@ pub type ResizableLfHash = ResizableHash<LfList>;
 pub type ResizableSoftHash = ResizableHash<SoftList>;
 /// Resizable log-free hash set.
 pub type ResizableLogFreeHash = ResizableHash<LogFreeList>;
+/// Resizable NVTraverse hash set.
+pub type ResizableNvHash = ResizableHash<NvList>;
 
 impl ResizableHash<LfList> {
     pub fn new_linkfree(nbuckets: usize) -> Self {
@@ -609,6 +702,12 @@ impl ResizableHash<SoftList> {
 impl ResizableHash<LogFreeList> {
     pub fn new_logfree(nbuckets: usize) -> Self {
         Self::with_inner(LogFreeList::new(), nbuckets)
+    }
+}
+
+impl ResizableHash<NvList> {
+    pub fn new_nvtraverse(nbuckets: usize) -> Self {
+        Self::with_inner(NvList::new(), nbuckets)
     }
 }
 
@@ -1208,6 +1307,27 @@ pub fn recover_logfree_timed(
     (ResizableHash::adopt(list, default_nbuckets), stats, t)
 }
 
+/// Recover a resizable NVTraverse hash from the durable areas of `id`.
+pub fn recover_nvtraverse(
+    id: PoolId,
+    default_nbuckets: usize,
+) -> (ResizableNvHash, RecoveredStats) {
+    let (h, s, _) =
+        recover_nvtraverse_timed(id, default_nbuckets, crate::sets::recovery::default_threads());
+    (h, s)
+}
+
+/// [`recover_nvtraverse`] with an explicit recovery worker count (same
+/// engine path as link-free: shared durable format).
+pub fn recover_nvtraverse_timed(
+    id: PoolId,
+    default_nbuckets: usize,
+    threads: usize,
+) -> (ResizableNvHash, RecoveredStats, crate::sets::recovery::PhaseTimings) {
+    let (list, stats, t) = crate::sets::nvtraverse::recover_list_timed(id, threads);
+    (ResizableHash::adopt(list, default_nbuckets), stats, t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1255,6 +1375,11 @@ mod tests {
         model_check(&ResizableHash::new_logfree(2), 0x51C);
     }
 
+    #[test]
+    fn nvtraverse_grows_and_matches_model() {
+        model_check(&ResizableHash::new_nvtraverse(2), 0x51D);
+    }
+
     fn assert_zero_psync_reads<F: ResizableFamily>(h: &ResizableHash<F>) {
         for k in 0..200u64 {
             assert!(h.insert(k, k + 1));
@@ -1285,6 +1410,7 @@ mod tests {
         assert_zero_psync_reads(&ResizableHash::new_linkfree(2));
         assert_zero_psync_reads(&ResizableHash::new_soft(2));
         assert_zero_psync_reads(&ResizableHash::new_logfree(2));
+        assert_zero_psync_reads(&ResizableHash::new_nvtraverse(2));
     }
 
     fn assert_update_budget<F: ResizableFamily>(h: &ResizableHash<F>, per_update: u64) {
@@ -1309,10 +1435,12 @@ mod tests {
     fn update_psync_budget_unchanged_by_resizable_layer() {
         // The hint layer must not add fences to any family's update
         // protocol (growth itself pays 1 per doubling, measured apart):
-        // SOFT = 1/update, link-free = 1 (flag-elided), log-free = 2.
+        // SOFT = 1/update, link-free = 1 (flag-elided), log-free = 2,
+        // nvtraverse = 1 (destination-only).
         assert_update_budget(&ResizableHash::new_soft(1 << 10), 1);
         assert_update_budget(&ResizableHash::new_linkfree(1 << 10), 1);
         assert_update_budget(&ResizableHash::new_logfree(1 << 10), 2);
+        assert_update_budget(&ResizableHash::new_nvtraverse(1 << 10), 1);
     }
 
     fn crash_recover_roundtrip<F, R>(mk: impl FnOnce() -> ResizableHash<F>, recover: R)
@@ -1365,6 +1493,11 @@ mod tests {
     #[test]
     fn logfree_recovers_size_and_contents() {
         crash_recover_roundtrip(|| ResizableHash::new_logfree(2), recover_logfree);
+    }
+
+    #[test]
+    fn nvtraverse_recovers_size_and_contents() {
+        crash_recover_roundtrip(|| ResizableHash::new_nvtraverse(2), recover_nvtraverse);
     }
 
     #[test]
@@ -1601,6 +1734,11 @@ mod tests {
     #[test]
     fn logfree_compaction_returns_areas() {
         compaction_returns_areas(ResizableHash::new_logfree(2));
+    }
+
+    #[test]
+    fn nvtraverse_compaction_returns_areas() {
+        compaction_returns_areas(ResizableHash::new_nvtraverse(2));
     }
 
     #[test]

@@ -18,6 +18,7 @@ fn recover(family: Family, pool: PoolId) -> Box<dyn ConcurrentSet> {
         Family::LinkFree => Box::new(sets::resizable::recover_linkfree(pool, 16).0),
         Family::Soft => Box::new(sets::resizable::recover_soft(pool, 16).0),
         Family::LogFree => Box::new(sets::resizable::recover_logfree(pool, 16).0),
+        Family::NvTraverse => Box::new(sets::resizable::recover_nvtraverse(pool, 16).0),
         Family::Volatile => unreachable!("volatile sets have no recovery"),
     }
 }

@@ -11,11 +11,14 @@
 //! 3, … of a full maintenance pass and, after every crash, recovers and
 //! checks the *exact* acked member set — every surviving key with its
 //! value, every deleted key absent, nothing torn, no ghosts — until a
-//! whole pass completes unfaulted. All three resizable families.
+//! whole pass completes unfaulted. All four resizable families
+//! (NVTraverse shares the link-free durable-copy machinery, so its
+//! duplicate window is closed the same way).
 
 use durasets::pmem::{self, CrashPolicy, PoolId};
 use durasets::sets::resizable::{
-    recover_linkfree, recover_logfree, recover_soft, ResizableFamily, ResizableHash,
+    recover_linkfree, recover_logfree, recover_nvtraverse, recover_soft, ResizableFamily,
+    ResizableHash,
 };
 use durasets::sets::{ConcurrentSet, RecoveredStats};
 use std::panic::AssertUnwindSafe;
@@ -120,4 +123,9 @@ fn soft_crash_at_every_flush_of_compaction_keeps_exact_members() {
 #[test]
 fn logfree_crash_at_every_flush_of_compaction_keeps_exact_members() {
     sweep(|| ResizableHash::new_logfree(2), recover_logfree);
+}
+
+#[test]
+fn nvtraverse_crash_at_every_flush_of_compaction_keeps_exact_members() {
+    sweep(|| ResizableHash::new_nvtraverse(2), recover_nvtraverse);
 }

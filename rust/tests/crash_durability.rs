@@ -123,6 +123,7 @@ fn run_torture(family: Family, evict_prob: f64, seed: u64) {
         Family::LinkFree => Box::new(sets::resizable::recover_linkfree(pool, 256).0),
         Family::Soft => Box::new(sets::resizable::recover_soft(pool, 256).0),
         Family::LogFree => Box::new(sets::resizable::recover_logfree(pool, 256).0),
+        Family::NvTraverse => Box::new(sets::resizable::recover_nvtraverse(pool, 256).0),
         Family::Volatile => unreachable!(),
     };
 
@@ -195,6 +196,16 @@ fn logfree_torture_random_eviction() {
     run_torture(Family::LogFree, 0.5, 0x76);
 }
 
+#[test]
+fn nvtraverse_torture_pessimistic() {
+    run_torture(Family::NvTraverse, 0.0, 0x77);
+}
+
+#[test]
+fn nvtraverse_torture_random_eviction() {
+    run_torture(Family::NvTraverse, 0.5, 0x78);
+}
+
 /// The §3.3 validity-race scenario: two threads race inserts of the same
 /// key; under random eviction the loser's node may hit NVRAM without an
 /// explicit flush. Recovery must never see two members with one key.
@@ -259,6 +270,13 @@ fn resizable_crash_during_migration_recovers_exactly() {
             "log-free",
             || sets::new_hash(Family::LogFree, 2),
             |p, n| Box::new(sets::resizable::recover_logfree(p, n).0) as Box<dyn ConcurrentSet>,
+        ),
+        (
+            "nvtraverse",
+            || sets::new_hash(Family::NvTraverse, 2),
+            |p, n| {
+                Box::new(sets::resizable::recover_nvtraverse(p, n).0) as Box<dyn ConcurrentSet>
+            },
         ),
     ] {
         let set = mk();

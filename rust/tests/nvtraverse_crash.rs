@@ -1,0 +1,215 @@
+//! NVTraverse crash coverage: a power loss at **every** flush boundary of
+//! insert/remove, and mid-way through a K=64 coalesced batch.
+//!
+//! The family's whole bet is that traversals never flush and updates
+//! flush only the destination window — so the adversarial instants are
+//! exactly the update-path flushes. The singles sweep arms the flush
+//! fault at 1, 2, 3, … until a round survives the full deterministic
+//! sequence, crashing pessimistically (only flushed lines survive) and
+//! recovering each time. Recovery must reproduce the acked member set
+//! *exactly*: every op acked before the fault is reflected, the single
+//! in-flight op may have gone either way, untouched keys stay absent.
+//!
+//! The batch half mirrors DESIGN.md §Batching for the coalesced path:
+//! a fault mid-`apply_batch` means nothing in the batch was acked, and
+//! the survivors must form a prefix of submission order (per-op flushes
+//! are issued in order; only the trailing fence is deferred); an *acked*
+//! batch must survive wholesale.
+
+use durasets::pmem::{self, CrashPolicy};
+use durasets::sets::{self, ConcurrentSet, Family, OpResult, SetOp};
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+
+mod common;
+use common::quiet_power_loss_panics;
+
+/// Deterministic single-op script: (key, is_insert, value). Inserts over
+/// a small range, a wave of removes, reinserts with new values, then a
+/// second remove wave that also hits some already-absent keys (acked
+/// failures must not perturb the durable image).
+fn op_script() -> Vec<(u64, bool, u64)> {
+    let mut ops = Vec::new();
+    for k in 0..24u64 {
+        ops.push((k, true, k * 3 + 1));
+    }
+    for k in (0..24u64).step_by(3) {
+        ops.push((k, false, 0));
+    }
+    for k in (0..24u64).step_by(6) {
+        ops.push((k, true, k * 7 + 2));
+    }
+    for k in (1..24u64).step_by(4) {
+        ops.push((k, false, 0));
+    }
+    ops
+}
+
+/// Exact expected state after the first `n` script ops (set semantics:
+/// insert on a present key is a no-op failure, like the real sets).
+fn model_after(ops: &[(u64, bool, u64)], n: usize) -> HashMap<u64, u64> {
+    let mut m = HashMap::new();
+    for &(k, ins, v) in &ops[..n] {
+        if ins {
+            m.entry(k).or_insert(v);
+        } else {
+            m.remove(&k);
+        }
+    }
+    m
+}
+
+/// The singles sweep: crash at every flush the script issues.
+#[test]
+fn nvtraverse_crash_at_every_flush_of_insert_remove_keeps_acked_set() {
+    let _sim = pmem::sim_session();
+    quiet_power_loss_panics();
+    pmem::set_psync_ns(0);
+    let ops = op_script();
+
+    let mut crashes = 0u32;
+    let mut fault = 1u64;
+    loop {
+        let set = sets::new_hash(Family::NvTraverse, 2);
+        let pool = set.durable_pool().unwrap();
+        // Warm up allocator areas on a disjoint range so the armed fault
+        // lands on the script's own insert/remove flushes.
+        for k in 5_000..5_008u64 {
+            assert!(set.insert(k, 1), "warmup {k}");
+        }
+
+        // `progress` counts fully acked ops; the op at index `progress`
+        // (if any) is the one the power loss caught in flight.
+        let progress = std::cell::Cell::new(0usize);
+        pmem::arm_flush_fault(fault);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            for (i, &(k, ins, v)) in ops.iter().enumerate() {
+                if ins {
+                    set.insert(k, v);
+                } else {
+                    set.remove(k);
+                }
+                progress.set(i + 1);
+            }
+        }));
+        pmem::disarm_flush_fault();
+        let crashed = result.is_err();
+        let progress = progress.get();
+        if crashed {
+            crashes += 1;
+            assert!(progress < ops.len(), "fault {fault}: panic after the last ack");
+        } else {
+            assert_eq!(progress, ops.len(), "fault {fault}: clean round must ack everything");
+        }
+
+        set.prepare_crash();
+        drop(set);
+        pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[pool]);
+        let rec = sets::resizable::recover_nvtraverse(pool, 2).0;
+
+        // Exact acked set: every script key checked both ways against the
+        // model; the in-flight op's key may reflect either side of it.
+        let pre = model_after(&ops, progress);
+        let post = model_after(&ops, (progress + 1).min(ops.len()));
+        for k in 0..24u64 {
+            if crashed && ops[progress].0 == k {
+                let got = rec.get(k);
+                assert!(
+                    got == pre.get(&k).copied() || got == post.get(&k).copied(),
+                    "fault {fault}: in-flight key {k} has impossible state {got:?}"
+                );
+            } else {
+                assert_eq!(
+                    rec.get(k),
+                    pre.get(&k).copied(),
+                    "fault {fault}: acked state of key {k} (progress {progress})"
+                );
+            }
+        }
+        for k in 5_000..5_008u64 {
+            assert_eq!(rec.get(k), Some(1), "fault {fault}: warmup key {k} lost");
+        }
+        for k in 1_000..1_010u64 {
+            assert!(!rec.contains(k), "fault {fault}: phantom key {k}");
+        }
+
+        if !crashed {
+            break; // fault count outran the script: full coverage reached
+        }
+        fault += 1;
+    }
+    // Each successful single is ~1 flush, so the sweep must have crashed
+    // at least once per successful script op before running clean.
+    assert!(crashes >= 30, "sweep too weak: only {crashes} crashing rounds");
+}
+
+/// Mid-K=64-batch power loss: the batch was never acked, so recovery owes
+/// only the warmup — batch survivors must be a prefix in submission order
+/// with the right values. A second, *acked* K=64 batch must then survive
+/// a crash wholesale.
+#[test]
+fn nvtraverse_mid_k64_batch_crash_recovers_acked_set_exactly() {
+    let _sim = pmem::sim_session();
+    quiet_power_loss_panics();
+    pmem::set_psync_ns(0);
+
+    let set = sets::new_hash(Family::NvTraverse, 16);
+    let pool = set.durable_pool().unwrap();
+    for k in 10_000..10_064u64 {
+        assert!(set.insert(k, 1), "warmup {k}");
+    }
+    let keys: Vec<u64> = (0..64u64).collect();
+    let ops: Vec<SetOp> = keys.iter().map(|&k| SetOp::Insert(k, k + 9)).collect();
+    // Die on the ~30th flush after arming: mid-batch, before the
+    // trailing fence that would have acked it.
+    pmem::arm_flush_fault(30);
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| set.apply_batch(&ops)));
+    pmem::disarm_flush_fault();
+    assert!(result.is_err(), "power loss must interrupt the coalesced batch");
+
+    set.prepare_crash();
+    drop(set);
+    pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[pool]);
+    let rec = sets::resizable::recover_nvtraverse(pool, 16).0;
+
+    // Never a torn ack: survivors form a prefix of submission order.
+    let present: Vec<bool> = keys.iter().map(|&k| rec.contains(k)).collect();
+    for w in present.windows(2) {
+        assert!(w[0] || !w[1], "non-prefix survival pattern {present:?}");
+    }
+    let survived = present.iter().filter(|&&p| p).count();
+    assert!(
+        survived >= 5 && survived < 64,
+        "fault must land mid-batch (survived {survived}/64)"
+    );
+    for (i, &k) in keys.iter().enumerate() {
+        if present[i] {
+            assert_eq!(rec.get(k), Some(k + 9), "torn value for batch key {k}");
+        }
+    }
+    // The acked member set — the warmup — is reproduced exactly.
+    for k in 10_000..10_064u64 {
+        assert_eq!(rec.get(k), Some(1), "acked warmup key {k} lost");
+    }
+
+    // Round 2 on the recovered structure: an acked K=64 batch (fill in
+    // the missing prefix keys, overwrite nothing) followed by a crash
+    // keeps all 64 — ack means durable, coalesced fences notwithstanding.
+    let refill: Vec<SetOp> = keys
+        .iter()
+        .filter(|&&k| !present[k as usize])
+        .map(|&k| SetOp::Insert(k, k + 9))
+        .collect();
+    let res = rec.apply_batch(&refill);
+    assert!(res.iter().all(|r| *r == OpResult::Applied(true)), "refill batch");
+    rec.prepare_crash();
+    drop(rec);
+    pmem::crash_pools(CrashPolicy::PESSIMISTIC, &[pool]);
+    let rec2 = sets::resizable::recover_nvtraverse(pool, 16).0;
+    for &k in &keys {
+        assert_eq!(rec2.get(k), Some(k + 9), "acked batch key {k} after crash");
+    }
+    for k in 10_000..10_064u64 {
+        assert_eq!(rec2.get(k), Some(1), "warmup key {k} after second crash");
+    }
+}
